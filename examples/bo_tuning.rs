@@ -1,0 +1,64 @@
+//! BO tuning walkthrough: watch Alg. 2 adjust the key-value dataset table
+//! and drive the billed cost down, comparing all four acquisition
+//! strategies on the same workload (a live Fig. 13).
+//!
+//! Run: cargo run --release --example bo_tuning [-- --iters 10 --q 128]
+
+use serverless_moe::bo::acquisition::{RandomAcq, SingleEpsGreedy, Tpe};
+use serverless_moe::bo::algorithm::BoAlgorithm;
+use serverless_moe::bo::eps_greedy::MultiEpsGreedy;
+use serverless_moe::bo::Acquisition;
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::experiments::common::ExpContext;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::util::cli::Args;
+use serverless_moe::util::table::{fnum, Table};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut ctx = ExpContext::new(ModelPreset::TinyMoe, CorpusPreset::Enwik8, true);
+    let mut bo_cfg = ctx.config.bo.clone();
+    bo_cfg.q = args.get_usize("q", 128);
+    bo_cfg.max_iters = args.get_usize("iters", 10);
+    let mut deploy_cfg = ctx.config.deploy.clone();
+    deploy_cfg.t_limit = 4000.0;
+    let eval_batches = vec![ctx.eval_batch(), ctx.eval_batch()];
+
+    let mut t = Table::new(
+        "BO acquisition comparison (tiny MoE)",
+        &["acquisition", "best cost ratio", "best pred-diff", "iterations"],
+    );
+    let mut no_bo = None;
+    let acqs: Vec<(Box<dyn Acquisition>, bool)> = vec![
+        (Box::new(MultiEpsGreedy::new(&bo_cfg)), true),
+        (Box::new(SingleEpsGreedy::new(&bo_cfg)), false),
+        (Box::new(RandomAcq), false),
+        (Box::new(Tpe::new()), false),
+    ];
+    for (mut acq, gp) in acqs {
+        let mut bo = BoAlgorithm {
+            platform: &ctx.config.platform,
+            deploy_cfg: &deploy_cfg,
+            bo_cfg: bo_cfg.clone(),
+            spec: &ctx.spec,
+            gate: &ctx.gate,
+            predictor: ctx.bayes(),
+            eval_batches: eval_batches.clone(),
+            solver_time_limit: 0.5,
+        };
+        let base = *no_bo.get_or_insert_with(|| bo.evaluate_no_bo().0);
+        let name = acq.name();
+        println!("running {name}...");
+        let outcome = bo.run(acq.as_mut(), gp, 0xBEEF);
+        for (i, tr) in outcome.history.iter().enumerate() {
+            println!("  {name} trial {i}: cost ratio {:.4}", tr.cost / base);
+        }
+        t.row(vec![
+            name.into(),
+            fnum(outcome.best_cost / base),
+            fnum(outcome.best_prediction_error),
+            outcome.iterations.to_string(),
+        ]);
+    }
+    t.print();
+}

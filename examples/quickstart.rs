@@ -1,0 +1,76 @@
+//! Quickstart: the full pipeline on the simulator in ~a minute.
+//!
+//! 1. Generate a synthetic Enwik8-like workload and profile token→expert
+//!    mappings (the key-value dataset table).
+//! 2. Predict expert popularity with the Bayesian predictor (Eq. 1-2).
+//! 3. Optimize the deployment with three fixed-a MIQCP solves + ODS (Alg. 1).
+//! 4. Price the deployment under the real routed counts and compare with
+//!    LambdaML over-provisioning and the CPU cluster.
+//!
+//! Run: cargo run --release --example quickstart
+
+use serverless_moe::bo::feedback::serve_with_real_counts;
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::deploy::baselines::lambdaml_policy;
+use serverless_moe::deploy::ods::ods_full;
+use serverless_moe::experiments::common::ExpContext;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::platform::CpuCluster;
+use serverless_moe::predictor::eval::{evaluate, predicted_counts};
+use serverless_moe::util::table::{fcost, fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("== serverless-MoE quickstart ==\n");
+
+    // 1. Workload + profiling.
+    let mut ctx = ExpContext::new(
+        ModelPreset::BertMoe { experts: 4, top_k: 1 },
+        CorpusPreset::Enwik8,
+        true,
+    );
+    ctx.generator.target_tokens = 10_240;
+    let batch = ctx.eval_batch();
+    println!(
+        "profiled {} tokens; serving batch of {} tokens",
+        ctx.profile.tokens_profiled, batch.total_tokens
+    );
+
+    // 2. Prediction.
+    let bayes = ctx.bayes();
+    let err = evaluate(&ctx.gate, &bayes, &batch);
+    println!(
+        "expert-selection prediction: avg |real-pred| per expert = {:.1}",
+        err.overall
+    );
+    let pred = predicted_counts(&ctx.gate, &bayes, &batch);
+    let real = ctx.real_counts(&batch);
+
+    // 3. Optimal deployment.
+    let problem = ctx.problem(pred, 3000.0);
+    let ods = ods_full(&problem, 5.0).expect("feasible deployment");
+    println!(
+        "\nODS deployment: predicted cost {} feasible={} methods={:?}",
+        fcost(ods.total_cost),
+        ods.feasible,
+        ods.methods.iter().map(|m| m.name()).collect::<Vec<_>>()
+    );
+
+    // 4. Serve under real routing; compare baselines.
+    let served = serve_with_real_counts(&ctx.config.platform, &ctx.spec, &ods.policy, &real, true);
+    let lam = lambdaml_policy(&problem);
+    let lam_cost = lam.total_cost(&ctx.config.platform, &ctx.spec, true);
+    let cluster = CpuCluster::new(ctx.config.cpu_cluster.clone(), false)
+        .serve(&ctx.spec, &real, batch.total_tokens);
+
+    let mut t = Table::new("cost comparison (10,240 tokens)", &["deployment", "billed cost"]);
+    t.row(vec!["ours (ODS on predicted)".into(), fcost(served.cost)]);
+    t.row(vec!["LambdaML (max memory)".into(), fcost(lam_cost)]);
+    t.row(vec!["CPU cluster".into(), fcost(cluster.billed_cost)]);
+    t.print();
+    println!(
+        "\nsavings: {} vs LambdaML, {} vs CPU cluster",
+        fnum((1.0 - served.cost / lam_cost) * 100.0) + "%",
+        fnum((1.0 - served.cost / cluster.billed_cost) * 100.0) + "%",
+    );
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT lowering: JAX stages -> HLO *text* artifacts + raw weight blobs.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  <stage>_<bucket>.hlo.txt      one per stage x token-count bucket
+  manifest.json                 stage -> {file, args: [(name, shape, dtype)]}
+  weights/<name>.bin            raw little-endian f32 blobs
+  weights/manifest.json         name -> shape
+
+Python runs ONCE at build time; the Rust binary is self-contained after.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIG, embed, attention_block, gating_stage, expert_stage, init_weights
+
+# Token-count buckets compiled for token-parallel stages. The Rust batcher
+# pads each expert's routed minibatch up to the nearest bucket.
+TOKEN_BUCKETS = [16, 64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default=None, help="(legacy) single-file sentinel")
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--seed", type=int, default=0)
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    cfg = CONFIG
+    h, f, e, v, s = cfg.hidden, cfg.ffn_dim, cfg.experts, cfg.vocab, cfg.max_seq
+    manifest = {
+        "config": {
+            "hidden": h,
+            "ffn_dim": f,
+            "experts": e,
+            "moe_layers": cfg.moe_layers,
+            "vocab": v,
+            "max_seq": s,
+            "top_k": cfg.top_k,
+        },
+        "token_buckets": TOKEN_BUCKETS,
+        "stages": {},
+    }
+
+    def emit(name, fn, example_args, arg_desc):
+        text = lower_stage(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        manifest["stages"][name] = {
+            "file": fname,
+            "args": [
+                {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+                for n, a in zip(arg_desc, example_args)
+            ],
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    print("lowering stages...")
+    # Embedding: full sequence.
+    emit(
+        f"embed_s{s}",
+        embed,
+        (spec([s], jnp.int32), spec([v, h]), spec([s, h])),
+        ["ids", "wte", "wpe"],
+    )
+    # Attention block: full sequence.
+    emit(
+        f"attention_s{s}",
+        attention_block,
+        (spec([s, h]), spec([h, h]), spec([h, h]), spec([h, h]), spec([h, h])),
+        ["x", "wq", "wk", "wv", "wo"],
+    )
+    # Gating + expert FFN: one HLO per token bucket.
+    for t in TOKEN_BUCKETS:
+        emit(
+            f"gating_t{t}",
+            gating_stage,
+            (spec([t, h]), spec([h, e])),
+            ["x", "wg"],
+        )
+        emit(
+            f"expert_ffn_t{t}",
+            expert_stage,
+            (spec([t, h]), spec([h, f]), spec([f]), spec([f, h]), spec([h])),
+            ["x", "w1", "b1", "w2", "b2"],
+        )
+
+    # Weights.
+    print("exporting weights...")
+    weights = init_weights(cfg, args.seed)
+    wmanifest = {}
+
+    def dump(name, arr):
+        arr = np.asarray(arr, dtype=np.float32)
+        arr.tofile(os.path.join(out_dir, "weights", f"{name}.bin"))
+        wmanifest[name] = list(arr.shape)
+
+    dump("wte", weights["wte"])
+    dump("wpe", weights["wpe"])
+    for li, layer in enumerate(weights["layers"]):
+        for wn in ["wq", "wk", "wv", "wo", "wg"]:
+            dump(f"l{li}.{wn}", layer[wn])
+        for ei, (w1, b1, w2, b2) in enumerate(layer["experts"]):
+            dump(f"l{li}.e{ei}.w1", w1)
+            dump(f"l{li}.e{ei}.b1", b1)
+            dump(f"l{li}.e{ei}.w2", w2)
+            dump(f"l{li}.e{ei}.b2", b2)
+
+    with open(os.path.join(out_dir, "weights", "manifest.json"), "w") as fh:
+        json.dump(wmanifest, fh, indent=2, sort_keys=True)
+
+    # Golden end-to-end output: the Rust serving path must reproduce the
+    # dense reference forward on this input (cross-layer validation).
+    from .model import forward_reference
+
+    rng = np.random.RandomState(1234)
+    golden_ids = rng.randint(0, v, size=s).astype(np.int32)
+    hidden = np.asarray(forward_reference(jnp.asarray(golden_ids), weights))
+    golden = {
+        "ids": golden_ids.tolist(),
+        "hidden_norm": float(np.linalg.norm(hidden)),
+        "hidden_head": hidden.reshape(-1)[:16].tolist(),
+        "shape": list(hidden.shape),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as fh:
+        json.dump(golden, fh, indent=2)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    # Legacy sentinel for the Makefile dependency.
+    if args.out is not None:
+        with open(args.out, "w") as fh:
+            fh.write("# see manifest.json; stages are split per shape bucket\n")
+    print(f"done: {len(manifest['stages'])} stages, {len(wmanifest)} weight blobs -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

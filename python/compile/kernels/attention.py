@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: fused single-head self-attention with residual, plus
+the per-query argmax attention source needed for the attention-ID feature
+(§III-B).
+
+The whole [S, S] score matrix for the tiny model's sequence lengths fits in
+VMEM, so the kernel fuses QKV projection, softmax, context matmul, output
+projection and residual in one pass, and emits the argmax source position as
+a second output (the rust side maps positions to token IDs).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(x_ref, wq_ref, wk_ref, wv_ref, wo_ref, y_ref, amax_ref):
+    x = x_ref[...]
+    q = jnp.dot(x, wq_ref[...], preferred_element_type=jnp.float32)
+    k = jnp.dot(x, wk_ref[...], preferred_element_type=jnp.float32)
+    v = jnp.dot(x, wv_ref[...], preferred_element_type=jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(x.shape[-1], dtype=x.dtype))
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    scores = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    y_ref[...] = jnp.dot(ctx, wo_ref[...], preferred_element_type=jnp.float32) + x
+    amax_ref[...] = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def attention(x, wq, wk, wv, wo):
+    """Fused attention. x: [S, H] -> (y [S, H], argmax_src [S] int32)."""
+    s, h = x.shape
+    return pl.pallas_call(
+        _attn_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((s, h), x.dtype),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+        ),
+        interpret=True,
+    )(x, wq, wk, wv, wo)

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: the expert FFN — the MoE compute hot-spot.
+
+TPU-minded tiling (DESIGN.md §Hardware-Adaptation): the token dimension is
+split into MXU-friendly tiles via the grid; each grid step keeps one token
+tile plus both weight matrices resident in VMEM (BlockSpec expresses the
+HBM↔VMEM schedule the GPU original would do with threadblocks). Runs in
+interpret mode on CPU — real-TPU lowering would emit a Mosaic custom-call
+the CPU PJRT plugin cannot execute.
+
+VMEM footprint per grid step (f32):
+    tile·H (x) + H·F (w1) + F (b1) + F·H (w2) + H (b2) + tile·F (hidden)
+For the tiny config (H=64, F=256, tile=128): ≈ 0.40 MB — far under the
+~16 MB VMEM budget, leaving room to scale H/F ~6× per dimension.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu
+
+# Token-dimension tile: one MXU-major block per grid step.
+TILE_T = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One token tile through the whole FFN (both matmuls fused in VMEM)."""
+    x = x_ref[...]
+    h = gelu(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    )
+    o_ref[...] = (
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def expert_ffn(x, w1, b1, w2, b2):
+    """Pallas expert FFN. x: [T, H] with T a multiple of TILE_T or smaller.
+
+    Weights are broadcast to every grid step (index_map pins block 0);
+    tokens are tiled along the grid.
+    """
+    t, h = x.shape
+    f = w1.shape[1]
+    if t <= TILE_T:
+        # Single block — no grid.
+        return pl.pallas_call(
+            _ffn_kernel,
+            out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+            interpret=True,
+        )(x, w1, b1, w2, b2)
+    assert t % TILE_T == 0, f"token count {t} not a multiple of {TILE_T}"
+    grid = (t // TILE_T,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_T, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_T, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes(tile_t: int, hidden: int, ffn_dim: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (see module docstring)."""
+    return dtype_bytes * (
+        tile_t * hidden  # x tile
+        + hidden * ffn_dim  # w1
+        + ffn_dim  # b1
+        + ffn_dim * hidden  # w2
+        + hidden  # b2
+        + tile_t * ffn_dim  # hidden activations
+        + tile_t * hidden  # output tile
+    )
+
+
+def mxu_utilization_estimate(tile_t: int, hidden: int, ffn_dim: int) -> float:
+    """Fraction of MXU-shaped work: both matmuls are dense [tile,H]x[H,F];
+    with tile ≥ 128 and H,F multiples of 64 the systolic array is fully fed
+    except for the GELU epilogue (VPU). Returns FLOPs(matmul)/FLOPs(total).
+    """
+    matmul = 2 * tile_t * hidden * ffn_dim * 2  # two matmuls
+    epilogue = tile_t * ffn_dim * 10  # gelu ~10 flops/elem
+    return matmul / (matmul + epilogue)

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: the gating network (scores + softmax), fused in VMEM.
+
+The gate is a single linear layer over the hidden state followed by softmax
+over the (small) expert dimension — one VMEM-resident block per token tile.
+Top-k extraction happens in the jnp wrapper (dynamic gather lowers poorly
+inside a kernel and costs nothing outside it).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 128
+
+
+def _gating_kernel(x_ref, wg_ref, o_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gating(x, wg):
+    """Pallas gating probs. x: [T, H], wg: [H, E] -> [T, E]."""
+    t, h = x.shape
+    e = wg.shape[1]
+    if t <= TILE_T:
+        return pl.pallas_call(
+            _gating_kernel,
+            out_shape=jax.ShapeDtypeStruct((t, e), x.dtype),
+            interpret=True,
+        )(x, wg)
+    assert t % TILE_T == 0, f"token count {t} not a multiple of {TILE_T}"
+    return pl.pallas_call(
+        _gating_kernel,
+        grid=(t // TILE_T,),
+        in_specs=[
+            pl.BlockSpec((TILE_T, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_T, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), x.dtype),
+        interpret=True,
+    )(x, wg)
+
+
+def gating_topk(x, wg, k: int):
+    """Gating probs + top-k expert indices. Returns (probs [T,E], idx [T,k])."""
+    probs = gating(x, wg)
+    idx = jnp.argsort(-probs, axis=-1)[:, :k]
+    return probs, idx.astype(jnp.int32)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest asserts the Pallas kernels
+(interpret mode) match these to float tolerance, and the Rust runtime's
+numerics are validated against HLO lowered from the same functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches jax.nn.gelu(approximate=True))."""
+    return 0.5 * x * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (x + 0.044715 * x**3)))
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Expert FFN: GELU(x @ W1 + b1) @ W2 + b2.
+
+    x: [T, H], w1: [H, F], b1: [F], w2: [F, H], b2: [H] -> [T, H]
+    """
+    h = gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def gating_ref(x, wg):
+    """Gating network: softmax(x @ Wg) over experts.
+
+    x: [T, H], wg: [H, E] -> probs [T, E]
+    """
+    logits = x @ wg
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def attention_ref(x, wq, wk, wv, wo):
+    """Single-head self-attention block with residual.
+
+    x: [S, H]; wq/wk/wv/wo: [H, H].
+    Returns (y [S, H], scores [S, S]) where scores are the softmax attention
+    weights; row t's argmax defines token t's attention ID (§III-B).
+    """
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(x.shape[-1], dtype=x.dtype))
+    logits = (q @ k.T) * scale
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    scores = e / e.sum(axis=-1, keepdims=True)
+    y = (scores @ v) @ wo + x
+    return y, scores
+
+
+def attention_id_ref(scores, token_ids):
+    """Attention ID: for each query position, the token ID of the source
+    position receiving its highest attention weight.
+
+    scores: [S, S] (rows = queries), token_ids: [S] -> [S]
+    """
+    best_src = jnp.argmax(scores, axis=-1)
+    return token_ids[best_src]
+
+
+def moe_layer_ref(x, wg, experts, top_k=1):
+    """Full MoE layer: gate, route top-k, weighted-combine expert outputs.
+
+    x: [T, H]; wg: [H, E]; experts: list of (w1, b1, w2, b2) tuples.
+    Dense reference (every expert computes every token, then masks) — the
+    serving system computes only routed tokens; results must match.
+    """
+    probs = gating_ref(x, wg)
+    e_count = probs.shape[-1]
+    idx = jnp.argsort(-probs, axis=-1)[:, :top_k]  # [T, k]
+    out = jnp.zeros_like(x)
+    for i in range(e_count):
+        sel = (idx == i).any(axis=-1)  # [T]
+        w = probs[:, i] * sel
+        y = expert_ffn_ref(x, *experts[i])
+        out = out + y * w[:, None]
+    mass = jnp.take_along_axis(probs, idx, axis=-1).sum(axis=-1, keepdims=True)
+    return out / jnp.maximum(mass, 1e-9)
+
+
+def embed_ref(ids, wte, wpe):
+    """Token + position embedding. ids: [S] int32 -> [S, H]."""
+    pos = jnp.arange(ids.shape[0])
+    return wte[ids] + wpe[pos]
+
+
+__all__ = [
+    "gelu",
+    "expert_ffn_ref",
+    "gating_ref",
+    "attention_ref",
+    "attention_id_ref",
+    "moe_layer_ref",
+    "embed_ref",
+]
+
+_ = jax  # re-exported convenience for tests

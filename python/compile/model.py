@@ -1,0 +1,129 @@
+"""L2: the JAX MoE transformer, assembled from the L1 Pallas kernels.
+
+The model is deliberately *stage-split*: each serving stage (embedding,
+attention block, gating, expert FFN) is its own jittable function with
+weights as runtime arguments, because on the serverless platform each stage
+runs as a separate function with parameters fetched from external storage.
+`aot.py` lowers each stage once per shape bucket to HLO text; the Rust
+coordinator composes them at request time (Python never serves).
+
+Tiny-MoE config (matches `ModelPreset::TinyMoe` on the Rust side):
+  H=64, F=256, E=4 experts x L=2 MoE layers, vocab 1024, seq <= 64, top-1.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.expert_ffn import expert_ffn
+from .kernels.gating import gating
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class TinyMoeConfig:
+    hidden: int = 64
+    ffn_dim: int = 256
+    experts: int = 4
+    moe_layers: int = 2
+    vocab: int = 1024
+    max_seq: int = 64
+    top_k: int = 1
+
+
+CONFIG = TinyMoeConfig()
+
+
+# ---------------------------------------------------------------- stages --
+def embed(ids, wte, wpe):
+    """Embedding stage. ids: [S] int32, wte: [V, H], wpe: [Smax, H]."""
+    s = ids.shape[0]
+    pos = jnp.arange(s)
+    return wte[ids] + wpe[pos]
+
+
+def attention_block(x, wq, wk, wv, wo):
+    """Non-MoE block: fused attention (Pallas) + attention-source argmax."""
+    return attention(x, wq, wk, wv, wo)
+
+
+def gating_stage(x, wg):
+    """Gating stage: expert probabilities (Pallas softmax kernel)."""
+    return gating(x, wg)
+
+
+def expert_stage(x, w1, b1, w2, b2):
+    """One expert function's computation over its routed tokens (Pallas)."""
+    return expert_ffn(x, w1, b1, w2, b2)
+
+
+# ------------------------------------------------------------- reference --
+def init_weights(cfg: TinyMoeConfig = CONFIG, seed: int = 0):
+    """Deterministic weight pytree for the tiny model."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + cfg.moe_layers * (5 + 4 * cfg.experts))
+    it = iter(range(len(ks)))
+
+    def nxt(shape, scale):
+        return (jax.random.normal(ks[next(it)], shape) * scale).astype(jnp.float32)
+
+    h, f = cfg.hidden, cfg.ffn_dim
+    w = {
+        "wte": nxt((cfg.vocab, h), 0.02),
+        "wpe": nxt((cfg.max_seq, h), 0.02),
+        "layers": [],
+    }
+    for _ in range(cfg.moe_layers):
+        layer = {
+            "wq": nxt((h, h), h**-0.5),
+            "wk": nxt((h, h), h**-0.5),
+            "wv": nxt((h, h), h**-0.5),
+            "wo": nxt((h, h), h**-0.5),
+            "wg": nxt((h, cfg.experts), 0.15),
+            "experts": [
+                (
+                    nxt((h, f), h**-0.5),
+                    nxt((f,), 0.01),
+                    nxt((f, h), f**-0.5),
+                    nxt((h,), 0.01),
+                )
+                for _ in range(cfg.experts)
+            ],
+        }
+        w["layers"].append(layer)
+    return w
+
+
+def forward_reference(ids, weights, cfg: TinyMoeConfig = CONFIG):
+    """Whole-model dense reference (pure jnp) — the oracle the Rust serving
+    path is validated against end to end. Returns the final hidden states.
+    """
+    x = ref.embed_ref(ids, weights["wte"], weights["wpe"])
+    for layer in weights["layers"]:
+        y, _scores = ref.attention_ref(
+            x, layer["wq"], layer["wk"], layer["wv"], layer["wo"]
+        )
+        moe_out = ref.moe_layer_ref(y, layer["wg"], layer["experts"], cfg.top_k)
+        x = y + moe_out
+    return x
+
+
+def forward_kernels(ids, weights, cfg: TinyMoeConfig = CONFIG):
+    """Whole-model forward via the Pallas kernels, dense routing combine —
+    used to validate kernel composition against `forward_reference`.
+    """
+    x = embed(ids, weights["wte"], weights["wpe"])
+    for layer in weights["layers"]:
+        y, _amax = attention_block(x, layer["wq"], layer["wk"], layer["wv"], layer["wo"])
+        probs = gating_stage(y, layer["wg"])
+        idx = jnp.argsort(-probs, axis=-1)[:, : cfg.top_k]
+        out = jnp.zeros_like(y)
+        for i in range(cfg.experts):
+            sel = (idx == i).any(axis=-1)
+            wgt = probs[:, i] * sel
+            out = out + expert_stage(y, *layer["experts"][i]) * wgt[:, None]
+        mass = jnp.take_along_axis(probs, idx, axis=-1).sum(axis=-1, keepdims=True)
+        x = y + out / jnp.maximum(mass, 1e-9)
+    return x

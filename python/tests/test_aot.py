@@ -1,0 +1,52 @@
+"""AOT pipeline tests: HLO text emission and manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_smoke():
+    """Lower one stage in-process and sanity-check the HLO text."""
+    import jax
+    import jax.numpy as jnp
+    from compile.aot import lower_stage, spec
+    from compile.model import gating_stage
+
+    text = lower_stage(gating_stage, (spec([16, 64]), spec([64, 4])))
+    assert "HloModule" in text
+    assert "f32[16,64]" in text
+    # return_tuple=True wraps outputs in a tuple
+    assert "(f32[16,4])" in text or "tuple" in text
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_manifest_matches_files():
+    with open(os.path.join(ART, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    assert manifest["config"]["hidden"] == 64
+    assert manifest["token_buckets"] == [16, 64, 128, 256]
+    for name, stage in manifest["stages"].items():
+        path = os.path.join(ART, stage["file"])
+        assert os.path.isfile(path), f"{name}: missing {stage['file']}"
+        with open(path) as fh:
+            head = fh.read(2000)
+        assert "HloModule" in head, name
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_weight_blobs_match_manifest():
+    import numpy as np
+
+    with open(os.path.join(ART, "weights", "manifest.json")) as fh:
+        wm = json.load(fh)
+    assert "wte" in wm and "l0.e0.w1" in wm
+    for name, shape in wm.items():
+        path = os.path.join(ART, "weights", f"{name}.bin")
+        data = np.fromfile(path, dtype=np.float32)
+        assert data.size == int(np.prod(shape)), name
+        assert np.isfinite(data).all(), name

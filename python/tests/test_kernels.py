@@ -1,0 +1,115 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (and seeds) for every Pallas kernel against the
+pure-jnp oracle in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.expert_ffn import expert_ffn, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.gating import gating, gating_topk
+from compile.kernels import ref
+
+
+def rand(key, *shape, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(
+        jnp.float32
+    )
+
+
+# dims kept multiples-of-8-ish and small so interpret mode stays fast
+dims = st.sampled_from([8, 16, 32, 64])
+tokens = st.sampled_from([1, 4, 16, 64, 128, 256])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=tokens, h=dims, f=dims, seed=seeds)
+def test_expert_ffn_matches_ref(t, h, f, seed):
+    x = rand(seed, t, h)
+    w1 = rand(seed + 1, h, f, scale=h**-0.5)
+    b1 = rand(seed + 2, f, scale=0.01)
+    w2 = rand(seed + 3, f, h, scale=f**-0.5)
+    b2 = rand(seed + 4, h, scale=0.01)
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=tokens, h=dims, e=st.sampled_from([2, 4, 8, 16]), seed=seeds)
+def test_gating_matches_ref(t, h, e, seed):
+    x = rand(seed, t, h)
+    wg = rand(seed + 9, h, e, scale=0.2)
+    got = gating(x, wg)
+    want = ref.gating_ref(x, wg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # probabilities
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)
+    assert (np.asarray(got) >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([2, 8, 32, 64]), h=dims, seed=seeds)
+def test_attention_matches_ref(s, h, seed):
+    x = rand(seed, s, h)
+    wq, wk, wv, wo = (rand(seed + i, h, h, scale=h**-0.5) for i in range(1, 5))
+    y, amax = attention(x, wq, wk, wv, wo)
+    y_ref, scores = ref.attention_ref(x, wq, wk, wv, wo)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(amax), np.argmax(scores, axis=-1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([4, 16, 64]), seed=seeds, k=st.sampled_from([1, 2]))
+def test_gating_topk_consistent(t, seed, k):
+    x = rand(seed, t, 32)
+    wg = rand(seed + 7, 32, 4, scale=0.2)
+    probs, idx = gating_topk(x, wg, k)
+    probs = np.asarray(probs)
+    idx = np.asarray(idx)
+    assert idx.shape == (t, k)
+    for row in range(t):
+        # top-k indices really are the k largest probs
+        topk = set(np.argsort(-probs[row])[:k].tolist())
+        assert set(idx[row].tolist()) == topk
+
+
+def test_attention_id_maps_positions_to_tokens():
+    token_ids = jnp.array([5, 9, 2, 7], dtype=jnp.int32)
+    scores = jnp.array(
+        [
+            [0.1, 0.7, 0.1, 0.1],
+            [0.6, 0.2, 0.1, 0.1],
+            [0.1, 0.1, 0.1, 0.7],
+            [0.25, 0.25, 0.3, 0.2],
+        ]
+    )
+    ids = ref.attention_id_ref(scores, token_ids)
+    np.testing.assert_array_equal(np.asarray(ids), [9, 5, 7, 2])
+
+
+def test_vmem_estimate_within_budget():
+    # The tiny config's kernel block must fit VMEM with big margin.
+    assert vmem_bytes(128, 64, 256) < 1 * 1024 * 1024
+    # And a scaled config (H=512, F=2048) should still fit ~16MB VMEM.
+    assert vmem_bytes(128, 512, 2048) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_dominated_by_matmul():
+    assert mxu_utilization_estimate(128, 64, 256) > 0.95
+
+
+def test_expert_ffn_rejects_unaligned_large_batch():
+    x = rand(0, 130, 16)  # >TILE_T and not a multiple
+    w1 = rand(1, 16, 16)
+    b1 = rand(2, 16)
+    w2 = rand(3, 16, 16)
+    b2 = rand(4, 16)
+    with pytest.raises(AssertionError):
+        expert_ffn(x, w1, b1, w2, b2)

@@ -1,0 +1,38 @@
+//! End-to-end benches: one timed run per paper table/figure (quick scale),
+//! printing the regenerated rows. `cargo bench --bench figures`.
+//!
+//! Criterion is not in the offline vendor set; this is a plain
+//! harness=false bench with wall-clock timing and N repeats for stability.
+
+use serverless_moe::experiments;
+use std::time::Instant;
+
+fn bench_one(id: &str) {
+    // Warm-up run (also prints the table once — the paper rows).
+    let t0 = Instant::now();
+    let tables = experiments::run(id, true).expect("experiment runs");
+    let first = t0.elapsed().as_secs_f64();
+    for t in &tables {
+        t.print();
+    }
+    // Timed repeats.
+    let reps = 3;
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let _ = experiments::run(id, true).unwrap();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "bench {id:>9}: first {first:.3}s, repeat mean {mean:.3}s, min {min:.3}s\n"
+    );
+}
+
+fn main() {
+    println!("== figure-regeneration benches (quick scale) ==\n");
+    for id in experiments::ALL {
+        bench_one(id);
+    }
+}

@@ -1,0 +1,135 @@
+//! Hot-path micro-benches for the §Perf pass (EXPERIMENTS.md):
+//!  - Bayesian posterior prediction throughput (tokens/s)
+//!  - per-expert option enumeration + layer candidate generation
+//!  - fixed-method MIQCP solve and full ODS
+//!  - GP surrogate fit+predict
+//!  - PJRT expert-FFN invocation throughput (when artifacts exist)
+//!
+//! `cargo bench --bench hotpaths`
+
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::config::Config;
+use serverless_moe::deploy::miqcp::solve_fixed_method;
+use serverless_moe::deploy::ods::ods_full;
+use serverless_moe::experiments::common::ExpContext;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::predictor::ExpertPredictor;
+use std::time::Instant;
+
+fn timeit<T>(name: &str, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    // Warm-up.
+    let _ = f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<44} {:>12}/iter  ({reps} reps)", serverless_moe::util::table::ftime(per));
+    per
+}
+
+fn main() {
+    println!("== hot-path micro benches ==\n");
+    let mut ctx = ExpContext::new(
+        ModelPreset::BertMoe { experts: 4, top_k: 1 },
+        CorpusPreset::Enwik8,
+        true,
+    );
+    let batch = ctx.eval_batch();
+    let bayes = ctx.bayes();
+    let tokens: Vec<(u32, u32)> = batch.tokens().map(|(t, p, _)| (t, p)).collect();
+
+    // Posterior prediction throughput.
+    let per = timeit("bayes predict_counts (1 layer, batch)", 10, || {
+        bayes.predict_counts(0, 4, &tokens, 1)
+    });
+    println!(
+        "{:<44} {:>12.0} tokens/s",
+        "  -> prediction throughput",
+        tokens.len() as f64 / per
+    );
+
+    // Lina baseline for comparison.
+    let per_lina = timeit("lina predict_counts (1 layer, batch)", 10, || {
+        ctx.profile.lina.predict_counts(0, 4, &tokens, 1)
+    });
+    println!(
+        "{:<44} {:>12.0} tokens/s",
+        "  -> lina throughput",
+        tokens.len() as f64 / per_lina
+    );
+
+    // Deployment machinery.
+    let counts = ctx.real_counts(&batch);
+    let problem = ctx.problem(counts.clone(), 3000.0);
+    timeit("layer candidates (indirect, 1 layer)", 20, || {
+        serverless_moe::deploy::layer_opt::layer_candidates(
+            &ctx.config.platform,
+            &ctx.spec,
+            0,
+            &problem.tokens[0],
+            serverless_moe::comm::CommMethod::Indirect,
+            &problem.beta_grid,
+            8,
+            true,
+        )
+    });
+    timeit("solve_fixed_method (indirect, 12 layers)", 5, || {
+        solve_fixed_method(&problem, serverless_moe::comm::CommMethod::Indirect, 5.0)
+    });
+    timeit("ods_full (3 solves + Alg.1)", 3, || ods_full(&problem, 5.0));
+
+    // GP surrogate.
+    let vars: Vec<serverless_moe::bo::BoVar> = {
+        let mut rng = serverless_moe::util::rng::Rng::new(3);
+        let experts = vec![4usize; 12];
+        let hist: Vec<serverless_moe::bo::TrialRecord> = vec![];
+        let lim: Vec<u32> = vec![];
+        let mut pctx = serverless_moe::bo::ProposeCtx {
+            history: &hist,
+            limited_tokens: &lim,
+            vocab: 16_384,
+            experts_per_layer: &experts,
+            q: 256,
+            trial: 0,
+            rng: &mut rng,
+        };
+        (0..256).map(|_| pctx.random_var()).collect()
+    };
+    timeit("gp embed (256 vars, 16 dims)", 200, || {
+        serverless_moe::bo::gp::embed(&vars, 16)
+    });
+    let xs: Vec<Vec<f64>> = (0..40)
+        .map(|i| {
+            (0..16)
+                .map(|d| ((i * 7 + d * 3) % 13) as f64 / 13.0)
+                .collect()
+        })
+        .collect();
+    let ys: Vec<f64> = (0..40).map(|i| (i % 9) as f64).collect();
+    timeit("gp fit (40 points, 16 dims)", 50, || {
+        serverless_moe::bo::gp::Gp::fit(xs.clone(), &ys, 0.5, 1e-4)
+    });
+
+    // Real PJRT path.
+    if serverless_moe::runtime::artifacts_available() {
+        let platform = Config::default().platform;
+        let mut svc = serverless_moe::coordinator::MoeService::new(
+            &serverless_moe::runtime::default_artifacts_dir(),
+            platform,
+        )
+        .unwrap();
+        svc.engine.load_all().unwrap();
+        let ids: Vec<u32> = (0..64).map(|i| (i * 13) % 1024).collect();
+        let per = timeit("pjrt serve_sequence (64 tokens, 2 layers)", 10, || {
+            svc.serve_sequence(&ids).unwrap()
+        });
+        println!(
+            "{:<44} {:>12.0} tokens/s",
+            "  -> pjrt serving throughput",
+            64.0 / per
+        );
+    } else {
+        println!("(artifacts missing — skipping PJRT benches)");
+    }
+}

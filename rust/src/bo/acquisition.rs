@@ -1,0 +1,251 @@
+//! Acquisition baselines for the Fig. 13 ablation: single-ε greedy, random,
+//! and TPE (the Optuna default the paper compares against).
+
+use super::gp::{embed, Gp};
+use super::{Acquisition, BoVar, ProposeCtx};
+use crate::config::BoConfig;
+
+/// Single-dimension ε-greedy: one shared ε for all Q dimensions, plain decay.
+pub struct SingleEpsGreedy {
+    pub eps0: f64,
+    pub rho: f64,
+}
+
+impl SingleEpsGreedy {
+    pub fn new(cfg: &BoConfig) -> Self {
+        Self {
+            eps0: cfg.eps0,
+            rho: cfg.rho,
+        }
+    }
+}
+
+impl Acquisition for SingleEpsGreedy {
+    fn propose(&mut self, ctx: &mut ProposeCtx) -> Vec<BoVar> {
+        let eps = self.eps0 / (1.0 + self.rho * ctx.trial as f64);
+        let best: Vec<BoVar> = ctx.best_vars().map(|v| v.to_vec()).unwrap_or_default();
+        (0..ctx.q)
+            .map(|dim| {
+                if ctx.rng.chance(eps) || best.is_empty() {
+                    ctx.random_var()
+                } else {
+                    best[dim.min(best.len() - 1)]
+                }
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "single-eps-gs"
+    }
+}
+
+/// Random search: fresh random variables every trial.
+pub struct RandomAcq;
+
+impl Acquisition for RandomAcq {
+    fn propose(&mut self, ctx: &mut ProposeCtx) -> Vec<BoVar> {
+        (0..ctx.q).map(|_| ctx.random_var()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Tree-structured Parzen Estimator (simplified): split history at the γ
+/// cost quantile; propose candidate variable sets and keep the one whose
+/// embedding maximizes l(x)/g(x) under Gaussian KDEs of good/bad trials.
+pub struct Tpe {
+    pub gamma: f64,
+    pub candidates: usize,
+    dim: usize,
+}
+
+impl Tpe {
+    pub fn new() -> Self {
+        Self {
+            gamma: 0.25,
+            candidates: 8,
+            dim: 16,
+        }
+    }
+
+    fn kde_log_density(points: &[Vec<f64>], x: &[f64], bw: f64) -> f64 {
+        if points.is_empty() {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for p in points {
+            let d2: f64 = p.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum();
+            acc += (-d2 / (2.0 * bw * bw)).exp();
+        }
+        (acc / points.len() as f64).max(1e-300).ln()
+    }
+}
+
+impl Default for Tpe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Acquisition for Tpe {
+    fn propose(&mut self, ctx: &mut ProposeCtx) -> Vec<BoVar> {
+        if ctx.history.len() < 3 {
+            return (0..ctx.q).map(|_| ctx.random_var()).collect();
+        }
+        // Split good/bad by cost quantile.
+        let mut costs: Vec<f64> = ctx.history.iter().map(|t| t.cost).collect();
+        costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = costs[((costs.len() as f64 * self.gamma) as usize).min(costs.len() - 1)];
+        let good: Vec<Vec<f64>> = ctx
+            .history
+            .iter()
+            .filter(|t| t.cost <= cut)
+            .map(|t| embed(&t.vars, self.dim))
+            .collect();
+        let bad: Vec<Vec<f64>> = ctx
+            .history
+            .iter()
+            .filter(|t| t.cost > cut)
+            .map(|t| embed(&t.vars, self.dim))
+            .collect();
+        // Generate candidates by mutating the best trial, score by l/g.
+        let best: Vec<BoVar> = ctx.best_vars().unwrap().to_vec();
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best_cand: Option<Vec<BoVar>> = None;
+        for _ in 0..self.candidates {
+            let cand: Vec<BoVar> = best
+                .iter()
+                .map(|v| {
+                    if ctx.rng.chance(0.2) {
+                        ctx.random_var()
+                    } else {
+                        *v
+                    }
+                })
+                .collect();
+            let x = embed(&cand, self.dim);
+            let score = Self::kde_log_density(&good, &x, 0.4)
+                - Self::kde_log_density(&bad, &x, 0.4);
+            if score > best_score {
+                best_score = score;
+                best_cand = Some(cand);
+            }
+        }
+        best_cand.unwrap()
+    }
+
+    fn name(&self) -> &'static str {
+        "tpe"
+    }
+}
+
+/// GP-guided variant of the multi-ε acquisition used inside Alg. 2: draw S
+/// proposals from the base acquisition and keep the one with the lowest GP
+/// posterior mean (the "surrogate simulates the billed cost" role, §IV-B).
+pub fn gp_filter(
+    proposals: Vec<Vec<BoVar>>,
+    history: &[super::TrialRecord],
+) -> Vec<BoVar> {
+    assert!(!proposals.is_empty());
+    if history.len() < 3 || proposals.len() == 1 {
+        return proposals.into_iter().next().unwrap();
+    }
+    let dim = 16;
+    let xs: Vec<Vec<f64>> = history.iter().map(|t| embed(&t.vars, dim)).collect();
+    let ys: Vec<f64> = history.iter().map(|t| t.cost).collect();
+    let gp = Gp::fit(xs, &ys, 0.5, 1e-4);
+    proposals
+        .into_iter()
+        .min_by(|a, b| {
+            gp.mean(&embed(a, dim))
+                .partial_cmp(&gp.mean(&embed(b, dim)))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bo::TrialRecord;
+    use crate::util::rng::Rng;
+
+    fn mk_ctx<'a>(
+        history: &'a [TrialRecord],
+        limited: &'a [u32],
+        experts: &'a [usize],
+        rng: &'a mut Rng,
+    ) -> ProposeCtx<'a> {
+        ProposeCtx {
+            history,
+            limited_tokens: limited,
+            vocab: 128,
+            experts_per_layer: experts,
+            q: 50,
+            trial: 2,
+            rng,
+        }
+    }
+
+    fn fake_history(rng: &mut Rng, n: usize) -> Vec<TrialRecord> {
+        (0..n)
+            .map(|i| {
+                let vars: Vec<BoVar> = (0..50)
+                    .map(|_| {
+                        let mut ctx = ProposeCtx {
+                            history: &[],
+                            limited_tokens: &[],
+                            vocab: 128,
+                            experts_per_layer: &[4, 4],
+                            q: 50,
+                            trial: 0,
+                            rng,
+                        };
+                        ctx.random_var()
+                    })
+                    .collect();
+                TrialRecord {
+                    vars,
+                    cost: 1.0 + i as f64 * 0.1,
+                    prediction_error: 5.0,
+                    feasible: true,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_acquisitions_propose_q() {
+        let mut rng = Rng::new(9);
+        let history = fake_history(&mut rng, 5);
+        let experts = [4usize, 4];
+        let limited = [7u32];
+        let cfg = crate::config::BoConfig::default();
+        let mut acqs: Vec<Box<dyn Acquisition>> = vec![
+            Box::new(SingleEpsGreedy::new(&cfg)),
+            Box::new(RandomAcq),
+            Box::new(Tpe::new()),
+            Box::new(super::super::eps_greedy::MultiEpsGreedy::new(&cfg)),
+        ];
+        for acq in acqs.iter_mut() {
+            let mut ctx = mk_ctx(&history, &limited, &experts, &mut rng);
+            let vars = acq.propose(&mut ctx);
+            assert_eq!(vars.len(), 50, "{}", acq.name());
+        }
+    }
+
+    #[test]
+    fn gp_filter_prefers_lower_predicted_cost() {
+        let mut rng = Rng::new(11);
+        let history = fake_history(&mut rng, 8);
+        // Proposal identical to the cheapest trial should win over random.
+        let best = history[0].vars.clone();
+        let mut ctx = mk_ctx(&history, &[], &[4, 4], &mut rng);
+        let rand: Vec<BoVar> = (0..50).map(|_| ctx.random_var()).collect();
+        let picked = gp_filter(vec![rand, best.clone()], &history);
+        assert_eq!(picked, best);
+    }
+}

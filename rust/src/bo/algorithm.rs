@@ -1,0 +1,366 @@
+//! Alg. 2: Bayesian Optimization with multi-dimensional ε-greedy search.
+//!
+//! Each trial: (1) write the proposed Q key-value pairs into the dataset
+//! table, (2) re-predict expert selections (Eq. 2), (3) deploy optimally
+//! (three fixed-a MIQCP solves + ODS), (4) serve evaluation batches under
+//! real routing to obtain the billed cost c_τ and the feedback cases
+//! (i)/(ii)/(iii), (5) update the ε schedule and the limited range 𝕃, and
+//! (6) acquire the next trial's variables. Converges when the running
+//! minimum changes less than ζ over λ consecutive trials (Theorem 2 bounds
+//! the horizon).
+
+use super::acquisition::gp_filter;
+use super::eps_greedy::FeedbackCase;
+use super::feedback::serve_with_real_counts;
+use super::{Acquisition, BoVar};
+use crate::config::{BoConfig, DeployConfig, PlatformConfig};
+use crate::deploy::ods::ods_full;
+use crate::deploy::DeployProblem;
+use crate::gating::SimGate;
+use crate::model::MoeModelSpec;
+use crate::predictor::eval::{predicted_counts, real_counts};
+use crate::predictor::BayesPredictor;
+use crate::util::rng::Rng;
+use crate::workload::Batch;
+
+/// One completed BO trial.
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    pub vars: Vec<BoVar>,
+    /// Billed cost of all MoE layers averaged over the trial's batches.
+    pub cost: f64,
+    /// Fig. 10-style prediction error at this trial's table state.
+    pub prediction_error: f64,
+    pub feasible: bool,
+}
+
+/// Final result of a BO run.
+#[derive(Debug, Clone)]
+pub struct BoOutcome {
+    pub best_cost: f64,
+    pub best_trial: usize,
+    pub best_prediction_error: f64,
+    pub history: Vec<TrialRecord>,
+    pub converged: bool,
+    pub iterations: usize,
+}
+
+/// The Alg. 2 driver. Owns the predictor (whose table it adjusts per trial,
+/// with undo) and evaluates against the simulated gate's ground truth.
+pub struct BoAlgorithm<'a> {
+    pub platform: &'a PlatformConfig,
+    pub deploy_cfg: &'a DeployConfig,
+    pub bo_cfg: BoConfig,
+    pub spec: &'a MoeModelSpec,
+    pub gate: &'a SimGate,
+    pub predictor: BayesPredictor,
+    pub eval_batches: Vec<Batch>,
+    /// Per-fixed-a solver time limit inside each trial.
+    pub solver_time_limit: f64,
+}
+
+impl<'a> BoAlgorithm<'a> {
+    /// Evaluate the current table state: predict → deploy → serve real.
+    /// Returns (cost, prediction_error, feasible, memory/payload cases,
+    /// mispredicted token ids).
+    fn evaluate(&self) -> EvalResult {
+        let mut total_cost = 0.0;
+        let mut total_err = 0.0;
+        let mut n = 0.0;
+        let mut any_mem = false;
+        let mut any_payload = false;
+        let mut feasible = true;
+        let mut limited: Vec<u32> = Vec::new();
+
+        for batch in &self.eval_batches {
+            let pred = predicted_counts(self.gate, &self.predictor, batch);
+            let real = real_counts(self.gate, batch);
+            let problem = DeployProblem {
+                cfg: self.platform,
+                spec: self.spec,
+                tokens: pred.clone(),
+                t_limit: self.deploy_cfg.t_limit,
+                max_replicas: self.deploy_cfg.max_replicas,
+                beta_grid: self.deploy_cfg.beta_grid.clone(),
+                warm: true,
+            };
+            let Some(ods) = ods_full(&problem, self.solver_time_limit) else {
+                feasible = false;
+                continue;
+            };
+            let outcome =
+                serve_with_real_counts(self.platform, self.spec, &ods.policy, &real, true);
+            total_cost += outcome.cost;
+            any_mem |= !outcome.memory_violations.is_empty();
+            any_payload |= !outcome.payload_violations.is_empty();
+            feasible &= ods.feasible && outcome.fully_feasible();
+
+            // Prediction error (Fig. 10 metric) + limited-range collection
+            // (Alg. 2 lines 11-12): batches where some expert misses by > α
+            // contribute their frequent token ids to 𝕃.
+            let mut batch_err = 0.0;
+            let mut layers_off = 0usize;
+            for (p_l, r_l) in pred.iter().zip(&real) {
+                let diff: f64 = p_l
+                    .iter()
+                    .zip(r_l)
+                    .map(|(&p, &r)| (p as f64 - r as f64).abs())
+                    .sum::<f64>()
+                    / p_l.len() as f64;
+                batch_err += diff;
+                if p_l
+                    .iter()
+                    .zip(r_l)
+                    .any(|(&p, &r)| (p as f64 - r as f64).abs() > self.bo_cfg.alpha)
+                {
+                    layers_off += 1;
+                }
+            }
+            total_err += batch_err / pred.len() as f64;
+            n += 1.0;
+            if layers_off > 0 {
+                let mut freq: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+                for (t, _, _) in batch.tokens() {
+                    *freq.entry(t).or_default() += 1;
+                }
+                let mut ids: Vec<(u32, u32)> = freq.into_iter().collect();
+                ids.sort_by(|a, b| b.1.cmp(&a.1));
+                limited.extend(ids.into_iter().take(256).map(|(t, _)| t));
+            }
+        }
+        EvalResult {
+            cost: if n > 0.0 { total_cost / n } else { f64::INFINITY },
+            prediction_error: if n > 0.0 { total_err / n } else { f64::INFINITY },
+            feasible,
+            any_mem,
+            any_payload,
+            limited,
+        }
+    }
+
+    /// Apply a variable set to the table, returning the undo log.
+    fn apply_vars(&mut self, vars: &[BoVar]) -> Vec<(usize, crate::gating::features::FeatKey, u8, f64)> {
+        let mut undo = Vec::with_capacity(vars.len());
+        for v in vars {
+            let prev = self.predictor.table.get(v.layer, v.key, v.expert);
+            undo.push((v.layer, v.key, v.expert, prev));
+            self.predictor.table.set(v.layer, v.key, v.expert, v.value);
+        }
+        undo
+    }
+
+    fn revert(&mut self, undo: Vec<(usize, crate::gating::features::FeatKey, u8, f64)>) {
+        // Reverse order so repeated keys restore correctly.
+        for (layer, key, expert, prev) in undo.into_iter().rev() {
+            self.predictor.table.set(layer, key, expert, prev);
+        }
+    }
+
+    /// Cost/error of the *unadjusted* predictor (the "no BO" baseline of
+    /// Fig. 13).
+    pub fn evaluate_no_bo(&self) -> (f64, f64) {
+        let r = self.evaluate();
+        (r.cost, r.prediction_error)
+    }
+
+    /// Run Alg. 2 with the given acquisition. `use_gp_filter` enables the
+    /// GP-surrogate screening of proposals (on for the paper's method).
+    pub fn run(
+        &mut self,
+        acq: &mut dyn Acquisition,
+        use_gp_filter: bool,
+        seed: u64,
+    ) -> BoOutcome {
+        let mut rng = Rng::new(seed);
+        let mut history: Vec<TrialRecord> = Vec::new();
+        let mut limited_tokens: Vec<u32> = Vec::new();
+        let mut best_cost = f64::INFINITY;
+        let mut best_trial = 0usize;
+        let mut best_err = f64::INFINITY;
+        let mut min_cost_trace: Vec<f64> = Vec::new();
+        let mut converged = false;
+        let experts_per_layer: Vec<usize> = (0..self.spec.num_moe_layers())
+            .map(|e| self.spec.experts_at(e))
+            .collect();
+
+        let mut tau = 0usize;
+        while tau < self.bo_cfg.max_iters {
+            // Lines 30-31: acquire variables (proposals screened by the GP
+            // surrogate when enabled).
+            let vars = {
+                let n_proposals = if use_gp_filter && history.len() >= 3 { 3 } else { 1 };
+                let mut proposals = Vec::with_capacity(n_proposals);
+                for _ in 0..n_proposals {
+                    let mut ctx = super::ProposeCtx {
+                        history: &history,
+                        limited_tokens: &limited_tokens,
+                        vocab: self.spec.vocab,
+                        experts_per_layer: &experts_per_layer,
+                        q: self.bo_cfg.q,
+                        trial: tau,
+                        rng: &mut rng,
+                    };
+                    proposals.push(acq.propose(&mut ctx));
+                }
+                gp_filter(proposals, &history)
+            };
+
+            // Line 4: write the table; lines 5-28: evaluate.
+            let undo = self.apply_vars(&vars);
+            let result = self.evaluate();
+            self.revert(undo);
+
+            // Lines 13-20: feedback case → ε schedule adjustment (only the
+            // multi-ε acquisition has the per-case schedule).
+            let case = if result.any_mem {
+                FeedbackCase::MemoryShortfall
+            } else if result.any_payload {
+                FeedbackCase::PayloadOverflow
+            } else {
+                FeedbackCase::Feasible
+            };
+            acq.feedback(case, tau);
+            limited_tokens = result.limited;
+
+            if result.cost < best_cost {
+                best_cost = result.cost;
+                best_trial = tau;
+                best_err = result.prediction_error;
+            }
+            history.push(TrialRecord {
+                vars,
+                cost: result.cost,
+                prediction_error: result.prediction_error,
+                feasible: result.feasible,
+            });
+            min_cost_trace.push(best_cost);
+
+            // Line 33: convergence over λ consecutive iterations.
+            let lam = self.bo_cfg.lambda;
+            if min_cost_trace.len() > lam {
+                let then = min_cost_trace[min_cost_trace.len() - 1 - lam];
+                let now = *min_cost_trace.last().unwrap();
+                if (then - now).abs() <= self.bo_cfg.zeta * then.abs().max(1e-12) {
+                    converged = true;
+                    tau += 1;
+                    break;
+                }
+            }
+            tau += 1;
+        }
+
+        BoOutcome {
+            best_cost,
+            best_trial,
+            best_prediction_error: best_err,
+            history,
+            converged,
+            iterations: tau,
+        }
+    }
+
+    /// Materialize the best trial's table adjustment permanently.
+    pub fn commit_best(&mut self, outcome: &BoOutcome) {
+        if let Some(best) = outcome.history.get(outcome.best_trial) {
+            let vars = best.vars.clone();
+            let _ = self.apply_vars(&vars);
+        }
+    }
+}
+
+struct EvalResult {
+    cost: f64,
+    prediction_error: f64,
+    feasible: bool,
+    any_mem: bool,
+    any_payload: bool,
+    limited: Vec<u32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bo::acquisition::RandomAcq;
+    use crate::config::workload::CorpusPreset;
+    use crate::model::ModelPreset;
+    use crate::predictor::profile::profile_batches;
+    use crate::workload::{Corpus, RequestGenerator};
+
+    fn build<'a>(
+        platform: &'a PlatformConfig,
+        deploy_cfg: &'a DeployConfig,
+        spec: &'a MoeModelSpec,
+        gate: &'a SimGate,
+    ) -> BoAlgorithm<'a> {
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 1);
+        let mut gen = RequestGenerator::new(corpus, 5, 768);
+        let profile = gen.profile_set(8);
+        let r = profile_batches(gate, &profile);
+        let eval_batches = vec![gen.next_batch(), gen.next_batch()];
+        let mut bo_cfg = BoConfig::default();
+        bo_cfg.q = 64;
+        bo_cfg.max_iters = 6;
+        bo_cfg.batches_per_trial = 2;
+        BoAlgorithm {
+            platform,
+            deploy_cfg,
+            bo_cfg,
+            spec,
+            gate,
+            predictor: BayesPredictor::new(r.table, r.prior),
+            eval_batches,
+            solver_time_limit: 1.0,
+        }
+    }
+
+    #[test]
+    fn bo_runs_and_tracks_best() {
+        let platform = PlatformConfig::default();
+        let mut deploy_cfg = DeployConfig::default();
+        deploy_cfg.t_limit = 2000.0;
+        let spec = ModelPreset::TinyMoe.spec();
+        let gate = SimGate::new(&spec, 7);
+        let mut bo = build(&platform, &deploy_cfg, &spec, &gate);
+        let mut acq = crate::bo::eps_greedy::MultiEpsGreedy::new(&bo.bo_cfg);
+        let outcome = bo.run(&mut acq, true, 99);
+        assert!(!outcome.history.is_empty());
+        assert!(outcome.best_cost.is_finite());
+        assert!(outcome.best_cost <= outcome.history[0].cost + 1e-12);
+        // The running-min trace is non-increasing by construction.
+        let mut best = f64::INFINITY;
+        for t in &outcome.history {
+            best = best.min(t.cost);
+        }
+        assert_eq!(best, outcome.best_cost);
+    }
+
+    #[test]
+    fn table_restored_between_trials() {
+        let platform = PlatformConfig::default();
+        let deploy_cfg = DeployConfig::default();
+        let spec = ModelPreset::TinyMoe.spec();
+        let gate = SimGate::new(&spec, 7);
+        let mut bo = build(&platform, &deploy_cfg, &spec, &gate);
+        let before = bo.predictor.table.entries().len();
+        let mut acq = RandomAcq;
+        let _ = bo.run(&mut acq, false, 3);
+        // Undo must leave only zero-valued phantom keys at most; entry count
+        // of positive-count entries must be unchanged.
+        let after = bo.predictor.table.entries().len();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn commit_best_changes_table() {
+        let platform = PlatformConfig::default();
+        let deploy_cfg = DeployConfig::default();
+        let spec = ModelPreset::TinyMoe.spec();
+        let gate = SimGate::new(&spec, 7);
+        let mut bo = build(&platform, &deploy_cfg, &spec, &gate);
+        let mut acq = RandomAcq;
+        let outcome = bo.run(&mut acq, false, 3);
+        let before = bo.predictor.table.entries().len();
+        bo.commit_best(&outcome);
+        assert!(bo.predictor.table.entries().len() >= before);
+    }
+}

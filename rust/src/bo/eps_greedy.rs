@@ -1,0 +1,205 @@
+//! The paper's multi-dimensional ε-greedy acquisition.
+//!
+//! ε ∈ ℝ^Q decays as ε_τ = ε₀ / (1 + ρτ) (Alg. 2 line 3). When feedback
+//! flags a problem, the decay of the first μQ dimensions is slowed by
+//! multiplying with (1 + ρ'τ), ρ' ∈ {ρ₁, ρ₂, ρ₃} depending on the case
+//! (line 20) — memory shortfall slows decay the least aggressively relative
+//! to ρ (ρ₁ < ρ), keeping exploration alive where deployments failed.
+//! Dimensions 1..μQ explore the limited range 𝕃; dimensions μQ+1..Q explore
+//! the normal range ℙ (lines 30–31).
+
+use super::{Acquisition, BoVar, ProposeCtx};
+use crate::config::BoConfig;
+
+/// Feedback case from one trial (Alg. 2 lines 13-18).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedbackCase {
+    /// (i) real popularity needed more memory than configured.
+    MemoryShortfall,
+    /// (ii) direct-transfer payload exceeded.
+    PayloadOverflow,
+    /// (iii) all constraints satisfied.
+    Feasible,
+}
+
+/// The per-dimension ε schedule.
+#[derive(Debug, Clone)]
+pub struct EpsSchedule {
+    pub eps0: f64,
+    pub rho: f64,
+    pub rho1: f64,
+    pub rho2: f64,
+    pub rho3: f64,
+    pub q: usize,
+    pub mu: f64,
+    /// Accumulated slow-down factor applied to dims 1..μQ.
+    slowdown: f64,
+}
+
+impl EpsSchedule {
+    pub fn new(cfg: &BoConfig) -> Self {
+        Self {
+            eps0: cfg.eps0,
+            rho: cfg.rho,
+            rho1: cfg.rho1,
+            rho2: cfg.rho2,
+            rho3: cfg.rho3,
+            q: cfg.q,
+            mu: cfg.mu,
+            slowdown: 1.0,
+        }
+    }
+
+    pub fn mu_q(&self) -> usize {
+        ((self.q as f64) * self.mu).round() as usize
+    }
+
+    /// ε for dimension `dim` at trial `tau`.
+    pub fn eps(&self, dim: usize, tau: usize) -> f64 {
+        let base = self.eps0 / (1.0 + self.rho * tau as f64);
+        if dim < self.mu_q() {
+            (base * self.slowdown).min(1.0)
+        } else {
+            base
+        }
+    }
+
+    /// Apply one trial's feedback (line 20): ε_{1:μQ} ·= (1 + ρ'τ).
+    pub fn apply_feedback(&mut self, case: FeedbackCase, tau: usize) {
+        let rho_p = match case {
+            FeedbackCase::MemoryShortfall => self.rho1,
+            FeedbackCase::PayloadOverflow => self.rho2,
+            FeedbackCase::Feasible => self.rho3,
+        };
+        self.slowdown *= 1.0 + rho_p * tau as f64;
+        // Keep the effective ε bounded (the theory only needs ε ≤ ε0 in the
+        // tail; unbounded slow-down would stall convergence forever).
+        let cap = 1.0 / self.eps0;
+        self.slowdown = self.slowdown.min(cap * 4.0);
+    }
+
+    /// Theorem 2's convergence horizon: the τ beyond which even the slowest
+    /// dimension's ε is below δ.
+    pub fn convergence_bound(&self, delta: f64) -> usize {
+        // max ε decays at worst as ε0·(1+ρ1·τ)/(1+ρ·τ) → needs
+        // τ > (1+ρ)/(ρ-ρ1) · (1 - δ/ε0) approximately (paper Thm 2).
+        let frac = (1.0 + self.rho) / (self.rho - self.rho1);
+        (frac * (1.0 - delta / self.eps0)).ceil().max(0.0) as usize
+    }
+}
+
+/// The paper's acquisition: multi-dimensional ε-GS over (𝕃, ℙ).
+pub struct MultiEpsGreedy {
+    pub schedule: EpsSchedule,
+}
+
+impl MultiEpsGreedy {
+    pub fn new(cfg: &BoConfig) -> Self {
+        Self {
+            schedule: EpsSchedule::new(cfg),
+        }
+    }
+}
+
+impl Acquisition for MultiEpsGreedy {
+    fn propose(&mut self, ctx: &mut ProposeCtx) -> Vec<BoVar> {
+        let q = ctx.q;
+        let mu_q = self.schedule.mu_q().min(q);
+        let best: Vec<BoVar> = ctx.best_vars().map(|v| v.to_vec()).unwrap_or_default();
+        let mut out = Vec::with_capacity(q);
+        for dim in 0..q {
+            let eps = self.schedule.eps(dim, ctx.trial);
+            let explore = ctx.rng.chance(eps);
+            if explore || best.is_empty() {
+                if dim < mu_q {
+                    out.push(ctx.limited_var());
+                } else {
+                    out.push(ctx.random_var());
+                }
+            } else {
+                // Exploit: keep the best trial's variable for this dim.
+                out.push(best[dim.min(best.len() - 1)]);
+            }
+        }
+        out
+    }
+
+    fn feedback(&mut self, case: FeedbackCase, tau: usize) {
+        self.schedule.apply_feedback(case, tau);
+    }
+
+    fn name(&self) -> &'static str {
+        "multi-eps-gs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> BoConfig {
+        BoConfig::default()
+    }
+
+    #[test]
+    fn eps_decays_over_trials() {
+        let s = EpsSchedule::new(&cfg());
+        assert!(s.eps(900, 0) > s.eps(900, 5));
+        assert!(s.eps(900, 5) > s.eps(900, 50));
+    }
+
+    #[test]
+    fn feedback_slows_low_dims_only() {
+        let mut s = EpsSchedule::new(&cfg());
+        let before_low = s.eps(0, 10);
+        let before_high = s.eps(s.q - 1, 10);
+        s.apply_feedback(FeedbackCase::MemoryShortfall, 10);
+        assert!(s.eps(0, 10) > before_low, "low dims slowed");
+        assert_eq!(s.eps(s.q - 1, 10), before_high, "high dims unchanged");
+    }
+
+    #[test]
+    fn case_ordering_matches_paper() {
+        // Memory shortfall slows decay more than payload overflow, which
+        // slows more than the feasible case (ρ1 > ρ2 > ρ3 multipliers).
+        let tau = 7;
+        let mut a = EpsSchedule::new(&cfg());
+        let mut b = EpsSchedule::new(&cfg());
+        let mut c = EpsSchedule::new(&cfg());
+        a.apply_feedback(FeedbackCase::MemoryShortfall, tau);
+        b.apply_feedback(FeedbackCase::PayloadOverflow, tau);
+        c.apply_feedback(FeedbackCase::Feasible, tau);
+        assert!(a.eps(0, tau) > b.eps(0, tau));
+        assert!(b.eps(0, tau) > c.eps(0, tau));
+    }
+
+    #[test]
+    fn convergence_bound_finite_and_positive() {
+        let s = EpsSchedule::new(&cfg());
+        let bound = s.convergence_bound(0.05);
+        assert!(bound > 0 && bound < 100_000, "bound={bound}");
+        // ε at the bound decays below δ in the unperturbed schedule.
+        assert!(s.eps(s.q - 1, bound.max(1) * 4) < 0.2);
+    }
+
+    #[test]
+    fn proposes_q_vars() {
+        let mut acq = MultiEpsGreedy::new(&cfg());
+        let mut rng = Rng::new(5);
+        let history = vec![];
+        let limited = vec![3u32, 9];
+        let experts = vec![4usize; 2];
+        let mut ctx = ProposeCtx {
+            history: &history,
+            limited_tokens: &limited,
+            vocab: 64,
+            experts_per_layer: &experts,
+            q: 100,
+            trial: 0,
+            rng: &mut rng,
+        };
+        let vars = acq.propose(&mut ctx);
+        assert_eq!(vars.len(), 100);
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving-cost evaluation of a deployment under *real* routing — the
+//! feedback signal c_τ of Alg. 2 (lines 25-28), plus the per-expert
+//! constraint checks driving the feedback cases (lines 11-19).
+
+use crate::comm::timing::{direct_feasible, memory_feasible, replica_time};
+use crate::comm::CommMethod;
+use crate::config::PlatformConfig;
+use crate::deploy::DeploymentPolicy;
+use crate::model::MoeModelSpec;
+
+/// Thrash multiplier when real load exceeds the configured memory: the
+/// function pages/spills (or OOM-retries on a replica), inflating its run
+/// time. The paper treats this as a hard signal for case (i).
+pub const MEMORY_THRASH_FACTOR: f64 = 2.5;
+
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Billed cost of all MoE layers (the BO objective c_τ).
+    pub cost: f64,
+    /// Σ_e t^lat_e under real loads.
+    pub latency: f64,
+    /// (layer, expert) pairs that hit case (i): memory shortfall.
+    pub memory_violations: Vec<(usize, usize)>,
+    /// (layer, expert) pairs that hit case (ii): direct payload overflow.
+    pub payload_violations: Vec<(usize, usize)>,
+}
+
+impl ServeOutcome {
+    pub fn fully_feasible(&self) -> bool {
+        self.memory_violations.is_empty() && self.payload_violations.is_empty()
+    }
+}
+
+/// Evaluate `policy` (sized from *predicted* counts) under the *real* routed
+/// counts: replace each expert plan's tokens with the real d_{e,i}, keep the
+/// memory/replica/method/β decisions, and re-price. Experts whose real load
+/// violates (12c) pay the thrash factor on their run time.
+pub fn serve_with_real_counts(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    policy: &DeploymentPolicy,
+    real_tokens: &[Vec<u64>],
+    warm: bool,
+) -> ServeOutcome {
+    let mut cost = 0.0;
+    let mut latency = 0.0;
+    let mut memory_violations = Vec::new();
+    let mut payload_violations = Vec::new();
+
+    for (e, plan) in policy.layers.iter().enumerate() {
+        let mut real_plan = plan.clone();
+        for (i, ep) in real_plan.experts.iter_mut().enumerate() {
+            ep.tokens = real_tokens[e][i];
+        }
+        // Per-expert accounting with violation penalties.
+        let mut layer_cost = 0.0;
+        let mut max_finish = 0.0f64;
+        for (i, ep) in real_plan.experts.iter().enumerate() {
+            if ep.tokens == 0 {
+                continue;
+            }
+            let mut t_rep = replica_time(cfg, spec, e, ep, plan.method, plan.beta, warm);
+            if !memory_feasible(spec, e, ep) {
+                memory_violations.push((e, i));
+                t_rep *= MEMORY_THRASH_FACTOR;
+            }
+            if plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep) {
+                payload_violations.push((e, i));
+                // Payload overflow forces a fallback to indirect transfer for
+                // this expert — pay the indirect time instead (plus a retry).
+                let t_ind = replica_time(cfg, spec, e, ep, CommMethod::Indirect, 1, warm);
+                t_rep = t_rep.max(t_ind) + cfg.storage_access_delay;
+            }
+            layer_cost += cfg.run_cost(ep.mem_mb, ep.replicas as f64 * t_rep)
+                + ep.replicas as f64 * cfg.price_per_invocation;
+            max_finish = max_finish.max(t_rep);
+        }
+        cost += layer_cost;
+        // Latency: reuse the analytic layer latency on the real plan, then
+        // account for thrash on the straggler.
+        let base_lat = crate::comm::layer_latency(cfg, spec, e, &real_plan, warm);
+        let worst_clean = real_plan
+            .experts
+            .iter()
+            .map(|ep| replica_time(cfg, spec, e, ep, plan.method, plan.beta, warm))
+            .fold(0.0, f64::max);
+        latency += base_lat + (max_finish - worst_clean).max(0.0);
+    }
+
+    ServeOutcome {
+        cost,
+        latency,
+        memory_violations,
+        payload_violations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{ExpertPlan, LayerPlan};
+    use crate::model::ModelPreset;
+
+    fn policy(mem: u64, replicas: usize, tokens: u64, method: CommMethod) -> DeploymentPolicy {
+        DeploymentPolicy {
+            layers: (0..2)
+                .map(|_| LayerPlan {
+                    method,
+                    beta: 64,
+                    experts: vec![ExpertPlan { mem_mb: mem, replicas, tokens }; 4],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn matched_prediction_no_violations() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let pol = policy(3072, 1, 1000, CommMethod::Indirect);
+        let real = vec![vec![1000u64; 4]; 2];
+        let out = serve_with_real_counts(&cfg, &spec, &pol, &real, true);
+        assert!(out.fully_feasible());
+        assert!(out.cost > 0.0 && out.latency > 0.0);
+    }
+
+    #[test]
+    fn underprediction_triggers_memory_case() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        // Sized for 100 tokens at 768MB, but reality sends 60k tokens:
+        // itrm(60k) ≈ 60k·3072·... > 768MB → case (i).
+        let pol = policy(768, 1, 100, CommMethod::Indirect);
+        let real = vec![vec![60_000u64; 4]; 2];
+        let out = serve_with_real_counts(&cfg, &spec, &pol, &real, true);
+        assert!(!out.memory_violations.is_empty());
+        // Thrash must make it pricier than a correctly-sized run.
+        let sized = policy(3072, 8, 60_000, CommMethod::Indirect);
+        let out_sized = serve_with_real_counts(&cfg, &spec, &sized, &real, true);
+        assert!(out.latency > out_sized.latency);
+    }
+
+    #[test]
+    fn payload_overflow_detected_under_direct() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let pol = policy(3072, 1, 100, CommMethod::Direct);
+        // Real load: 4096 tokens × 3072B × 1.4 > 6MB.
+        let real = vec![vec![4096u64; 4]; 2];
+        let out = serve_with_real_counts(&cfg, &spec, &pol, &real, true);
+        assert!(!out.payload_violations.is_empty());
+    }
+
+    #[test]
+    fn cost_monotone_in_load() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let pol = policy(3072, 1, 1000, CommMethod::Indirect);
+        let light = serve_with_real_counts(&cfg, &spec, &pol, &vec![vec![500; 4]; 2], true);
+        let heavy = serve_with_real_counts(&cfg, &spec, &pol, &vec![vec![2000; 4]; 2], true);
+        assert!(heavy.cost > light.cost);
+    }
+}

@@ -1,0 +1,189 @@
+//! Gaussian-process surrogate (the BO framework's cost simulator).
+//!
+//! RBF kernel, Cholesky factorization, predictive mean/variance. Trials are
+//! embedded into a fixed-dimension feature space (hash-bucketed sums of the
+//! Q variable values per layer/expert), since the raw variable space is
+//! combinatorial.
+
+use super::BoVar;
+
+/// Embed a variable set into `dim` features: bucketed value mass.
+pub fn embed(vars: &[BoVar], dim: usize) -> Vec<f64> {
+    let mut f = vec![0.0; dim];
+    for v in vars {
+        let bucket = (v.key.0 ^ ((v.layer as u64) << 48) ^ ((v.expert as u64) << 56))
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15) as usize
+            % dim;
+        f[bucket] += v.value;
+    }
+    // Normalize to keep kernel length scales stable.
+    let norm = f.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+    for x in f.iter_mut() {
+        *x /= norm;
+    }
+    f
+}
+
+/// Dense symmetric positive-definite solver via Cholesky.
+/// Returns L (lower) with A = L·Lᵀ. Panics if A is not SPD.
+fn cholesky(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = a.len();
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i][j];
+            for k in 0..j {
+                sum -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                assert!(sum > 0.0, "matrix not SPD (diag {sum} at {i})");
+                l[i][j] = sum.sqrt();
+            } else {
+                l[i][j] = sum / l[j][j];
+            }
+        }
+    }
+    l
+}
+
+/// Solve L·y = b then Lᵀ·x = y.
+fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = l.len();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+pub struct Gp {
+    xs: Vec<Vec<f64>>,
+    l: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    y_mean: f64,
+    pub length_scale: f64,
+    pub noise: f64,
+}
+
+fn rbf(a: &[f64], b: &[f64], ls: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (-d2 / (2.0 * ls * ls)).exp()
+}
+
+impl Gp {
+    /// Fit on (features, target) pairs.
+    pub fn fit(xs: Vec<Vec<f64>>, ys: &[f64], length_scale: f64, noise: f64) -> Gp {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = rbf(&xs[i], &xs[j], length_scale);
+            }
+            k[i][i] += noise;
+        }
+        let l = cholesky(&k);
+        let alpha = chol_solve(&l, &yc);
+        Gp {
+            xs,
+            l,
+            alpha,
+            y_mean,
+            length_scale,
+            noise,
+        }
+    }
+
+    /// Predictive mean at `x`.
+    pub fn mean(&self, x: &[f64]) -> f64 {
+        let kx: Vec<f64> = self
+            .xs
+            .iter()
+            .map(|xi| rbf(xi, x, self.length_scale))
+            .collect();
+        self.y_mean + kx.iter().zip(&self.alpha).map(|(k, a)| k * a).sum::<f64>()
+    }
+
+    /// Predictive variance at `x`.
+    pub fn variance(&self, x: &[f64]) -> f64 {
+        let kx: Vec<f64> = self
+            .xs
+            .iter()
+            .map(|xi| rbf(xi, x, self.length_scale))
+            .collect();
+        let v = chol_solve(&self.l, &kx);
+        let kxx = 1.0 + self.noise;
+        (kxx - kx.iter().zip(&v).map(|(a, b)| a * b).sum::<f64>()).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_training_points() {
+        let xs = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        let ys = [1.0, 3.0, -2.0];
+        let gp = Gp::fit(xs.clone(), &ys, 0.7, 1e-6);
+        for (x, &y) in xs.iter().zip(&ys) {
+            assert!((gp.mean(x) - y).abs() < 1e-2, "{} vs {}", gp.mean(x), y);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let xs = vec![vec![0.0], vec![0.1]];
+        let ys = [0.0, 0.1];
+        let gp = Gp::fit(xs, &ys, 0.3, 1e-6);
+        assert!(gp.variance(&[0.05]) < gp.variance(&[3.0]));
+    }
+
+    #[test]
+    fn reverts_to_mean_far_away() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = [2.0, 4.0];
+        let gp = Gp::fit(xs, &ys, 0.2, 1e-6);
+        assert!((gp.mean(&[100.0]) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn embed_is_deterministic_and_normalized() {
+        use crate::gating::features::FeatKey;
+        let vars: Vec<BoVar> = (0..50)
+            .map(|i| BoVar {
+                layer: i % 3,
+                key: FeatKey::from_parts(i as u32, 0, 2 * i as u32),
+                expert: (i % 4) as u8,
+                value: 1.0 + i as f64,
+            })
+            .collect();
+        let a = embed(&vars, 16);
+        let b = embed(&vars, 16);
+        assert_eq!(a, b);
+        let norm: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not SPD")]
+    fn cholesky_rejects_non_spd() {
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let _ = cholesky(&a);
+    }
+}

@@ -1,0 +1,158 @@
+//! The BO framework (§IV-B, Alg. 2): learn the key-value dataset table that
+//! yields the cheapest deployment, using billed-cost feedback.
+//!
+//!  - [`gp`]         — Gaussian-process surrogate over trial features.
+//!  - [`eps_greedy`] — the paper's multi-dimensional ε-greedy acquisition
+//!                     with the decay schedule ε_τ = ε₀/(1+ρτ) and the
+//!                     case-dependent slow-downs (ρ₁/ρ₂/ρ₃).
+//!  - [`acquisition`]— baselines: single-ε greedy, random, TPE.
+//!  - [`feedback`]   — serving-cost evaluation of a deployment under real
+//!                     routing (memory-overflow thrash penalty included).
+//!  - [`algorithm`]  — Alg. 2 itself.
+
+pub mod acquisition;
+pub mod algorithm;
+pub mod eps_greedy;
+pub mod feedback;
+pub mod gp;
+
+pub use algorithm::{BoAlgorithm, BoOutcome, TrialRecord};
+pub use eps_greedy::EpsSchedule;
+
+use crate::gating::features::FeatKey;
+
+/// One BO variable: a key-value pair of the dataset table —
+/// z = (token features f, MoE layer e, expert i), value v = count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoVar {
+    pub layer: usize,
+    pub key: FeatKey,
+    pub expert: u8,
+    pub value: f64,
+}
+
+/// Acquisition strategies under comparison (Fig. 13).
+pub trait Acquisition {
+    /// Propose the next trial's Q variables given the trial history and the
+    /// current ranges (𝕃 = limited, ℙ = normal).
+    fn propose(
+        &mut self,
+        ctx: &mut ProposeCtx,
+    ) -> Vec<BoVar>;
+
+    /// Receive the trial's feedback case (Alg. 2 line 20). Only the paper's
+    /// multi-dimensional ε schedule reacts; baselines ignore it.
+    fn feedback(&mut self, _case: eps_greedy::FeedbackCase, _tau: usize) {}
+
+    fn name(&self) -> &'static str;
+}
+
+/// Everything an acquisition may draw on.
+pub struct ProposeCtx<'a> {
+    pub history: &'a [TrialRecord],
+    /// Limited range 𝕃: token IDs flagged by prediction feedback this trial.
+    pub limited_tokens: &'a [u32],
+    /// Normal range ℙ: vocabulary size, position buckets, experts per layer.
+    pub vocab: usize,
+    pub experts_per_layer: &'a [usize],
+    pub q: usize,
+    pub trial: usize,
+    pub rng: &'a mut crate::util::rng::Rng,
+}
+
+impl ProposeCtx<'_> {
+    /// Draw a uniformly random variable from the normal range ℙ.
+    pub fn random_var(&mut self) -> BoVar {
+        let layer = self.rng.index(self.experts_per_layer.len());
+        let expert = self.rng.index(self.experts_per_layer[layer]) as u8;
+        let token = self.rng.index(self.vocab) as u32;
+        let pos_bucket = self.rng.index(crate::gating::features::POS_BUCKETS as usize) as u32;
+        let attn = self.rng.index(self.vocab) as u32;
+        let value = 1.0 + self.rng.index(16) as f64;
+        BoVar {
+            layer,
+            key: FeatKey::from_parts(token, pos_bucket, attn),
+            expert,
+            value,
+        }
+    }
+
+    /// Draw a variable whose token ID is restricted to 𝕃 (values stay in
+    /// positive integers, per the paper's range definition).
+    pub fn limited_var(&mut self) -> BoVar {
+        if self.limited_tokens.is_empty() {
+            return self.random_var();
+        }
+        let token = *self.rng.choose(self.limited_tokens);
+        let layer = self.rng.index(self.experts_per_layer.len());
+        let expert = self.rng.index(self.experts_per_layer[layer]) as u8;
+        let pos_bucket = self.rng.index(crate::gating::features::POS_BUCKETS as usize) as u32;
+        let attn = self.rng.index(self.vocab) as u32;
+        let value = 1.0 + self.rng.index(32) as f64;
+        BoVar {
+            layer,
+            key: FeatKey::from_parts(token, pos_bucket, attn),
+            expert,
+            value,
+        }
+    }
+
+    /// Best historical variable set (exploitation target).
+    pub fn best_vars(&self) -> Option<&[BoVar]> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+            .map(|t| t.vars.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn random_var_in_ranges() {
+        let mut rng = Rng::new(1);
+        let history = vec![];
+        let limited = vec![];
+        let experts = vec![4usize; 3];
+        let mut ctx = ProposeCtx {
+            history: &history,
+            limited_tokens: &limited,
+            vocab: 100,
+            experts_per_layer: &experts,
+            q: 10,
+            trial: 0,
+            rng: &mut rng,
+        };
+        for _ in 0..100 {
+            let v = ctx.random_var();
+            assert!(v.layer < 3);
+            assert!(v.expert < 4);
+            assert!((v.key.token_id() as usize) < 100);
+            assert!(v.value >= 1.0);
+        }
+    }
+
+    #[test]
+    fn limited_var_uses_limited_tokens() {
+        let mut rng = Rng::new(2);
+        let history = vec![];
+        let limited = vec![42u32, 77];
+        let experts = vec![4usize; 2];
+        let mut ctx = ProposeCtx {
+            history: &history,
+            limited_tokens: &limited,
+            vocab: 1000,
+            experts_per_layer: &experts,
+            q: 10,
+            trial: 0,
+            rng: &mut rng,
+        };
+        for _ in 0..50 {
+            let v = ctx.limited_var();
+            assert!(limited.contains(&v.key.token_id()));
+        }
+    }
+}

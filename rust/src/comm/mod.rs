@@ -1,0 +1,85 @@
+//! Scatter-gather communication designs for MoE layers on a serverless
+//! platform (§III-C), with the timing models of Eqs. (6)–(11):
+//!
+//!  - `a = 1` — **pipelined indirect**: minibatches of pipeline degree β via
+//!    external storage; download+compute of minibatch m overlaps upload of
+//!    minibatch m−1.
+//!  - `a = 2` — **non-pipelined indirect**: whole inputs/outputs via
+//!    external storage.
+//!  - `a = 3` — **direct invocation**: payload-limited function-to-function
+//!    transfers; infeasible when r_{e,i}·D_in > D_p (constraint (12f)), and
+//!    parameters must be reloaded on re-invocation (stateless functions), so
+//!    no pipelining is possible.
+//!
+//! [`timing`] computes per-replica execution time t^rep, per-layer billed
+//! cost c_{a,e} (Eq. 4–5) and MoE-E2E latency t^lat (Eqs. 7, 9, 11); the
+//! event-level simulation in `coordinator` reproduces the same numbers
+//! mechanically for the serving path.
+//!
+//! Interpretation note: Eq. (6) as printed multiplies the block time by β;
+//! consistent with Figs. 6/8 (minibatch count = ⌈r/β⌉ blocks, each covering
+//! β tokens) we use ⌈r/β⌉ blocks of β·(per-token time) each — the printed
+//! form double-counts β. Documented here per the substitution rules.
+
+pub mod timing;
+
+pub use timing::{layer_cost, layer_latency, replica_time, ExpertPlan, LayerPlan, LayerTiming};
+
+/// The communication method a_e ∈ 𝔸 = {1, 2, 3}.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommMethod {
+    /// a=1: indirect via external storage, pipelined with degree β.
+    PipelinedIndirect,
+    /// a=2: indirect via external storage, no pipelining.
+    Indirect,
+    /// a=3: direct function invocation (payload-limited).
+    Direct,
+}
+
+impl CommMethod {
+    pub const ALL: [CommMethod; 3] = [
+        CommMethod::PipelinedIndirect,
+        CommMethod::Indirect,
+        CommMethod::Direct,
+    ];
+
+    /// The paper's index a_e.
+    pub fn index(self) -> usize {
+        match self {
+            CommMethod::PipelinedIndirect => 1,
+            CommMethod::Indirect => 2,
+            CommMethod::Direct => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommMethod::PipelinedIndirect => "pipelined-indirect",
+            CommMethod::Indirect => "indirect",
+            CommMethod::Direct => "direct",
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<CommMethod> {
+        match i {
+            1 => Some(CommMethod::PipelinedIndirect),
+            2 => Some(CommMethod::Indirect),
+            3 => Some(CommMethod::Direct),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_roundtrip() {
+        for m in CommMethod::ALL {
+            assert_eq!(CommMethod::from_index(m.index()), Some(m));
+        }
+        assert_eq!(CommMethod::from_index(0), None);
+        assert_eq!(CommMethod::from_index(4), None);
+    }
+}

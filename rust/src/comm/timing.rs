@@ -1,0 +1,458 @@
+//! Analytic timing/cost models of §III-D, Eqs. (3)–(11).
+//!
+//! All quantities are derived from the platform config (T_str, T_dl, B_s,
+//! B_f, D_p, pricing), the model spec (P_{e,i}, token FLOPs, D_in, D_out)
+//! and the layer plan (per-expert memory x, replicas y, tokens d, method a,
+//! pipeline degree β).
+
+use super::CommMethod;
+use crate::config::PlatformConfig;
+use crate::model::MoeModelSpec;
+
+/// Per-expert deployment + workload row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpertPlan {
+    /// Configured memory (must be one of cfg.memory_options_mb).
+    pub mem_mb: u64,
+    /// Replica count g ∈ {1..G}.
+    pub replicas: usize,
+    /// Tokens routed to this expert across all replicas (d_{e,i}).
+    pub tokens: u64,
+}
+
+impl ExpertPlan {
+    /// Tokens per replica r_{e,i} = d_{e,i} / g (ceiling: the straggler
+    /// replica's share).
+    pub fn tokens_per_replica(&self) -> u64 {
+        self.tokens.div_ceil(self.replicas as u64)
+    }
+}
+
+/// One MoE layer's full plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub method: CommMethod,
+    /// Pipeline degree β (max minibatch size; only meaningful for a=1).
+    pub beta: usize,
+    pub experts: Vec<ExpertPlan>,
+}
+
+/// Timing breakdown of one MoE layer.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    /// Per-replica execution time t^rep_{a,e,i} for each expert.
+    pub replica_times: Vec<f64>,
+    /// Billed cost of the layer c_{a,e} (Eq. 4), experts only.
+    pub billed_cost: f64,
+    /// MoE-E2E latency t^lat_{a,e} (Eqs. 7/9/11).
+    pub latency: f64,
+}
+
+/// Head time T^{h,E}_{e,i} (Eq. 6): warm start + model download.
+pub fn head_time(cfg: &PlatformConfig, param_bytes: u64, warm: bool) -> f64 {
+    let start = if warm { cfg.warm_start } else { cfg.cold_start };
+    start + cfg.storage_access_delay + param_bytes as f64 / cfg.storage_bandwidth
+}
+
+/// Per-token compute time t^cal (Eq. 3) at a memory option.
+pub fn token_cal_time(cfg: &PlatformConfig, spec: &MoeModelSpec, layer: usize, mem_mb: u64) -> f64 {
+    cfg.token_time(mem_mb, spec.layers[layer].expert.token_flops)
+}
+
+/// Per-replica execution time t^rep_{a,e,i} (Eqs. 6, 8, 10).
+pub fn replica_time(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &ExpertPlan,
+    method: CommMethod,
+    beta: usize,
+    warm: bool,
+) -> f64 {
+    let r = plan.tokens_per_replica();
+    if r == 0 {
+        return 0.0; // expert not selected: function never invoked (s_{e,i}=0)
+    }
+    let p_bytes = spec.layers[layer].expert.param_bytes;
+    let head = head_time(cfg, p_bytes, warm);
+    let t_cal = token_cal_time(cfg, spec, layer, plan.mem_mb);
+    // Activation payloads inflate by the serialization factor κ.
+    let d_in = spec.token_in_bytes as f64 * cfg.payload_overhead;
+    let d_out = spec.token_out_bytes as f64 * cfg.payload_overhead;
+    let bs = cfg.storage_bandwidth;
+    let t_dl = cfg.storage_access_delay;
+
+    match method {
+        CommMethod::PipelinedIndirect => {
+            // ⌈r/β⌉ blocks; in each block the download+compute of the current
+            // minibatch overlaps the upload of the previous one (Fig. 6a).
+            let beta = beta.max(1) as u64;
+            let m = r.div_ceil(beta);
+            let mut t = head;
+            let mut remaining = r;
+            for _ in 0..m {
+                let b = remaining.min(beta);
+                remaining -= b;
+                // Worst-case block time t^blk (Eq. 6 inner term).
+                let down_and_cal = t_dl + b as f64 * (d_in / bs + t_cal);
+                let up_prev = t_dl + b as f64 * (d_out / bs);
+                t += down_and_cal.max(up_prev);
+            }
+            // Upload of the last processed minibatch cannot overlap anything
+            // (t^nblk of Eq. 6).
+            let last = if r % beta == 0 { beta } else { r % beta };
+            t += t_dl + last as f64 * d_out / bs;
+            t
+        }
+        CommMethod::Indirect => {
+            // Eq. (8): whole input down, compute, whole output up.
+            head + 2.0 * t_dl + r as f64 * ((d_in + d_out) / bs + t_cal)
+        }
+        CommMethod::Direct => {
+            // Eq. (10): input arrives as the invocation payload; output is
+            // transferred directly to the next layer at B_f per token.
+            head + r as f64 * (d_out / cfg.function_bandwidth + t_cal)
+        }
+    }
+}
+
+/// Direct-transfer feasibility (constraint (12f)): the per-replica payloads
+/// must fit within D_p in both directions.
+pub fn direct_feasible(cfg: &PlatformConfig, spec: &MoeModelSpec, plan: &ExpertPlan) -> bool {
+    let r = plan.tokens_per_replica() as f64;
+    let limit = cfg.payload_bytes as f64;
+    r * spec.token_in_bytes as f64 * cfg.payload_overhead <= limit
+        && r * spec.token_out_bytes as f64 * cfg.payload_overhead <= limit
+}
+
+/// Batch-level direct-gather feasibility: the next non-MoE layer is a single
+/// stateless function invocation, so under direct transfer the aggregated
+/// expert outputs for the whole batch must fit one payload — this is what
+/// rules direct transfers out for the paper's 2560-token batches (Fig. 4b)
+/// even when every per-expert scatter leg fits (12f).
+pub fn direct_gather_feasible(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    total_tokens: u64,
+) -> bool {
+    total_tokens as f64 * spec.token_out_bytes as f64 * cfg.payload_overhead
+        <= cfg.payload_bytes as f64
+}
+
+/// Memory-capacity feasibility (constraint (12c)).
+pub fn memory_feasible(spec: &MoeModelSpec, layer: usize, plan: &ExpertPlan) -> bool {
+    let r = plan.tokens_per_replica() as usize;
+    let need = spec.layers[layer].expert.param_bytes
+        + spec.runtime_overhead_bytes
+        + spec.expert_itrm_bytes(r)
+        + r as u64 * (spec.token_in_bytes + spec.token_out_bytes);
+    need <= plan.mem_mb * crate::util::MB
+}
+
+/// Billed cost c_{a,e} of one MoE layer (Eqs. 4–5): every replica's run time
+/// × configured memory × GB-s price, plus invocation fees.
+pub fn layer_cost(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    warm: bool,
+) -> f64 {
+    let mut cost = 0.0;
+    for ep in &plan.experts {
+        if ep.tokens == 0 {
+            continue;
+        }
+        let t_rep = replica_time(cfg, spec, layer, ep, plan.method, plan.beta, warm);
+        // Eq. (5): total execution of all g replicas = g · t^rep.
+        let total_secs = ep.replicas as f64 * t_rep;
+        cost += cfg.run_cost(ep.mem_mb, total_secs)
+            + ep.replicas as f64 * cfg.price_per_invocation;
+    }
+    cost
+}
+
+/// Load time T^load_e of the next non-MoE layer's function (start + its
+/// parameter download).
+pub fn non_moe_load_time(cfg: &PlatformConfig, spec: &MoeModelSpec, warm: bool) -> f64 {
+    head_time(cfg, spec.non_moe_param_bytes, warm)
+}
+
+/// MoE-E2E latency t^lat_{a,e} (Eqs. 7, 9, 11).
+pub fn layer_latency(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    warm: bool,
+) -> f64 {
+    let t_load = non_moe_load_time(cfg, spec, warm);
+    let total_tokens: u64 = plan.experts.iter().map(|e| e.tokens).sum();
+    let d_in = spec.token_in_bytes as f64 * cfg.payload_overhead;
+    let d_out = spec.token_out_bytes as f64 * cfg.payload_overhead;
+    // Active experts/replicas: every per-replica object pays its own access
+    // delay at the gating (scatter) and next-layer (gather) ends.
+    let active_objects: usize = plan
+        .experts
+        .iter()
+        .filter(|e| e.tokens > 0)
+        .map(|e| e.replicas)
+        .sum();
+
+    match plan.method {
+        CommMethod::PipelinedIndirect | CommMethod::Indirect => {
+            // Stage 1+2: experts run to completion; the gating network's
+            // scatter upload proceeds concurrently with expert head times
+            // (Fig. 8), so the expert chain dominates unless the upload does.
+            // Uploads are per-replica objects (serialized at the gate).
+            let scatter_upload = active_objects as f64 * cfg.storage_access_delay
+                + total_tokens as f64 * d_in / cfg.storage_bandwidth;
+            let expert_finish = plan
+                .experts
+                .iter()
+                .map(|ep| {
+                    replica_time(cfg, spec, layer, ep, plan.method, plan.beta, warm)
+                })
+                .fold(0.0, f64::max);
+            let s12 = scatter_upload.max(expert_finish);
+            // Stage 3: the next non-MoE layer downloads every replica's
+            // processed-result object from external storage.
+            let s3 = active_objects as f64 * cfg.storage_access_delay
+                + total_tokens as f64 * d_out / cfg.storage_bandwidth;
+            s12.max(t_load) + s3
+        }
+        CommMethod::Direct => {
+            // Eq. (11): scatter payload transfer + straggler expert + load.
+            let max_r = plan
+                .experts
+                .iter()
+                .map(ExpertPlan::tokens_per_replica)
+                .max()
+                .unwrap_or(0);
+            let scatter = max_r as f64 * d_in / cfg.function_bandwidth;
+            let expert_finish = plan
+                .experts
+                .iter()
+                .map(|ep| replica_time(cfg, spec, layer, ep, plan.method, plan.beta, warm))
+                .fold(0.0, f64::max);
+            scatter + expert_finish + t_load
+        }
+    }
+}
+
+/// Full layer timing bundle.
+pub fn layer_timing(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    warm: bool,
+) -> LayerTiming {
+    LayerTiming {
+        replica_times: plan
+            .experts
+            .iter()
+            .map(|ep| replica_time(cfg, spec, layer, ep, plan.method, plan.beta, warm))
+            .collect(),
+        billed_cost: layer_cost(cfg, spec, layer, plan, warm),
+        latency: layer_latency(cfg, spec, layer, plan, warm),
+    }
+}
+
+/// End-to-end model inference time (constraint (12d) LHS): head + tail +
+/// Σ_e (t^lat_e + T^NE_e), where T^NE_e is the non-MoE block compute time.
+pub fn end_to_end_time(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    plans: &[LayerPlan],
+    total_tokens: u64,
+    warm: bool,
+) -> f64 {
+    let max_mem = cfg.max_memory_mb();
+    let t_ne = total_tokens as f64 * cfg.token_time(max_mem, spec.non_moe_token_flops);
+    let t_head_tail =
+        2.0 * total_tokens as f64 * cfg.token_time(max_mem, spec.head_tail_token_flops)
+            + 2.0 * head_time(cfg, spec.non_moe_param_bytes, warm);
+    let mut t = t_head_tail;
+    for (e, plan) in plans.iter().enumerate() {
+        t += layer_latency(cfg, spec, e, plan, warm) + t_ne;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn setup() -> (PlatformConfig, MoeModelSpec) {
+        (
+            PlatformConfig::default(),
+            ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec(),
+        )
+    }
+
+    fn plan(method: CommMethod, beta: usize, tokens: u64) -> LayerPlan {
+        LayerPlan {
+            method,
+            beta,
+            experts: vec![
+                ExpertPlan { mem_mb: 3072, replicas: 1, tokens };
+                4
+            ],
+        }
+    }
+
+    #[test]
+    fn zero_tokens_zero_time_zero_cost() {
+        let (cfg, spec) = setup();
+        let ep = ExpertPlan { mem_mb: 1024, replicas: 1, tokens: 0 };
+        for m in CommMethod::ALL {
+            assert_eq!(replica_time(&cfg, &spec, 0, &ep, m, 8, true), 0.0);
+        }
+        let lp = LayerPlan { method: CommMethod::Indirect, beta: 1, experts: vec![ep] };
+        assert_eq!(layer_cost(&cfg, &spec, 0, &lp, true), 0.0);
+    }
+
+    #[test]
+    fn replicas_split_tokens() {
+        let ep1 = ExpertPlan { mem_mb: 1024, replicas: 1, tokens: 100 };
+        let ep4 = ExpertPlan { mem_mb: 1024, replicas: 4, tokens: 100 };
+        assert_eq!(ep1.tokens_per_replica(), 100);
+        assert_eq!(ep4.tokens_per_replica(), 25);
+        let ep3 = ExpertPlan { mem_mb: 1024, replicas: 3, tokens: 100 };
+        assert_eq!(ep3.tokens_per_replica(), 34); // ceiling
+    }
+
+    #[test]
+    fn pipelining_beats_plain_indirect_at_scale() {
+        // With many tokens and a well-chosen β (upload of one block larger
+        // than the per-block access delay), overlap must strictly reduce
+        // replica time. β is a *choice* — cf. `tiny_beta_pays_access_delays`.
+        let (cfg, spec) = setup();
+        let ep = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 6000 };
+        let t_pipe = replica_time(&cfg, &spec, 0, &ep, CommMethod::PipelinedIndirect, 3000, true);
+        let t_plain = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, true);
+        assert!(
+            t_pipe < t_plain,
+            "pipelined {t_pipe} should beat plain {t_plain}"
+        );
+    }
+
+    #[test]
+    fn tiny_beta_pays_access_delays() {
+        // β=1 at large r pays T_dl per token — worse than no pipelining.
+        // This is the paper's point that β must be *chosen*, not maximal.
+        let (cfg, spec) = setup();
+        let ep = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 2000 };
+        let t_beta1 = replica_time(&cfg, &spec, 0, &ep, CommMethod::PipelinedIndirect, 1, true);
+        let t_plain = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, true);
+        assert!(t_beta1 > t_plain, "β=1 {t_beta1} vs plain {t_plain}");
+    }
+
+    #[test]
+    fn direct_fastest_for_small_batches() {
+        // Fig. 4(a): at 256 tokens direct wins.
+        let (cfg, spec) = setup();
+        let per_expert = 64; // 256 tokens over 4 experts
+        let lp_direct = plan(CommMethod::Direct, 1, per_expert);
+        let lp_ind = plan(CommMethod::Indirect, 1, per_expert);
+        let lp_pipe = plan(CommMethod::PipelinedIndirect, 16, per_expert);
+        let t_d = layer_latency(&cfg, &spec, 0, &lp_direct, true);
+        let t_i = layer_latency(&cfg, &spec, 0, &lp_ind, true);
+        let t_p = layer_latency(&cfg, &spec, 0, &lp_pipe, true);
+        assert!(t_d < t_i && t_d < t_p, "direct={t_d} indirect={t_i} pipe={t_p}");
+    }
+
+    #[test]
+    fn direct_infeasible_beyond_payload() {
+        // Fig. 4(b): 2560 tokens exceed the 6MB payload for BERT activations?
+        // D_in = 3072B → 640 tokens/expert · 3072B ≈ 1.9MB < 6MB, so scale up:
+        let (cfg, spec) = setup();
+        let big = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 4096 };
+        // 4096 · 3072B = 12MB > 6MB payload.
+        assert!(!direct_feasible(&cfg, &spec, &big));
+        let small = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 64 };
+        assert!(direct_feasible(&cfg, &spec, &small));
+        // Replication restores feasibility (Alg. 2 case ii).
+        let replicated = ExpertPlan { mem_mb: 3072, replicas: 4, tokens: 4096 };
+        assert!(direct_feasible(&cfg, &spec, &replicated));
+    }
+
+    #[test]
+    fn memory_constraint_12c() {
+        let (_, spec) = setup();
+        // BERT expert ≈ 18MB params + 150MB overhead: fits 768MB for small r.
+        let ok = ExpertPlan { mem_mb: 768, replicas: 1, tokens: 100 };
+        assert!(memory_feasible(&spec, 0, &ok));
+        // 128MB cannot even hold the parameters + overhead.
+        let tight = ExpertPlan { mem_mb: 128, replicas: 1, tokens: 1 };
+        assert!(!memory_feasible(&spec, 0, &tight));
+    }
+
+    #[test]
+    fn more_memory_costs_more_per_second_but_runs_faster() {
+        let (cfg, spec) = setup();
+        let slow = ExpertPlan { mem_mb: 768, replicas: 1, tokens: 500 };
+        let fast = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 500 };
+        let t_slow = replica_time(&cfg, &spec, 0, &slow, CommMethod::Indirect, 1, true);
+        let t_fast = replica_time(&cfg, &spec, 0, &fast, CommMethod::Indirect, 1, true);
+        assert!(t_fast < t_slow);
+    }
+
+    #[test]
+    fn cost_scales_with_replica_count() {
+        // Eq. (5): replicas run in parallel (latency↓) but all bill.
+        let (cfg, spec) = setup();
+        let one = LayerPlan {
+            method: CommMethod::Indirect,
+            beta: 1,
+            experts: vec![ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 1000 }],
+        };
+        let four = LayerPlan {
+            method: CommMethod::Indirect,
+            beta: 1,
+            experts: vec![ExpertPlan { mem_mb: 3072, replicas: 4, tokens: 1000 }],
+        };
+        let lat_one = layer_latency(&cfg, &spec, 0, &one, true);
+        let lat_four = layer_latency(&cfg, &spec, 0, &four, true);
+        assert!(lat_four < lat_one, "replicas cut latency");
+        let c_one = layer_cost(&cfg, &spec, 0, &one, true);
+        let c_four = layer_cost(&cfg, &spec, 0, &four, true);
+        assert!(c_four > c_one, "replicas add head-time cost");
+    }
+
+    #[test]
+    fn cold_start_dominates_small_runs() {
+        let (cfg, spec) = setup();
+        let ep = ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 10 };
+        let t_cold = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, false);
+        let t_warm = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, true);
+        assert!(t_cold - t_warm >= cfg.cold_start - cfg.warm_start - 1e-9);
+    }
+
+    #[test]
+    fn end_to_end_sums_layers() {
+        let (cfg, spec) = setup();
+        let plans: Vec<LayerPlan> = (0..spec.num_moe_layers())
+            .map(|_| plan(CommMethod::Indirect, 1, 2560))
+            .collect();
+        let t_all = end_to_end_time(&cfg, &spec, &plans, 10_240, true);
+        let t_half = end_to_end_time(&cfg, &spec, &plans[..6], 10_240, true);
+        assert!(t_all > t_half);
+        assert!(t_all.is_finite() && t_all > 0.0);
+    }
+
+    #[test]
+    fn latency_includes_gather_stage() {
+        let (cfg, spec) = setup();
+        let lp = plan(CommMethod::Indirect, 1, 640);
+        let lat = layer_latency(&cfg, &spec, 0, &lp, true);
+        let max_rep = lp
+            .experts
+            .iter()
+            .map(|ep| replica_time(&cfg, &spec, 0, ep, lp.method, lp.beta, true))
+            .fold(0.0, f64::max);
+        assert!(lat > max_rep, "latency must add the stage-3 gather");
+    }
+}

@@ -1,0 +1,258 @@
+//! Typed configuration system with JSON load/save.
+//!
+//! Defaults reproduce the paper's evaluation setup (§V-A): AWS Lambda pricing
+//! and memory options, 6 MB payload, S3-like external storage, the CPU
+//! cluster baseline, and the BO hyper-parameters of Alg. 2.
+
+pub mod platform;
+pub mod workload;
+
+pub use platform::{CpuClusterConfig, PlatformConfig};
+pub use workload::WorkloadConfig;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Deployment-optimizer configuration (problem (12) + Alg. 1 protocol).
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    /// End-to-end inference time target T_limit (seconds) — the serving SLO
+    /// of constraint (12d).
+    pub t_limit: f64,
+    /// Wall-clock limit for one MIQCP solve (paper: 60 s per fixed-a solve
+    /// under ODS, 180 s for the direct MIQCP baseline).
+    pub solver_time_limit: f64,
+    /// Maximal replica count G per expert (paper: 8).
+    pub max_replicas: usize,
+    /// Pipeline-degree search grid for β (token counts per minibatch).
+    pub beta_grid: Vec<usize>,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        Self {
+            t_limit: 600.0,
+            solver_time_limit: 60.0,
+            max_replicas: 8,
+            beta_grid: vec![1, 4, 16, 64, 256, 1024, 2048, 4096],
+        }
+    }
+}
+
+impl DeployConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("t_limit", Json::num(self.t_limit)),
+            ("solver_time_limit", Json::num(self.solver_time_limit)),
+            ("max_replicas", Json::num(self.max_replicas as f64)),
+            (
+                "beta_grid",
+                Json::arr_u64(&self.beta_grid.iter().map(|&b| b as u64).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            t_limit: j.get_f64("t_limit").unwrap_or(d.t_limit),
+            solver_time_limit: j.get_f64("solver_time_limit").unwrap_or(d.solver_time_limit),
+            max_replicas: j.get_usize("max_replicas").unwrap_or(d.max_replicas),
+            beta_grid: j
+                .get("beta_grid")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or(d.beta_grid),
+        })
+    }
+}
+
+/// BO framework hyper-parameters (Alg. 2).
+#[derive(Debug, Clone)]
+pub struct BoConfig {
+    /// Number of key-value pairs adjusted per BO trial (paper: Q = 1000).
+    pub q: usize,
+    /// Fraction μ of dimensions updated over the limited range 𝕃.
+    pub mu: f64,
+    /// Initial ε for every dimension.
+    pub eps0: f64,
+    /// Base decay rate ρ and the feedback-case decay rates ρ1 > ρ2 > ρ3
+    /// ordering per the paper: ρ1 < ρ (memory shortfall), ρ2 < ρ1 (payload
+    /// overflow), ρ3 < ρ2 (feasible).
+    pub rho: f64,
+    pub rho1: f64,
+    pub rho2: f64,
+    pub rho3: f64,
+    /// Prediction-vs-real count tolerance α (line 11 of Alg. 2).
+    pub alpha: f64,
+    /// Convergence window λ and threshold ζ (line 33).
+    pub lambda: usize,
+    pub zeta: f64,
+    /// Number of evaluation batches J per trial.
+    pub batches_per_trial: usize,
+    /// Hard cap on BO iterations (safety net beyond the ζ/λ rule).
+    pub max_iters: usize,
+}
+
+impl Default for BoConfig {
+    fn default() -> Self {
+        Self {
+            q: 1000,
+            mu: 0.5,
+            eps0: 0.9,
+            rho: 0.5,
+            rho1: 0.2,
+            rho2: 0.1,
+            rho3: 0.05,
+            alpha: 8.0,
+            lambda: 5,
+            zeta: 1e-4,
+            batches_per_trial: 3,
+            max_iters: 40,
+        }
+    }
+}
+
+impl BoConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("q", Json::num(self.q as f64)),
+            ("mu", Json::num(self.mu)),
+            ("eps0", Json::num(self.eps0)),
+            ("rho", Json::num(self.rho)),
+            ("rho1", Json::num(self.rho1)),
+            ("rho2", Json::num(self.rho2)),
+            ("rho3", Json::num(self.rho3)),
+            ("alpha", Json::num(self.alpha)),
+            ("lambda", Json::num(self.lambda as f64)),
+            ("zeta", Json::num(self.zeta)),
+            ("batches_per_trial", Json::num(self.batches_per_trial as f64)),
+            ("max_iters", Json::num(self.max_iters as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            q: j.get_usize("q").unwrap_or(d.q),
+            mu: j.get_f64("mu").unwrap_or(d.mu),
+            eps0: j.get_f64("eps0").unwrap_or(d.eps0),
+            rho: j.get_f64("rho").unwrap_or(d.rho),
+            rho1: j.get_f64("rho1").unwrap_or(d.rho1),
+            rho2: j.get_f64("rho2").unwrap_or(d.rho2),
+            rho3: j.get_f64("rho3").unwrap_or(d.rho3),
+            alpha: j.get_f64("alpha").unwrap_or(d.alpha),
+            lambda: j.get_usize("lambda").unwrap_or(d.lambda),
+            zeta: j.get_f64("zeta").unwrap_or(d.zeta),
+            batches_per_trial: j.get_usize("batches_per_trial").unwrap_or(d.batches_per_trial),
+            max_iters: j.get_usize("max_iters").unwrap_or(d.max_iters),
+        })
+    }
+
+    /// Theorem-2 ordering sanity: ρ > ρ1 > ρ2 > ρ3 > 0.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.rho > self.rho1 && self.rho1 > self.rho2 && self.rho2 > self.rho3 && self.rho3 > 0.0,
+            "decay rates must satisfy rho > rho1 > rho2 > rho3 > 0"
+        );
+        anyhow::ensure!((0.0..=1.0).contains(&self.mu), "mu in [0,1]");
+        anyhow::ensure!(self.eps0 > 0.0 && self.eps0 <= 1.0, "eps0 in (0,1]");
+        Ok(())
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub platform: PlatformConfig,
+    pub cpu_cluster: CpuClusterConfig,
+    pub workload: WorkloadConfig,
+    pub deploy: DeployConfig,
+    pub bo: BoConfig,
+}
+
+impl Config {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("platform", self.platform.to_json()),
+            ("cpu_cluster", self.cpu_cluster.to_json()),
+            ("workload", self.workload.to_json()),
+            ("deploy", self.deploy.to_json()),
+            ("bo", self.bo.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            platform: j
+                .get("platform")
+                .map(PlatformConfig::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            cpu_cluster: j
+                .get("cpu_cluster")
+                .map(CpuClusterConfig::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            workload: j
+                .get("workload")
+                .map(WorkloadConfig::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            deploy: j
+                .get("deploy")
+                .map(DeployConfig::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            bo: j.get("bo").map(BoConfig::from_json).transpose()?.unwrap_or_default(),
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_json() {
+        let mut c = Config::default();
+        c.deploy.t_limit = 123.0;
+        c.bo.q = 77;
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.deploy.t_limit, 123.0);
+        assert_eq!(c2.bo.q, 77);
+        assert_eq!(c2.platform.memory_options_mb, c.platform.memory_options_mb);
+    }
+
+    #[test]
+    fn bo_defaults_valid() {
+        BoConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bo_rejects_bad_ordering() {
+        let mut b = BoConfig::default();
+        b.rho1 = b.rho + 1.0;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("smoe_cfg_test");
+        let path = dir.join("config.json");
+        let c = Config::default();
+        c.save(&path).unwrap();
+        let c2 = Config::load(&path).unwrap();
+        assert_eq!(c2.bo.q, c.bo.q);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

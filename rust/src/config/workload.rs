@@ -1,0 +1,138 @@
+//! Workload configuration: which synthetic corpus stands in for which paper
+//! dataset, sequence/batch shaping, and profiling-set sizing.
+
+use crate::util::json::Json;
+
+/// Synthetic-corpus presets substituting the paper's datasets (DESIGN.md).
+/// Each differs in vocabulary size, Zipf exponent and sequence-length
+/// profile, giving distinct token-frequency and expert-popularity skews.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusPreset {
+    /// Enwik8 stand-in: character/BPE-ish mix, strong skew.
+    Enwik8,
+    /// CC-News stand-in: larger vocab, moderate skew.
+    CcNews,
+    /// WMT19 en-de stand-in: translation pairs, moderate vocab.
+    Wmt19,
+    /// LAMBADA stand-in: narrative text, long sequences.
+    Lambada,
+}
+
+impl CorpusPreset {
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusPreset::Enwik8 => "enwik8",
+            CorpusPreset::CcNews => "ccnews",
+            CorpusPreset::Wmt19 => "wmt19",
+            CorpusPreset::Lambada => "lambada",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "enwik8" => Some(CorpusPreset::Enwik8),
+            "ccnews" => Some(CorpusPreset::CcNews),
+            "wmt19" => Some(CorpusPreset::Wmt19),
+            "lambada" => Some(CorpusPreset::Lambada),
+            _ => None,
+        }
+    }
+
+    /// (vocab size, zipf α, typical sequence length)
+    pub fn params(self) -> (usize, f64, usize) {
+        match self {
+            CorpusPreset::Enwik8 => (16_384, 1.15, 128),
+            CorpusPreset::CcNews => (32_768, 1.05, 96),
+            CorpusPreset::Wmt19 => (24_576, 1.10, 64),
+            CorpusPreset::Lambada => (20_480, 1.00, 192),
+        }
+    }
+
+    pub fn all() -> [CorpusPreset; 4] {
+        [
+            CorpusPreset::Enwik8,
+            CorpusPreset::CcNews,
+            CorpusPreset::Wmt19,
+            CorpusPreset::Lambada,
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub corpus: CorpusPreset,
+    /// Tokens per serving batch (paper headline: 10,240).
+    pub batch_tokens: usize,
+    /// Number of profiled samples ("at least 100 samples", §III-A).
+    pub profile_samples: usize,
+    /// RNG seed for reproducibility.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            corpus: CorpusPreset::Enwik8,
+            batch_tokens: 10_240,
+            profile_samples: 100,
+            seed: 42,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("corpus", Json::str(self.corpus.name())),
+            ("batch_tokens", Json::num(self.batch_tokens as f64)),
+            ("profile_samples", Json::num(self.profile_samples as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            corpus: j
+                .get_str("corpus")
+                .and_then(CorpusPreset::from_name)
+                .unwrap_or(d.corpus),
+            batch_tokens: j.get_usize("batch_tokens").unwrap_or(d.batch_tokens),
+            profile_samples: j.get_usize("profile_samples").unwrap_or(d.profile_samples),
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_names_roundtrip() {
+        for p in CorpusPreset::all() {
+            assert_eq!(CorpusPreset::from_name(p.name()), Some(p));
+        }
+        assert_eq!(CorpusPreset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn presets_differ() {
+        let ps: Vec<_> = CorpusPreset::all().iter().map(|p| p.params()).collect();
+        for i in 0..ps.len() {
+            for j in (i + 1)..ps.len() {
+                assert_ne!(ps[i], ps[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut w = WorkloadConfig::default();
+        w.corpus = CorpusPreset::Wmt19;
+        w.batch_tokens = 256;
+        let w2 = WorkloadConfig::from_json(&w.to_json()).unwrap();
+        assert_eq!(w2.corpus, CorpusPreset::Wmt19);
+        assert_eq!(w2.batch_tokens, 256);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bucket batching: expert minibatches are padded to the nearest compiled
+//! token bucket (executables have static shapes), and oversized loads are
+//! chunked at the largest bucket — the pipeline-degree β of the serving
+//! path.
+
+/// Split `n` tokens into chunks of at most `max_bucket`.
+pub fn chunks(n: usize, max_bucket: usize) -> Vec<usize> {
+    assert!(max_bucket > 0);
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(max_bucket);
+        out.push(take);
+        left -= take;
+    }
+    out
+}
+
+/// Pad a row-major [n, width] activation to [bucket, width] with zeros.
+pub fn pad_rows(data: &[f32], n: usize, width: usize, bucket: usize) -> Vec<f32> {
+    assert_eq!(data.len(), n * width);
+    assert!(bucket >= n);
+    let mut out = Vec::with_capacity(bucket * width);
+    out.extend_from_slice(data);
+    out.resize(bucket * width, 0.0);
+    out
+}
+
+/// Gather the rows at `idx` from a [rows, width] tensor.
+pub fn gather_rows(data: &[f32], width: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * width);
+    for &i in idx {
+        out.extend_from_slice(&data[i * width..(i + 1) * width]);
+    }
+    out
+}
+
+/// Scatter-add rows back: out[idx[j]] += scale[j] * rows[j].
+pub fn scatter_rows_scaled(
+    out: &mut [f32],
+    width: usize,
+    idx: &[usize],
+    rows: &[f32],
+    scale: &[f32],
+) {
+    assert_eq!(idx.len(), scale.len());
+    for (j, &i) in idx.iter().enumerate() {
+        let src = &rows[j * width..(j + 1) * width];
+        let dst = &mut out[i * width..(i + 1) * width];
+        let s = scale[j];
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d += s * x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking() {
+        assert_eq!(chunks(0, 256), Vec::<usize>::new());
+        assert_eq!(chunks(100, 256), vec![100]);
+        assert_eq!(chunks(600, 256), vec![256, 256, 88]);
+        assert_eq!(chunks(512, 256), vec![256, 256]);
+    }
+
+    #[test]
+    fn padding() {
+        let d = vec![1.0, 2.0, 3.0, 4.0];
+        let p = pad_rows(&d, 2, 2, 4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..4], &d[..]);
+        assert!(p[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        // 4 rows of width 2.
+        let data: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let idx = [3usize, 1];
+        let g = gather_rows(&data, 2, &idx);
+        assert_eq!(g, vec![6.0, 7.0, 2.0, 3.0]);
+        let mut out = vec![0.0; 8];
+        scatter_rows_scaled(&mut out, 2, &idx, &g, &[1.0, 0.5]);
+        assert_eq!(out[6], 6.0);
+        assert_eq!(out[2], 1.0);
+        assert_eq!(out[0], 0.0);
+    }
+}

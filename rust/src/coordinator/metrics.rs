@@ -1,0 +1,105 @@
+//! Serving metrics: per-stage wall times, billed-cost accounting, latency
+//! percentiles and throughput.
+
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    /// Wall seconds per stage name (embed, attention, gating, expert-l0-e2…).
+    pub stage_secs: BTreeMap<String, f64>,
+    /// Per-request end-to-end latencies.
+    pub request_latencies: Vec<f64>,
+    pub tokens_served: u64,
+    /// Billed cost accumulated from (memory × measured time) per function.
+    pub billed_cost: f64,
+    pub invocations: u64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_stage(&mut self, stage: &str, secs: f64) {
+        *self.stage_secs.entry(stage.to_string()).or_default() += secs;
+        self.invocations += 1;
+    }
+
+    pub fn record_request(&mut self, latency: f64, tokens: u64) {
+        self.request_latencies.push(latency);
+        self.tokens_served += tokens;
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        let total: f64 = self.request_latencies.iter().sum();
+        if total > 0.0 {
+            self.tokens_served as f64 / total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.request_latencies, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.request_latencies, 99.0)
+    }
+
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        for (k, v) in &other.stage_secs {
+            *self.stage_secs.entry(k.clone()).or_default() += v;
+        }
+        self.request_latencies
+            .extend_from_slice(&other.request_latencies);
+        self.tokens_served += other.tokens_served;
+        self.billed_cost += other.billed_cost;
+        self.invocations += other.invocations;
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} tput={:.1} tok/s p50={} p99={} cost=${:.6} invocations={}",
+            self.request_latencies.len(),
+            self.tokens_served,
+            self.throughput_tps(),
+            crate::util::table::ftime(self.p50()),
+            crate::util::table::ftime(self.p99()),
+            self.billed_cost,
+            self.invocations,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = ServingMetrics::new();
+        m.record_stage("embed", 0.1);
+        m.record_stage("embed", 0.2);
+        m.record_request(0.5, 64);
+        m.record_request(1.5, 64);
+        assert!((m.stage_secs["embed"] - 0.3).abs() < 1e-12);
+        assert_eq!(m.tokens_served, 128);
+        assert!((m.throughput_tps() - 64.0).abs() < 1e-9);
+        assert!((m.p50() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = ServingMetrics::new();
+        a.record_stage("x", 1.0);
+        a.record_request(0.1, 10);
+        let mut b = ServingMetrics::new();
+        b.record_stage("x", 2.0);
+        b.billed_cost = 0.5;
+        a.merge(&b);
+        assert!((a.stage_secs["x"] - 3.0).abs() < 1e-12);
+        assert_eq!(a.billed_cost, 0.5);
+    }
+}

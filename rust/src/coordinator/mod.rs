@@ -1,0 +1,16 @@
+//! L3 serving coordinator: the request path that composes the AOT-compiled
+//! stages (embed → attention → gating → expert FFN) into MoE inference,
+//! with token→expert routing, bucket batching, scatter-gather accounting
+//! against the platform simulator, and a threaded request loop.
+//!
+//! Python never runs here: every numeric stage is a PJRT executable loaded
+//! from `artifacts/`.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod service;
+
+pub use metrics::ServingMetrics;
+pub use server::{ServeRequest, ServeResponse, Server};
+pub use service::MoeService;

@@ -1,0 +1,122 @@
+//! Threaded request loop: a leader thread owns the PJRT engine (executables
+//! are not shared across threads); clients submit sequences over a channel
+//! and receive results over per-request reply channels — the vLLM-router
+//! pattern scaled to this repo.
+
+use super::metrics::ServingMetrics;
+use super::service::MoeService;
+use crate::config::PlatformConfig;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+pub struct ServeRequest {
+    pub token_ids: Vec<u32>,
+    pub reply: mpsc::Sender<ServeResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    /// L2 norm of the final hidden states (summary of the model output).
+    pub output_norm: f64,
+    pub expert_counts: Vec<Vec<u64>>,
+    pub latency: f64,
+}
+
+pub struct Server {
+    tx: mpsc::Sender<ServerMsg>,
+    handle: Option<JoinHandle<ServingMetrics>>,
+}
+
+enum ServerMsg {
+    Request(ServeRequest),
+    Shutdown,
+}
+
+impl Server {
+    /// Start the leader thread; compiles all stages before accepting work.
+    pub fn start(artifacts_dir: PathBuf, platform: PlatformConfig) -> anyhow::Result<Server> {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let mut service = match MoeService::new(&artifacts_dir, platform) {
+                Ok(mut s) => {
+                    let r = s.engine.load_all().map(|_| ());
+                    let ok = r.is_ok();
+                    ready_tx.send(r).ok();
+                    if !ok {
+                        return ServingMetrics::new();
+                    }
+                    s
+                }
+                Err(e) => {
+                    ready_tx.send(Err(e)).ok();
+                    return ServingMetrics::new();
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ServerMsg::Shutdown => break,
+                    ServerMsg::Request(req) => {
+                        let t0 = std::time::Instant::now();
+                        match service.serve_sequence(&req.token_ids) {
+                            Ok(res) => {
+                                let norm = res
+                                    .hidden
+                                    .data
+                                    .iter()
+                                    .map(|&x| (x as f64) * (x as f64))
+                                    .sum::<f64>()
+                                    .sqrt();
+                                req.reply
+                                    .send(ServeResponse {
+                                        output_norm: norm,
+                                        expert_counts: res.expert_counts,
+                                        latency: t0.elapsed().as_secs_f64(),
+                                    })
+                                    .ok();
+                            }
+                            Err(e) => {
+                                crate::util::log::log(
+                                    crate::util::log::Level::Error,
+                                    &format!("serve error: {e:#}"),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            service.metrics
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread died during startup"))??;
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Submit a request; blocks for the response.
+    pub fn serve(&self, token_ids: Vec<u32>) -> anyhow::Result<ServeResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(ServerMsg::Request(ServeRequest {
+                token_ids,
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("no response (serve error)"))
+    }
+
+    /// Stop and return accumulated metrics.
+    pub fn shutdown(mut self) -> ServingMetrics {
+        self.tx.send(ServerMsg::Shutdown).ok();
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-layer optimization: assemble per-expert options into *layer
+//! candidates* — (cost, latency, plan) triples on the layer's Pareto
+//! frontier — for a given communication method.
+//!
+//! Construction: start from every expert's cheapest option, then repeatedly
+//! apply the move with the best Δlatency/Δcost ratio to the current
+//! straggler expert. Because the layer latency is `max_i t_rep + gather`,
+//! only straggler upgrades can reduce it, so this ladder traces the exact
+//! frontier of the per-layer subproblem.
+
+use super::options::{expert_options, pareto_frontier, ExpertOption};
+use crate::comm::{layer_latency, CommMethod, LayerPlan};
+use crate::config::PlatformConfig;
+use crate::model::MoeModelSpec;
+
+/// One selectable configuration of a whole MoE layer.
+#[derive(Debug, Clone)]
+pub struct LayerCandidate {
+    pub plan: LayerPlan,
+    pub cost: f64,
+    pub latency: f64,
+}
+
+/// Generate the candidate ladder for `layer` under `method`.
+/// For a=1, sweeps the β grid and merges the frontiers.
+pub fn layer_candidates(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    tokens: &[u64],
+    method: CommMethod,
+    beta_grid: &[usize],
+    max_replicas: usize,
+    warm: bool,
+) -> Vec<LayerCandidate> {
+    // Direct transfer must also pass the batch-level gather check (the next
+    // non-MoE function receives the whole layer output in one invocation).
+    if method == CommMethod::Direct {
+        let total: u64 = tokens.iter().sum();
+        if !crate::comm::timing::direct_gather_feasible(cfg, spec, total) {
+            return Vec::new();
+        }
+    }
+    let betas: Vec<usize> = match method {
+        CommMethod::PipelinedIndirect => beta_grid.to_vec(),
+        _ => vec![1],
+    };
+    let mut all = Vec::new();
+    for &beta in &betas {
+        // Per-expert Pareto options.
+        let per_expert: Vec<Vec<ExpertOption>> = tokens
+            .iter()
+            .map(|&d| {
+                pareto_frontier(expert_options(
+                    cfg, spec, layer, d, method, beta, max_replicas, warm,
+                ))
+            })
+            .collect();
+        if per_expert.iter().any(Vec::is_empty) {
+            continue; // no feasible options for some expert under this method
+        }
+        // Start: cheapest option per expert.
+        let mut idx: Vec<usize> = vec![0; per_expert.len()];
+        loop {
+            let plan = LayerPlan {
+                method,
+                beta,
+                experts: idx
+                    .iter()
+                    .zip(&per_expert)
+                    .map(|(&i, opts)| opts[i].plan)
+                    .collect(),
+            };
+            let cost: f64 = idx
+                .iter()
+                .zip(&per_expert)
+                .map(|(&i, opts)| opts[i].cost)
+                .sum();
+            let latency = layer_latency(cfg, spec, layer, &plan, warm);
+            all.push(LayerCandidate { plan, cost, latency });
+
+            // Find the straggler expert and upgrade it one Pareto step.
+            let straggler = idx
+                .iter()
+                .zip(&per_expert)
+                .enumerate()
+                .filter(|(_, (&i, opts))| i + 1 < opts.len())
+                .max_by(|a, b| {
+                    let ta = (a.1 .1)[*a.1 .0].t_rep;
+                    let tb = (b.1 .1)[*b.1 .0].t_rep;
+                    ta.partial_cmp(&tb).unwrap()
+                })
+                .map(|(e, _)| e);
+            match straggler {
+                Some(e)
+                    if per_expert[e][idx[e]].t_rep
+                        >= idx
+                            .iter()
+                            .zip(&per_expert)
+                            .map(|(&i, o)| o[i].t_rep)
+                            .fold(0.0, f64::max)
+                            - 1e-12 =>
+                {
+                    idx[e] += 1;
+                }
+                Some(e) => {
+                    // The straggler has no upgrades left; upgrading anyone
+                    // else cannot reduce the max — stop.
+                    let max_t = idx
+                        .iter()
+                        .zip(&per_expert)
+                        .map(|(&i, o)| o[i].t_rep)
+                        .fold(0.0, f64::max);
+                    if per_expert[e][idx[e]].t_rep < max_t - 1e-12 {
+                        break;
+                    }
+                    idx[e] += 1;
+                }
+                None => break,
+            }
+        }
+    }
+    // Merge across β: keep the global cost-vs-latency frontier.
+    all.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+    let mut out: Vec<LayerCandidate> = Vec::new();
+    for c in all {
+        if out
+            .last()
+            .map(|l| c.latency < l.latency - 1e-12)
+            .unwrap_or(true)
+        {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn setup() -> (PlatformConfig, MoeModelSpec) {
+        (
+            PlatformConfig::default(),
+            ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec(),
+        )
+    }
+
+    #[test]
+    fn candidates_form_frontier() {
+        let (cfg, spec) = setup();
+        let tokens = vec![4000, 2000, 1000, 500];
+        let cands = layer_candidates(
+            &cfg, &spec, 0, &tokens, CommMethod::Indirect, &[1], 8, true,
+        );
+        assert!(cands.len() >= 3, "got {}", cands.len());
+        for w in cands.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+            assert!(w[0].latency > w[1].latency);
+        }
+    }
+
+    #[test]
+    fn skewed_load_gets_replicas_on_popular_expert() {
+        let (cfg, spec) = setup();
+        let tokens = vec![8000, 100, 100, 100];
+        let cands = layer_candidates(
+            &cfg, &spec, 0, &tokens, CommMethod::Indirect, &[1], 8, true,
+        );
+        // The fastest candidate must replicate the popular expert.
+        let fastest = cands.last().unwrap();
+        assert!(
+            fastest.plan.experts[0].replicas > 1,
+            "popular expert plan: {:?}",
+            fastest.plan.experts[0]
+        );
+    }
+
+    #[test]
+    fn direct_candidates_absent_when_payload_blocks() {
+        let (cfg, spec) = setup();
+        // 40,960 tokens on one expert: even 8 replicas × 6MB cannot carry it.
+        let tokens = vec![40_960, 0, 0, 0];
+        let cands = layer_candidates(
+            &cfg, &spec, 0, &tokens, CommMethod::Direct, &[1], 8, true,
+        );
+        assert!(cands.is_empty());
+        // Indirect still works.
+        let ind = layer_candidates(
+            &cfg, &spec, 0, &tokens, CommMethod::Indirect, &[1], 8, true,
+        );
+        assert!(!ind.is_empty());
+    }
+
+    #[test]
+    fn beta_sweep_extends_frontier() {
+        let (cfg, spec) = setup();
+        let tokens = vec![6000; 4];
+        let one_beta = layer_candidates(
+            &cfg, &spec, 0, &tokens, CommMethod::PipelinedIndirect, &[16], 8, true,
+        );
+        let multi_beta = layer_candidates(
+            &cfg, &spec, 0, &tokens,
+            CommMethod::PipelinedIndirect,
+            &[16, 1024, 2048, 4096],
+            8,
+            true,
+        );
+        let best_one = one_beta.first().map(|c| c.cost).unwrap_or(f64::INFINITY);
+        let best_multi = multi_beta.first().map(|c| c.cost).unwrap_or(f64::INFINITY);
+        assert!(best_multi <= best_one + 1e-12);
+    }
+}

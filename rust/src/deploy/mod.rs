@@ -1,0 +1,193 @@
+//! Optimal MoE deployment (§III-D, §IV-A).
+//!
+//! Problem (12): choose per-expert memory configurations x, replica counts
+//! y, per-layer communication methods a and the pipeline degree β to
+//! minimize the billed cost of all MoE layers subject to the memory (12c),
+//! SLO (12d), β (12e) and payload (12f) constraints.
+//!
+//! Solved by:
+//!  - [`options`]   — feasible per-expert (memory, replicas) enumeration,
+//!  - [`layer_opt`] — per-layer Pareto candidates (cost vs latency),
+//!  - [`miqcp`]     — the fixed-`a` MIQCP solves + the direct-MIQCP baseline
+//!                    (time-limited, as in Fig. 12's protocol),
+//!  - [`ods`]       — Alg. 1, selecting a_e per layer from the three solves,
+//!  - [`baselines`] — LambdaML and the random-selection baseline.
+
+pub mod baselines;
+pub mod layer_opt;
+pub mod miqcp;
+pub mod ods;
+pub mod options;
+
+pub use miqcp::{solve_fixed_method, solve_joint, FixedSolution};
+pub use ods::ods_select;
+
+use crate::comm::{CommMethod, LayerPlan};
+use crate::config::PlatformConfig;
+use crate::model::MoeModelSpec;
+
+/// The deployment problem instance.
+pub struct DeployProblem<'a> {
+    pub cfg: &'a PlatformConfig,
+    pub spec: &'a MoeModelSpec,
+    /// Predicted (or real) tokens per expert: tokens[layer][expert] = d̂_{e,i}.
+    pub tokens: Vec<Vec<u64>>,
+    /// SLO T_limit (constraint 12d).
+    pub t_limit: f64,
+    /// Max replicas G.
+    pub max_replicas: usize,
+    /// β search grid.
+    pub beta_grid: Vec<usize>,
+    /// Whether functions are pre-warmed.
+    pub warm: bool,
+}
+
+impl<'a> DeployProblem<'a> {
+    /// Total routed-token count across all layers (each batch token is
+    /// counted once per layer per top-k assignment).
+    pub fn total_tokens(&self) -> u64 {
+        self.tokens.iter().flat_map(|l| l.iter()).sum()
+    }
+
+    /// Tokens in the serving batch (layer-0 assignments ÷ top-k).
+    pub fn batch_tokens(&self) -> u64 {
+        let layer0: u64 = self.tokens.first().map(|l| l.iter().sum()).unwrap_or(0);
+        layer0 / self.spec.top_k.max(1) as u64
+    }
+
+    /// Fixed (decision-independent) part of the E2E time: head + tail +
+    /// Σ_e T^NE_e — subtracting it from T_limit leaves the per-layer
+    /// latency budget the optimizer distributes.
+    pub fn fixed_overhead(&self) -> f64 {
+        let max_mem = self.cfg.max_memory_mb();
+        let tokens = self.batch_tokens() as f64;
+        let t_ne = tokens * self.cfg.token_time(max_mem, self.spec.non_moe_token_flops);
+        let t_head_tail = 2.0 * tokens
+            * self.cfg.token_time(max_mem, self.spec.head_tail_token_flops)
+            + 2.0 * crate::comm::timing::head_time(
+                self.cfg,
+                self.spec.non_moe_param_bytes,
+                self.warm,
+            );
+        t_head_tail + self.spec.num_moe_layers() as f64 * t_ne
+    }
+
+    /// Latency budget available to the MoE layers.
+    pub fn latency_budget(&self) -> f64 {
+        self.t_limit - self.fixed_overhead()
+    }
+}
+
+/// A complete deployment decision for the model.
+#[derive(Debug, Clone)]
+pub struct DeploymentPolicy {
+    pub layers: Vec<LayerPlan>,
+}
+
+impl DeploymentPolicy {
+    /// Σ_e c_e — the objective (12a).
+    pub fn total_cost(&self, cfg: &PlatformConfig, spec: &MoeModelSpec, warm: bool) -> f64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(e, p)| crate::comm::layer_cost(cfg, spec, e, p, warm))
+            .sum()
+    }
+
+    /// Σ_e t^lat_e.
+    pub fn total_latency(&self, cfg: &PlatformConfig, spec: &MoeModelSpec, warm: bool) -> f64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(e, p)| crate::comm::layer_latency(cfg, spec, e, p, warm))
+            .sum()
+    }
+
+    /// End-to-end time (12d LHS).
+    pub fn end_to_end_time(
+        &self,
+        problem: &DeployProblem,
+    ) -> f64 {
+        problem.fixed_overhead()
+            + self.total_latency(problem.cfg, problem.spec, problem.warm)
+    }
+
+    /// Check every constraint of (12).
+    pub fn feasible(&self, problem: &DeployProblem) -> bool {
+        for (e, plan) in self.layers.iter().enumerate() {
+            for ep in &plan.experts {
+                if ep.tokens == 0 {
+                    continue;
+                }
+                if !crate::comm::timing::memory_feasible(problem.spec, e, ep) {
+                    return false;
+                }
+                if plan.method == CommMethod::Direct
+                    && !crate::comm::timing::direct_feasible(problem.cfg, problem.spec, ep)
+                {
+                    return false;
+                }
+            }
+        }
+        self.end_to_end_time(problem) <= problem.t_limit + 1e-9
+    }
+
+    /// Per-layer method summary (for experiment tables).
+    pub fn methods(&self) -> Vec<CommMethod> {
+        self.layers.iter().map(|l| l.method).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ExpertPlan;
+    use crate::model::ModelPreset;
+
+    #[test]
+    fn budget_is_limit_minus_overhead() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let p = DeployProblem {
+            cfg: &cfg,
+            spec: &spec,
+            tokens: vec![vec![2560; 4]; 12],
+            t_limit: 1000.0,
+            max_replicas: 8,
+            beta_grid: vec![1, 64],
+            warm: true,
+        };
+        assert_eq!(p.total_tokens(), 2560 * 4 * 12);
+        assert!((p.latency_budget() - (1000.0 - p.fixed_overhead())).abs() < 1e-12);
+        assert!(p.fixed_overhead() > 0.0);
+    }
+
+    #[test]
+    fn policy_cost_and_feasibility() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let problem = DeployProblem {
+            cfg: &cfg,
+            spec: &spec,
+            tokens: vec![vec![640; 4]; 12],
+            t_limit: 10_000.0,
+            max_replicas: 8,
+            beta_grid: vec![1],
+            warm: true,
+        };
+        let policy = DeploymentPolicy {
+            layers: (0..12)
+                .map(|_| LayerPlan {
+                    method: CommMethod::Indirect,
+                    beta: 1,
+                    experts: vec![ExpertPlan { mem_mb: 3072, replicas: 1, tokens: 640 }; 4],
+                })
+                .collect(),
+        };
+        assert!(policy.total_cost(&cfg, &spec, true) > 0.0);
+        assert!(policy.feasible(&problem));
+        // Shrink the SLO to force infeasibility.
+        let tight = DeployProblem { t_limit: 1.0, ..problem };
+        assert!(!policy.feasible(&tight));
+    }
+}

@@ -1,0 +1,219 @@
+//! The Optimal Deployment Selection algorithm — Alg. 1 of the paper.
+//!
+//! Input: the three fixed-`a` MIQCP solutions (per-layer costs c_{a,e},
+//! latencies, plans). Per layer pick â_e = argmin_a c_{a,e}; if the mixed
+//! selection violates the end-to-end constraint (12d), set the cost of the
+//! (a, layer) pair with the highest latency to ∞ and retry — at most 2|E|
+//! iterations. If everything is masked out, fall back to the best
+//! single-method solution (lines 18–19).
+
+use super::miqcp::FixedSolution;
+use super::{DeployProblem, DeploymentPolicy};
+use crate::comm::CommMethod;
+
+/// Outcome of Alg. 1.
+#[derive(Debug, Clone)]
+pub struct OdsResult {
+    pub policy: DeploymentPolicy,
+    pub methods: Vec<CommMethod>,
+    pub total_cost: f64,
+    pub feasible: bool,
+    pub iterations: usize,
+    /// True when the uniform-method fallback (lines 18-19) was taken.
+    pub fell_back: bool,
+}
+
+/// Run Alg. 1. `solutions[a]` is the fixed-method solution for
+/// CommMethod::ALL[a] (None when that method has no feasible candidates).
+pub fn ods_select(
+    problem: &DeployProblem,
+    solutions: &[Option<FixedSolution>; 3],
+) -> Option<OdsResult> {
+    let num_layers = problem.spec.num_moe_layers();
+    let budget = problem.latency_budget();
+
+    // c[a][e] and lat[a][e], ∞ where unavailable.
+    let mut cost = vec![vec![f64::INFINITY; num_layers]; 3];
+    let mut lat = vec![vec![f64::INFINITY; num_layers]; 3];
+    for (a, sol) in solutions.iter().enumerate() {
+        if let Some(s) = sol {
+            for e in 0..num_layers {
+                cost[a][e] = s.layer_costs[e];
+                lat[a][e] = s.layer_latencies[e];
+            }
+        }
+    }
+
+    let max_iters = 2 * num_layers;
+    for itr in 0..=max_iters {
+        // Lines 3-8: per-layer argmin over methods.
+        let mut pick = Vec::with_capacity(num_layers);
+        let mut total_lat = 0.0;
+        let mut total_cost = 0.0;
+        let mut ok = true;
+        for e in 0..num_layers {
+            let a_best = (0..3)
+                .min_by(|&a, &b| cost[a][e].partial_cmp(&cost[b][e]).unwrap())
+                .unwrap();
+            if cost[a_best][e].is_infinite() {
+                ok = false;
+                break;
+            }
+            pick.push(a_best);
+            total_lat += lat[a_best][e];
+            total_cost += cost[a_best][e];
+        }
+        if !ok {
+            break; // all methods masked at some layer → fallback
+        }
+        // Line 9: end-to-end check.
+        if total_lat <= budget + 1e-9 {
+            let layers = pick
+                .iter()
+                .enumerate()
+                .map(|(e, &a)| {
+                    solutions[a].as_ref().unwrap().policy.layers[e].clone()
+                })
+                .collect();
+            return Some(OdsResult {
+                policy: DeploymentPolicy { layers },
+                methods: pick.iter().map(|&a| CommMethod::ALL[a]).collect(),
+                total_cost,
+                feasible: true,
+                iterations: itr,
+                fell_back: false,
+            });
+        }
+        // Lines 10-12: mask the (method, layer) pair with the highest
+        // latency among the current picks.
+        let (worst_e, &worst_a) = pick
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                lat[*a.1][a.0].partial_cmp(&lat[*b.1][b.0]).unwrap()
+            })
+            .unwrap();
+        cost[worst_a][worst_e] = f64::INFINITY;
+    }
+
+    // Lines 18-19: uniform-method fallback — cheapest feasible fixed-method
+    // solution (preferring feasible ones).
+    let best = solutions
+        .iter()
+        .flatten()
+        .filter(|s| s.feasible)
+        .min_by(|a, b| a.total_cost.partial_cmp(&b.total_cost).unwrap())
+        .or_else(|| {
+            solutions
+                .iter()
+                .flatten()
+                .min_by(|a, b| a.total_cost.partial_cmp(&b.total_cost).unwrap())
+        })?;
+    let method = best.policy.layers[0].method;
+    Some(OdsResult {
+        policy: best.policy.clone(),
+        methods: vec![method; num_layers],
+        total_cost: best.total_cost,
+        feasible: best.feasible,
+        iterations: max_iters,
+        fell_back: true,
+    })
+}
+
+/// Convenience: run the three fixed-method solves then Alg. 1.
+pub fn ods_full(problem: &DeployProblem, per_solve_time_limit: f64) -> Option<OdsResult> {
+    let solutions: [Option<FixedSolution>; 3] = [
+        super::miqcp::solve_fixed_method(problem, CommMethod::PipelinedIndirect, per_solve_time_limit),
+        super::miqcp::solve_fixed_method(problem, CommMethod::Indirect, per_solve_time_limit),
+        super::miqcp::solve_fixed_method(problem, CommMethod::Direct, per_solve_time_limit),
+    ];
+    ods_select(problem, &solutions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::model::ModelPreset;
+
+    fn problem<'a>(
+        cfg: &'a PlatformConfig,
+        spec: &'a crate::model::MoeModelSpec,
+        t_limit: f64,
+    ) -> DeployProblem<'a> {
+        let tokens: Vec<Vec<u64>> = (0..spec.num_moe_layers())
+            .map(|e| vec![4096 + (e as u64 % 3) * 512, 3072, 2048, 1024])
+            .collect();
+        DeployProblem {
+            cfg,
+            spec,
+            tokens,
+            t_limit,
+            max_replicas: 8,
+            beta_grid: vec![1, 64, 1024, 2048, 4096],
+            warm: true,
+        }
+    }
+
+    #[test]
+    fn ods_returns_feasible_mixed_policy() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let p = problem(&cfg, &spec, 2000.0);
+        let r = ods_full(&p, 5.0).expect("ods must produce a policy");
+        assert!(r.feasible);
+        assert_eq!(r.methods.len(), 12);
+        assert!(r.policy.feasible(&p));
+    }
+
+    #[test]
+    fn ods_cost_at_most_best_uniform() {
+        // Theorem 1's flavour: mixing per-layer minima can only beat (or
+        // match) the best uniform-method solution when feasible directly.
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let p = problem(&cfg, &spec, 2500.0);
+        let solutions = [
+            super::super::miqcp::solve_fixed_method(&p, CommMethod::PipelinedIndirect, 5.0),
+            super::super::miqcp::solve_fixed_method(&p, CommMethod::Indirect, 5.0),
+            super::super::miqcp::solve_fixed_method(&p, CommMethod::Direct, 5.0),
+        ];
+        let best_uniform = solutions
+            .iter()
+            .flatten()
+            .filter(|s| s.feasible)
+            .map(|s| s.total_cost)
+            .fold(f64::INFINITY, f64::min);
+        let r = ods_select(&p, &solutions).unwrap();
+        if !r.fell_back {
+            assert!(
+                r.total_cost <= best_uniform + 1e-9,
+                "ods {} vs best uniform {}",
+                r.total_cost,
+                best_uniform
+            );
+        }
+    }
+
+    #[test]
+    fn ods_falls_back_when_needed() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        // Unreachable SLO: every mix violates; ODS must fall back and report.
+        let p = problem(&cfg, &spec, 1.0);
+        let r = ods_full(&p, 5.0);
+        if let Some(r) = r {
+            assert!(r.fell_back || !r.feasible);
+        }
+    }
+
+    #[test]
+    fn ods_iterations_bounded() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let p = problem(&cfg, &spec, 1200.0);
+        if let Some(r) = ods_full(&p, 5.0) {
+            assert!(r.iterations <= 2 * 12, "iterations={}", r.iterations);
+        }
+    }
+}

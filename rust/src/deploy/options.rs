@@ -1,0 +1,168 @@
+//! Per-expert option enumeration: the discrete (memory j, replicas g) grid
+//! of problem (12), filtered by the memory constraint (12c) and — under
+//! direct transfer — the payload constraint (12f). 14 memory options × G
+//! replicas = 112 options per expert; exhaustive enumeration is exact.
+
+use crate::comm::timing::{direct_feasible, memory_feasible, replica_time};
+use crate::comm::{CommMethod, ExpertPlan};
+use crate::config::PlatformConfig;
+use crate::model::MoeModelSpec;
+
+/// One feasible per-expert choice with its cost/latency consequences.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpertOption {
+    pub plan: ExpertPlan,
+    /// Billed cost contribution (Eq. 4 summand): g · t^rep · mem · price.
+    pub cost: f64,
+    /// Per-replica execution time t^rep (drives the layer straggler term).
+    pub t_rep: f64,
+}
+
+/// Enumerate feasible options for one expert, cheapest-first.
+pub fn expert_options(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    tokens: u64,
+    method: CommMethod,
+    beta: usize,
+    max_replicas: usize,
+    warm: bool,
+) -> Vec<ExpertOption> {
+    let mut out = Vec::new();
+    if tokens == 0 {
+        // Unselected expert: deploy the smallest memory, one replica, at
+        // zero running cost (never invoked).
+        let plan = ExpertPlan {
+            mem_mb: cfg.memory_options_mb[0],
+            replicas: 1,
+            tokens: 0,
+        };
+        return vec![ExpertOption {
+            plan,
+            cost: 0.0,
+            t_rep: 0.0,
+        }];
+    }
+    for &mem_mb in &cfg.memory_options_mb {
+        for g in 1..=max_replicas {
+            let plan = ExpertPlan {
+                mem_mb,
+                replicas: g,
+                tokens,
+            };
+            if !memory_feasible(spec, layer, &plan) {
+                continue;
+            }
+            if method == CommMethod::Direct && !direct_feasible(cfg, spec, &plan) {
+                continue;
+            }
+            let t_rep = replica_time(cfg, spec, layer, &plan, method, beta, warm);
+            let cost = cfg.run_cost(mem_mb, g as f64 * t_rep)
+                + g as f64 * cfg.price_per_invocation;
+            out.push(ExpertOption { plan, cost, t_rep });
+        }
+    }
+    out.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+    out
+}
+
+/// Prune to the cost-vs-t_rep Pareto frontier (an option dominated in both
+/// cost and time can never appear in an optimal solution).
+pub fn pareto_frontier(mut opts: Vec<ExpertOption>) -> Vec<ExpertOption> {
+    // Sorted by cost ascending; keep strictly decreasing t_rep.
+    opts.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+    let mut out: Vec<ExpertOption> = Vec::new();
+    for o in opts {
+        if out.last().map(|l| o.t_rep < l.t_rep - 1e-12).unwrap_or(true) {
+            out.push(o);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn setup() -> (PlatformConfig, crate::model::MoeModelSpec) {
+        (
+            PlatformConfig::default(),
+            ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec(),
+        )
+    }
+
+    #[test]
+    fn options_respect_memory_constraint() {
+        let (cfg, spec) = setup();
+        let opts = expert_options(&cfg, &spec, 0, 1000, CommMethod::Indirect, 1, 8, true);
+        assert!(!opts.is_empty());
+        for o in &opts {
+            assert!(memory_feasible(&spec, 0, &o.plan));
+            assert!(o.cost > 0.0 && o.t_rep > 0.0);
+        }
+        // 128MB can never hold a BERT expert (18MB params + 150MB overhead).
+        assert!(opts.iter().all(|o| o.plan.mem_mb > 128));
+    }
+
+    #[test]
+    fn direct_options_respect_payload() {
+        let (cfg, spec) = setup();
+        // 4096 tokens × 3072B × 1.4 ≈ 17.6MB — needs ≥3 replicas for 6MB.
+        let opts = expert_options(&cfg, &spec, 0, 4096, CommMethod::Direct, 1, 8, true);
+        assert!(!opts.is_empty());
+        assert!(opts.iter().all(|o| o.plan.replicas >= 3));
+        // And with G=2 there are no feasible options at all.
+        let none = expert_options(&cfg, &spec, 0, 4096, CommMethod::Direct, 1, 2, true);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn zero_tokens_single_free_option() {
+        let (cfg, spec) = setup();
+        let opts = expert_options(&cfg, &spec, 0, 0, CommMethod::Indirect, 1, 8, true);
+        assert_eq!(opts.len(), 1);
+        assert_eq!(opts[0].cost, 0.0);
+        assert_eq!(opts[0].plan.mem_mb, cfg.memory_options_mb[0]);
+    }
+
+    #[test]
+    fn cheapest_first_ordering() {
+        let (cfg, spec) = setup();
+        let opts = expert_options(&cfg, &spec, 0, 2000, CommMethod::Indirect, 1, 8, true);
+        for w in opts.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_is_monotone() {
+        let (cfg, spec) = setup();
+        let opts = expert_options(&cfg, &spec, 0, 2000, CommMethod::Indirect, 1, 8, true);
+        let n_raw = opts.len();
+        let front = pareto_frontier(opts);
+        assert!(!front.is_empty() && front.len() <= n_raw);
+        for w in front.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+            assert!(w[0].t_rep > w[1].t_rep, "t_rep must strictly improve");
+        }
+    }
+
+    #[test]
+    fn more_replicas_cut_straggler_time() {
+        let (cfg, spec) = setup();
+        let opts = expert_options(&cfg, &spec, 0, 4000, CommMethod::Indirect, 1, 8, true);
+        let best_single = opts
+            .iter()
+            .filter(|o| o.plan.replicas == 1)
+            .map(|o| o.t_rep)
+            .fold(f64::INFINITY, f64::min);
+        let best_octo = opts
+            .iter()
+            .filter(|o| o.plan.replicas == 8)
+            .map(|o| o.t_rep)
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_octo < best_single);
+    }
+}

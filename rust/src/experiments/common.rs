@@ -1,0 +1,89 @@
+//! Shared experiment scaffolding: a fully-wired context (config, model,
+//! corpus, gate, profiled predictor) so each figure module stays small.
+
+use crate::config::workload::CorpusPreset;
+use crate::config::Config;
+use crate::deploy::DeployProblem;
+use crate::gating::SimGate;
+use crate::model::{ModelPreset, MoeModelSpec};
+use crate::predictor::profile::{profile_batches, ProfileResult};
+use crate::predictor::BayesPredictor;
+use crate::workload::{Batch, Corpus, RequestGenerator};
+
+pub struct ExpContext {
+    pub config: Config,
+    pub spec: MoeModelSpec,
+    pub gate: SimGate,
+    pub generator: RequestGenerator,
+    pub profile: ProfileResult,
+}
+
+impl ExpContext {
+    /// Standard setup: profile `profile_batches` batches, evaluation batches
+    /// drawn afterwards from the same corpus (the paper's 95%/5% split).
+    pub fn new(preset: ModelPreset, corpus: CorpusPreset, quick: bool) -> ExpContext {
+        let config = Config::default();
+        let spec = preset.spec();
+        let gate = SimGate::new(&spec, 0xA11CE);
+        let corpus = Corpus::new(corpus, config.workload.seed);
+        let batch_tokens = if quick { 1024 } else { config.workload.batch_tokens };
+        let mut generator = RequestGenerator::new(corpus, 17, batch_tokens);
+        let n_profile = if quick { 8 } else { 40 };
+        let batches = generator.profile_set(n_profile);
+        let profile = profile_batches(&gate, &batches);
+        ExpContext {
+            config,
+            spec,
+            gate,
+            generator,
+            profile,
+        }
+    }
+
+    pub fn bayes(&self) -> BayesPredictor {
+        BayesPredictor::new(self.profile.table.clone(), self.profile.prior.clone())
+    }
+
+    pub fn eval_batch(&mut self) -> Batch {
+        self.generator.next_batch()
+    }
+
+    /// Real per-layer expert counts for a batch.
+    pub fn real_counts(&self, batch: &Batch) -> Vec<Vec<u64>> {
+        crate::predictor::eval::real_counts(&self.gate, batch)
+    }
+
+    /// Deployment problem from token counts.
+    pub fn problem<'a>(&'a self, tokens: Vec<Vec<u64>>, t_limit: f64) -> DeployProblem<'a> {
+        DeployProblem {
+            cfg: &self.config.platform,
+            spec: &self.spec,
+            tokens,
+            t_limit,
+            max_replicas: self.config.deploy.max_replicas,
+            beta_grid: self.config.deploy.beta_grid.clone(),
+            warm: true,
+        }
+    }
+}
+
+/// Throughput from batch tokens and E2E seconds.
+pub fn throughput(tokens: u64, e2e_secs: f64) -> f64 {
+    tokens as f64 / e2e_secs.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_builds_quick() {
+        let mut ctx = ExpContext::new(ModelPreset::TinyMoe, CorpusPreset::Enwik8, true);
+        assert!(ctx.profile.tokens_profiled >= 8 * 1024);
+        let b = ctx.eval_batch();
+        let counts = ctx.real_counts(&b);
+        assert_eq!(counts.len(), ctx.spec.num_moe_layers());
+        let p = ctx.problem(counts, 1000.0);
+        assert!(p.latency_budget() < 1000.0);
+    }
+}

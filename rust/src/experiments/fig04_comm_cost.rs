@@ -1,0 +1,99 @@
+//! Fig. 4 — Billed cost and end-to-end inference time of the BERT MoE under
+//! direct vs indirect transfers, at 256 and 2560 tokens (6 MB payload).
+//! Paper shape: direct wins at 256 tokens; at 2560 tokens direct becomes
+//! infeasible (payload) and indirect costs grow.
+
+use super::common::ExpContext;
+use crate::comm::timing::direct_feasible;
+use crate::comm::{CommMethod, ExpertPlan, LayerPlan};
+use crate::config::workload::CorpusPreset;
+use crate::deploy::DeploymentPolicy;
+use crate::model::ModelPreset;
+use crate::util::table::{fcost, fnum, Table};
+
+fn policy_for(
+    ctx: &ExpContext,
+    counts: &[Vec<u64>],
+    method: CommMethod,
+) -> DeploymentPolicy {
+    let mem = ctx.config.platform.max_memory_mb();
+    DeploymentPolicy {
+        layers: counts
+            .iter()
+            .map(|layer| LayerPlan {
+                method,
+                beta: 1,
+                experts: layer
+                    .iter()
+                    .map(|&d| ExpertPlan {
+                        mem_mb: mem,
+                        replicas: 1,
+                        tokens: d,
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for &tokens in &[256usize, 2560] {
+        let mut ctx = ExpContext::new(
+            ModelPreset::BertMoe { experts: 4, top_k: 1 },
+            CorpusPreset::Enwik8,
+            quick,
+        );
+        ctx.generator.target_tokens = tokens;
+        let batch = ctx.eval_batch();
+        let counts = ctx.real_counts(&batch);
+
+        let mut t = Table::new(
+            &format!("Fig 4 — {tokens}-token batch (payload 6MB)"),
+            &["method", "feasible", "billed cost", "e2e time (s)"],
+        );
+        for method in [CommMethod::Direct, CommMethod::Indirect] {
+            let policy = policy_for(&ctx, &counts, method);
+            let feasible = method != CommMethod::Direct
+                || policy.layers.iter().all(|l| {
+                    let total: u64 = l.experts.iter().map(|e| e.tokens).sum();
+                    crate::comm::timing::direct_gather_feasible(
+                        &ctx.config.platform,
+                        &ctx.spec,
+                        total,
+                    ) && l.experts.iter().all(|ep| {
+                        ep.tokens == 0
+                            || direct_feasible(&ctx.config.platform, &ctx.spec, ep)
+                    })
+                });
+            let cost = policy.total_cost(&ctx.config.platform, &ctx.spec, true);
+            let problem = ctx.problem(counts.clone(), f64::INFINITY);
+            let e2e = policy.end_to_end_time(&problem);
+            t.row(vec![
+                method.name().into(),
+                if feasible { "yes".into() } else { "NO (payload)".into() },
+                fcost(cost),
+                fnum(e2e),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn direct_wins_small_and_breaks_large() {
+        let tables = super::run(true);
+        // 256 tokens: direct feasible and cheaper or similar.
+        let small = &tables[0].rows;
+        assert_eq!(small[0][1], "yes");
+        let d: f64 = small[0][2].trim_start_matches('$').parse().unwrap();
+        let i: f64 = small[1][2].trim_start_matches('$').parse().unwrap();
+        assert!(d < i, "direct {d} vs indirect {i} at 256 tokens");
+        // 2560 tokens: direct infeasible under the skewed real distribution.
+        let large = &tables[1].rows;
+        assert!(large[0][1].contains("NO"), "{large:?}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 10 — Expert-selection prediction accuracy: average absolute
+//! difference per expert between real and predicted token counts, across
+//! MoE models, datasets and tasks; ours vs Lina; top-1 vs top-2; 4/8/16
+//! experts. Paper shape: ours < Lina everywhere; top-2 improves accuracy;
+//! more experts → lower per-expert difference.
+
+use super::common::ExpContext;
+use crate::config::workload::CorpusPreset;
+use crate::model::ModelPreset;
+use crate::predictor::eval::evaluate;
+use crate::util::table::{fnum, Table};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let cases: Vec<(&str, ModelPreset, CorpusPreset)> = vec![
+        ("Basic Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 }, CorpusPreset::Enwik8),
+        ("Bert CCnews", ModelPreset::BertMoe { experts: 4, top_k: 1 }, CorpusPreset::CcNews),
+        ("Bert Wmt19", ModelPreset::BertMoe { experts: 4, top_k: 1 }, CorpusPreset::Wmt19),
+        ("Bert top-2", ModelPreset::BertMoe { experts: 4, top_k: 2 }, CorpusPreset::Enwik8),
+        ("Bert 8 experts", ModelPreset::BertMoe { experts: 8, top_k: 1 }, CorpusPreset::Enwik8),
+        ("Bert 16 experts", ModelPreset::BertMoe { experts: 16, top_k: 1 }, CorpusPreset::Enwik8),
+        ("Basic GPT2 MoE", ModelPreset::Gpt2Moe { top_k: 1 }, CorpusPreset::Enwik8),
+        ("GPT2 Lambda", ModelPreset::Gpt2Moe { top_k: 1 }, CorpusPreset::Lambada),
+        ("Basic Bert2Bert MoE", ModelPreset::Bert2BertMoe { top_k: 1 }, CorpusPreset::Enwik8),
+    ];
+
+    let mut t = Table::new(
+        "Fig 10 — avg |real - predicted| tokens per expert (lower is better)",
+        &["case", "ours (Bayes)", "Lina (token-ID)", "uniform"],
+    );
+    for (name, preset, corpus) in cases {
+        let mut ctx = ExpContext::new(preset, corpus, quick);
+        let eval_batch = ctx.eval_batch();
+        let bayes = ctx.bayes();
+        let e_bayes = evaluate(&ctx.gate, &bayes, &eval_batch);
+        let e_lina = evaluate(&ctx.gate, &ctx.profile.lina, &eval_batch);
+        let uni = crate::predictor::UniformPredictor {
+            num_experts: ctx.spec.experts_at(0),
+        };
+        let e_uni = evaluate(&ctx.gate, &uni, &eval_batch);
+        t.row(vec![
+            name.into(),
+            fnum(e_bayes.overall),
+            fnum(e_lina.overall),
+            fnum(e_uni.overall),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ours_at_least_matches_lina_on_average() {
+        let t = &super::run(true)[0];
+        let mut ours = 0.0;
+        let mut lina = 0.0;
+        for r in &t.rows {
+            ours += r[1].parse::<f64>().unwrap_or(0.0);
+            lina += r[2].parse::<f64>().unwrap_or(0.0);
+        }
+        assert!(
+            ours <= lina * 1.02,
+            "ours total {ours} vs lina total {lina}"
+        );
+    }
+}

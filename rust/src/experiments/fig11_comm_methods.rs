@@ -1,0 +1,125 @@
+//! Fig. 11 — Billed cost of MoE layers and whole-model throughput under the
+//! three scatter-gather methods, sweeping the token count (3008MB functions,
+//! no replicas). Paper shape: direct wins at 256 tokens; at larger counts
+//! direct becomes infeasible and pipelined/non-pipelined indirect trade
+//! places; throughput rises with token count (head costs amortize).
+
+use super::common::{throughput, ExpContext};
+use crate::comm::{CommMethod, ExpertPlan, LayerPlan};
+use crate::config::workload::CorpusPreset;
+use crate::deploy::DeploymentPolicy;
+use crate::model::ModelPreset;
+use crate::util::table::{fcost, fnum, Table};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for (model_name, preset) in [
+        ("Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 }),
+        ("GPT2 MoE", ModelPreset::Gpt2Moe { top_k: 1 }),
+    ] {
+        let token_grid: &[usize] = if quick {
+            &[256, 2560]
+        } else {
+            &[256, 1024, 2560, 10_240]
+        };
+        let mut t = Table::new(
+            &format!("Fig 11 — {model_name}: comm methods vs token count"),
+            &["tokens", "method", "beta", "billed cost", "tput (tok/s)"],
+        );
+        for &tokens in token_grid {
+            let mut ctx = ExpContext::new(preset, CorpusPreset::Enwik8, true);
+            ctx.generator.target_tokens = tokens;
+            let batch = ctx.eval_batch();
+            let counts = ctx.real_counts(&batch);
+            let mem = ctx.config.platform.max_memory_mb();
+            for method in CommMethod::ALL {
+                // Best β for the pipelined method by cost.
+                let betas: Vec<usize> = if method == CommMethod::PipelinedIndirect {
+                    ctx.config.deploy.beta_grid.clone()
+                } else {
+                    vec![1]
+                };
+                let mut best: Option<(usize, f64, f64)> = None;
+                for beta in betas {
+                    let policy = DeploymentPolicy {
+                        layers: counts
+                            .iter()
+                            .map(|layer| LayerPlan {
+                                method,
+                                beta,
+                                experts: layer
+                                    .iter()
+                                    .map(|&d| ExpertPlan {
+                                        mem_mb: mem,
+                                        replicas: 1,
+                                        tokens: d,
+                                    })
+                                    .collect(),
+                            })
+                            .collect(),
+                    };
+                    if method == CommMethod::Direct {
+                        let total: u64 = counts[0].iter().sum();
+                        if !crate::comm::timing::direct_gather_feasible(
+                            &ctx.config.platform,
+                            &ctx.spec,
+                            total,
+                        ) {
+                            continue;
+                        }
+                    }
+                    let cost = policy.total_cost(&ctx.config.platform, &ctx.spec, true);
+                    let problem = ctx.problem(counts.clone(), f64::INFINITY);
+                    let e2e = policy.end_to_end_time(&problem);
+                    if best.map(|(_, c, _)| cost < c).unwrap_or(true) {
+                        best = Some((beta, cost, e2e));
+                    }
+                }
+                match best {
+                    Some((beta, cost, e2e)) => t.row(vec![
+                        tokens.to_string(),
+                        method.name().into(),
+                        beta.to_string(),
+                        fcost(cost),
+                        fnum(throughput(batch.total_tokens as u64, e2e)),
+                    ]),
+                    None => t.row(vec![
+                        tokens.to_string(),
+                        method.name().into(),
+                        "-".into(),
+                        "infeasible".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn direct_best_small_infeasible_large() {
+        let tables = super::run(true);
+        let rows = &tables[0].rows; // Bert
+        // At 256 tokens the direct row must be feasible and cheapest.
+        let at = |tokens: &str, method: &str| {
+            rows.iter()
+                .find(|r| r[0] == tokens && r[1] == method)
+                .unwrap()
+                .clone()
+        };
+        let d = at("256", "direct");
+        assert_ne!(d[3], "infeasible");
+        let dc: f64 = d[3].trim_start_matches('$').parse().unwrap();
+        let ic: f64 = at("256", "indirect")[3]
+            .trim_start_matches('$')
+            .parse()
+            .unwrap();
+        assert!(dc < ic, "direct {dc} vs indirect {ic}");
+        // At 2560 tokens direct is ruled out by the gather payload.
+        assert_eq!(at("2560", "direct")[3], "infeasible");
+    }
+}

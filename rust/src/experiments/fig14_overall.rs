@@ -1,0 +1,143 @@
+//! Fig. 14 — Overall comparison: billed cost of all MoE layers and inverse
+//! throughput across six deployments: (1) serverless + BO-optimized
+//! prediction, (2) serverless + real distribution, (3) serverless +
+//! un-adjusted prediction (no BO), (4) LambdaML over-provisioning, (5) CPU
+//! cluster, (6) CPU cluster + betterTransformer.
+//! Paper headlines: (1) ≥75.67% cheaper than CPU; ≥43.41% cheaper than
+//! LambdaML with ≤18.76% throughput loss; (1) close to (2).
+
+use super::common::{throughput, ExpContext};
+use crate::bo::algorithm::BoAlgorithm;
+use crate::bo::eps_greedy::MultiEpsGreedy;
+use crate::config::workload::CorpusPreset;
+use crate::deploy::baselines::lambdaml_policy;
+use crate::deploy::ods::ods_full;
+use crate::model::ModelPreset;
+use crate::platform::CpuCluster;
+use crate::predictor::eval::predicted_counts;
+use crate::util::table::{fcost, fnum, Table};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let models: Vec<(&str, ModelPreset)> = if quick {
+        vec![("Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 })]
+    } else {
+        vec![
+            ("Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 }),
+            ("GPT2 MoE", ModelPreset::Gpt2Moe { top_k: 1 }),
+        ]
+    };
+
+    for (name, preset) in models {
+        let mut ctx = ExpContext::new(preset, CorpusPreset::Enwik8, quick);
+        let batch = ctx.eval_batch();
+        let real = ctx.real_counts(&batch);
+        let tokens = batch.total_tokens as u64;
+        let t_limit = if quick { 4000.0 } else { 3000.0 };
+        let solver_tl = if quick { 0.5 } else { 10.0 };
+
+        let mut t = Table::new(
+            &format!("Fig 14 — {name}: overall cost and throughput (10,240 tokens)"),
+            &["deployment", "billed cost", "tput (tok/s)", "1/tput (s/tok)"],
+        );
+
+        // (2) real distribution (oracle).
+        let problem_real = ctx.problem(real.clone(), t_limit);
+        let ods_real = ods_full(&problem_real, solver_tl).expect("real-dist deployment");
+        let e2e_real = ods_real.policy.end_to_end_time(&problem_real);
+
+        // (3) predicted, no BO.
+        let bayes = ctx.bayes();
+        let pred = predicted_counts(&ctx.gate, &bayes, &batch);
+        let problem_pred = ctx.problem(pred.clone(), t_limit);
+        let ods_pred = ods_full(&problem_pred, solver_tl).expect("pred deployment");
+        let out_pred = crate::bo::feedback::serve_with_real_counts(
+            &ctx.config.platform,
+            &ctx.spec,
+            &ods_pred.policy,
+            &real,
+            true,
+        );
+        let e2e_pred = problem_pred.fixed_overhead() + out_pred.latency;
+
+        // (1) predicted + BO.
+        let mut bo_cfg = ctx.config.bo.clone();
+        bo_cfg.q = if quick { 64 } else { 512 };
+        bo_cfg.max_iters = if quick { 4 } else { 12 };
+        let mut deploy_cfg = ctx.config.deploy.clone();
+        deploy_cfg.t_limit = t_limit;
+        let mut bo = BoAlgorithm {
+            platform: &ctx.config.platform,
+            deploy_cfg: &deploy_cfg,
+            bo_cfg: bo_cfg.clone(),
+            spec: &ctx.spec,
+            gate: &ctx.gate,
+            predictor: ctx.bayes(),
+            eval_batches: vec![batch.clone()],
+            solver_time_limit: solver_tl.min(1.0),
+        };
+        let mut acq = MultiEpsGreedy::new(&bo_cfg);
+        let outcome = bo.run(&mut acq, true, 0xF14);
+        bo.commit_best(&outcome);
+        let pred_bo = predicted_counts(&ctx.gate, &bo.predictor, &batch);
+        let problem_bo = ctx.problem(pred_bo, t_limit);
+        let ods_bo = ods_full(&problem_bo, solver_tl).expect("bo deployment");
+        let out_bo = crate::bo::feedback::serve_with_real_counts(
+            &ctx.config.platform,
+            &ctx.spec,
+            &ods_bo.policy,
+            &real,
+            true,
+        );
+        let e2e_bo = problem_bo.fixed_overhead() + out_bo.latency;
+
+        // (4) LambdaML.
+        let lam = lambdaml_policy(&problem_real);
+        let lam_cost = lam.total_cost(&ctx.config.platform, &ctx.spec, true);
+        let lam_e2e = lam.end_to_end_time(&problem_real);
+
+        // (5)/(6) CPU cluster.
+        let cl = CpuCluster::new(ctx.config.cpu_cluster.clone(), false).serve(&ctx.spec, &real, tokens as usize);
+        let cl_bt = CpuCluster::new(ctx.config.cpu_cluster.clone(), true).serve(&ctx.spec, &real, tokens as usize);
+
+        let mut row = |name: &str, cost: f64, e2e: f64| {
+            let tput = throughput(tokens, e2e);
+            t.row(vec![
+                name.into(),
+                fcost(cost),
+                fnum(tput),
+                fnum(1.0 / tput),
+            ]);
+        };
+        row("serverless BO-predicted (ours)", out_bo.cost, e2e_bo);
+        row("serverless real distribution", ods_real.total_cost, e2e_real);
+        row("serverless predicted no-BO", out_pred.cost, e2e_pred);
+        row("LambdaML (max memory)", lam_cost, lam_e2e);
+        row("CPU cluster", cl.billed_cost, cl.exec_secs);
+        row("CPU betterTransformer", cl_bt.billed_cost, cl_bt.exec_secs);
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn headline_claims_directionally_hold() {
+        let t = &super::run(true)[0];
+        let cost = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0].starts_with(name))
+                .unwrap()[1]
+                .trim_start_matches('$')
+                .parse()
+                .unwrap()
+        };
+        let ours = cost("serverless BO-predicted");
+        let lam = cost("LambdaML");
+        let cpu = cost("CPU cluster");
+        assert!(ours < cpu * 0.25, "≥75% vs CPU: ours {ours} cpu {cpu}");
+        assert!(ours < lam, "cheaper than LambdaML: ours {ours} lam {lam}");
+    }
+}

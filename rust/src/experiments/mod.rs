@@ -1,0 +1,50 @@
+//! Experiment generators — one per table/figure of the paper's evaluation
+//! (see the index in DESIGN.md). Each returns a [`Table`] whose rows carry
+//! the same series the paper plots; `smoe experiment <id>` prints it and
+//! the benches time it.
+
+pub mod common;
+pub mod fig02_motivation;
+pub mod fig03_token_routing;
+pub mod fig04_comm_cost;
+pub mod fig10_prediction;
+pub mod fig11_comm_methods;
+pub mod fig12_ods;
+pub mod fig13_bo;
+pub mod fig14_overall;
+pub mod overhead;
+
+use crate::util::table::Table;
+
+/// All experiment ids.
+pub const ALL: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "fig14", "overhead",
+];
+
+/// Run one experiment by id (quick=true shrinks workloads for CI/tests).
+pub fn run(id: &str, quick: bool) -> anyhow::Result<Vec<Table>> {
+    match id {
+        "fig2" => Ok(fig02_motivation::run(quick)),
+        "fig3" => Ok(fig03_token_routing::run(quick)),
+        "fig4" => Ok(fig04_comm_cost::run(quick)),
+        "fig10" => Ok(fig10_prediction::run(quick)),
+        "fig11" => Ok(fig11_comm_methods::run(quick)),
+        "fig12" => Ok(fig12_ods::run(quick)),
+        "fig13" => Ok(fig13_bo::run(quick)),
+        "fig14" => Ok(fig14_overall::run(quick)),
+        "overhead" => Ok(overhead::run(quick)),
+        _ => anyhow::bail!("unknown experiment '{id}' (one of {ALL:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_ids_dispatch() {
+        for id in super::ALL {
+            // Existence check only (quick runs are exercised per-module).
+            assert!(super::run("nope", true).is_err());
+            assert!(super::ALL.contains(id));
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Token features (§III-B): token ID f1, position ID f2, attention ID f3.
+//!
+//! The attention ID is the token ID with the highest summed softmax attention
+//! score across all self-attention heads of the multi-head attention layer
+//! preceding the MoE layer. Positions are bucketed when used as a table key
+//! (the paper treats the position prior as uniform; bucketing keeps the
+//! key-value table compact without losing the positional signal).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TokenFeature {
+    /// f1 — token ID from the tokenizer.
+    pub token_id: u32,
+    /// f2 — position in the request sequence.
+    pub position_id: u32,
+    /// f3 — attention ID (token ID with max summed attention score).
+    pub attention_id: u32,
+}
+
+/// Number of position buckets used in table keys.
+pub const POS_BUCKETS: u32 = 16;
+
+/// Bucket a raw position ID (log-ish spacing: early positions get finer
+/// buckets, mirroring how positional effects concentrate at sequence heads).
+pub fn position_bucket(pos: u32) -> u32 {
+    match pos {
+        0..=3 => pos,             // 0,1,2,3
+        4..=7 => 4,
+        8..=15 => 5,
+        16..=31 => 6,
+        32..=63 => 7,
+        64..=95 => 8,
+        96..=127 => 9,
+        128..=191 => 10,
+        192..=255 => 11,
+        256..=383 => 12,
+        384..=511 => 13,
+        512..=1023 => 14,
+        _ => 15,
+    }
+}
+
+/// Table key: (f1, bucketed f2, f3) packed to one u64 for compact hashing.
+/// Layout: token_id(24) | pos_bucket(8) | attention_id(24) — vocabularies in
+/// this repo are ≤ 2^24.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FeatKey(pub u64);
+
+impl FeatKey {
+    pub fn new(f: &TokenFeature) -> FeatKey {
+        debug_assert!(f.token_id < (1 << 24) && f.attention_id < (1 << 24));
+        FeatKey(
+            ((f.token_id as u64) << 32)
+                | ((position_bucket(f.position_id) as u64) << 24)
+                | f.attention_id as u64,
+        )
+    }
+
+    pub fn from_parts(token_id: u32, pos_bucket: u32, attention_id: u32) -> FeatKey {
+        FeatKey(((token_id as u64) << 32) | ((pos_bucket as u64) << 24) | attention_id as u64)
+    }
+
+    pub fn token_id(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+
+    pub fn pos_bucket(self) -> u32 {
+        ((self.0 >> 24) & 0xFF) as u32
+    }
+
+    pub fn attention_id(self) -> u32 {
+        (self.0 & 0xFF_FFFF) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_monotone_nondecreasing() {
+        let mut prev = 0;
+        for pos in 0..2048 {
+            let b = position_bucket(pos);
+            assert!(b >= prev || b < POS_BUCKETS, "pos={pos} b={b}");
+            prev = prev.max(b);
+            assert!(b < POS_BUCKETS);
+        }
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        let f = TokenFeature {
+            token_id: 123_456,
+            position_id: 77,
+            attention_id: 999_999,
+        };
+        let k = FeatKey::new(&f);
+        assert_eq!(k.token_id(), 123_456);
+        assert_eq!(k.pos_bucket(), position_bucket(77));
+        assert_eq!(k.attention_id(), 999_999);
+    }
+
+    #[test]
+    fn distinct_features_distinct_keys() {
+        let base = TokenFeature {
+            token_id: 10,
+            position_id: 0,
+            attention_id: 20,
+        };
+        let k0 = FeatKey::new(&base);
+        let k1 = FeatKey::new(&TokenFeature { token_id: 11, ..base });
+        let k2 = FeatKey::new(&TokenFeature { position_id: 200, ..base });
+        let k3 = FeatKey::new(&TokenFeature { attention_id: 21, ..base });
+        assert_ne!(k0, k1);
+        assert_ne!(k0, k2);
+        assert_ne!(k0, k3);
+    }
+}

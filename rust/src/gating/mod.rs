@@ -1,0 +1,273 @@
+//! Gating / routing ground truth.
+//!
+//! The paper's predictor learns token→expert mappings produced by a *real*
+//! gating network. Two sources are supported:
+//!
+//!  - [`SimGate`]: a deterministic, feature-conditioned gate used by all
+//!    simulator-scale experiments. Expert logits depend on the token ID
+//!    (dominant), the position bucket, and the attention ID, plus a
+//!    per-expert popularity bias — reproducing the paper's observations:
+//!    skewed expert popularity (Fig. 2 setting) and same-token-ID→different-
+//!    expert ambiguity (Fig. 3).
+//!  - the real tiny-MoE gating network executed via PJRT (see
+//!    `runtime`/`coordinator`), which produces mappings for the end-to-end
+//!    serving path.
+//!
+//! We never *modify* routing decisions (the paper explicitly does not); the
+//! gate defines ground truth and everything downstream adapts to it.
+
+pub mod features;
+
+pub use features::TokenFeature;
+
+use crate::workload::Batch;
+
+/// Routing outcome of one batch at one MoE layer.
+#[derive(Debug, Clone)]
+pub struct RoutingOutcome {
+    /// For each token (flattened batch order), the selected expert indices
+    /// (top-k, k = model.top_k).
+    pub assignments: Vec<Vec<u8>>,
+    /// Token count routed to each expert (d_{e,i} of the paper).
+    pub expert_counts: Vec<u64>,
+}
+
+impl RoutingOutcome {
+    pub fn total_tokens(&self) -> usize {
+        self.assignments.len()
+    }
+}
+
+/// Deterministic simulated gating network.
+#[derive(Debug, Clone)]
+pub struct SimGate {
+    pub num_layers: usize,
+    pub experts_per_layer: Vec<usize>,
+    pub top_k: usize,
+    /// Per-layer per-expert popularity bias — the source of skew.
+    popularity: Vec<Vec<f64>>,
+    /// Feature weights: token-ID, position, attention-ID contributions.
+    pub w_token: f64,
+    pub w_pos: f64,
+    pub w_attn: f64,
+    seed: u64,
+}
+
+fn hash3(a: u64, b: u64, c: u64) -> u64 {
+    // A small mix of splitmix-style rounds — deterministic "random" logits.
+    let mut z = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.rotate_left(17))
+        .wrapping_add(c.rotate_left(33));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to [-1, 1).
+fn hash_unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0
+}
+
+impl SimGate {
+    pub fn new(spec: &crate::model::MoeModelSpec, seed: u64) -> Self {
+        let num_layers = spec.num_moe_layers();
+        let experts_per_layer: Vec<usize> =
+            (0..num_layers).map(|e| spec.experts_at(e)).collect();
+        // Popularity bias: drawn deterministically from the seed; std ~0.9
+        // gives the strong-but-not-degenerate skew of Fig. 2/3.
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x6A7E);
+        let popularity = experts_per_layer
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal_ms(0.0, 0.9)).collect())
+            .collect();
+        Self {
+            num_layers,
+            experts_per_layer,
+            top_k: spec.top_k,
+            popularity,
+            w_token: 2.0,
+            w_pos: 0.45,
+            w_attn: 0.8,
+            seed,
+        }
+    }
+
+    /// Expert logits for one token at one layer.
+    pub fn logits(&self, layer: usize, f: &TokenFeature) -> Vec<f64> {
+        let n = self.experts_per_layer[layer];
+        let pos_bucket = features::position_bucket(f.position_id);
+        (0..n)
+            .map(|i| {
+                let base = self.popularity[layer][i];
+                let ht = hash_unit(hash3(
+                    f.token_id as u64 ^ self.seed,
+                    (layer * 1009 + i) as u64,
+                    0x11,
+                ));
+                let hp = hash_unit(hash3(
+                    (f.token_id as u64) << 20 | pos_bucket as u64,
+                    (layer * 1013 + i) as u64 ^ self.seed,
+                    0x22,
+                ));
+                let ha = hash_unit(hash3(
+                    (f.token_id as u64) << 24 ^ f.attention_id as u64,
+                    (layer * 1019 + i) as u64 ^ self.seed,
+                    0x33,
+                ));
+                base + self.w_token * ht + self.w_pos * hp + self.w_attn * ha
+            })
+            .collect()
+    }
+
+    /// Top-k expert selection for one token at one layer.
+    pub fn route_token(&self, layer: usize, f: &TokenFeature) -> Vec<u8> {
+        let logits = self.logits(layer, f);
+        top_k_indices(&logits, self.top_k)
+    }
+
+    /// Route a whole batch at one layer.
+    pub fn route_batch(&self, layer: usize, batch: &Batch) -> RoutingOutcome {
+        let n_exp = self.experts_per_layer[layer];
+        let mut assignments = Vec::with_capacity(batch.total_tokens);
+        let mut expert_counts = vec![0u64; n_exp];
+        for (t, p, a) in batch.tokens() {
+            let f = TokenFeature {
+                token_id: t,
+                position_id: p,
+                attention_id: a,
+            };
+            let sel = self.route_token(layer, &f);
+            for &i in &sel {
+                expert_counts[i as usize] += 1;
+            }
+            assignments.push(sel);
+        }
+        RoutingOutcome {
+            assignments,
+            expert_counts,
+        }
+    }
+}
+
+/// Indices of the k largest values (ties broken by lower index).
+pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u8> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k.min(xs.len()));
+    idx.into_iter().map(|i| i as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::CorpusPreset;
+    use crate::model::ModelPreset;
+    use crate::workload::{Corpus, RequestGenerator};
+
+    fn gate() -> SimGate {
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        SimGate::new(&spec, 7)
+    }
+
+    fn batch(tokens: usize) -> Batch {
+        let c = Corpus::new(CorpusPreset::Enwik8, 1);
+        RequestGenerator::new(c, 3, tokens).next_batch()
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let g = gate();
+        let b = batch(512);
+        let r1 = g.route_batch(2, &b);
+        let r2 = g.route_batch(2, &b);
+        assert_eq!(r1.assignments, r2.assignments);
+    }
+
+    #[test]
+    fn counts_match_assignments() {
+        let g = gate();
+        let b = batch(512);
+        let r = g.route_batch(0, &b);
+        let total: u64 = r.expert_counts.iter().sum();
+        assert_eq!(total as usize, r.total_tokens() * g.top_k);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let g = gate();
+        let b = batch(8192);
+        let r = g.route_batch(0, &b);
+        let max = *r.expert_counts.iter().max().unwrap() as f64;
+        let min = *r.expert_counts.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 1.5, "counts={:?}", r.expert_counts);
+    }
+
+    #[test]
+    fn same_token_id_can_route_differently() {
+        // Fig. 3: with different position/attention features the same token
+        // ID reaches different experts at a fixed layer.
+        let g = gate();
+        let token_id = 5u32;
+        use std::collections::HashSet;
+        let mut experts = HashSet::new();
+        for pos in 0..64 {
+            for attn in [1u32, 17, 200, 1032, 9000] {
+                let f = TokenFeature {
+                    token_id,
+                    position_id: pos,
+                    attention_id: attn,
+                };
+                experts.insert(g.route_token(1, &f)[0]);
+            }
+        }
+        assert!(experts.len() > 1, "routing insensitive to non-ID features");
+    }
+
+    #[test]
+    fn token_id_is_dominant_feature() {
+        // The gate must still be largely predictable from the token ID —
+        // otherwise no predictor (including the paper's) could work.
+        let g = gate();
+        let b = batch(4096);
+        let r = g.route_batch(0, &b);
+        use std::collections::HashMap;
+        let mut by_token: HashMap<u32, HashMap<u8, usize>> = HashMap::new();
+        for ((t, _, _), sel) in b.tokens().zip(&r.assignments) {
+            *by_token.entry(t).or_default().entry(sel[0]).or_default() += 1;
+        }
+        // For tokens with >= 5 occurrences, the majority expert should carry
+        // most of the mass on average.
+        let mut agree = 0.0;
+        let mut n = 0.0;
+        for (_, dist) in by_token.iter().filter(|(_, d)| d.values().sum::<usize>() >= 5) {
+            let total: usize = dist.values().sum();
+            let maj = *dist.values().max().unwrap();
+            agree += maj as f64 / total as f64;
+            n += 1.0;
+        }
+        assert!(n > 10.0);
+        assert!(agree / n > 0.55, "majority agreement {}", agree / n);
+    }
+
+    #[test]
+    fn top_k_selection() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5], 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&[1.0, 1.0], 1), vec![0]);
+        assert_eq!(top_k_indices(&[0.3], 5), vec![0]);
+    }
+
+    #[test]
+    fn top2_routes_two_distinct_experts() {
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 2 }.spec();
+        let g = SimGate::new(&spec, 7);
+        let f = TokenFeature {
+            token_id: 10,
+            position_id: 3,
+            attention_id: 99,
+        };
+        let sel = g.route_token(0, &f);
+        assert_eq!(sel.len(), 2);
+        assert_ne!(sel[0], sel[1]);
+    }
+}

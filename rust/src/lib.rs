@@ -1,0 +1,31 @@
+//! # serverless-moe
+//!
+//! Reproduction of *"Optimizing Distributed Deployment of Mixture-of-Experts
+//! Model Inference in Serverless Computing"* (Liu, Wang, Wu — CS.DC 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//!  - **L3 (this crate)** — the paper's system contribution: a serverless
+//!    platform substrate, Bayesian expert-selection prediction, scatter-
+//!    gather communication designs, the MIQCP/ODS deployment optimizer, the
+//!    BO framework with multi-dimensional ε-greedy search, and a serving
+//!    coordinator that executes the real (tiny) MoE model via PJRT.
+//!  - **L2** — `python/compile/model.py`: the JAX MoE transformer, lowered
+//!    once to HLO text artifacts.
+//!  - **L1** — `python/compile/kernels/`: Pallas kernels for the expert FFN,
+//!    gating and attention (interpret mode on CPU).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index.
+
+pub mod bo;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod deploy;
+pub mod experiments;
+pub mod gating;
+pub mod model;
+pub mod platform;
+pub mod predictor;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,205 @@
+//! `smoe` — the serverless-MoE leader binary.
+//!
+//! Subcommands:
+//!   experiment <id>|all [--full]   regenerate a paper figure (DESIGN.md index)
+//!   serve [--requests N]           serve the real tiny MoE via PJRT
+//!   predict [--model M]            profile + evaluate expert prediction
+//!   deploy [--model M] [--tlimit S] run the ODS deployment pipeline once
+//!   bo [--iters N]                 run the BO tuning loop (quick scale)
+//!   config [--write PATH]          print or write the default config
+//!   help
+
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::config::Config;
+use serverless_moe::deploy::ods::ods_full;
+use serverless_moe::experiments;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::predictor::eval::{evaluate, predicted_counts};
+use serverless_moe::util::cli::Args;
+use serverless_moe::util::table::fcost;
+
+fn main() {
+    serverless_moe::util::log::init_from_env();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "experiment" => cmd_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "predict" => cmd_predict(&args),
+        "deploy" => cmd_deploy(&args),
+        "bo" => cmd_bo(&args),
+        "config" => cmd_config(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "smoe — serverless MoE inference (paper reproduction)\n\
+         \n\
+         USAGE: smoe <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           experiment <id>|all [--full]  regenerate paper figures: {}\n\
+           serve [--requests N]          serve the tiny MoE over PJRT\n\
+           predict [--model M]           expert-selection prediction accuracy\n\
+           deploy [--model M] [--tlimit S] [--tokens N]  one ODS deployment\n\
+           bo [--iters N]                BO tuning loop (quick scale)\n\
+           config [--write PATH]         dump default config JSON",
+        experiments::ALL.join(",")
+    );
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let quick = !args.flag("full");
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("\n=== experiment {id} (quick={quick}) ===");
+        for table in experiments::run(id, quick)? {
+            table.print();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use serverless_moe::coordinator::Server;
+    use serverless_moe::runtime::default_artifacts_dir;
+    anyhow::ensure!(
+        serverless_moe::runtime::artifacts_available(),
+        "artifacts missing — run `make artifacts`"
+    );
+    let n = args.get_usize("requests", 20);
+    let platform = Config::default().platform;
+    let server = Server::start(default_artifacts_dir(), platform)?;
+    let mut rng = serverless_moe::util::rng::Rng::new(args.get_u64("seed", 1));
+    for i in 0..n {
+        let ids: Vec<u32> = (0..64).map(|_| rng.below(1024) as u32).collect();
+        let resp = server.serve(ids)?;
+        println!(
+            "request {i}: norm={:.4} latency={:.2}ms experts(l0)={:?}",
+            resp.output_norm,
+            resp.latency * 1e3,
+            resp.expert_counts[0]
+        );
+    }
+    let metrics = server.shutdown();
+    println!("\n{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let preset = ModelPreset::from_name(&args.get_or("model", "bert"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let quick = !args.flag("full");
+    let mut ctx =
+        serverless_moe::experiments::common::ExpContext::new(preset, CorpusPreset::Enwik8, quick);
+    let batch = ctx.eval_batch();
+    let bayes = ctx.bayes();
+    let e_b = evaluate(&ctx.gate, &bayes, &batch);
+    let e_l = evaluate(&ctx.gate, &ctx.profile.lina, &batch);
+    println!(
+        "avg |real-pred| per expert: ours={:.2} lina={:.2} (profiled {} tokens)",
+        e_b.overall, e_l.overall, ctx.profile.tokens_profiled
+    );
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
+    let preset = ModelPreset::from_name(&args.get_or("model", "bert"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let mut ctx = serverless_moe::experiments::common::ExpContext::new(
+        preset,
+        CorpusPreset::Enwik8,
+        true,
+    );
+    ctx.generator.target_tokens = args.get_usize("tokens", 10_240);
+    let batch = ctx.eval_batch();
+    let bayes = ctx.bayes();
+    let pred = predicted_counts(&ctx.gate, &bayes, &batch);
+    let problem = ctx.problem(pred, args.get_f64("tlimit", 3000.0));
+    let ods = ods_full(&problem, args.get_f64("solver-limit", 5.0))
+        .ok_or_else(|| anyhow::anyhow!("no feasible deployment"))?;
+    println!(
+        "deployment: cost={} feasible={} fell_back={}",
+        fcost(ods.total_cost),
+        ods.feasible,
+        ods.fell_back
+    );
+    for (e, (m, plan)) in ods.methods.iter().zip(&ods.policy.layers).enumerate() {
+        let mems: Vec<String> = plan
+            .experts
+            .iter()
+            .map(|ep| format!("{}MB x{}", ep.mem_mb, ep.replicas))
+            .collect();
+        println!("  layer {e}: {} beta={} [{}]", m.name(), plan.beta, mems.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_bo(args: &Args) -> anyhow::Result<()> {
+    let mut ctx = serverless_moe::experiments::common::ExpContext::new(
+        ModelPreset::TinyMoe,
+        CorpusPreset::Enwik8,
+        true,
+    );
+    let mut bo_cfg = ctx.config.bo.clone();
+    bo_cfg.q = args.get_usize("q", 128);
+    bo_cfg.max_iters = args.get_usize("iters", 8);
+    let mut deploy_cfg = ctx.config.deploy.clone();
+    deploy_cfg.t_limit = 4000.0;
+    let eval_batches = vec![ctx.eval_batch(), ctx.eval_batch()];
+    let mut bo = serverless_moe::bo::algorithm::BoAlgorithm {
+        platform: &ctx.config.platform,
+        deploy_cfg: &deploy_cfg,
+        bo_cfg: bo_cfg.clone(),
+        spec: &ctx.spec,
+        gate: &ctx.gate,
+        predictor: ctx.bayes(),
+        eval_batches,
+        solver_time_limit: 0.5,
+    };
+    let (no_bo_cost, _) = bo.evaluate_no_bo();
+    let mut acq = serverless_moe::bo::eps_greedy::MultiEpsGreedy::new(&bo_cfg);
+    let outcome = bo.run(&mut acq, true, args.get_u64("seed", 7));
+    println!(
+        "BO: best cost {} (no-BO {}) ratio {:.3} in {} iters (converged={})",
+        fcost(outcome.best_cost),
+        fcost(no_bo_cost),
+        outcome.best_cost / no_bo_cost,
+        outcome.iterations,
+        outcome.converged
+    );
+    for (i, tr) in outcome.history.iter().enumerate() {
+        println!("  trial {i}: cost={} err={:.2}", fcost(tr.cost), tr.prediction_error);
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::default();
+    match args.get("write") {
+        Some(path) => {
+            cfg.save(std::path::Path::new(path))?;
+            println!("wrote {path}");
+        }
+        None => println!("{}", cfg.to_json().to_string_pretty()),
+    }
+    Ok(())
+}

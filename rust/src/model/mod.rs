@@ -1,0 +1,163 @@
+//! MoE model metadata: the quantities the deployment problem (12) and the
+//! timing models (6)–(11) need — per-expert parameter sizes P_{e,i},
+//! intermediate memory M_itrm, per-token FLOPs, token activation sizes
+//! D_in/D_out — plus the paper's model presets.
+
+pub mod presets;
+
+pub use presets::ModelPreset;
+
+/// One expert network's static description.
+#[derive(Debug, Clone)]
+pub struct ExpertSpec {
+    /// Parameter bytes P_{e,i} (model download size from external storage).
+    pub param_bytes: u64,
+    /// FLOPs to process one token through this expert.
+    pub token_flops: f64,
+}
+
+/// One MoE layer: a gating network plus `num_experts` parallel experts.
+#[derive(Debug, Clone)]
+pub struct MoeLayerSpec {
+    pub num_experts: usize,
+    pub expert: ExpertSpec,
+}
+
+/// Full MoE model description.
+#[derive(Debug, Clone)]
+pub struct MoeModelSpec {
+    pub name: String,
+    /// Hidden (model) dimension H.
+    pub hidden: usize,
+    /// Expert FFN inner dimension F.
+    pub ffn_dim: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Top-k routing fan-out.
+    pub top_k: usize,
+    /// MoE layers (each preceded by a non-MoE attention block).
+    pub layers: Vec<MoeLayerSpec>,
+    /// Activation bytes per token entering an expert (D_in).
+    pub token_in_bytes: u64,
+    /// Activation bytes per token leaving an expert (D_out).
+    pub token_out_bytes: u64,
+    /// Container/runtime base memory overhead of an expert function (bytes):
+    /// interpreter + framework + workspace, independent of the expert.
+    pub runtime_overhead_bytes: u64,
+    /// FLOPs per token of one non-MoE (attention) block — sets T_e^NE.
+    pub non_moe_token_flops: f64,
+    /// Parameter bytes of one non-MoE block (download time for T_e^load).
+    pub non_moe_param_bytes: u64,
+    /// FLOPs per token of the head/tail layers (embedding, LM head).
+    pub head_tail_token_flops: f64,
+}
+
+impl MoeModelSpec {
+    pub fn num_moe_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn experts_at(&self, layer: usize) -> usize {
+        self.layers[layer].num_experts
+    }
+
+    /// Total expert parameters across all MoE layers (bytes).
+    pub fn total_expert_param_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.num_experts as u64 * l.expert.param_bytes)
+            .sum()
+    }
+
+    /// Total parameter count estimate (experts + non-MoE), in parameters.
+    pub fn approx_param_count(&self) -> u64 {
+        let expert = self.total_expert_param_bytes() / 4;
+        let non_moe = self.layers.len() as u64 * self.non_moe_param_bytes / 4;
+        let embed = (self.vocab * self.hidden) as u64;
+        expert + non_moe + embed
+    }
+
+    /// Intermediate-activation memory M_itrm for an expert serving a batch
+    /// of `tokens` tokens (constraint (12c)): the FFN inner activation plus
+    /// in/out buffers.
+    pub fn expert_itrm_bytes(&self, tokens: usize) -> u64 {
+        (tokens * self.ffn_dim * 4) as u64 + (tokens as u64) * (self.token_in_bytes + self.token_out_bytes)
+    }
+
+    /// Build the standard expert spec from dims: FFN = Linear(H→F) + GELU +
+    /// Linear(F→H), params = 2·H·F + F + H floats, FLOPs = 2·2·H·F per token.
+    pub fn standard_expert(hidden: usize, ffn_dim: usize) -> ExpertSpec {
+        let params = 2 * hidden * ffn_dim + ffn_dim + hidden;
+        ExpertSpec {
+            param_bytes: (params * 4) as u64,
+            token_flops: (4 * hidden * ffn_dim) as f64,
+        }
+    }
+
+    /// Construct a homogeneous model (all layers identical).
+    #[allow(clippy::too_many_arguments)]
+    pub fn homogeneous(
+        name: &str,
+        hidden: usize,
+        ffn_dim: usize,
+        vocab: usize,
+        num_layers: usize,
+        experts_per_layer: usize,
+        top_k: usize,
+    ) -> Self {
+        let expert = Self::standard_expert(hidden, ffn_dim);
+        // Attention block: QKVO projections (4·H·H) ≈ 8·H² FLOPs/token (mul+add),
+        // plus score/context terms folded into the same constant.
+        let non_moe_token_flops = (8 * hidden * hidden) as f64 * 1.5;
+        let non_moe_param_bytes = (4 * hidden * hidden * 4) as u64;
+        MoeModelSpec {
+            name: name.to_string(),
+            hidden,
+            ffn_dim,
+            vocab,
+            top_k,
+            layers: vec![
+                MoeLayerSpec {
+                    num_experts: experts_per_layer,
+                    expert: expert.clone(),
+                };
+                num_layers
+            ],
+            token_in_bytes: (hidden * 4) as u64,
+            token_out_bytes: (hidden * 4) as u64,
+            runtime_overhead_bytes: 150 * crate::util::MB,
+            non_moe_token_flops,
+            non_moe_param_bytes,
+            head_tail_token_flops: (2 * hidden * vocab) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_expert_sizes() {
+        // H=768, F=3072: 2·768·3072 + 3072 + 768 params.
+        let e = MoeModelSpec::standard_expert(768, 3072);
+        assert_eq!(e.param_bytes, ((2 * 768 * 3072 + 3072 + 768) * 4) as u64);
+        assert_eq!(e.token_flops, (4 * 768 * 3072) as f64);
+    }
+
+    #[test]
+    fn homogeneous_construction() {
+        let m = MoeModelSpec::homogeneous("t", 64, 256, 1024, 2, 4, 1);
+        assert_eq!(m.num_moe_layers(), 2);
+        assert_eq!(m.experts_at(0), 4);
+        assert_eq!(m.token_in_bytes, 256);
+        assert!(m.total_expert_param_bytes() > 0);
+    }
+
+    #[test]
+    fn itrm_scales_with_tokens() {
+        let m = MoeModelSpec::homogeneous("t", 64, 256, 1024, 2, 4, 1);
+        assert!(m.expert_itrm_bytes(200) > m.expert_itrm_bytes(100));
+        assert_eq!(m.expert_itrm_bytes(0), 0);
+    }
+}

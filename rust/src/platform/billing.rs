@@ -1,0 +1,85 @@
+//! GB-second billing ledger — the paper's objective is the summed billed
+//! cost of all MoE-layer functions, metered exactly like Lambda: configured
+//! memory × wall-clock execution time.
+
+/// One billed function execution.
+#[derive(Debug, Clone)]
+pub struct BillingEntry {
+    pub fn_name: String,
+    pub mem_mb: u64,
+    pub secs: f64,
+    pub cost: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    entries: Vec<BillingEntry>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, fn_name: &str, mem_mb: u64, secs: f64, cost: f64) {
+        debug_assert!(secs >= 0.0 && cost >= 0.0);
+        self.entries.push(BillingEntry {
+            fn_name: fn_name.to_string(),
+            mem_mb,
+            secs,
+            cost,
+        });
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.entries.iter().map(|e| e.cost).sum()
+    }
+
+    pub fn total_gb_seconds(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.mem_mb as f64 / 1024.0 * e.secs)
+            .sum()
+    }
+
+    pub fn invocations(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Cost filtered by function-name prefix (e.g. all "expert-" functions —
+    /// the paper bills only the MoE-layer experts).
+    pub fn cost_with_prefix(&self, prefix: &str) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| e.fn_name.starts_with(prefix))
+            .map(|e| e.cost)
+            .sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn entries(&self) -> &[BillingEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_prefix_filter() {
+        let mut l = Ledger::new();
+        l.record("expert-0-0", 1024, 1.0, 0.1);
+        l.record("expert-0-1", 2048, 2.0, 0.2);
+        l.record("gate-0", 512, 1.0, 0.05);
+        assert!((l.total_cost() - 0.35).abs() < 1e-12);
+        assert!((l.cost_with_prefix("expert-") - 0.3).abs() < 1e-12);
+        assert!((l.total_gb_seconds() - (1.0 + 4.0 + 0.5)).abs() < 1e-12);
+        assert_eq!(l.invocations(), 3);
+        l.clear();
+        assert_eq!(l.total_cost(), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! CPU-cluster baseline (§V-G options (5) and (6)).
+//!
+//! Two 64-core EPYC CPUs, 512 GB DRAM, billed per rental period regardless
+//! of utilization. All experts of an MoE layer execute concurrently across
+//! cores; the betterTransformer variant applies a fused-kernel speedup. The
+//! contrast against serverless is coarse-grained idle billing vs per-ms
+//! metering — exactly what Figs. 2 and 14 plot.
+
+use crate::config::CpuClusterConfig;
+use crate::model::MoeModelSpec;
+
+pub struct CpuCluster {
+    pub config: CpuClusterConfig,
+    pub better_transformer: bool,
+}
+
+/// Outcome of serving one batch on the cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterRun {
+    pub exec_secs: f64,
+    pub billed_cost: f64,
+    pub throughput_tps: f64,
+}
+
+impl CpuCluster {
+    pub fn new(config: CpuClusterConfig, better_transformer: bool) -> Self {
+        Self {
+            config,
+            better_transformer,
+        }
+    }
+
+    fn speedup(&self) -> f64 {
+        if self.better_transformer {
+            self.config.better_transformer_speedup
+        } else {
+            1.0
+        }
+    }
+
+    /// Serve `total_tokens` with ground-truth per-expert token counts
+    /// `expert_counts[layer][expert]`. Experts run concurrently, each on an
+    /// equal share of cores; layer time is the straggler expert's time
+    /// (the scatter-gather barrier exists on clusters too, cf. DeepSpeed).
+    pub fn serve(
+        &self,
+        spec: &MoeModelSpec,
+        expert_counts: &[Vec<u64>],
+        total_tokens: usize,
+    ) -> ClusterRun {
+        let flops_total = self.config.total_flops * self.speedup();
+        let mut exec = 0.0;
+        for (e, counts) in expert_counts.iter().enumerate() {
+            let n = counts.len().max(1);
+            let per_expert_flops = flops_total / n as f64;
+            // Straggler expert bounds the MoE layer time.
+            let moe_time = counts
+                .iter()
+                .map(|&c| c as f64 * spec.layers[e].expert.token_flops / per_expert_flops)
+                .fold(0.0, f64::max);
+            // Non-MoE block uses the whole cluster.
+            let non_moe_time = total_tokens as f64 * spec.non_moe_token_flops / flops_total;
+            exec += moe_time + non_moe_time;
+        }
+        // Head/tail layers.
+        exec += 2.0 * total_tokens as f64 * spec.head_tail_token_flops / flops_total;
+        let billed_cost = self.config.job_cost(exec);
+        ClusterRun {
+            exec_secs: exec,
+            billed_cost,
+            throughput_tps: total_tokens as f64 / exec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    fn counts(spec: &MoeModelSpec, per_expert: u64) -> Vec<Vec<u64>> {
+        (0..spec.num_moe_layers())
+            .map(|e| vec![per_expert; spec.experts_at(e)])
+            .collect()
+    }
+
+    #[test]
+    fn better_transformer_is_faster_not_cheaper_per_hour() {
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let c = counts(&spec, 2560);
+        let base = CpuCluster::new(CpuClusterConfig::default(), false).serve(&spec, &c, 10_240);
+        let bt = CpuCluster::new(CpuClusterConfig::default(), true).serve(&spec, &c, 10_240);
+        assert!(bt.exec_secs < base.exec_secs);
+        assert!(bt.throughput_tps > base.throughput_tps);
+        // Both are under an hour → identical billed cost (idle billing).
+        assert_eq!(base.billed_cost, bt.billed_cost);
+    }
+
+    #[test]
+    fn straggler_expert_dominates() {
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let balanced = counts(&spec, 2560);
+        let mut skewed = counts(&spec, 0);
+        for l in skewed.iter_mut() {
+            l[0] = 4 * 2560; // all tokens on one expert
+        }
+        let cl = CpuCluster::new(CpuClusterConfig::default(), false);
+        let b = cl.serve(&spec, &balanced, 10_240);
+        let s = cl.serve(&spec, &skewed, 10_240);
+        assert!(s.exec_secs > b.exec_secs, "skew must hurt the cluster too");
+    }
+
+    #[test]
+    fn cluster_cost_is_coarse() {
+        // A tiny job still pays a full billing period — the motivation gap.
+        let spec = ModelPreset::TinyMoe.spec();
+        let c = counts(&spec, 10);
+        let run = CpuCluster::new(CpuClusterConfig::default(), false).serve(&spec, &c, 40);
+        assert!(run.exec_secs < 1.0);
+        assert!((run.billed_cost - CpuClusterConfig::default().price_per_hour).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Deployment manager: materializes a deployment policy (per-expert memory
+//! size + replica count, per §III-D) into function instances, and accounts
+//! for deployment time — the several-minutes cost that makes *dynamic*
+//! re-deployment during serving infeasible (§II Challenge 1), motivating the
+//! ahead-of-time prediction + optimization pipeline.
+
+use super::function::FunctionInstance;
+use crate::config::PlatformConfig;
+use crate::model::MoeModelSpec;
+
+/// Per-expert deployment decision (one row of the policy x, y of (12)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpertDeployment {
+    pub mem_mb: u64,
+    pub replicas: usize,
+}
+
+/// A full materialized deployment: every expert replica of every MoE layer
+/// plus the non-MoE layer functions.
+pub struct Deployment {
+    /// functions[layer][expert] = replica instances.
+    pub experts: Vec<Vec<Vec<FunctionInstance>>>,
+    /// Non-MoE (attention) block functions, one per layer, at max memory.
+    pub non_moe: Vec<FunctionInstance>,
+    /// Total simulated deployment wall time.
+    pub deploy_time: f64,
+}
+
+impl Deployment {
+    /// Deploy `policy[layer][expert]` for `spec`.
+    pub fn deploy(
+        cfg: &PlatformConfig,
+        spec: &MoeModelSpec,
+        policy: &[Vec<ExpertDeployment>],
+    ) -> Deployment {
+        assert_eq!(policy.len(), spec.num_moe_layers());
+        let mut experts = Vec::with_capacity(policy.len());
+        let mut total_fns = 0usize;
+        for (e, layer_policy) in policy.iter().enumerate() {
+            assert_eq!(layer_policy.len(), spec.experts_at(e));
+            let mut layer_fns = Vec::with_capacity(layer_policy.len());
+            for (i, d) in layer_policy.iter().enumerate() {
+                assert!(d.replicas >= 1, "expert ({e},{i}) with zero replicas");
+                let reps = (0..d.replicas)
+                    .map(|g| {
+                        total_fns += 1;
+                        FunctionInstance::new(
+                            &format!("expert-{e}-{i}-r{g}"),
+                            d.mem_mb,
+                            spec.layers[e].expert.param_bytes,
+                        )
+                    })
+                    .collect();
+                layer_fns.push(reps);
+            }
+            experts.push(layer_fns);
+        }
+        let non_moe = (0..spec.num_moe_layers())
+            .map(|e| {
+                total_fns += 1;
+                FunctionInstance::new(
+                    &format!("nonmoe-{e}"),
+                    cfg.max_memory_mb(),
+                    spec.non_moe_param_bytes,
+                )
+            })
+            .collect();
+        // Functions deploy in parallel on the platform; the wall time is one
+        // deployment round (images pushed concurrently), independent of
+        // count to first order.
+        let deploy_time = cfg.deploy_time * (1.0 + (total_fns as f64).log2() * 0.05);
+        Deployment {
+            experts,
+            non_moe,
+            deploy_time,
+        }
+    }
+
+    pub fn replicas(&self, layer: usize, expert: usize) -> usize {
+        self.experts[layer][expert].len()
+    }
+
+    pub fn total_functions(&self) -> usize {
+        self.experts
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(Vec::len)
+            .sum::<usize>()
+            + self.non_moe.len()
+    }
+
+    /// Mark every function warm (the paper's experiments pre-warm via a
+    /// warm-up invocation before measurement — Fig. 8 "short warm start").
+    pub fn prewarm(&mut self) {
+        for layer in &mut self.experts {
+            for ex in layer {
+                for f in ex {
+                    f.state = super::function::FnState::Warm;
+                }
+            }
+        }
+        for f in &mut self.non_moe {
+            f.state = super::function::FnState::Warm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+
+    #[test]
+    fn deploy_materializes_replicas() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::TinyMoe.spec();
+        let policy: Vec<Vec<ExpertDeployment>> = (0..spec.num_moe_layers())
+            .map(|e| {
+                (0..spec.experts_at(e))
+                    .map(|i| ExpertDeployment {
+                        mem_mb: 1024,
+                        replicas: if i == 0 { 3 } else { 1 },
+                    })
+                    .collect()
+            })
+            .collect();
+        let d = Deployment::deploy(&cfg, &spec, &policy);
+        assert_eq!(d.replicas(0, 0), 3);
+        assert_eq!(d.replicas(0, 1), 1);
+        assert_eq!(
+            d.total_functions(),
+            2 * (3 + 1 + 1 + 1) + 2 // experts + non-moe per layer
+        );
+        assert!(d.deploy_time >= cfg.deploy_time);
+    }
+
+    #[test]
+    fn prewarm_flips_state() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::TinyMoe.spec();
+        let policy: Vec<Vec<ExpertDeployment>> = (0..spec.num_moe_layers())
+            .map(|e| {
+                vec![ExpertDeployment { mem_mb: 512, replicas: 1 }; spec.experts_at(e)]
+            })
+            .collect();
+        let mut d = Deployment::deploy(&cfg, &spec, &policy);
+        assert_eq!(d.experts[0][0][0].state, super::super::function::FnState::Cold);
+        d.prewarm();
+        assert_eq!(d.experts[0][0][0].state, super::super::function::FnState::Warm);
+        assert_eq!(d.non_moe[0].state, super::super::function::FnState::Warm);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero replicas")]
+    fn zero_replicas_rejected() {
+        let cfg = PlatformConfig::default();
+        let spec = ModelPreset::TinyMoe.spec();
+        let mut policy: Vec<Vec<ExpertDeployment>> = (0..spec.num_moe_layers())
+            .map(|e| {
+                vec![ExpertDeployment { mem_mb: 512, replicas: 1 }; spec.experts_at(e)]
+            })
+            .collect();
+        policy[0][0].replicas = 0;
+        Deployment::deploy(&cfg, &spec, &policy);
+    }
+}

@@ -1,0 +1,136 @@
+//! Serverless function instances.
+//!
+//! A function is deployed with a fixed memory configuration (the paper's
+//! principal performance lever: memory ⇒ vCPU share ⇒ compute speed) and is
+//! stateless across invocations: the first invocation after deployment pays
+//! a cold start, subsequent warm invocations pay only the warm-start time,
+//! and model parameters must be (re)downloaded whenever an invocation cannot
+//! reuse a live environment — the reason direct-transfer pipelining is
+//! impossible (§II Challenge 2).
+
+use crate::config::PlatformConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FnState {
+    /// Deployed but never invoked — next invocation is a cold start.
+    Cold,
+    /// Live environment: warm start, parameters already in memory.
+    Warm,
+}
+
+#[derive(Debug, Clone)]
+pub struct FunctionInstance {
+    pub name: String,
+    pub mem_mb: u64,
+    /// Bytes of model parameters this function must load from storage.
+    pub param_bytes: u64,
+    pub state: FnState,
+    /// Accumulated billed execution seconds.
+    pub billed_secs: f64,
+    pub invocations: u64,
+}
+
+impl FunctionInstance {
+    pub fn new(name: &str, mem_mb: u64, param_bytes: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            mem_mb,
+            param_bytes,
+            state: FnState::Cold,
+            billed_secs: 0.0,
+            invocations: 0,
+        }
+    }
+
+    /// Startup latency of the next invocation (cold or warm), *excluding*
+    /// parameter download.
+    pub fn startup_time(&self, cfg: &PlatformConfig) -> f64 {
+        match self.state {
+            FnState::Cold => cfg.cold_start,
+            FnState::Warm => cfg.warm_start,
+        }
+    }
+
+    /// Head time T^{h,E}: startup + parameter download from storage
+    /// (T_str + T_dl + P/B_s of Eq. 6). Warm reuse of a live environment
+    /// keeps parameters resident, but a *re-invocation* (direct transfer
+    /// path) always re-downloads — pass `reload_params` accordingly.
+    pub fn head_time(&self, cfg: &PlatformConfig, reload_params: bool) -> f64 {
+        let start = self.startup_time(cfg);
+        if reload_params || self.state == FnState::Cold {
+            start + cfg.storage_access_delay + self.param_bytes as f64 / cfg.storage_bandwidth
+        } else {
+            start
+        }
+    }
+
+    /// Per-token compute time at this function's memory configuration
+    /// (Eq. 3's U_j for this expert).
+    pub fn token_time(&self, cfg: &PlatformConfig, token_flops: f64) -> f64 {
+        cfg.token_time(self.mem_mb, token_flops)
+    }
+
+    /// Record one invocation running for `secs`; transitions to Warm.
+    pub fn complete_invocation(&mut self, secs: f64) {
+        self.billed_secs += secs;
+        self.invocations += 1;
+        self.state = FnState::Warm;
+    }
+
+    /// Memory-capacity check (constraint (12c)): parameters + intermediate
+    /// activations + in/out buffers must fit in configured memory.
+    pub fn fits(&self, itrm_bytes: u64, io_bytes: u64) -> bool {
+        self.param_bytes + itrm_bytes + io_bytes <= self.mem_mb * crate::util::MB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::default()
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let cfg = cfg();
+        let mut f = FunctionInstance::new("expert-0", 1024, 10 * crate::util::MB);
+        assert_eq!(f.startup_time(&cfg), cfg.cold_start);
+        f.complete_invocation(1.0);
+        assert_eq!(f.state, FnState::Warm);
+        assert_eq!(f.startup_time(&cfg), cfg.warm_start);
+        assert_eq!(f.invocations, 1);
+        assert_eq!(f.billed_secs, 1.0);
+    }
+
+    #[test]
+    fn head_time_components() {
+        let cfg = cfg();
+        let mut f = FunctionInstance::new("e", 1024, 90_000_000);
+        // Cold: start + delay + bytes/BW.
+        let h = f.head_time(&cfg, false);
+        assert!((h - (cfg.cold_start + cfg.storage_access_delay + 1.0)).abs() < 1e-9);
+        f.complete_invocation(0.5);
+        // Warm without reload: only warm start.
+        assert!((f.head_time(&cfg, false) - cfg.warm_start).abs() < 1e-12);
+        // Warm with forced reload (direct-transfer re-invocation).
+        assert!(f.head_time(&cfg, true) > cfg.warm_start + 0.9);
+    }
+
+    #[test]
+    fn token_time_uses_memory() {
+        let cfg = cfg();
+        let small = FunctionInstance::new("s", 128, 0);
+        let big = FunctionInstance::new("b", 3072, 0);
+        let fl = 1.0e7;
+        assert!(small.token_time(&cfg, fl) > big.token_time(&cfg, fl));
+    }
+
+    #[test]
+    fn capacity_check() {
+        let f = FunctionInstance::new("e", 1024, 900 * crate::util::MB);
+        assert!(f.fits(100 * crate::util::MB, 10 * crate::util::MB));
+        assert!(!f.fits(200 * crate::util::MB, 0));
+    }
+}

@@ -1,0 +1,69 @@
+//! Serverless-platform substrate (AWS Lambda + S3 stand-in).
+//!
+//! The paper's testbed is AWS Lambda; this module rebuilds its billing and
+//! execution mechanics as a first-class simulator (repro band 0 → substitute
+//! per DESIGN.md): function instances with configured memory and
+//! memory-proportional compute speed, cold/warm starts, an external object
+//! store with access delay + bandwidth, direct invocation with a payload
+//! cap, a GB-second billing ledger, a deployment manager, and the
+//! CPU-cluster baseline.
+
+pub mod billing;
+pub mod cpu_cluster;
+pub mod deployer;
+pub mod events;
+pub mod function;
+pub mod storage;
+
+pub use billing::Ledger;
+pub use cpu_cluster::CpuCluster;
+pub use deployer::Deployment;
+pub use function::FunctionInstance;
+pub use storage::ExternalStorage;
+
+use crate::config::PlatformConfig;
+
+/// The simulated platform: config + ledger + storage, shared by the comm
+/// designs and the serving coordinator.
+pub struct Platform {
+    pub config: PlatformConfig,
+    pub ledger: Ledger,
+    pub storage: ExternalStorage,
+}
+
+impl Platform {
+    pub fn new(config: PlatformConfig) -> Self {
+        let storage = ExternalStorage::new(
+            config.storage_access_delay,
+            config.storage_bandwidth,
+        );
+        Self {
+            config,
+            ledger: Ledger::new(),
+            storage,
+        }
+    }
+
+    /// Bill one function execution: `mem_mb` configured memory running for
+    /// `secs` of wall time, plus the invocation fee.
+    pub fn bill_execution(&mut self, fn_name: &str, mem_mb: u64, secs: f64) -> f64 {
+        let cost = self.config.run_cost(mem_mb, secs) + self.config.price_per_invocation;
+        self.ledger.record(fn_name, mem_mb, secs, cost);
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bill_execution_accumulates() {
+        let mut p = Platform::new(PlatformConfig::default());
+        let c1 = p.bill_execution("expert-0", 1024, 2.0);
+        let c2 = p.bill_execution("expert-1", 3072, 1.0);
+        assert!(c1 > 0.0 && c2 > 0.0);
+        assert!((p.ledger.total_cost() - (c1 + c2)).abs() < 1e-12);
+        assert_eq!(p.ledger.invocations(), 2);
+    }
+}

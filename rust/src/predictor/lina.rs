@@ -1,0 +1,90 @@
+//! Lina-style baseline predictor (§II Challenge 1, evaluated in Fig. 10):
+//! maximum a-posteriori over historical token→expert mappings using *only*
+//! the token ID as the feature. The paper's critique (Fig. 3) is that the
+//! token ID alone cannot disambiguate routing that depends on position and
+//! attention context — this baseline embodies exactly that limitation.
+
+use super::ExpertPredictor;
+use crate::gating::top_k_indices;
+use std::collections::HashMap;
+
+pub struct LinaPredictor {
+    /// layer → token-id → per-expert counts.
+    counts: Vec<HashMap<u32, Vec<f64>>>,
+    experts_per_layer: Vec<usize>,
+}
+
+impl LinaPredictor {
+    pub fn new(experts_per_layer: &[usize]) -> Self {
+        Self {
+            counts: experts_per_layer.iter().map(|_| HashMap::new()).collect(),
+            experts_per_layer: experts_per_layer.to_vec(),
+        }
+    }
+
+    pub fn add(&mut self, layer: usize, token_id: u32, expert: u8, count: f64) {
+        let n = self.experts_per_layer[layer];
+        let entry = self.counts[layer]
+            .entry(token_id)
+            .or_insert_with(|| vec![0.0; n]);
+        entry[expert as usize] += count;
+    }
+
+    /// Layer-wide expert prior (fallback for unseen tokens).
+    fn expert_prior(&self, layer: usize) -> Vec<f64> {
+        let n = self.experts_per_layer[layer];
+        let mut totals = vec![0.0; n];
+        for v in self.counts[layer].values() {
+            for (i, &c) in v.iter().enumerate() {
+                totals[i] += c;
+            }
+        }
+        let sum: f64 = totals.iter().sum();
+        if sum > 0.0 {
+            totals.iter().map(|&c| c / sum).collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        }
+    }
+}
+
+impl ExpertPredictor for LinaPredictor {
+    fn predict(&self, layer: usize, token_id: u32, _position_id: u32, k: usize) -> Vec<u8> {
+        match self.counts[layer].get(&token_id) {
+            Some(v) if v.iter().sum::<f64>() > 0.0 => top_k_indices(v, k),
+            _ => top_k_indices(&self.expert_prior(layer), k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_on_token_id() {
+        let mut p = LinaPredictor::new(&[4]);
+        p.add(0, 7, 1, 5.0);
+        p.add(0, 7, 3, 2.0);
+        assert_eq!(p.predict(0, 7, 0, 1), vec![1]);
+        assert_eq!(p.predict(0, 7, 0, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn unseen_token_uses_prior() {
+        let mut p = LinaPredictor::new(&[3]);
+        p.add(0, 1, 2, 10.0);
+        assert_eq!(p.predict(0, 999, 0, 1), vec![2]);
+    }
+
+    #[test]
+    fn cannot_disambiguate_contexts() {
+        // Same token id observed going to two experts (different contexts —
+        // invisible to Lina): the prediction collapses to the majority one.
+        let mut p = LinaPredictor::new(&[2]);
+        p.add(0, 5, 0, 3.0);
+        p.add(0, 5, 1, 2.0);
+        assert_eq!(p.predict(0, 5, 0, 1), vec![0]);
+        assert_eq!(p.predict(0, 5, 100, 1), vec![0], "position ignored");
+    }
+}

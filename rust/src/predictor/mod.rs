@@ -1,0 +1,92 @@
+//! Expert-selection prediction (§III-B).
+//!
+//! - [`table`]:   the adjustable key-value dataset table Ω of profiled
+//!                token→expert mapping counts (the BO variables live here).
+//! - [`bayes`]:   the paper's posterior calculation (Eq. 1) and MAP
+//!                prediction rule (Eq. 2) over all three token features.
+//! - [`lina`]:    the Lina baseline — token-ID-only MAP.
+//! - [`profile`]: building the table from profiled batches.
+//! - [`eval`]:    the Fig. 10 metric (avg |real − predicted| per expert).
+
+pub mod bayes;
+pub mod eval;
+pub mod lina;
+pub mod profile;
+pub mod table;
+
+pub use bayes::BayesPredictor;
+pub use lina::LinaPredictor;
+pub use table::DatasetTable;
+
+use crate::gating::TokenFeature;
+
+/// Common interface: predict the top-k experts at a layer from the features
+/// known *before* inference (token ID always; position known; attention ID
+/// unknown for new tokens — predictors must not rely on f3 at predict time,
+/// mirroring the paper's "f3' is unknown" treatment).
+pub trait ExpertPredictor {
+    /// Predicted expert indices (length k) for a token at `layer`.
+    fn predict(&self, layer: usize, token_id: u32, position_id: u32, k: usize) -> Vec<u8>;
+
+    /// Predicted per-expert token counts d̂_{e,i} for a stream of tokens.
+    fn predict_counts(
+        &self,
+        layer: usize,
+        num_experts: usize,
+        tokens: &[(u32, u32)],
+        k: usize,
+    ) -> Vec<u64> {
+        let mut counts = vec![0u64; num_experts];
+        for &(t, p) in tokens {
+            for &i in &self.predict(layer, t, p, k) {
+                counts[i as usize] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Uniform baseline: spread tokens evenly (what "no prediction" deployment,
+/// e.g. LambdaML-style over-provisioning, implicitly assumes).
+pub struct UniformPredictor {
+    pub num_experts: usize,
+}
+
+impl ExpertPredictor for UniformPredictor {
+    fn predict(&self, _layer: usize, token_id: u32, _position_id: u32, k: usize) -> Vec<u8> {
+        // Deterministic round-robin by token id.
+        (0..k)
+            .map(|j| ((token_id as usize + j) % self.num_experts) as u8)
+            .collect()
+    }
+}
+
+/// Observed mapping from profiling or serving feedback.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub layer: usize,
+    pub feature: TokenFeature,
+    pub expert: u8,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_spreads() {
+        let p = UniformPredictor { num_experts: 4 };
+        let counts = p.predict_counts(0, 4, &(0..1000u32).map(|t| (t, 0)).collect::<Vec<_>>(), 1);
+        for &c in &counts {
+            assert_eq!(c, 250);
+        }
+    }
+
+    #[test]
+    fn uniform_topk_distinct() {
+        let p = UniformPredictor { num_experts: 4 };
+        let sel = p.predict(0, 7, 0, 2);
+        assert_eq!(sel.len(), 2);
+        assert_ne!(sel[0], sel[1]);
+    }
+}

@@ -1,0 +1,216 @@
+//! The adjustable key-value dataset table Ω (§III-A/B, Alg. 2 line 4).
+//!
+//! Keys are token-to-expert mappings — (token features f, MoE layer e,
+//! expert i) — and values are occurrence counts. The BO framework adjusts
+//! individual (key, value) pairs; the Bayesian predictor reads probabilities
+//! off the table. Counts are f64 so BO adjustments need not be integral
+//! (the paper restricts BO values to positive integers; we keep that at the
+//! BO layer and stay general here).
+
+use crate::gating::features::FeatKey;
+use crate::gating::TokenFeature;
+use std::collections::HashMap;
+
+/// Per-layer table: feature-key → per-expert counts.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTable {
+    /// (f1,f2-bucket,f3) → counts per expert.
+    pub by_feature: HashMap<FeatKey, Vec<f64>>,
+    /// Secondary index: token-id → feature keys having that token id.
+    /// Speeds up the Eq. (1) sum over (f2, f3) given f1'.
+    pub by_token: HashMap<u32, Vec<FeatKey>>,
+    pub num_experts: usize,
+}
+
+impl LayerTable {
+    pub fn new(num_experts: usize) -> Self {
+        Self {
+            by_feature: HashMap::new(),
+            by_token: HashMap::new(),
+            num_experts,
+        }
+    }
+
+    /// Add `count` observations of (feature → expert).
+    pub fn add(&mut self, f: &TokenFeature, expert: u8, count: f64) {
+        let key = FeatKey::new(f);
+        self.add_key(key, expert, count);
+    }
+
+    pub fn add_key(&mut self, key: FeatKey, expert: u8, count: f64) {
+        let n = self.num_experts;
+        let entry = self.by_feature.entry(key).or_insert_with(|| {
+            vec![0.0; n]
+        });
+        let fresh = entry.iter().all(|&c| c == 0.0);
+        entry[expert as usize] += count;
+        if fresh {
+            self.by_token.entry(key.token_id()).or_default().push(key);
+        }
+    }
+
+    /// Set (overwrite) one key-value pair — the BO table-update primitive.
+    pub fn set(&mut self, key: FeatKey, expert: u8, value: f64) {
+        let n = self.num_experts;
+        let entry = self
+            .by_feature
+            .entry(key)
+            .or_insert_with(|| vec![0.0; n]);
+        let fresh = entry.iter().all(|&c| c == 0.0);
+        entry[expert as usize] = value.max(0.0);
+        if fresh {
+            self.by_token.entry(key.token_id()).or_default().push(key);
+        }
+    }
+
+    pub fn get(&self, key: FeatKey, expert: u8) -> f64 {
+        self.by_feature
+            .get(&key)
+            .map(|v| v[expert as usize])
+            .unwrap_or(0.0)
+    }
+
+    /// Total count mass at a feature key (all experts).
+    pub fn key_total(&self, key: FeatKey) -> f64 {
+        self.by_feature
+            .get(&key)
+            .map(|v| v.iter().sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Total count mass for a token id (all feature contexts, all experts).
+    pub fn token_total(&self, token_id: u32) -> f64 {
+        self.by_token
+            .get(&token_id)
+            .map(|keys| keys.iter().map(|&k| self.key_total(k)).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Per-expert totals across the whole layer (the expert prior P(N_ei)).
+    pub fn expert_totals(&self) -> Vec<f64> {
+        let mut totals = vec![0.0; self.num_experts];
+        for v in self.by_feature.values() {
+            for (i, &c) in v.iter().enumerate() {
+                totals[i] += c;
+            }
+        }
+        totals
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.by_feature.len()
+    }
+}
+
+/// The full dataset table: one `LayerTable` per MoE layer.
+#[derive(Debug, Clone, Default)]
+pub struct DatasetTable {
+    pub layers: Vec<LayerTable>,
+}
+
+impl DatasetTable {
+    pub fn new(experts_per_layer: &[usize]) -> Self {
+        Self {
+            layers: experts_per_layer
+                .iter()
+                .map(|&n| LayerTable::new(n))
+                .collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn add(&mut self, layer: usize, f: &TokenFeature, expert: u8, count: f64) {
+        self.layers[layer].add(f, expert, count);
+    }
+
+    pub fn set(&mut self, layer: usize, key: FeatKey, expert: u8, value: f64) {
+        self.layers[layer].set(key, expert, value);
+    }
+
+    pub fn get(&self, layer: usize, key: FeatKey, expert: u8) -> f64 {
+        self.layers[layer].get(key, expert)
+    }
+
+    /// All (layer, key, expert) triples with positive counts — the BO
+    /// exploration range ℙ is seeded from these plus unseen combinations.
+    pub fn entries(&self) -> Vec<(usize, FeatKey, u8, f64)> {
+        let mut out = Vec::new();
+        for (e, lt) in self.layers.iter().enumerate() {
+            for (&key, counts) in &lt.by_feature {
+                for (i, &c) in counts.iter().enumerate() {
+                    if c > 0.0 {
+                        out.push((e, key, i as u8, c));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn total_keys(&self) -> usize {
+        self.layers.iter().map(LayerTable::num_keys).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(t: u32, p: u32, a: u32) -> TokenFeature {
+        TokenFeature {
+            token_id: t,
+            position_id: p,
+            attention_id: a,
+        }
+    }
+
+    #[test]
+    fn add_and_totals() {
+        let mut t = LayerTable::new(4);
+        t.add(&feat(1, 0, 9), 2, 3.0);
+        t.add(&feat(1, 0, 9), 2, 1.0);
+        t.add(&feat(1, 5, 9), 0, 2.0);
+        let k = FeatKey::new(&feat(1, 0, 9));
+        assert_eq!(t.get(k, 2), 4.0);
+        assert_eq!(t.key_total(k), 4.0);
+        assert_eq!(t.token_total(1), 6.0);
+        assert_eq!(t.expert_totals(), vec![2.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn set_overwrites_and_clamps() {
+        let mut t = LayerTable::new(2);
+        let k = FeatKey::new(&feat(7, 1, 3));
+        t.set(k, 1, 5.0);
+        assert_eq!(t.get(k, 1), 5.0);
+        t.set(k, 1, -3.0);
+        assert_eq!(t.get(k, 1), 0.0);
+    }
+
+    #[test]
+    fn by_token_index_consistent() {
+        let mut t = LayerTable::new(2);
+        for p in 0..10 {
+            t.add(&feat(42, p, p * 2), (p % 2) as u8, 1.0);
+        }
+        let keys = t.by_token.get(&42).unwrap();
+        // Positions 0..10 → buckets {0,1,2,3,4,5} and varying attention ids → distinct keys.
+        assert!(keys.len() >= 5);
+        let sum: f64 = keys.iter().map(|&k| t.key_total(k)).sum();
+        assert_eq!(sum, 10.0);
+        assert_eq!(t.token_total(42), 10.0);
+    }
+
+    #[test]
+    fn dataset_table_entries() {
+        let mut d = DatasetTable::new(&[2, 4]);
+        d.add(0, &feat(1, 0, 1), 0, 2.0);
+        d.add(1, &feat(1, 0, 1), 3, 1.0);
+        let entries = d.entries();
+        assert_eq!(entries.len(), 2);
+        assert!(entries.iter().any(|&(e, _, i, c)| e == 1 && i == 3 && c == 1.0));
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: which HLO stage files exist, their argument shapes,
+//! and the token buckets the batcher may pad to.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfigMeta {
+    pub hidden: usize,
+    pub ffn_dim: usize,
+    pub experts: usize,
+    pub moe_layers: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub top_k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub config: ModelConfigMeta,
+    pub token_buckets: Vec<usize>,
+    pub stages: BTreeMap<String, StageSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactManifest> {
+        let j = Json::read_file(&dir.join("manifest.json"))?;
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let config = ModelConfigMeta {
+            hidden: cfg.get_usize("hidden").unwrap_or(64),
+            ffn_dim: cfg.get_usize("ffn_dim").unwrap_or(256),
+            experts: cfg.get_usize("experts").unwrap_or(4),
+            moe_layers: cfg.get_usize("moe_layers").unwrap_or(2),
+            vocab: cfg.get_usize("vocab").unwrap_or(1024),
+            max_seq: cfg.get_usize("max_seq").unwrap_or(64),
+            top_k: cfg.get_usize("top_k").unwrap_or(1),
+        };
+        let token_buckets = j
+            .get("token_buckets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_else(|| vec![16, 64, 128, 256]);
+        let mut stages = BTreeMap::new();
+        if let Some(s) = j.get("stages").and_then(Json::as_obj) {
+            for (name, stage) in s {
+                let file = stage
+                    .get_str("file")
+                    .ok_or_else(|| anyhow::anyhow!("stage {name}: missing file"))?
+                    .to_string();
+                let args = stage
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|arg| ArgSpec {
+                                name: arg.get_str("name").unwrap_or("").to_string(),
+                                shape: arg
+                                    .get("shape")
+                                    .and_then(Json::as_arr)
+                                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default(),
+                                dtype: arg.get_str("dtype").unwrap_or("float32").to_string(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                stages.insert(name.clone(), StageSpec { file, args });
+            }
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            config,
+            token_buckets,
+            stages,
+        })
+    }
+
+    pub fn stage_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let s = self
+            .stages
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown stage '{name}'"))?;
+        Ok(self.dir.join(&s.file))
+    }
+
+    /// Smallest bucket ≥ `tokens` (or the largest bucket if none fits —
+    /// callers must chunk above that).
+    pub fn bucket_for(&self, tokens: usize) -> usize {
+        self.token_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= tokens)
+            .unwrap_or_else(|| *self.token_buckets.last().unwrap())
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.token_buckets.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let m = ArtifactManifest {
+            dir: ".".into(),
+            config: ModelConfigMeta {
+                hidden: 64,
+                ffn_dim: 256,
+                experts: 4,
+                moe_layers: 2,
+                vocab: 1024,
+                max_seq: 64,
+                top_k: 1,
+            },
+            token_buckets: vec![16, 64, 128, 256],
+            stages: BTreeMap::new(),
+        };
+        assert_eq!(m.bucket_for(1), 16);
+        assert_eq!(m.bucket_for(16), 16);
+        assert_eq!(m.bucket_for(17), 64);
+        assert_eq!(m.bucket_for(256), 256);
+        assert_eq!(m.bucket_for(9999), 256);
+        assert_eq!(m.max_bucket(), 256);
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").is_file() {
+            return; // artifacts not built in this environment
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.config.hidden, 64);
+        assert!(m.stages.contains_key("embed_s64"));
+        assert!(m.stages.contains_key("expert_ffn_t128"));
+        let p = m.stage_path("gating_t64").unwrap();
+        assert!(p.is_file());
+        // Arg specs carry shapes.
+        let gating = &m.stages["gating_t64"];
+        assert_eq!(gating.args[0].shape, vec![64, 64]);
+    }
+}

@@ -1,0 +1,80 @@
+//! The PJRT execution engine: one CPU client, compiled executables cached
+//! per stage name. HLO text → HloModuleProto → XlaComputation → compile.
+
+use super::artifacts::ArtifactManifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile + execute counters for the §V-F overhead table.
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) a stage executable.
+    pub fn load_stage(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.stage_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for stage {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling stage {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        self.compiles += 1;
+        Ok(())
+    }
+
+    /// Pre-compile every stage in the manifest (done once at deployment,
+    /// mirroring the serverless image build).
+    pub fn load_all(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.stages.keys().cloned().collect();
+        for n in &names {
+            self.load_stage(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute a stage with the given argument literals. Returns the
+    /// flattened tuple outputs (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load_stage(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.executions += 1;
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn cached_stages(&self) -> usize {
+        self.cache.len()
+    }
+}

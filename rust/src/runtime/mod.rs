@@ -1,0 +1,38 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the Rust hot path. Python never runs at serving time.
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+pub mod weights;
+
+pub use artifacts::ArtifactManifest;
+pub use engine::Engine;
+pub use weights::WeightStore;
+
+/// Default artifacts directory: $SMOE_ARTIFACTS or the nearest `artifacts/`
+/// containing a manifest, walking up from the current directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("SMOE_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut cur = cwd.clone();
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return cand;
+        }
+        match cur.parent() {
+            Some(p) => cur = p.to_path_buf(),
+            None => break,
+        }
+    }
+    cwd.join("artifacts")
+}
+
+/// Whether artifacts exist (tests/examples degrade gracefully without them).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").is_file()
+}

@@ -1,0 +1,92 @@
+//! Literal ⇄ Rust-vector conversion helpers.
+
+use anyhow::Result;
+
+/// Host-side tensor (f32) with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "shape {shape:?} vs data {}",
+            data.len()
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            data: vec![0.0; n],
+            shape,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(data, shape))
+    }
+}
+
+/// Build an i32 literal from ids with a 1-D shape.
+pub fn i32_literal(ids: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(ids)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn literal_to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::new(vec![1.0; 3], vec![2, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![1.5, -2.0, 0.0, 7.25, 3.0, 9.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, vec![2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_literal(&[5, 9, -2]);
+        assert_eq!(literal_to_i32(&lit).unwrap(), vec![5, 9, -2]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Weight store: raw f32 blobs exported by aot.py, addressed by name —
+//! the stand-in for model parameters living in external storage.
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub struct WeightStore {
+    pub weights: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(artifacts_dir: &Path) -> Result<WeightStore> {
+        let wdir = artifacts_dir.join("weights");
+        let manifest = Json::read_file(&wdir.join("manifest.json"))?;
+        let mut weights = BTreeMap::new();
+        for (name, shape_j) in manifest
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("weights manifest must be an object"))?
+        {
+            let shape: Vec<usize> = shape_j
+                .as_arr()
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            let bytes = std::fs::read(wdir.join(format!("{name}.bin")))
+                .with_context(|| format!("weight blob {name}"))?;
+            anyhow::ensure!(bytes.len() % 4 == 0, "blob {name} not f32-aligned");
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            weights.insert(name.clone(), Tensor::new(data, shape));
+        }
+        Ok(WeightStore { weights })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight '{name}'"))
+    }
+
+    /// Total parameter bytes (for billing the parameter downloads).
+    pub fn total_bytes(&self) -> u64 {
+        self.weights
+            .values()
+            .map(|t| (t.data.len() * 4) as u64)
+            .sum()
+    }
+
+    /// Bytes of one expert's parameters (layer `l`, expert `e`).
+    pub fn expert_bytes(&self, l: usize, e: usize) -> u64 {
+        ["w1", "b1", "w2", "b2"]
+            .iter()
+            .filter_map(|w| self.weights.get(&format!("l{l}.e{e}.{w}")))
+            .map(|t| (t.data.len() * 4) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_weights_when_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("weights/manifest.json").is_file() {
+            return;
+        }
+        let ws = WeightStore::load(&dir).unwrap();
+        let wte = ws.get("wte").unwrap();
+        assert_eq!(wte.shape, vec![1024, 64]);
+        assert!(ws.get("l0.e0.w1").is_ok());
+        assert!(ws.get("l1.e3.b2").is_ok());
+        assert!(ws.get("nope").is_err());
+        assert!(ws.total_bytes() > 0);
+        // Expert params: (64·256 + 256 + 256·64 + 64)·4 bytes.
+        assert_eq!(ws.expert_bytes(0, 0), (64 * 256 + 256 + 256 * 64 + 64) * 4);
+    }
+}

@@ -1,0 +1,88 @@
+//! Lightweight randomized property-testing harness (proptest is not in the
+//! offline vendor set). `forall` draws N random cases from a generator and
+//! asserts the property; on failure it reports the seed and case index so the
+//! exact case can be replayed deterministically.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 200,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random inputs drawn by `gen`.
+/// Panics with a replayable (seed, case) identifier on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case}):\n  input: {input:?}\n  {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with default config.
+pub fn forall_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(Config::default(), gen, prop)
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float comparison for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        forall_default(|r| r.below(100), |&x| ensure(x < 100, "range"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall_default(|r| r.below(100), |&x| ensure(x < 50, format!("{x} >= 50")));
+    }
+
+    #[test]
+    fn close_scales() {
+        assert!(close(1000.0, 1000.5, 1e-3).is_ok());
+        assert!(close(0.0, 0.1, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! Foundation utilities: PRNG, JSON, statistics, CLI, tables, logging and a
+//! randomized property-testing harness. The offline vendor set only contains
+//! the `xla` crate closure + `anyhow`, so these are all implemented in-repo.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Bytes in one mebibyte / gibibyte — serverless memory sizes are quoted in
+/// binary units (AWS Lambda's "3008 MB").
+pub const MB: u64 = 1024 * 1024;
+pub const GB: u64 = 1024 * MB;
+
+/// Human-readable byte size.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GB {
+        format!("{:.2}GB", b as f64 / GB as f64)
+    } else if b >= MB {
+        format!("{:.1}MB", b as f64 / MB as f64)
+    } else if b >= 1024 {
+        format!("{:.1}KB", b as f64 / 1024.0)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+        assert_eq!(fmt_bytes(3008 * MB), "2.94GB");
+    }
+}

@@ -1,0 +1,249 @@
+//! Synthetic corpora substituting the paper's datasets.
+//!
+//! Natural-language token frequency is Zipf-distributed; expert-popularity
+//! skew in MoE models follows from routing a Zipf token stream through a
+//! token-conditioned gate. Each `CorpusPreset` (Enwik8/CCnews/Wmt19/Lambada
+//! stand-ins) uses a distinct vocabulary size, Zipf exponent and sequence
+//! length, producing distinct skews — which is what Fig. 10's cross-dataset
+//! comparison exercises.
+//!
+//! Sequences are generated with first-order structure (bigram affinity) so
+//! that the *attention ID* feature (§III-B: the token ID receiving the
+//! highest summed attention score) carries real signal: a token's most-
+//! attended neighbour is correlated with, but not determined by, its own ID.
+
+use crate::config::workload::CorpusPreset;
+use crate::util::rng::{Rng, Zipf};
+
+/// One tokenized sequence plus its derived per-token features.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    /// Token IDs (f1).
+    pub tokens: Vec<u32>,
+    /// Position IDs (f2) — just 0..len, kept explicit for clarity.
+    pub positions: Vec<u32>,
+    /// Attention IDs (f3): for each position, the token ID of the sequence
+    /// element with the highest (simulated or measured) summed attention
+    /// score. The simulated rule mirrors locality + frequency bias of real
+    /// attention; the real path overwrites this from the PJRT attention
+    /// kernel output.
+    pub attention_ids: Vec<u32>,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Synthetic corpus: a Zipf unigram model with bigram affinity.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub preset: CorpusPreset,
+    pub vocab: usize,
+    pub seq_len: usize,
+    zipf: Zipf,
+    /// Token-rank permutation: rank→token-id, so frequent tokens are not
+    /// simply ids 0..k (mirrors a real tokenizer's arbitrary id order).
+    rank_to_id: Vec<u32>,
+    id_to_rank: Vec<u32>,
+}
+
+impl Corpus {
+    pub fn new(preset: CorpusPreset, seed: u64) -> Self {
+        let (vocab, alpha, seq_len) = preset.params();
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let mut rank_to_id: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut rank_to_id);
+        let mut id_to_rank = vec![0u32; vocab];
+        for (rank, &id) in rank_to_id.iter().enumerate() {
+            id_to_rank[id as usize] = rank as u32;
+        }
+        Self {
+            preset,
+            vocab,
+            seq_len,
+            zipf: Zipf::new(vocab, alpha),
+            rank_to_id,
+            id_to_rank,
+        }
+    }
+
+    /// Empirical frequency of a token ID under the corpus model — this is
+    /// the P'(f) prior the posterior calculation (Eq. 1) uses.
+    pub fn token_prob(&self, token_id: u32) -> f64 {
+        self.zipf.pmf(self.id_to_rank[token_id as usize] as usize)
+    }
+
+    /// Draw one sequence. Bigram affinity: with probability `p_repeat` the
+    /// next token is drawn near the previous token's rank (topical
+    /// coherence); otherwise fresh from the Zipf unigram model.
+    pub fn sample_sequence(&self, rng: &mut Rng) -> Sequence {
+        let n = self.seq_len;
+        let mut tokens = Vec::with_capacity(n);
+        let p_repeat = 0.35;
+        for t in 0..n {
+            let id = if t > 0 && rng.chance(p_repeat) {
+                // Perturb the previous token's rank by a small offset.
+                let prev_rank = self.id_to_rank[tokens[t - 1] as usize] as i64;
+                let delta = rng.range_u64(0, 16) as i64 - 8;
+                let rank = (prev_rank + delta).clamp(0, self.vocab as i64 - 1) as usize;
+                self.rank_to_id[rank]
+            } else {
+                self.rank_to_id[self.zipf.sample(rng)]
+            };
+            tokens.push(id);
+        }
+        let positions = (0..n as u32).collect();
+        let attention_ids = simulated_attention_ids(&tokens, &self.id_to_rank);
+        Sequence {
+            tokens,
+            positions,
+            attention_ids,
+        }
+    }
+
+    /// Sample sequences until at least `min_tokens` tokens are collected.
+    pub fn sample_tokens(&self, rng: &mut Rng, min_tokens: usize) -> Vec<Sequence> {
+        let mut seqs = Vec::new();
+        let mut total = 0;
+        while total < min_tokens {
+            let s = self.sample_sequence(rng);
+            total += s.len();
+            seqs.push(s);
+        }
+        seqs
+    }
+}
+
+/// Simulated attention-ID rule: each position attends over a local window
+/// with weight ∝ token frequency (frequent/"content-hub" tokens accumulate
+/// attention mass, mirroring how real attention concentrates). The attention
+/// ID of position t is the token ID of the window element with the highest
+/// score, excluding t itself when the window has other members.
+pub fn simulated_attention_ids(tokens: &[u32], id_to_rank: &[u32]) -> Vec<u32> {
+    let n = tokens.len();
+    let window = 8usize;
+    let mut out = Vec::with_capacity(n);
+    for t in 0..n {
+        let lo = t.saturating_sub(window);
+        let hi = (t + window + 1).min(n);
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best_id = tokens[t];
+        for u in lo..hi {
+            if u == t && hi - lo > 1 {
+                continue;
+            }
+            // Score: frequency bias (low rank = frequent) + distance decay.
+            let rank = id_to_rank[tokens[u] as usize] as f64;
+            let dist = (t as f64 - u as f64).abs();
+            let score = -((rank + 1.0).ln()) - 0.15 * dist;
+            if score > best_score {
+                best_score = score;
+                best_id = tokens[u];
+            }
+        }
+        out.push(best_id);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusPreset::Enwik8, 1)
+    }
+
+    #[test]
+    fn sequence_shape() {
+        let c = corpus();
+        let mut rng = Rng::new(2);
+        let s = c.sample_sequence(&mut rng);
+        assert_eq!(s.len(), c.seq_len);
+        assert_eq!(s.positions.len(), s.tokens.len());
+        assert_eq!(s.attention_ids.len(), s.tokens.len());
+        assert!(s.tokens.iter().all(|&t| (t as usize) < c.vocab));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = corpus();
+        let s1 = c.sample_sequence(&mut Rng::new(7));
+        let s2 = c.sample_sequence(&mut Rng::new(7));
+        assert_eq!(s1.tokens, s2.tokens);
+        assert_eq!(s1.attention_ids, s2.attention_ids);
+    }
+
+    #[test]
+    fn token_probs_sum_to_one() {
+        let c = corpus();
+        let total: f64 = (0..c.vocab as u32).map(|id| c.token_prob(id)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "total={total}");
+    }
+
+    #[test]
+    fn zipf_skew_visible() {
+        // The most frequent token should appear far more often than median.
+        let c = corpus();
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; c.vocab];
+        for _ in 0..200 {
+            for &t in &c.sample_sequence(&mut rng).tokens {
+                counts[t as usize] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap();
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(max > 50, "max={max}");
+        assert!(nonzero > 100, "nonzero={nonzero}");
+    }
+
+    #[test]
+    fn sample_tokens_reaches_target() {
+        let c = corpus();
+        let mut rng = Rng::new(5);
+        let seqs = c.sample_tokens(&mut rng, 1000);
+        let total: usize = seqs.iter().map(Sequence::len).sum();
+        assert!(total >= 1000);
+    }
+
+    #[test]
+    fn attention_ids_from_window() {
+        // Attention IDs must be token IDs occurring inside the sequence.
+        let c = corpus();
+        let mut rng = Rng::new(11);
+        let s = c.sample_sequence(&mut rng);
+        for (t, &aid) in s.attention_ids.iter().enumerate() {
+            let lo = t.saturating_sub(8);
+            let hi = (t + 9).min(s.len());
+            assert!(
+                s.tokens[lo..hi].contains(&aid),
+                "attention id {aid} not in window at {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_token_id_different_attention_ids() {
+        // Fig. 3 precondition: one token ID occurs with *different* attention
+        // contexts, so ID alone cannot identify the routing outcome.
+        let c = corpus();
+        let mut rng = Rng::new(13);
+        let seqs = c.sample_tokens(&mut rng, 20_000);
+        use std::collections::HashMap;
+        let mut ctx: HashMap<u32, std::collections::HashSet<u32>> = HashMap::new();
+        for s in &seqs {
+            for (i, &t) in s.tokens.iter().enumerate() {
+                ctx.entry(t).or_default().insert(s.attention_ids[i]);
+            }
+        }
+        let multi = ctx.values().filter(|set| set.len() > 1).count();
+        assert!(multi > 50, "tokens with >1 attention context: {multi}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Inference workloads: synthetic corpora (the paper-dataset substitutes)
+//! and batched token requests.
+
+pub mod corpus;
+pub mod requests;
+
+pub use corpus::{Corpus, Sequence};
+pub use requests::{Batch, RequestGenerator};

@@ -1,0 +1,104 @@
+//! Integration: the full simulator pipeline — workload → profile → predict
+//! → deploy (ODS) → serve-with-real-counts — composes and satisfies the
+//! paper's directional claims at quick scale.
+
+use serverless_moe::bo::feedback::serve_with_real_counts;
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::deploy::baselines::lambdaml_policy;
+use serverless_moe::deploy::ods::ods_full;
+use serverless_moe::experiments::common::ExpContext;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::platform::CpuCluster;
+use serverless_moe::predictor::eval::{evaluate, predicted_counts};
+
+fn pipeline(preset: ModelPreset) -> (f64, f64, f64) {
+    let mut ctx = ExpContext::new(preset, CorpusPreset::Enwik8, true);
+    ctx.generator.target_tokens = 4096;
+    let batch = ctx.eval_batch();
+    let bayes = ctx.bayes();
+    let pred = predicted_counts(&ctx.gate, &bayes, &batch);
+    let real = ctx.real_counts(&batch);
+    let problem = ctx.problem(pred, 3000.0);
+    let ods = ods_full(&problem, 2.0).expect("deployable");
+    let served = serve_with_real_counts(&ctx.config.platform, &ctx.spec, &ods.policy, &real, true);
+    let lam = lambdaml_policy(&problem).total_cost(&ctx.config.platform, &ctx.spec, true);
+    let cpu = CpuCluster::new(ctx.config.cpu_cluster.clone(), false)
+        .serve(&ctx.spec, &real, batch.total_tokens)
+        .billed_cost;
+    (served.cost, lam, cpu)
+}
+
+#[test]
+fn bert_pipeline_headline_directions() {
+    let (ours, lambdaml, cpu) = pipeline(ModelPreset::BertMoe { experts: 4, top_k: 1 });
+    assert!(ours > 0.0);
+    assert!(ours < lambdaml, "ours {ours} vs lambdaml {lambdaml}");
+    assert!(ours < cpu * 0.25, "ours {ours} vs cpu {cpu} (>=75% saving)");
+}
+
+#[test]
+fn gpt2_pipeline_headline_directions() {
+    let (ours, lambdaml, cpu) = pipeline(ModelPreset::Gpt2Moe { top_k: 1 });
+    assert!(ours < lambdaml * 1.02, "ours {ours} vs lambdaml {lambdaml}");
+    assert!(ours < cpu, "ours {ours} vs cpu {cpu}");
+}
+
+#[test]
+fn prediction_quality_transfers_to_cost() {
+    // Deploying on Bayes predictions must not cost meaningfully more than
+    // deploying on the oracle (real) distribution.
+    let mut ctx = ExpContext::new(
+        ModelPreset::BertMoe { experts: 4, top_k: 1 },
+        CorpusPreset::Enwik8,
+        true,
+    );
+    ctx.generator.target_tokens = 4096;
+    let batch = ctx.eval_batch();
+    let bayes = ctx.bayes();
+    let e = evaluate(&ctx.gate, &bayes, &batch);
+    assert!(e.overall.is_finite());
+    let pred = predicted_counts(&ctx.gate, &bayes, &batch);
+    let real = ctx.real_counts(&batch);
+
+    let p_pred = ctx.problem(pred, 3000.0);
+    let p_real = ctx.problem(real.clone(), 3000.0);
+    let ods_pred = ods_full(&p_pred, 2.0).unwrap();
+    let ods_real = ods_full(&p_real, 2.0).unwrap();
+    let served_pred =
+        serve_with_real_counts(&ctx.config.platform, &ctx.spec, &ods_pred.policy, &real, true);
+    let served_real =
+        serve_with_real_counts(&ctx.config.platform, &ctx.spec, &ods_real.policy, &real, true);
+    assert!(
+        served_pred.cost <= served_real.cost * 1.6,
+        "pred-deploy {} vs oracle-deploy {}",
+        served_pred.cost,
+        served_real.cost
+    );
+}
+
+#[test]
+fn tighter_slo_never_cheaper() {
+    let mut ctx = ExpContext::new(
+        ModelPreset::BertMoe { experts: 4, top_k: 1 },
+        CorpusPreset::Enwik8,
+        true,
+    );
+    ctx.generator.target_tokens = 4096;
+    let batch = ctx.eval_batch();
+    let real = ctx.real_counts(&batch);
+    let mut prev_cost = 0.0;
+    for t_limit in [3000.0, 1200.0, 700.0] {
+        let problem = ctx.problem(real.clone(), t_limit);
+        if let Some(ods) = ods_full(&problem, 2.0) {
+            if ods.feasible {
+                assert!(
+                    ods.total_cost >= prev_cost - 1e-9,
+                    "cost must not drop as SLO tightens: {} then {}",
+                    prev_cost,
+                    ods.total_cost
+                );
+                prev_cost = ods.total_cost;
+            }
+        }
+    }
+}

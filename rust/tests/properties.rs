@@ -1,0 +1,213 @@
+//! Property-based tests (in-repo `util::check` harness) on the coordinator
+//! invariants: routing conservation, batching, timing monotonicity, billing
+//! non-negativity, ODS bounds, ε-schedule ordering.
+
+use serverless_moe::comm::{layer_cost, layer_latency, CommMethod, ExpertPlan, LayerPlan};
+use serverless_moe::config::PlatformConfig;
+use serverless_moe::gating::{SimGate, TokenFeature};
+use serverless_moe::model::ModelPreset;
+use serverless_moe::util::check::{ensure, forall, forall_default, Config};
+use serverless_moe::util::rng::Rng;
+
+fn rand_plan(rng: &mut Rng, method: CommMethod) -> (LayerPlan, PlatformConfig) {
+    let cfg = PlatformConfig::default();
+    let n = 1 + rng.index(8);
+    let experts = (0..n)
+        .map(|_| ExpertPlan {
+            mem_mb: *rng.choose(&cfg.memory_options_mb.clone()),
+            replicas: 1 + rng.index(8),
+            tokens: rng.below(5000),
+        })
+        .collect();
+    (
+        LayerPlan {
+            method,
+            beta: 1 + rng.index(2048),
+            experts,
+        },
+        cfg,
+    )
+}
+
+#[test]
+fn prop_costs_and_latencies_nonnegative_finite() {
+    let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+    for method in CommMethod::ALL {
+        forall_default(
+            |rng| rand_plan(rng, method).0,
+            |plan| {
+                let cfg = PlatformConfig::default();
+                let c = layer_cost(&cfg, &spec, 0, plan, true);
+                let l = layer_latency(&cfg, &spec, 0, plan, true);
+                ensure(c.is_finite() && c >= 0.0, format!("cost {c}"))?;
+                ensure(l.is_finite() && l >= 0.0, format!("latency {l}"))
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_cost_monotone_in_tokens() {
+    let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+    forall_default(
+        |rng| {
+            let (mut plan, cfg) = rand_plan(rng, CommMethod::Indirect);
+            let extra = 1 + rng.below(2000);
+            (plan.clone(), {
+                for ep in plan.experts.iter_mut() {
+                    ep.tokens += extra;
+                }
+                plan
+            }, cfg)
+        },
+        |(small, big, cfg)| {
+            let c_small = layer_cost(cfg, &spec, 0, small, true);
+            let c_big = layer_cost(cfg, &spec, 0, big, true);
+            ensure(
+                c_big >= c_small - 1e-12,
+                format!("more tokens cheaper?! {c_small} -> {c_big}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_warm_never_slower_than_cold() {
+    let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+    for method in CommMethod::ALL {
+        forall_default(
+            |rng| rand_plan(rng, method).0,
+            |plan| {
+                let cfg = PlatformConfig::default();
+                let warm = layer_latency(&cfg, &spec, 0, plan, true);
+                let cold = layer_latency(&cfg, &spec, 0, plan, false);
+                ensure(warm <= cold + 1e-9, format!("warm {warm} > cold {cold}"))
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_routing_conserves_tokens() {
+    let spec = ModelPreset::BertMoe { experts: 8, top_k: 2 }.spec();
+    let gate = SimGate::new(&spec, 99);
+    forall(
+        Config { cases: 50, ..Default::default() },
+        |rng| {
+            (0..200u32)
+                .map(|i| TokenFeature {
+                    token_id: rng.below(30_000) as u32,
+                    position_id: i,
+                    attention_id: rng.below(30_000) as u32,
+                })
+                .collect::<Vec<_>>()
+        },
+        |tokens| {
+            let mut counts = vec![0u64; 8];
+            for f in tokens {
+                let sel = gate.route_token(3, f);
+                ensure(sel.len() == 2, "top-2 must select 2")?;
+                ensure(sel[0] != sel[1], "distinct experts")?;
+                for &e in &sel {
+                    counts[e as usize] += 1;
+                }
+            }
+            ensure(
+                counts.iter().sum::<u64>() == tokens.len() as u64 * 2,
+                "token conservation",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_chunks_conserve() {
+    use serverless_moe::coordinator::batcher::chunks;
+    forall_default(
+        |rng| (rng.below(100_000) as usize, 1 + rng.index(4096)),
+        |&(n, max)| {
+            let cs = chunks(n, max);
+            ensure(cs.iter().sum::<usize>() == n, "chunks must sum to n")?;
+            ensure(cs.iter().all(|&c| c > 0 && c <= max), "chunk bounds")
+        },
+    );
+}
+
+#[test]
+fn prop_replicas_never_increase_straggler_time() {
+    let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+    let cfg = PlatformConfig::default();
+    forall_default(
+        |rng| (rng.below(20_000) + 1, 1 + rng.index(7)),
+        |&(tokens, g)| {
+            let one = ExpertPlan { mem_mb: 3072, replicas: 1, tokens };
+            let many = ExpertPlan { mem_mb: 3072, replicas: g + 1, tokens };
+            let t1 = serverless_moe::comm::replica_time(
+                &cfg, &spec, 0, &one, CommMethod::Indirect, 1, true,
+            );
+            let tg = serverless_moe::comm::replica_time(
+                &cfg, &spec, 0, &many, CommMethod::Indirect, 1, true,
+            );
+            ensure(tg <= t1 + 1e-9, format!("replicas slower: {t1} -> {tg}"))
+        },
+    );
+}
+
+#[test]
+fn prop_eps_schedule_ordering_and_decay() {
+    use serverless_moe::bo::eps_greedy::{EpsSchedule, FeedbackCase};
+    use serverless_moe::config::BoConfig;
+    forall_default(
+        |rng| (rng.index(50), rng.index(1000)),
+        |&(tau, dim)| {
+            let cfg = BoConfig::default();
+            let s = EpsSchedule::new(&cfg);
+            let e_now = s.eps(dim, tau);
+            let e_later = s.eps(dim, tau + 10);
+            ensure(e_now <= 1.0 && e_now >= 0.0, "eps in range")?;
+            ensure(e_later <= e_now + 1e-12, "eps decays")?;
+            // Case ordering under feedback.
+            let mut a = EpsSchedule::new(&cfg);
+            let mut b = EpsSchedule::new(&cfg);
+            a.apply_feedback(FeedbackCase::MemoryShortfall, tau.max(1));
+            b.apply_feedback(FeedbackCase::Feasible, tau.max(1));
+            ensure(a.eps(0, tau) >= b.eps(0, tau), "case-i slows decay most")
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use serverless_moe::util::json::Json;
+    forall(
+        Config { cases: 300, ..Default::default() },
+        |rng| {
+            // random JSON tree
+            fn gen(rng: &mut Rng, depth: usize) -> Json {
+                match if depth > 3 { rng.index(4) } else { rng.index(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.chance(0.5)),
+                    2 => Json::Num((rng.f64() - 0.5) * 1e6),
+                    3 => Json::Str(format!("s{}-\"quote\ntab\t{}", rng.below(100), rng.below(10))),
+                    4 => Json::Arr((0..rng.index(5)).map(|_| gen(rng, depth + 1)).collect()),
+                    _ => {
+                        let mut m = std::collections::BTreeMap::new();
+                        for i in 0..rng.index(5) {
+                            m.insert(format!("k{i}"), gen(rng, depth + 1));
+                        }
+                        Json::Obj(m)
+                    }
+                }
+            }
+            gen(rng, 0)
+        },
+        |v| {
+            let compact = Json::parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+            let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+            // Numbers may lose precision only via formatting — we format with
+            // full precision, so equality must hold.
+            ensure(&compact == v, "compact roundtrip")?;
+            ensure(&pretty == v, "pretty roundtrip")
+        },
+    );
+}
