@@ -9,15 +9,15 @@
 use serverless_moe::config::Config;
 use serverless_moe::coordinator::{MoeService, Server};
 use serverless_moe::predictor::{BayesPredictor, ExpertPredictor};
-use serverless_moe::runtime::{artifacts_available, default_artifacts_dir};
+use serverless_moe::runtime::{default_artifacts_dir, serving_available};
 use serverless_moe::util::rng::Rng;
 use serverless_moe::util::stats;
 use serverless_moe::util::table::{ftime, Table};
 
 fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
-        artifacts_available(),
-        "artifacts missing — run `make artifacts` first"
+        serving_available(),
+        "real serving unavailable — run `make artifacts` and build with the real xla vendor set"
     );
     let cfg = Config::default();
     let dir = default_artifacts_dir();

@@ -1,0 +1,151 @@
+//! Trace-driven multi-request serving: run the epoch-based traffic
+//! simulator over a synthetic drift scenario or a JSON request trace, and
+//! print the ours-vs-static-vs-LambdaML-vs-CPU comparison over time.
+//!
+//! Run:
+//!   cargo run --release --example serve_traffic
+//!   cargo run --release --example serve_traffic -- --model gpt2 --full
+//!   cargo run --release --example serve_traffic -- --trace rust/tests/data/trace_small.json
+//!
+//! Options:
+//!   --model M        bert | gpt2 | bert2bert | tiny     (default bert)
+//!   --trace PATH     replay a JSON trace (see traffic::trace for schema)
+//!   --seed N         scenario RNG seed                  (default 0x5EED)
+//!   --no-reopt       disable online re-optimization for the "ours" run
+//!   --full           full-scale scenario (quick otherwise)
+
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::experiments::traffic::{drift_scenario, scenario_config};
+use serverless_moe::model::ModelPreset;
+use serverless_moe::traffic::{EpochSimulator, SimReport, Trace};
+use serverless_moe::util::cli::Args;
+use serverless_moe::util::table::{fcost, fnum, ftime, Table};
+use serverless_moe::workload::Corpus;
+
+fn report_row(t: &mut Table, label: &str, r: &SimReport) {
+    t.row(vec![
+        label.into(),
+        r.requests.to_string(),
+        fcost(r.total_cost),
+        fnum(r.throughput_tps),
+        ftime(r.p50_latency),
+        ftime(r.p95_latency),
+        r.redeploys.to_string(),
+        fnum(r.warm_fraction()),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    serverless_moe::util::log::init_from_env();
+    let args = Args::from_env();
+    let preset = ModelPreset::from_name(&args.get_or("model", "bert"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let quick = !args.flag("full");
+    let seed = args.get_u64("seed", 0x5EED);
+
+    let mut scn = drift_scenario(preset, quick, seed);
+    if let Some(path) = args.get("trace") {
+        let trace = Trace::load(std::path::Path::new(path))?;
+        println!(
+            "replaying trace {path}: {} requests, {} tokens over {:.1}s",
+            trace.requests.len(),
+            trace.total_tokens(),
+            trace.duration()
+        );
+        let corpus = Corpus::new(CorpusPreset::Enwik8, seed);
+        scn.traffic = trace.replay(&corpus, seed);
+    } else {
+        println!(
+            "synthetic drift scenario: {} requests ({} heavy then {} light), bursty MMPP arrivals",
+            scn.traffic.len(),
+            scn.traffic.iter().filter(|tb| tb.batch.total_tokens > 1024).count(),
+            scn.traffic.iter().filter(|tb| tb.batch.total_tokens <= 1024).count(),
+        );
+    }
+
+    let cfg = scenario_config(quick);
+
+    // Ours: online re-optimization (+ one BO refinement round per redeploy).
+    let mut cfg_ours = cfg.clone();
+    cfg_ours.reoptimize = !args.flag("no-reopt");
+    cfg_ours.bo_round_iters = 1;
+    let mut sim_ours =
+        EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg_ours);
+    let ours = sim_ours.run(&scn.traffic);
+
+    // Static initial deployment.
+    let stat = {
+        let mut cfg_static = cfg.clone();
+        cfg_static.reoptimize = false;
+        let mut sim = EpochSimulator::new(
+            &scn.platform,
+            &scn.spec,
+            &scn.gate,
+            scn.predictor(),
+            cfg_static,
+        );
+        sim.run(&scn.traffic)
+    };
+
+    // LambdaML over-provisioning.
+    let lam = {
+        let mut cfg_lam = cfg.clone();
+        cfg_lam.reoptimize = false;
+        let lam_policy = scn.lambdaml(&cfg_lam);
+        let mut sim = EpochSimulator::new(
+            &scn.platform,
+            &scn.spec,
+            &scn.gate,
+            scn.predictor(),
+            cfg_lam,
+        );
+        sim.run_with_policy(lam_policy, &scn.traffic)
+    };
+
+    // CPU cluster.
+    let cpu = scn.cpu_cluster(false);
+
+    let mut t = Table::new(
+        &format!("traffic serving — {}", scn.spec.name),
+        &[
+            "deployment",
+            "requests",
+            "billed cost",
+            "tput (tok/s)",
+            "p50",
+            "p95",
+            "redeploys",
+            "warm frac",
+        ],
+    );
+    report_row(&mut t, "ours (online re-opt)", &ours);
+    report_row(&mut t, "static initial", &stat);
+    report_row(&mut t, "LambdaML (max mem)", &lam);
+    report_row(&mut t, "CPU cluster", &cpu);
+    t.print();
+
+    println!(
+        "\nsavings: {}% vs static, {}% vs LambdaML, {}% vs CPU cluster",
+        fnum((1.0 - ours.total_cost / stat.total_cost.max(1e-12)) * 100.0),
+        fnum((1.0 - ours.total_cost / lam.total_cost.max(1e-12)) * 100.0),
+        fnum((1.0 - ours.total_cost / cpu.total_cost.max(1e-12)) * 100.0),
+    );
+    if !sim_ours.redeploy_times.is_empty() {
+        println!("re-deployments at t = {:?} (s)", sim_ours.redeploy_times);
+    }
+    if let Some(policy) = &sim_ours.last_policy {
+        // Materialize the final deployment to show its platform footprint.
+        let deployment = serverless_moe::platform::Deployment::deploy(
+            &scn.platform,
+            &scn.spec,
+            &policy.deployments(),
+        );
+        println!(
+            "final deployment: {} expert replicas, {} functions total, ~{:.0}s to (re)deploy",
+            policy.total_replicas(),
+            deployment.total_functions(),
+            deployment.deploy_time,
+        );
+    }
+    Ok(())
+}

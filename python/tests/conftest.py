@@ -1,0 +1,6 @@
+"""Test bootstrap: make `compile.*` importable without an install step."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.attention import attention

@@ -95,6 +95,86 @@ pub fn serve_with_real_counts(
     }
 }
 
+/// Generalization of [`serve_with_real_counts`] to the instance-lifecycle
+/// model: each replica's warm/cold start is decided by
+/// `warm_of(layer, expert, replica)` — derived from a
+/// `platform::lifecycle::WarmPool`'s virtual clock by the traffic simulator
+/// — instead of one global flag. With every replica warm this reproduces
+/// `serve_with_real_counts(.., warm = true)` to within floating-point
+/// rounding (the cross-validation test in `tests/traffic.rs` pins the
+/// equivalence at 1e-6 relative error).
+///
+/// Latency model: the all-warm analytic layer latency is the baseline, and
+/// the straggler's excess (cold starts, thrash, payload fallback) is charged
+/// on top — mirroring how `serve_with_real_counts` charges penalties.
+pub fn serve_with_warmness(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    policy: &DeploymentPolicy,
+    real_tokens: &[Vec<u64>],
+    warm_of: &mut dyn FnMut(usize, usize, usize) -> bool,
+) -> ServeOutcome {
+    let mut cost = 0.0;
+    let mut latency = 0.0;
+    let mut memory_violations = Vec::new();
+    let mut payload_violations = Vec::new();
+
+    for (e, plan) in policy.layers.iter().enumerate() {
+        let mut real_plan = plan.clone();
+        for (i, ep) in real_plan.experts.iter_mut().enumerate() {
+            ep.tokens = real_tokens[e][i];
+        }
+        let mut layer_cost = 0.0;
+        let mut max_finish = 0.0f64;
+        for (i, ep) in real_plan.experts.iter().enumerate() {
+            if ep.tokens == 0 {
+                continue;
+            }
+            // Constraint checks are plan-level, exactly as in the flat path.
+            let mem_bad = !memory_feasible(spec, e, ep);
+            if mem_bad {
+                memory_violations.push((e, i));
+            }
+            let payload_bad =
+                plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep);
+            if payload_bad {
+                payload_violations.push((e, i));
+            }
+            let mut busy = 0.0;
+            for g in 0..ep.replicas {
+                let warm = warm_of(e, i, g);
+                let mut t_rep = replica_time(cfg, spec, e, ep, plan.method, plan.beta, warm);
+                if mem_bad {
+                    t_rep *= MEMORY_THRASH_FACTOR;
+                }
+                if payload_bad {
+                    let t_ind = replica_time(cfg, spec, e, ep, CommMethod::Indirect, 1, warm);
+                    t_rep = t_rep.max(t_ind) + cfg.storage_access_delay;
+                }
+                busy += t_rep;
+                max_finish = max_finish.max(t_rep);
+            }
+            layer_cost +=
+                cfg.run_cost(ep.mem_mb, busy) + ep.replicas as f64 * cfg.price_per_invocation;
+        }
+        cost += layer_cost;
+        let base_lat = crate::comm::layer_latency(cfg, spec, e, &real_plan, true);
+        let worst_clean = real_plan
+            .experts
+            .iter()
+            .map(|ep| replica_time(cfg, spec, e, ep, plan.method, plan.beta, true))
+            .fold(0.0, f64::max);
+        latency += base_lat + (max_finish - worst_clean).max(0.0);
+    }
+
+    ServeOutcome {
+        cost,
+        latency,
+        memory_violations,
+        payload_violations,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +232,36 @@ mod tests {
         let real = vec![vec![4096u64; 4]; 2];
         let out = serve_with_real_counts(&cfg, &spec, &pol, &real, true);
         assert!(!out.payload_violations.is_empty());
+    }
+
+    #[test]
+    fn warmness_all_warm_degenerates_to_flat_path() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let mut pol = policy(3072, 2, 1000, CommMethod::Indirect);
+        pol.layers[1].experts[0].replicas = 4;
+        let real = vec![vec![1400, 900, 300, 100], vec![2000, 500, 100, 100]];
+        let flat = serve_with_real_counts(&cfg, &spec, &pol, &real, true);
+        let lifecycle = serve_with_warmness(&cfg, &spec, &pol, &real, &mut |_, _, _| true);
+        let rel_c = (flat.cost - lifecycle.cost).abs() / flat.cost;
+        let rel_l = (flat.latency - lifecycle.latency).abs() / flat.latency;
+        assert!(rel_c < 1e-9, "cost {} vs {}", flat.cost, lifecycle.cost);
+        assert!(rel_l < 1e-9, "latency {} vs {}", flat.latency, lifecycle.latency);
+    }
+
+    #[test]
+    fn cold_replicas_cost_and_delay_more() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let pol = policy(3072, 2, 1000, CommMethod::Indirect);
+        let real = vec![vec![1000u64; 4]; 2];
+        let warm = serve_with_warmness(&cfg, &spec, &pol, &real, &mut |_, _, _| true);
+        let mixed = serve_with_warmness(&cfg, &spec, &pol, &real, &mut |_, _, g| g == 0);
+        let cold = serve_with_warmness(&cfg, &spec, &pol, &real, &mut |_, _, _| false);
+        assert!(warm.cost < mixed.cost && mixed.cost < cold.cost);
+        assert!(warm.latency <= mixed.latency && mixed.latency <= cold.latency);
     }
 
     #[test]

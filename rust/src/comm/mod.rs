@@ -23,7 +23,10 @@
 
 pub mod timing;
 
-pub use timing::{layer_cost, layer_latency, replica_time, ExpertPlan, LayerPlan, LayerTiming};
+pub use timing::{
+    layer_cost, layer_latency, mixed_replica_times, replica_time, ExpertPlan, LayerPlan,
+    LayerTiming,
+};
 
 /// The communication method a_e ∈ 𝔸 = {1, 2, 3}.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -116,6 +116,34 @@ pub fn replica_time(
     }
 }
 
+/// Per-expert replica accounting under the instance-lifecycle model: with
+/// `warm_replicas` of the plan's replicas starting warm and the rest paying
+/// the cold start, returns `(straggler_time, total_busy_secs)` — the slowest
+/// replica's execution time (the layer barrier term) and the summed busy
+/// seconds billed across all replicas (Eq. 5 generalized to mixed starts).
+/// `warm_replicas >= plan.replicas` degenerates to the all-warm seed model.
+pub fn mixed_replica_times(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &ExpertPlan,
+    method: CommMethod,
+    beta: usize,
+    warm_replicas: usize,
+) -> (f64, f64) {
+    if plan.tokens == 0 {
+        return (0.0, 0.0);
+    }
+    let g = plan.replicas.max(1);
+    let w = warm_replicas.min(g);
+    let t_warm = replica_time(cfg, spec, layer, plan, method, beta, true);
+    if w == g {
+        return (t_warm, g as f64 * t_warm);
+    }
+    let t_cold = replica_time(cfg, spec, layer, plan, method, beta, false);
+    (t_cold, w as f64 * t_warm + (g - w) as f64 * t_cold)
+}
+
 /// Direct-transfer feasibility (constraint (12f)): the per-replica payloads
 /// must fit within D_p in both directions.
 pub fn direct_feasible(cfg: &PlatformConfig, spec: &MoeModelSpec, plan: &ExpertPlan) -> bool {
@@ -420,6 +448,30 @@ mod tests {
         let c_one = layer_cost(&cfg, &spec, 0, &one, true);
         let c_four = layer_cost(&cfg, &spec, 0, &four, true);
         assert!(c_four > c_one, "replicas add head-time cost");
+    }
+
+    #[test]
+    fn mixed_replica_times_brackets_warm_and_cold() {
+        let (cfg, spec) = setup();
+        let ep = ExpertPlan { mem_mb: 3072, replicas: 4, tokens: 2000 };
+        let t_warm = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, true);
+        let t_cold = replica_time(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, false);
+        let (s_all, b_all) = mixed_replica_times(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, 4);
+        assert_eq!(s_all, t_warm);
+        assert!((b_all - 4.0 * t_warm).abs() < 1e-12);
+        let (s_mix, b_mix) = mixed_replica_times(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, 3);
+        assert_eq!(s_mix, t_cold);
+        assert!((b_mix - (3.0 * t_warm + t_cold)).abs() < 1e-12);
+        let (s_none, b_none) =
+            mixed_replica_times(&cfg, &spec, 0, &ep, CommMethod::Indirect, 1, 0);
+        assert_eq!(s_none, t_cold);
+        assert!((b_none - 4.0 * t_cold).abs() < 1e-12);
+        // Zero tokens: free either way.
+        let idle = ExpertPlan { mem_mb: 3072, replicas: 4, tokens: 0 };
+        assert_eq!(
+            mixed_replica_times(&cfg, &spec, 0, &idle, CommMethod::Indirect, 1, 0),
+            (0.0, 0.0)
+        );
     }
 
     #[test]

@@ -44,6 +44,10 @@ impl ServingMetrics {
         stats::percentile(&self.request_latencies, 50.0)
     }
 
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.request_latencies, 95.0)
+    }
+
     pub fn p99(&self) -> f64 {
         stats::percentile(&self.request_latencies, 99.0)
     }
@@ -61,11 +65,12 @@ impl ServingMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} tokens={} tput={:.1} tok/s p50={} p99={} cost=${:.6} invocations={}",
+            "requests={} tokens={} tput={:.1} tok/s p50={} p95={} p99={} cost=${:.6} invocations={}",
             self.request_latencies.len(),
             self.tokens_served,
             self.throughput_tps(),
             crate::util::table::ftime(self.p50()),
+            crate::util::table::ftime(self.p95()),
             crate::util::table::ftime(self.p99()),
             self.billed_cost,
             self.invocations,

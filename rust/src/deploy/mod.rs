@@ -136,6 +136,33 @@ impl DeploymentPolicy {
     pub fn methods(&self) -> Vec<CommMethod> {
         self.layers.iter().map(|l| l.method).collect()
     }
+
+    /// Materialization view for `platform::deployer::Deployment::deploy`:
+    /// the per-layer per-expert (memory, replicas) rows of this policy.
+    pub fn deployments(&self) -> Vec<Vec<crate::platform::deployer::ExpertDeployment>> {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.experts
+                    .iter()
+                    .map(|ep| crate::platform::deployer::ExpertDeployment {
+                        mem_mb: ep.mem_mb,
+                        replicas: ep.replicas.max(1),
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Total function instances this policy materializes (expert replicas
+    /// only; the per-layer non-MoE functions are fixed).
+    pub fn total_replicas(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.experts.iter())
+            .map(|ep| ep.replicas.max(1))
+            .sum()
+    }
 }
 
 #[cfg(test)]

@@ -13,12 +13,13 @@ pub mod fig12_ods;
 pub mod fig13_bo;
 pub mod fig14_overall;
 pub mod overhead;
+pub mod traffic;
 
 use crate::util::table::Table;
 
 /// All experiment ids.
 pub const ALL: &[&str] = &[
-    "fig2", "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "fig14", "overhead",
+    "fig2", "fig3", "fig4", "fig10", "fig11", "fig12", "fig13", "fig14", "overhead", "traffic",
 ];
 
 /// Run one experiment by id (quick=true shrinks workloads for CI/tests).
@@ -33,6 +34,7 @@ pub fn run(id: &str, quick: bool) -> anyhow::Result<Vec<Table>> {
         "fig13" => Ok(fig13_bo::run(quick)),
         "fig14" => Ok(fig14_overall::run(quick)),
         "overhead" => Ok(overhead::run(quick)),
+        "traffic" => Ok(traffic::run(quick)),
         _ => anyhow::bail!("unknown experiment '{id}' (one of {ALL:?})"),
     }
 }

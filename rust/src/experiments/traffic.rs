@@ -1,0 +1,313 @@
+//! Traffic experiment — sustained serving under bursty, drifting load:
+//! billed cost over time for (1) the online re-optimizing deployment
+//! ("ours"), (2) the static initial deployment, (3) LambdaML
+//! over-provisioning, and (4) the CPU cluster. This is the serving-dimension
+//! counterpart of Fig. 14: the same cost comparison, but accumulated over a
+//! request stream whose expert popularity shifts mid-run instead of a
+//! single pre-warmed batch.
+
+use crate::config::workload::CorpusPreset;
+use crate::config::{CpuClusterConfig, PlatformConfig};
+use crate::deploy::baselines::lambdaml_policy;
+use crate::deploy::DeploymentPolicy;
+use crate::gating::SimGate;
+use crate::model::{ModelPreset, MoeModelSpec};
+use crate::platform::CpuCluster;
+use crate::predictor::bayes::TokenPrior;
+use crate::predictor::eval::{predicted_counts, real_counts};
+use crate::predictor::profile::profile_batches;
+use crate::predictor::{BayesPredictor, DatasetTable};
+use crate::traffic::{ArrivalGen, ArrivalProcess, EpochSimulator, SimReport, TrafficConfig};
+use crate::util::table::{fcost, fnum, ftime, Table};
+use crate::workload::{Corpus, RequestGenerator, TimedBatch};
+
+/// A fully-built serving scenario: platform, model, gate, a profiled
+/// predictor state, and a timestamped request stream.
+pub struct TrafficScenario {
+    pub platform: PlatformConfig,
+    pub cpu: CpuClusterConfig,
+    pub spec: MoeModelSpec,
+    pub gate: SimGate,
+    pub table: DatasetTable,
+    pub prior: TokenPrior,
+    pub traffic: Vec<TimedBatch>,
+}
+
+impl TrafficScenario {
+    /// A fresh predictor at the profiled (pre-serving) state — each
+    /// simulation run starts from identical beliefs.
+    pub fn predictor(&self) -> BayesPredictor {
+        BayesPredictor::new(self.table.clone(), self.prior.clone())
+    }
+
+    /// LambdaML over-provisioning policy for this scenario's first request.
+    pub fn lambdaml(&self, cfg: &TrafficConfig) -> DeploymentPolicy {
+        let predictor = self.predictor();
+        let counts = match self.traffic.first() {
+            Some(tb) => predicted_counts(&self.gate, &predictor, &tb.batch),
+            None => (0..self.spec.num_moe_layers())
+                .map(|e| vec![1; self.spec.experts_at(e)])
+                .collect(),
+        };
+        let problem = cfg.problem(&self.platform, &self.spec, counts);
+        lambdaml_policy(&problem)
+    }
+
+    /// Serve the whole stream on the CPU cluster baseline: per-batch
+    /// straggler-bound execution, coarse-grained rental billing over the
+    /// occupied span.
+    pub fn cpu_cluster(&self, better_transformer: bool) -> SimReport {
+        let cluster = CpuCluster::new(self.cpu.clone(), better_transformer);
+        let mut exec_each: Vec<f64> = Vec::with_capacity(self.traffic.len());
+        let mut tokens = 0u64;
+        let mut span = 0.0f64;
+        for tb in &self.traffic {
+            let real = real_counts(&self.gate, &tb.batch);
+            let run = cluster.serve(&self.spec, &real, tb.batch.total_tokens);
+            exec_each.push(run.exec_secs);
+            tokens += tb.batch.total_tokens as u64;
+            span = span.max(tb.at + run.exec_secs);
+        }
+        // No per-request cost timeline: the cluster bills by occupied span
+        // (coarse rental periods), so the over-time table queries
+        // `cpu.job_cost(t)` directly.
+        SimReport::from_samples(&exec_each, tokens, span, self.cpu.job_cost(span.max(1.0)))
+    }
+}
+
+/// The TrafficConfig used across the scenario runs (and the regression
+/// tests, so golden numbers stay pinned to one configuration).
+pub fn scenario_config(quick: bool) -> TrafficConfig {
+    let mut cfg = TrafficConfig::default();
+    cfg.epoch_secs = 60.0;
+    cfg.keep_alive = 900.0;
+    cfg.prewarm = true;
+    cfg.drift_threshold = 0.15;
+    // Tight enough that the heavy phase-A batches force replica/memory
+    // upgrades on popular experts — the over-provisioning that goes to
+    // waste once traffic drifts light.
+    cfg.t_limit = if quick { 200.0 } else { 300.0 };
+    cfg.solver_time_limit = if quick { 0.3 } else { 2.0 };
+    cfg
+}
+
+/// Two-phase drifted traffic: phase A serves heavy requests from one
+/// corpus (the deployment gets sized — replicas, memory, β — for that
+/// load), then phase B shifts to light requests from a *re-permuted*
+/// corpus: a fresh token-rank permutation re-draws which experts are
+/// popular under the fixed gate, so the static deployment keeps billing
+/// replica head-times and above-saturation memory for experts that are no
+/// longer hot. Arrivals come from a bursty two-state MMPP.
+pub fn drift_scenario(preset: ModelPreset, quick: bool, seed: u64) -> TrafficScenario {
+    let platform = PlatformConfig::default();
+    let cpu = CpuClusterConfig::default();
+    let spec = preset.spec();
+    let gate = SimGate::new(&spec, 0xA11CE);
+
+    // Phase A: heavy requests; profile the predictor on the same corpus.
+    let batch_a = if quick { 2048 } else { 4096 };
+    let batch_b = if quick { 512 } else { 1024 };
+    let corpus_a = Corpus::new(CorpusPreset::Enwik8, seed);
+    let mut gen_a = RequestGenerator::new(corpus_a, seed ^ 0x11, batch_a);
+    let n_profile = if quick { 6 } else { 24 };
+    let profile = profile_batches(&gate, &gen_a.profile_set(n_profile));
+
+    // Bursty arrivals over the horizon.
+    let duration = if quick { 600.0 } else { 1500.0 };
+    let process = ArrivalProcess::Mmpp {
+        rate0: 0.8,
+        rate1: 0.1,
+        hold0: 40.0,
+        hold1: 50.0,
+    };
+    let arrivals = ArrivalGen::new(process, seed ^ 0x22).arrivals_until(duration);
+    let split = arrivals.len() / 4;
+
+    // Phase B: re-permuted corpus (new popular tokens → new popular
+    // experts) at 1/8 the request size.
+    let corpus_b = Corpus::new(CorpusPreset::Enwik8, seed ^ 0xD21F7);
+    let mut gen_b = RequestGenerator::new(corpus_b, seed ^ 0x33, batch_b);
+    let mut traffic = gen_a.timed_batches(&arrivals[..split]);
+    traffic.extend(gen_b.timed_batches(&arrivals[split..]));
+
+    TrafficScenario {
+        platform,
+        cpu,
+        spec,
+        gate,
+        table: profile.table,
+        prior: profile.prior,
+        traffic,
+    }
+}
+
+/// Cumulative cost at `t` from a report's timeline (0 before the first
+/// request).
+fn cost_at(report: &SimReport, t: f64) -> f64 {
+    report
+        .cost_timeline
+        .iter()
+        .take_while(|(at, _)| *at <= t)
+        .last()
+        .map(|(_, c)| *c)
+        .unwrap_or(0.0)
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let models: Vec<(&str, ModelPreset)> = if quick {
+        vec![("Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 })]
+    } else {
+        vec![
+            ("Bert MoE", ModelPreset::BertMoe { experts: 4, top_k: 1 }),
+            ("GPT2 MoE", ModelPreset::Gpt2Moe { top_k: 1 }),
+        ]
+    };
+
+    for (name, preset) in models {
+        let scn = drift_scenario(preset, quick, 0x5EED);
+        let cfg = scenario_config(quick);
+
+        // Each simulator is scoped so its online-learned table is dropped
+        // before the next run starts.
+
+        // (1) ours: online re-optimization with a BO refinement round.
+        let ours = {
+            let mut cfg_ours = cfg.clone();
+            cfg_ours.reoptimize = true;
+            cfg_ours.bo_round_iters = 1;
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                cfg_ours,
+            );
+            sim.run(&scn.traffic)
+        };
+
+        // (2) static: the same initial deployment, never re-optimized.
+        let stat = {
+            let mut cfg_static = cfg.clone();
+            cfg_static.reoptimize = false;
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                cfg_static,
+            );
+            sim.run(&scn.traffic)
+        };
+
+        // (3) LambdaML over-provisioning, never re-optimized.
+        let lam = {
+            let mut cfg_lam = cfg.clone();
+            cfg_lam.reoptimize = false;
+            let lam_policy = scn.lambdaml(&cfg_lam);
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                cfg_lam,
+            );
+            sim.run_with_policy(lam_policy, &scn.traffic)
+        };
+
+        // (4) CPU cluster.
+        let cpu = scn.cpu_cluster(false);
+
+        let mut t = Table::new(
+            &format!("Traffic — {name}: sustained serving under drifting MMPP load"),
+            &[
+                "deployment",
+                "billed cost",
+                "tput (tok/s)",
+                "p95 latency",
+                "redeploys",
+                "warm frac",
+            ],
+        );
+        let mut row = |label: &str, r: &SimReport| {
+            t.row(vec![
+                label.into(),
+                fcost(r.total_cost),
+                fnum(r.throughput_tps),
+                ftime(r.p95_latency),
+                r.redeploys.to_string(),
+                fnum(r.warm_fraction()),
+            ]);
+        };
+        row("ours (online re-opt + BO)", &ours);
+        row("static initial deployment", &stat);
+        row("LambdaML (max memory)", &lam);
+        row("CPU cluster", &cpu);
+        tables.push(t);
+
+        // Cost-over-time: the drift story in four checkpoints.
+        let horizon = scn
+            .traffic
+            .last()
+            .map(|tb| tb.at)
+            .unwrap_or(0.0)
+            .max(1.0);
+        let mut tt = Table::new(
+            &format!("Traffic — {name}: cumulative billed cost over time"),
+            &["time", "ours", "static", "LambdaML", "CPU cluster"],
+        );
+        for frac in [0.25, 0.5, 0.75, 1.0] {
+            let at = horizon * frac;
+            tt.row(vec![
+                format!("{:.0}s", at),
+                fcost(cost_at(&ours, at)),
+                fcost(cost_at(&stat, at)),
+                fcost(cost_at(&lam, at)),
+                fcost(scn.cpu.job_cost(at)),
+            ]);
+        }
+        tables.push(tt);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_is_two_phase_and_deterministic() {
+        let scn = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 1);
+        assert!(scn.traffic.len() > 10, "traffic len {}", scn.traffic.len());
+        assert!(scn.traffic.windows(2).all(|w| w[0].at <= w[1].at));
+        // Phase A requests are heavier than phase B requests.
+        let first = scn.traffic.first().unwrap().batch.total_tokens;
+        let last = scn.traffic.last().unwrap().batch.total_tokens;
+        assert!(first >= last * 4, "A={first} B={last}");
+        let scn2 = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 1);
+        assert_eq!(scn.traffic.len(), scn2.traffic.len());
+        assert_eq!(
+            scn.traffic[0].batch.sequences[0].tokens,
+            scn2.traffic[0].batch.sequences[0].tokens
+        );
+    }
+
+    #[test]
+    fn ours_beats_lambdaml_under_traffic() {
+        let t = &super::run(true)[0];
+        let cost = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0].starts_with(name))
+                .unwrap()[1]
+                .trim_start_matches('$')
+                .parse()
+                .unwrap()
+        };
+        let ours = cost("ours");
+        let lam = cost("LambdaML");
+        let cpu = cost("CPU cluster");
+        assert!(ours < lam, "ours {ours} vs lambdaml {lam}");
+        assert!(ours < cpu, "ours {ours} vs cpu {cpu}");
+    }
+}

@@ -27,5 +27,6 @@ pub mod model;
 pub mod platform;
 pub mod predictor;
 pub mod runtime;
+pub mod traffic;
 pub mod util;
 pub mod workload;

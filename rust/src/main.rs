@@ -82,8 +82,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use serverless_moe::coordinator::Server;
     use serverless_moe::runtime::default_artifacts_dir;
     anyhow::ensure!(
-        serverless_moe::runtime::artifacts_available(),
-        "artifacts missing — run `make artifacts`"
+        serverless_moe::runtime::serving_available(),
+        "real serving unavailable — run `make artifacts` and build with the real xla vendor set"
     );
     let n = args.get_usize("requests", 20);
     let platform = Config::default().platform;

@@ -26,7 +26,11 @@ pub struct EventOutcome {
     pub billed_cost: f64,
 }
 
-/// Event-simulate one MoE layer under `plan`.
+/// Event-simulate one MoE layer under `plan` with one uniform start state:
+/// every function (expert replicas and the gathering non-MoE layer) starts
+/// warm or cold together. This is the seed API; per-replica start states
+/// derived from the instance-lifecycle model go through
+/// [`simulate_layer_lifecycle`].
 pub fn simulate_layer(
     cfg: &PlatformConfig,
     spec: &MoeModelSpec,
@@ -34,12 +38,57 @@ pub fn simulate_layer(
     plan: &LayerPlan,
     warm: bool,
 ) -> EventOutcome {
+    let start_t = if warm { cfg.warm_start } else { cfg.cold_start };
+    simulate_layer_with(cfg, spec, layer, plan, &mut |_, _| start_t, start_t)
+}
+
+/// Event-simulate one MoE layer where `warm_replicas[i]` of expert `i`'s
+/// replicas start warm (their state derived from a `WarmPool`'s virtual
+/// clock, see `platform::lifecycle`) and the rest pay the cold start. The gather
+/// function is assumed warm (it serves every batch, so its keep-alive window
+/// rarely lapses; the lifecycle simulator charges its cold starts at the
+/// request level).
+pub fn simulate_layer_lifecycle(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    warm_replicas: &[usize],
+) -> EventOutcome {
+    assert_eq!(warm_replicas.len(), plan.experts.len());
+    let warm_start = cfg.warm_start;
+    let cold_start = cfg.cold_start;
+    simulate_layer_with(
+        cfg,
+        spec,
+        layer,
+        plan,
+        &mut |i, g| {
+            if g < warm_replicas[i] {
+                warm_start
+            } else {
+                cold_start
+            }
+        },
+        warm_start,
+    )
+}
+
+/// Shared event loop: `expert_start(expert, replica)` yields each replica's
+/// startup latency; `non_moe_start` is the gathering function's.
+fn simulate_layer_with(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    expert_start: &mut dyn FnMut(usize, usize) -> f64,
+    non_moe_start: f64,
+) -> EventOutcome {
     let d_in = spec.token_in_bytes as f64 * cfg.payload_overhead;
     let d_out = spec.token_out_bytes as f64 * cfg.payload_overhead;
     let bs = cfg.storage_bandwidth;
     let t_dl = cfg.storage_access_delay;
     let p_bytes = spec.layers[layer].expert.param_bytes;
-    let start_t = if warm { cfg.warm_start } else { cfg.cold_start };
 
     let mut replicas = Vec::new();
     let mut cost = 0.0;
@@ -99,7 +148,7 @@ pub fn simulate_layer(
         for g in 0..ep.replicas {
             // Head: start + parameter download (params live in storage).
             let fn_start = 0.0; // functions are invoked at t=0 (Fig. 8 stage 1)
-            let head_done = fn_start + start_t + t_dl + p_bytes as f64 / bs;
+            let head_done = fn_start + expert_start(i, g) + t_dl + p_bytes as f64 / bs;
             let input_ready = upload_done[i][g];
             let mut t = head_done.max(input_ready);
             let busy_from = fn_start;
@@ -137,7 +186,7 @@ pub fn simulate_layer(
     }
 
     // --- Stage 3: the next non-MoE layer loads + gathers. ---
-    let load_done = start_t + t_dl + spec.non_moe_param_bytes as f64 / bs;
+    let load_done = non_moe_start + t_dl + spec.non_moe_param_bytes as f64 / bs;
     let total_tokens: u64 = plan.experts.iter().map(|e| e.tokens).sum();
     let active_objects: usize = plan
         .experts
@@ -260,5 +309,31 @@ mod tests {
         let out = simulate_layer(&cfg, &spec, 0, &p, true);
         assert_eq!(out.replicas.len(), 1);
         assert!(out.billed_cost > 0.0);
+    }
+
+    #[test]
+    fn lifecycle_all_warm_matches_uniform_warm() {
+        let (cfg, spec) = setup();
+        let p = plan(CommMethod::Indirect, 1, &[800, 400, 200, 100]);
+        let uniform = simulate_layer(&cfg, &spec, 0, &p, true);
+        let lifecycle = simulate_layer_lifecycle(&cfg, &spec, 0, &p, &[1, 1, 1, 1]);
+        assert_eq!(uniform.latency, lifecycle.latency);
+        assert_eq!(uniform.billed_cost, lifecycle.billed_cost);
+    }
+
+    #[test]
+    fn lifecycle_mixed_between_warm_and_cold() {
+        let (cfg, spec) = setup();
+        let mut p = plan(CommMethod::Indirect, 1, &[2000, 1000, 500, 250]);
+        for ep in p.experts.iter_mut() {
+            ep.replicas = 2;
+        }
+        let warm = simulate_layer_lifecycle(&cfg, &spec, 0, &p, &[2, 2, 2, 2]);
+        let mixed = simulate_layer_lifecycle(&cfg, &spec, 0, &p, &[1, 1, 1, 1]);
+        let cold = simulate_layer_lifecycle(&cfg, &spec, 0, &p, &[0, 0, 0, 0]);
+        assert!(warm.billed_cost < mixed.billed_cost);
+        assert!(mixed.billed_cost < cold.billed_cost);
+        assert!(warm.latency <= mixed.latency);
+        assert!(mixed.latency <= cold.latency);
     }
 }

@@ -1,0 +1,166 @@
+//! Instance-lifecycle model: per-replica warm pools with keep-alive expiry.
+//!
+//! The seed pipeline threaded a hardcoded `warm: bool` through the timing
+//! models — fine for one pre-warmed batch, wrong for sustained traffic where
+//! warmness is a *consequence of the request history*. This module derives
+//! it from the virtual clock instead: every expert replica is a serverless
+//! function instance that stays warm for `keep_alive` seconds after its last
+//! invocation finishes (AWS Lambda keeps environments alive on the order of
+//! minutes) and is cold otherwise. Redeployment tears every instance down
+//! (`reset`), which is exactly why the ≥60 s deployment gap of §II
+//! Challenge 1 must be charged against availability by the traffic
+//! simulator.
+
+use crate::comm::LayerPlan;
+use std::collections::HashMap;
+
+/// Identity of one expert-replica function instance:
+/// `(moe_layer, expert, replica)`.
+pub type ReplicaKey = (usize, usize, usize);
+
+#[derive(Debug, Clone)]
+pub struct WarmPool {
+    /// Virtual time until which each instance stays warm. Instances absent
+    /// from the map have never been invoked (cold).
+    warm_until: HashMap<ReplicaKey, f64>,
+    /// Keep-alive window after an invocation finishes (seconds). Use
+    /// `f64::INFINITY` for a never-expiring (always-warm-once-touched) pool.
+    pub keep_alive: f64,
+    /// Invocation counters, split by derived start state.
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+}
+
+impl WarmPool {
+    pub fn new(keep_alive: f64) -> WarmPool {
+        assert!(keep_alive >= 0.0, "negative keep-alive");
+        WarmPool {
+            warm_until: HashMap::new(),
+            keep_alive,
+            warm_hits: 0,
+            cold_starts: 0,
+        }
+    }
+
+    /// Mark one instance warm forever (a warm-up invocation at deploy time,
+    /// as the paper's measurements do before Fig. 8).
+    pub fn prewarm(&mut self, key: ReplicaKey) {
+        self.warm_until.insert(key, f64::INFINITY);
+    }
+
+    /// Pre-warm every replica of every expert in a deployment plan.
+    pub fn prewarm_plan(&mut self, layers: &[LayerPlan]) {
+        for (l, plan) in layers.iter().enumerate() {
+            for (e, ep) in plan.experts.iter().enumerate() {
+                for g in 0..ep.replicas {
+                    self.prewarm((l, e, g));
+                }
+            }
+        }
+    }
+
+    /// Whether `key`'s next invocation at virtual time `now` starts warm.
+    pub fn is_warm(&self, key: ReplicaKey, now: f64) -> bool {
+        self.warm_until.get(&key).is_some_and(|&until| now <= until)
+    }
+
+    /// Number of `key = (layer, expert, g)` replicas warm at `now` among
+    /// `replicas` total.
+    pub fn warm_count(&self, layer: usize, expert: usize, replicas: usize, now: f64) -> usize {
+        (0..replicas)
+            .filter(|&g| self.is_warm((layer, expert, g), now))
+            .count()
+    }
+
+    /// Record an invocation of `key` starting at `now` and finishing at
+    /// `end`. Returns whether it started warm, and extends the instance's
+    /// keep-alive window past `end`.
+    pub fn invoke(&mut self, key: ReplicaKey, now: f64, end: f64) -> bool {
+        debug_assert!(end >= now, "invocation ends before it starts");
+        let warm = self.is_warm(key, now);
+        if warm {
+            self.warm_hits += 1;
+        } else {
+            self.cold_starts += 1;
+        }
+        let until = self.warm_until.entry(key).or_insert(f64::NEG_INFINITY);
+        *until = until.max(end + self.keep_alive);
+        warm
+    }
+
+    /// Tear down every instance (redeployment): everything starts cold.
+    pub fn reset(&mut self) {
+        self.warm_until.clear();
+    }
+
+    /// Fraction of invocations so far that started warm (1.0 before any).
+    pub fn warm_fraction(&self) -> f64 {
+        let total = self.warm_hits + self.cold_starts;
+        if total == 0 {
+            1.0
+        } else {
+            self.warm_hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommMethod, ExpertPlan};
+
+    #[test]
+    fn cold_until_invoked_then_keep_alive_window() {
+        let mut p = WarmPool::new(100.0);
+        let k = (0, 1, 0);
+        assert!(!p.is_warm(k, 0.0));
+        assert!(!p.invoke(k, 0.0, 5.0)); // first invocation is cold
+        assert!(p.is_warm(k, 50.0));
+        assert!(p.is_warm(k, 105.0)); // 5.0 + 100.0 keep-alive
+        assert!(!p.is_warm(k, 105.1));
+        assert!(p.invoke(k, 60.0, 70.0)); // within window: warm
+        assert_eq!(p.warm_hits, 1);
+        assert_eq!(p.cold_starts, 1);
+        assert!((p.warm_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_keep_alive_expires_immediately() {
+        let mut p = WarmPool::new(0.0);
+        let k = (0, 0, 0);
+        p.invoke(k, 0.0, 2.0);
+        assert!(p.is_warm(k, 2.0)); // boundary inclusive
+        assert!(!p.is_warm(k, 2.0001));
+    }
+
+    #[test]
+    fn prewarm_never_expires_until_reset() {
+        let mut p = WarmPool::new(1.0);
+        let plan = vec![LayerPlan {
+            method: CommMethod::Indirect,
+            beta: 1,
+            experts: vec![
+                ExpertPlan {
+                    mem_mb: 1024,
+                    replicas: 3,
+                    tokens: 10,
+                };
+                2
+            ],
+        }];
+        p.prewarm_plan(&plan);
+        assert_eq!(p.warm_count(0, 0, 3, 1.0e9), 3);
+        assert_eq!(p.warm_count(0, 1, 3, 1.0e9), 3);
+        p.reset();
+        assert_eq!(p.warm_count(0, 0, 3, 0.0), 0);
+    }
+
+    #[test]
+    fn invoke_never_shrinks_window() {
+        let mut p = WarmPool::new(10.0);
+        let k = (1, 2, 3);
+        p.invoke(k, 0.0, 100.0); // warm until 110
+        p.invoke(k, 50.0, 60.0); // must not shrink to 70
+        assert!(p.is_warm(k, 109.0));
+    }
+}

@@ -13,12 +13,14 @@ pub mod cpu_cluster;
 pub mod deployer;
 pub mod events;
 pub mod function;
+pub mod lifecycle;
 pub mod storage;
 
 pub use billing::Ledger;
 pub use cpu_cluster::CpuCluster;
 pub use deployer::Deployment;
 pub use function::FunctionInstance;
+pub use lifecycle::{ReplicaKey, WarmPool};
 pub use storage::ExternalStorage;
 
 use crate::config::PlatformConfig;

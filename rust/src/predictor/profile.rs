@@ -53,6 +53,25 @@ pub fn profile_batches(gate: &SimGate, batches: &[Batch]) -> ProfileResult {
     }
 }
 
+/// Online profiling: absorb one *served* batch's realized routing into an
+/// existing table — the Alg. 1 feedback path the traffic simulator drives
+/// between epochs, so the predictor tracks shifting expert popularity
+/// without a fresh offline profiling pass.
+pub fn absorb_batch(table: &mut DatasetTable, gate: &SimGate, batch: &Batch) {
+    for layer in 0..gate.num_layers {
+        for (t, p, a) in batch.tokens() {
+            let f = TokenFeature {
+                token_id: t,
+                position_id: p,
+                attention_id: a,
+            };
+            for &expert in &gate.route_token(layer, &f) {
+                table.add(layer, &f, expert, 1.0);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +92,24 @@ mod tests {
             assert!(lt.num_keys() > 0);
             let total: f64 = lt.expert_totals().iter().sum();
             assert_eq!(total as usize, r.tokens_profiled * spec.top_k);
+        }
+    }
+
+    #[test]
+    fn absorb_matches_offline_profiling() {
+        let spec = ModelPreset::TinyMoe.spec();
+        let gate = SimGate::new(&spec, 3);
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 1);
+        let mut gen = RequestGenerator::new(corpus, 5, 256);
+        let batches = gen.profile_set(2);
+        let offline = profile_batches(&gate, &batches);
+        let mut online = DatasetTable::new(&gate.experts_per_layer);
+        for b in &batches {
+            absorb_batch(&mut online, &gate, b);
+        }
+        for (a, b) in offline.table.layers.iter().zip(&online.layers) {
+            assert_eq!(a.num_keys(), b.num_keys());
+            assert_eq!(a.expert_totals(), b.expert_totals());
         }
     }
 

@@ -36,3 +36,17 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
 pub fn artifacts_available() -> bool {
     default_artifacts_dir().join("manifest.json").is_file()
 }
+
+/// Whether a real PJRT backend is linked in (false when built against the
+/// stub `xla` crate in `vendor/xla`).
+pub fn pjrt_available() -> bool {
+    xla::is_available()
+}
+
+/// Precondition of the real end-to-end serving path: compiled artifacts on
+/// disk AND a real PJRT backend. Tests and examples that execute the tiny
+/// MoE model skip cleanly when this is false (e.g. `make artifacts` not run,
+/// or an offline build against the stub xla crate).
+pub fn serving_available() -> bool {
+    artifacts_available() && pjrt_available()
+}

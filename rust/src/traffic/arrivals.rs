@@ -1,0 +1,219 @@
+//! Arrival processes: deterministic rate, Poisson, and a bursty two-state
+//! Markov-modulated Poisson process (MMPP).
+//!
+//! Serverless MoE serving is sensitive to arrival structure: steady traffic
+//! keeps instances warm, while bursts land on cold replicas and shift which
+//! experts are hot — the dynamic-workload regime that Remoe and FaaSMoE
+//! stress and that the BO re-optimization loop exists to handle.
+
+use crate::util::rng::Rng;
+
+/// The stochastic process generating request arrival times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Fixed inter-arrival gap of `1/rate` seconds.
+    Deterministic { rate: f64 },
+    /// Poisson process: i.i.d. exponential inter-arrivals at `rate`/s.
+    Poisson { rate: f64 },
+    /// Two-state MMPP: the process alternates between states 0 and 1 with
+    /// exponential holding times of mean `hold0`/`hold1` seconds; while in
+    /// state s, arrivals are Poisson at `rate_s`. With `rate0 >> rate1`
+    /// this produces the bursty on/off traffic of real serving frontends.
+    Mmpp {
+        rate0: f64,
+        rate1: f64,
+        hold0: f64,
+        hold1: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (requests/second) — what the property
+    /// tests check empirical rates against.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Deterministic { rate } | ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Mmpp {
+                rate0,
+                rate1,
+                hold0,
+                hold1,
+            } => (rate0 * hold0 + rate1 * hold1) / (hold0 + hold1),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Deterministic { .. } => "deterministic",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+        }
+    }
+
+    fn validate(&self) {
+        match *self {
+            ArrivalProcess::Deterministic { rate } | ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be > 0");
+            }
+            ArrivalProcess::Mmpp {
+                rate0,
+                rate1,
+                hold0,
+                hold1,
+            } => {
+                assert!(
+                    rate0 > 0.0 && rate1 > 0.0 && rate0.is_finite() && rate1.is_finite(),
+                    "MMPP rates must be finite and > 0"
+                );
+                assert!(
+                    hold0 > 0.0 && hold1 > 0.0 && hold0.is_finite() && hold1.is_finite(),
+                    "MMPP holding times must be finite and > 0"
+                );
+            }
+        }
+    }
+}
+
+/// Stateful, deterministic (seeded) generator of arrival timestamps.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    pub process: ArrivalProcess,
+    rng: Rng,
+    clock: f64,
+    /// Current MMPP state (0 or 1) and its remaining holding time.
+    state: usize,
+    state_left: f64,
+}
+
+impl ArrivalGen {
+    pub fn new(process: ArrivalProcess, seed: u64) -> ArrivalGen {
+        process.validate();
+        ArrivalGen {
+            process,
+            rng: Rng::new(seed),
+            clock: 0.0,
+            state: 0,
+            state_left: 0.0,
+        }
+    }
+
+    /// Next inter-arrival gap (seconds; non-negative and finite).
+    pub fn next_gap(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Deterministic { rate } => 1.0 / rate,
+            ArrivalProcess::Poisson { rate } => self.rng.exponential(rate),
+            ArrivalProcess::Mmpp {
+                rate0,
+                rate1,
+                hold0,
+                hold1,
+            } => {
+                // Advance through exponential state-holding periods until an
+                // arrival fires; memorylessness lets the partial exponential
+                // draw be discarded at each state switch.
+                let mut gap = 0.0;
+                loop {
+                    if self.state_left <= 0.0 {
+                        let hold = if self.state == 0 { hold0 } else { hold1 };
+                        self.state_left = self.rng.exponential(1.0 / hold);
+                    }
+                    let rate = if self.state == 0 { rate0 } else { rate1 };
+                    let draw = self.rng.exponential(rate);
+                    if draw <= self.state_left {
+                        self.state_left -= draw;
+                        return gap + draw;
+                    }
+                    gap += self.state_left;
+                    self.state_left = 0.0;
+                    self.state = 1 - self.state;
+                }
+            }
+        }
+    }
+
+    /// Next absolute arrival time on the generator's clock.
+    pub fn next_arrival(&mut self) -> f64 {
+        self.clock += self.next_gap();
+        self.clock
+    }
+
+    /// All arrival times in `[0, duration)`, in order.
+    pub fn arrivals_until(&mut self, duration: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_arrival();
+            if t >= duration {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_is_evenly_spaced() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Deterministic { rate: 4.0 }, 1);
+        let a = g.arrivals_until(2.0);
+        assert_eq!(a.len(), 7); // 0.25, 0.5, ..., 1.75
+        for w in a.windows(2) {
+            assert!((w[1] - w[0] - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_and_positive() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 10.0 },
+            ArrivalProcess::Mmpp {
+                rate0: 20.0,
+                rate1: 2.0,
+                hold0: 5.0,
+                hold1: 5.0,
+            },
+        ] {
+            let mut g = ArrivalGen::new(p, 7);
+            let a = g.arrivals_until(50.0);
+            assert!(!a.is_empty());
+            assert!(a[0] > 0.0);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]));
+            assert!(a.iter().all(|t| t.is_finite() && *t < 50.0));
+        }
+    }
+
+    #[test]
+    fn seeded_generators_reproduce() {
+        let p = ArrivalProcess::Mmpp {
+            rate0: 12.0,
+            rate1: 4.0,
+            hold0: 3.0,
+            hold1: 7.0,
+        };
+        let a = ArrivalGen::new(p, 42).arrivals_until(100.0);
+        let b = ArrivalGen::new(p, 42).arrivals_until(100.0);
+        assert_eq!(a, b);
+        let c = ArrivalGen::new(p, 43).arrivals_until(100.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mmpp_mean_rate_formula() {
+        let p = ArrivalProcess::Mmpp {
+            rate0: 20.0,
+            rate1: 2.0,
+            hold0: 5.0,
+            hold1: 5.0,
+        };
+        assert!((p.mean_rate() - 11.0).abs() < 1e-12);
+        let q = ArrivalProcess::Mmpp {
+            rate0: 12.0,
+            rate1: 4.0,
+            hold0: 3.0,
+            hold1: 7.0,
+        };
+        assert!((q.mean_rate() - 6.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! Epoch-based traffic simulation (the serving dimension the single-batch
+//! seed lacked).
+//!
+//! The paper's headline numbers are measured under *sustained* request
+//! traffic on AWS Lambda; reproducing them needs an arrival process, a
+//! cold/warm instance lifecycle across requests, and the online feedback
+//! loop in which the predictor re-learns expert popularity as traffic
+//! shifts (§IV, Alg. 1). This subsystem provides all three:
+//!
+//!  - [`arrivals`] — deterministic-rate, Poisson and two-state MMPP arrival
+//!    generators producing timestamped requests;
+//!  - [`trace`]    — a JSON request-trace format with replay (schema
+//!    documented on [`trace::Trace`]);
+//!  - [`epoch`]    — the epoch loop: serve a traffic window against the
+//!    current deployment with warmness derived from the
+//!    `platform::lifecycle::WarmPool` virtual clock, feed realized expert
+//!    counts back into the predictor's dataset table, and re-run ODS
+//!    (optionally after a BO refinement round) when realized popularity
+//!    drifts past a threshold — charging the ≥60 s redeployment gap against
+//!    availability (§II Challenge 1);
+//!  - [`report`]   — the [`report::SimReport`] aggregate (billed cost over
+//!    time, throughput, latency percentiles) used by the golden-regression
+//!    fixtures and the `experiments::traffic` scenario runner.
+
+pub mod arrivals;
+pub mod epoch;
+pub mod report;
+pub mod trace;
+
+pub use arrivals::{ArrivalGen, ArrivalProcess};
+pub use epoch::{EpochSimulator, TrafficConfig};
+pub use report::SimReport;
+pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,186 @@
+//! Aggregate serving report: billed cost over time, throughput and latency
+//! percentiles — the quantity the golden-regression fixtures pin down and
+//! the `experiments::traffic` tables print.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    pub requests: u64,
+    pub tokens: u64,
+    /// Wall-clock span of the simulation (first arrival to last finish).
+    pub duration: f64,
+    /// Summed billed cost of all MoE layers over the whole run (the paper's
+    /// objective, accumulated across requests).
+    pub total_cost: f64,
+    pub throughput_tps: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    /// Epoch boundaries evaluated and re-deployments performed.
+    pub epochs: u64,
+    pub redeploys: u64,
+    /// Invocation start states derived from the warm pool.
+    pub warm_invocations: u64,
+    pub cold_invocations: u64,
+    /// Batches that hit a memory violation (case (i) of Alg. 2).
+    pub violation_batches: u64,
+    /// (time, cumulative billed cost) at each served request.
+    pub cost_timeline: Vec<(f64, f64)>,
+}
+
+impl SimReport {
+    /// Build from raw per-request samples.
+    pub fn from_samples(
+        latencies: &[f64],
+        tokens: u64,
+        duration: f64,
+        total_cost: f64,
+    ) -> SimReport {
+        SimReport {
+            requests: latencies.len() as u64,
+            tokens,
+            duration,
+            total_cost,
+            throughput_tps: if duration > 0.0 {
+                tokens as f64 / duration
+            } else {
+                0.0
+            },
+            mean_latency: stats::mean(latencies),
+            p50_latency: stats::percentile(latencies, 50.0),
+            p95_latency: stats::percentile(latencies, 95.0),
+            p99_latency: stats::percentile(latencies, 99.0),
+            epochs: 0,
+            redeploys: 0,
+            warm_invocations: 0,
+            cold_invocations: 0,
+            violation_batches: 0,
+            cost_timeline: Vec::new(),
+        }
+    }
+
+    /// Fraction of invocations that started warm (1.0 before any).
+    pub fn warm_fraction(&self) -> f64 {
+        let total = self.warm_invocations + self.cold_invocations;
+        if total == 0 {
+            1.0
+        } else {
+            self.warm_invocations as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("duration", Json::num(self.duration)),
+            ("total_cost", Json::num(self.total_cost)),
+            ("throughput_tps", Json::num(self.throughput_tps)),
+            ("mean_latency", Json::num(self.mean_latency)),
+            ("p50_latency", Json::num(self.p50_latency)),
+            ("p95_latency", Json::num(self.p95_latency)),
+            ("p99_latency", Json::num(self.p99_latency)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("redeploys", Json::num(self.redeploys as f64)),
+            ("warm_invocations", Json::num(self.warm_invocations as f64)),
+            ("cold_invocations", Json::num(self.cold_invocations as f64)),
+            ("violation_batches", Json::num(self.violation_batches as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SimReport> {
+        let need = |k: &str| {
+            j.get_f64(k)
+                .ok_or_else(|| anyhow::anyhow!("sim report missing '{k}'"))
+        };
+        Ok(SimReport {
+            requests: need("requests")? as u64,
+            tokens: need("tokens")? as u64,
+            duration: need("duration")?,
+            total_cost: need("total_cost")?,
+            throughput_tps: need("throughput_tps")?,
+            mean_latency: need("mean_latency")?,
+            p50_latency: need("p50_latency")?,
+            p95_latency: need("p95_latency")?,
+            p99_latency: need("p99_latency")?,
+            epochs: need("epochs")? as u64,
+            redeploys: need("redeploys")? as u64,
+            warm_invocations: need("warm_invocations")? as u64,
+            cold_invocations: need("cold_invocations")? as u64,
+            violation_batches: need("violation_batches")? as u64,
+            cost_timeline: Vec::new(),
+        })
+    }
+
+    /// Golden-fixture comparison: cost, throughput and p95 latency must each
+    /// match within `rel_tol` relative error. Returns a human-readable diff
+    /// on mismatch so regression failures are actionable.
+    pub fn close_to(&self, golden: &SimReport, rel_tol: f64) -> Result<(), String> {
+        let check = |name: &str, got: f64, want: f64| -> Result<(), String> {
+            let scale = want.abs().max(1e-12);
+            if (got - want).abs() / scale <= rel_tol {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{name}: got {got:.9} vs golden {want:.9} (rel tol {rel_tol})"
+                ))
+            }
+        };
+        check("total_cost", self.total_cost, golden.total_cost)?;
+        check("throughput_tps", self.throughput_tps, golden.throughput_tps)?;
+        check("p95_latency", self.p95_latency, golden.p95_latency)?;
+        if self.requests != golden.requests {
+            return Err(format!(
+                "requests: got {} vs golden {}",
+                self.requests, golden.requests
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimReport {
+        let mut r = SimReport::from_samples(&[0.5, 1.0, 2.0, 4.0], 4096, 100.0, 0.125);
+        r.epochs = 3;
+        r.redeploys = 1;
+        r.warm_invocations = 30;
+        r.cold_invocations = 10;
+        r
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = sample();
+        assert!(r.p50_latency <= r.p95_latency);
+        assert!(r.p95_latency <= r.p99_latency);
+        assert!((r.throughput_tps - 40.96).abs() < 1e-9);
+        assert!((r.warm_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let back = SimReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.requests, r.requests);
+        assert_eq!(back.total_cost, r.total_cost);
+        assert_eq!(back.p95_latency, r.p95_latency);
+        assert!(back.close_to(&r, 1e-12).is_ok());
+    }
+
+    #[test]
+    fn close_to_detects_drift() {
+        let r = sample();
+        let mut off = r.clone();
+        off.total_cost *= 1.5;
+        let err = r.close_to(&off, 1e-6).unwrap_err();
+        assert!(err.contains("total_cost"), "{err}");
+        assert!(r.close_to(&r, 0.0).is_ok());
+    }
+}

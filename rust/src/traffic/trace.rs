@@ -1,0 +1,233 @@
+//! JSON request traces: a portable serving workload description.
+//!
+//! Schema (see `rust/tests/data/trace_small.json` for a committed example):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "requests": [
+//!     { "time": 0.0,  "tokens": 512, "seed": 1 },
+//!     { "time": 1.25, "tokens": 2048 }
+//!   ]
+//! }
+//! ```
+//!
+//! `time` is the arrival timestamp in seconds (non-decreasing), `tokens`
+//! the request's target token count, and `seed` (optional, defaults to the
+//! request index) makes the synthesized batch content reproducible per
+//! request. Replay materializes each request into a timestamped `Batch`
+//! through the corpus model, preserving order and token targets.
+
+use super::arrivals::{ArrivalGen, ArrivalProcess};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{Batch, Corpus, TimedBatch};
+use std::path::Path;
+
+/// One traced request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time (seconds, non-decreasing across the trace).
+    pub time: f64,
+    /// Target token count of the request's batch.
+    pub tokens: usize,
+    /// Content seed (reproducible batch synthesis).
+    pub seed: u64,
+}
+
+/// A full request trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let arr = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'requests' array"))?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            let time = r
+                .get_f64("time")
+                .ok_or_else(|| anyhow::anyhow!("trace request {i}: missing 'time'"))?;
+            let tokens = r
+                .get_usize("tokens")
+                .ok_or_else(|| anyhow::anyhow!("trace request {i}: missing 'tokens'"))?;
+            anyhow::ensure!(
+                time.is_finite() && time >= 0.0,
+                "trace request {i}: bad time {time}"
+            );
+            anyhow::ensure!(tokens > 0, "trace request {i}: zero tokens");
+            let seed = r.get("seed").and_then(Json::as_u64).unwrap_or(i as u64);
+            // Seeds travel as JSON numbers (f64): values at or above 2^53
+            // would silently round, so reject them loudly instead.
+            anyhow::ensure!(
+                seed < (1u64 << 53),
+                "trace request {i}: seed {seed} exceeds the 2^53 JSON-number range"
+            );
+            requests.push(TraceRequest { time, tokens, seed });
+        }
+        anyhow::ensure!(
+            requests.windows(2).all(|w| w[0].time <= w[1].time),
+            "trace timestamps must be non-decreasing"
+        );
+        Ok(Trace { requests })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("version", Json::num(1.0)),
+            (
+                "requests",
+                Json::Arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("time", Json::num(r.time)),
+                                ("tokens", Json::num(r.tokens as f64)),
+                                ("seed", Json::num(r.seed as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        Self::from_json(&Json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens).sum()
+    }
+
+    /// Time of the last request (0 for an empty trace).
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map(|r| r.time).unwrap_or(0.0)
+    }
+
+    /// Synthesize a trace from an arrival process with a fixed per-request
+    /// token target.
+    pub fn synthesize(
+        process: ArrivalProcess,
+        seed: u64,
+        duration: f64,
+        tokens_per_request: usize,
+    ) -> Trace {
+        let arrivals = ArrivalGen::new(process, seed).arrivals_until(duration);
+        Trace {
+            requests: arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &time)| TraceRequest {
+                    time,
+                    tokens: tokens_per_request,
+                    // Masked to 53 bits so the trace survives its own JSON
+                    // serialization exactly.
+                    seed: seed.wrapping_add(i as u64) & ((1 << 53) - 1),
+                })
+                .collect(),
+        }
+    }
+
+    /// Materialize the trace into timestamped batches over `corpus`: each
+    /// request becomes a batch of at least `tokens` tokens whose content is
+    /// determined by `(base_seed, request.seed)` — replay preserves both the
+    /// timestamp order and every request's token target.
+    pub fn replay(&self, corpus: &Corpus, base_seed: u64) -> Vec<TimedBatch> {
+        self.requests
+            .iter()
+            .map(|r| {
+                let mut rng = Rng::new(base_seed ^ r.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let seqs = corpus.sample_tokens(&mut rng, r.tokens.max(1));
+                TimedBatch {
+                    at: r.time,
+                    batch: Batch::from_sequences(seqs),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::CorpusPreset;
+
+    fn small() -> Trace {
+        Trace {
+            requests: vec![
+                TraceRequest { time: 0.0, tokens: 128, seed: 1 },
+                TraceRequest { time: 0.5, tokens: 256, seed: 2 },
+                TraceRequest { time: 2.0, tokens: 128, seed: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let t = small();
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back, t);
+        // Text-level roundtrip too (what the committed fixture exercises).
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(Trace::from_json(&parsed).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::from_json(&Json::parse("{}").unwrap()).is_err());
+        let unsorted = r#"{"requests":[{"time":5,"tokens":8},{"time":1,"tokens":8}]}"#;
+        assert!(Trace::from_json(&Json::parse(unsorted).unwrap()).is_err());
+        let zero = r#"{"requests":[{"time":0,"tokens":0}]}"#;
+        assert!(Trace::from_json(&Json::parse(zero).unwrap()).is_err());
+        let neg = r#"{"requests":[{"time":-1,"tokens":4}]}"#;
+        assert!(Trace::from_json(&Json::parse(neg).unwrap()).is_err());
+    }
+
+    #[test]
+    fn replay_preserves_order_and_token_targets() {
+        let t = small();
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 9);
+        let batches = t.replay(&corpus, 77);
+        assert_eq!(batches.len(), t.requests.len());
+        for (tb, r) in batches.iter().zip(&t.requests) {
+            assert_eq!(tb.at, r.time);
+            assert!(tb.batch.total_tokens >= r.tokens);
+        }
+        assert!(batches.windows(2).all(|w| w[0].at <= w[1].at));
+        // Deterministic: same (corpus, base_seed) reproduces content.
+        let again = t.replay(&corpus, 77);
+        assert_eq!(
+            batches[1].batch.sequences[0].tokens,
+            again[1].batch.sequences[0].tokens
+        );
+    }
+
+    #[test]
+    fn synthesize_matches_process() {
+        let t = Trace::synthesize(ArrivalProcess::Deterministic { rate: 2.0 }, 5, 10.0, 64);
+        assert_eq!(t.requests.len(), 19);
+        assert_eq!(t.total_tokens(), 19 * 64);
+        assert!(t.duration() < 10.0);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("smoe_trace_test");
+        let path = dir.join("t.json");
+        let t = small();
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -5,4 +5,4 @@ pub mod corpus;
 pub mod requests;
 
 pub use corpus::{Corpus, Sequence};
-pub use requests::{Batch, RequestGenerator};
+pub use requests::{Batch, RequestGenerator, TimedBatch};

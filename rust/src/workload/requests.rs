@@ -31,6 +31,15 @@ impl Batch {
     }
 }
 
+/// A batch stamped with its (virtual) arrival time — the unit of work the
+/// traffic simulator serves.
+#[derive(Debug, Clone)]
+pub struct TimedBatch {
+    /// Arrival time on the virtual clock (seconds).
+    pub at: f64,
+    pub batch: Batch,
+}
+
 /// Deterministic stream of batches from a corpus.
 pub struct RequestGenerator {
     corpus: Corpus,
@@ -60,6 +69,25 @@ impl RequestGenerator {
     /// the key-value dataset table is built from; §III-A).
     pub fn profile_set(&mut self, n: usize) -> Vec<Batch> {
         (0..n).map(|_| self.next_batch()).collect()
+    }
+
+    /// One batch with an explicit token target (trace replay, where each
+    /// request carries its own size).
+    pub fn batch_with_tokens(&mut self, target_tokens: usize) -> Batch {
+        let seqs = self.corpus.sample_tokens(&mut self.rng, target_tokens.max(1));
+        Batch::from_sequences(seqs)
+    }
+
+    /// One batch per arrival timestamp — how the traffic arrival processes
+    /// and trace replay emit timestamped work through the generator.
+    pub fn timed_batches(&mut self, arrivals: &[f64]) -> Vec<TimedBatch> {
+        arrivals
+            .iter()
+            .map(|&at| TimedBatch {
+                at,
+                batch: self.next_batch(),
+            })
+            .collect()
     }
 }
 

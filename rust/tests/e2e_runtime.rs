@@ -4,7 +4,7 @@
 
 use serverless_moe::config::PlatformConfig;
 use serverless_moe::coordinator::{MoeService, Server};
-use serverless_moe::runtime::{artifacts_available, default_artifacts_dir};
+use serverless_moe::runtime::{default_artifacts_dir, serving_available};
 use serverless_moe::util::json::Json;
 
 fn golden() -> Option<(Vec<u32>, f64, Vec<f64>)> {
@@ -28,8 +28,8 @@ fn golden() -> Option<(Vec<u32>, f64, Vec<f64>)> {
 
 #[test]
 fn serving_matches_python_reference() {
-    if !artifacts_available() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    if !serving_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`) or no real PJRT backend");
         return;
     }
     let (ids, want_norm, want_head) = golden().expect("golden.json present");
@@ -66,7 +66,7 @@ fn serving_matches_python_reference() {
 
 #[test]
 fn serving_is_deterministic() {
-    if !artifacts_available() {
+    if !serving_available() {
         return;
     }
     let (ids, _, _) = golden().unwrap();
@@ -79,7 +79,7 @@ fn serving_is_deterministic() {
 
 #[test]
 fn threaded_server_serves_concurrent_clients() {
-    if !artifacts_available() {
+    if !serving_available() {
         return;
     }
     let server = Server::start(default_artifacts_dir(), PlatformConfig::default()).unwrap();
@@ -110,7 +110,7 @@ fn threaded_server_serves_concurrent_clients() {
 #[test]
 fn routed_sparse_equals_dense_reference_routing() {
     // The service's top-1 routing must agree with gating probs argmax.
-    if !artifacts_available() {
+    if !serving_available() {
         return;
     }
     let mut svc = MoeService::new(&default_artifacts_dir(), PlatformConfig::default()).unwrap();

@@ -1,0 +1,228 @@
+//! Stub of the `xla` (xla-rs / PJRT) API surface this repo uses.
+//!
+//! The real PJRT backend is not part of the offline build environment, so
+//! this crate keeps the serving coordinator compiling and host-side
+//! `Literal` conversions working (data is stored faithfully), while any
+//! attempt to create a PJRT client or execute an executable returns a clear
+//! error. `xla::is_available()` reports `false` so tests and examples skip
+//! the real end-to-end serving path; swapping in the real xla-rs vendor set
+//! (same API) re-enables it without source changes.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` lifts it into
+/// `anyhow::Error` at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: built against the stub `xla` crate (vendor/xla); \
+         real PJRT execution requires the xla-rs vendor set"
+    ))
+}
+
+/// Whether a real PJRT backend is linked in. Always `false` for the stub.
+pub fn is_available() -> bool {
+    false
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side literal: element data plus dimensions. Fully functional in the
+/// stub (used by `runtime::tensor` conversions and their tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: sealed::Sealed + Copy + Sized {
+    fn literal_from(v: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal_from(v: &[f32]) -> Literal {
+        Literal {
+            data: Data::F32(v.to_vec()),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_from(v: &[i32]) -> Literal {
+        Literal {
+            data: Data::I32(v.to_vec()),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".to_string())),
+        }
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::literal_from(v)
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the element buffer under new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) mismatches buffer of {have}"
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Flatten a tuple literal. Only produced by real PJRT execution, so the
+    /// stub never has one to flatten.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Stub PJRT client: creation always fails (no backend).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[5i32, -9]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -9]);
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(!is_available());
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
