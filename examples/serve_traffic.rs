@@ -6,18 +6,22 @@
 //!   cargo run --release --example serve_traffic
 //!   cargo run --release --example serve_traffic -- --model gpt2 --full
 //!   cargo run --release --example serve_traffic -- --trace rust/tests/data/trace_small.json
+//!   cargo run --release --example serve_traffic -- --concurrency 1 --autoscale queue:5
 //!
 //! Options:
 //!   --model M        bert | gpt2 | bert2bert | tiny     (default bert)
 //!   --trace PATH     replay a JSON trace (see traffic::trace for schema)
 //!   --seed N         scenario RNG seed                  (default 0x5EED)
 //!   --no-reopt       disable online re-optimization for the "ours" run
+//!   --concurrency N  invocations one instance runs at once; 0 = unbounded
+//!                    (default 0, the PR 1 model; 1 = Lambda semantics)
+//!   --autoscale P    off | util:<target> | queue:<max_wait_secs>
 //!   --full           full-scale scenario (quick otherwise)
 
 use serverless_moe::config::workload::CorpusPreset;
 use serverless_moe::experiments::traffic::{drift_scenario, scenario_config};
 use serverless_moe::model::ModelPreset;
-use serverless_moe::traffic::{EpochSimulator, SimReport, Trace};
+use serverless_moe::traffic::{AutoscalePolicy, EpochSimulator, SimReport, Trace};
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::table::{fcost, fnum, ftime, Table};
 use serverless_moe::workload::Corpus;
@@ -30,9 +34,28 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
         fnum(r.throughput_tps),
         ftime(r.p50_latency),
         ftime(r.p95_latency),
+        ftime(r.mean_queue_delay),
+        fnum(r.max_utilization),
         r.redeploys.to_string(),
+        format!("{}/{}", r.scale_outs, r.scale_ins),
         fnum(r.warm_fraction()),
     ]);
+}
+
+fn parse_autoscale(spec: &str) -> anyhow::Result<AutoscalePolicy> {
+    if spec == "off" {
+        return Ok(AutoscalePolicy::Off);
+    }
+    if let Some(target) = spec.strip_prefix("util:") {
+        return Ok(AutoscalePolicy::TargetUtilization { target: target.parse()? });
+    }
+    if let Some(max_wait) = spec.strip_prefix("queue:") {
+        return Ok(AutoscalePolicy::QueueDepth {
+            max_wait: max_wait.parse()?,
+            idle_below: 0.2,
+        });
+    }
+    anyhow::bail!("unknown --autoscale '{spec}' (off | util:<target> | queue:<max_wait_secs>)")
 }
 
 fn main() -> anyhow::Result<()> {
@@ -63,7 +86,12 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let cfg = scenario_config(quick);
+    let mut cfg = scenario_config(quick);
+    cfg.concurrency = match args.get_usize("concurrency", 0) {
+        0 => None,
+        c => Some(c),
+    };
+    cfg.autoscale = parse_autoscale(&args.get_or("autoscale", "off"))?;
 
     // Ours: online re-optimization (+ one BO refinement round per redeploy).
     let mut cfg_ours = cfg.clone();
@@ -114,7 +142,10 @@ fn main() -> anyhow::Result<()> {
             "tput (tok/s)",
             "p50",
             "p95",
+            "mean qdelay",
+            "max util",
             "redeploys",
+            "scale +/-",
             "warm frac",
         ],
     );
@@ -132,6 +163,12 @@ fn main() -> anyhow::Result<()> {
     );
     if !sim_ours.redeploy_times.is_empty() {
         println!("re-deployments at t = {:?} (s)", sim_ours.redeploy_times);
+    }
+    if !sim_ours.autoscale_events.is_empty() {
+        println!(
+            "autoscaler actions (t, +out/-in replicas): {:?}",
+            sim_ours.autoscale_events
+        );
     }
     if let Some(policy) = &sim_ours.last_policy {
         // Materialize the final deployment to show its platform footprint.

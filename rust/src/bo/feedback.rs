@@ -2,16 +2,17 @@
 //! feedback signal c_τ of Alg. 2 (lines 25-28), plus the per-expert
 //! constraint checks driving the feedback cases (lines 11-19).
 
-use crate::comm::timing::{direct_feasible, memory_feasible, replica_time};
+use crate::comm::timing::{
+    direct_feasible, effective_replica_time, memory_feasible, replica_time,
+};
 use crate::comm::CommMethod;
 use crate::config::PlatformConfig;
 use crate::deploy::DeploymentPolicy;
 use crate::model::MoeModelSpec;
 
-/// Thrash multiplier when real load exceeds the configured memory: the
-/// function pages/spills (or OOM-retries on a replica), inflating its run
-/// time. The paper treats this as a hard signal for case (i).
-pub const MEMORY_THRASH_FACTOR: f64 = 2.5;
+// Historical home of the thrash multiplier; it now lives with the rest of
+// the penalty model in `comm::timing` (re-exported here for callers).
+pub use crate::comm::timing::MEMORY_THRASH_FACTOR;
 
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
@@ -59,18 +60,18 @@ pub fn serve_with_real_counts(
             if ep.tokens == 0 {
                 continue;
             }
-            let mut t_rep = replica_time(cfg, spec, e, ep, plan.method, plan.beta, warm);
-            if !memory_feasible(spec, e, ep) {
+            let mem_bad = !memory_feasible(spec, e, ep);
+            if mem_bad {
                 memory_violations.push((e, i));
-                t_rep *= MEMORY_THRASH_FACTOR;
             }
-            if plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep) {
+            let payload_bad =
+                plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep);
+            if payload_bad {
                 payload_violations.push((e, i));
-                // Payload overflow forces a fallback to indirect transfer for
-                // this expert — pay the indirect time instead (plus a retry).
-                let t_ind = replica_time(cfg, spec, e, ep, CommMethod::Indirect, 1, warm);
-                t_rep = t_rep.max(t_ind) + cfg.storage_access_delay;
             }
+            let t_rep = effective_replica_time(
+                cfg, spec, e, ep, plan.method, plan.beta, warm, mem_bad, payload_bad,
+            );
             layer_cost += cfg.run_cost(ep.mem_mb, ep.replicas as f64 * t_rep)
                 + ep.replicas as f64 * cfg.price_per_invocation;
             max_finish = max_finish.max(t_rep);
@@ -114,10 +115,36 @@ pub fn serve_with_warmness(
     real_tokens: &[Vec<u64>],
     warm_of: &mut dyn FnMut(usize, usize, usize) -> bool,
 ) -> ServeOutcome {
+    serve_with_warmness_detailed(cfg, spec, policy, real_tokens, warm_of).outcome
+}
+
+/// [`serve_with_warmness`] plus the per-replica execution breakdown the
+/// traffic simulator's FIFO instance queues schedule: each invoked replica's
+/// busy time, keyed by `(layer, expert, replica)` in deterministic
+/// (layer-major) order.
+#[derive(Debug, Clone)]
+pub struct ReplicaServeOutcome {
+    pub outcome: ServeOutcome,
+    /// `((layer, expert, replica), execution_secs)` for every replica of
+    /// every expert with a non-zero real load.
+    pub replica_times: Vec<((usize, usize, usize), f64)>,
+}
+
+/// Primary implementation behind [`serve_with_warmness`]: identical
+/// accounting, but also returns each replica's execution time so callers
+/// (the queued epoch loop) can reserve per-instance busy windows.
+pub fn serve_with_warmness_detailed(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    policy: &DeploymentPolicy,
+    real_tokens: &[Vec<u64>],
+    warm_of: &mut dyn FnMut(usize, usize, usize) -> bool,
+) -> ReplicaServeOutcome {
     let mut cost = 0.0;
     let mut latency = 0.0;
     let mut memory_violations = Vec::new();
     let mut payload_violations = Vec::new();
+    let mut replica_times: Vec<((usize, usize, usize), f64)> = Vec::new();
 
     for (e, plan) in policy.layers.iter().enumerate() {
         let mut real_plan = plan.clone();
@@ -143,16 +170,12 @@ pub fn serve_with_warmness(
             let mut busy = 0.0;
             for g in 0..ep.replicas {
                 let warm = warm_of(e, i, g);
-                let mut t_rep = replica_time(cfg, spec, e, ep, plan.method, plan.beta, warm);
-                if mem_bad {
-                    t_rep *= MEMORY_THRASH_FACTOR;
-                }
-                if payload_bad {
-                    let t_ind = replica_time(cfg, spec, e, ep, CommMethod::Indirect, 1, warm);
-                    t_rep = t_rep.max(t_ind) + cfg.storage_access_delay;
-                }
+                let t_rep = effective_replica_time(
+                    cfg, spec, e, ep, plan.method, plan.beta, warm, mem_bad, payload_bad,
+                );
                 busy += t_rep;
                 max_finish = max_finish.max(t_rep);
+                replica_times.push(((e, i, g), t_rep));
             }
             layer_cost +=
                 cfg.run_cost(ep.mem_mb, busy) + ep.replicas as f64 * cfg.price_per_invocation;
@@ -167,11 +190,14 @@ pub fn serve_with_warmness(
         latency += base_lat + (max_finish - worst_clean).max(0.0);
     }
 
-    ServeOutcome {
-        cost,
-        latency,
-        memory_violations,
-        payload_violations,
+    ReplicaServeOutcome {
+        outcome: ServeOutcome {
+            cost,
+            latency,
+            memory_violations,
+            payload_violations,
+        },
+        replica_times,
     }
 }
 
@@ -262,6 +288,38 @@ mod tests {
         let cold = serve_with_warmness(&cfg, &spec, &pol, &real, &mut |_, _, _| false);
         assert!(warm.cost < mixed.cost && mixed.cost < cold.cost);
         assert!(warm.latency <= mixed.latency && mixed.latency <= cold.latency);
+    }
+
+    #[test]
+    fn detailed_breakdown_matches_outcome_and_lists_every_replica() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let mut pol = policy(3072, 2, 1000, CommMethod::Indirect);
+        pol.layers[0].experts[3].replicas = 3;
+        let real = vec![vec![1400, 900, 0, 100], vec![2000, 500, 100, 100]];
+        let mut warm_of = |_: usize, _: usize, g: usize| g == 0;
+        let detailed = serve_with_warmness_detailed(&cfg, &spec, &pol, &real, &mut warm_of);
+        let flat = serve_with_warmness(&cfg, &spec, &pol, &real, &mut warm_of);
+        assert_eq!(detailed.outcome.cost, flat.cost);
+        assert_eq!(detailed.outcome.latency, flat.latency);
+        // Layer 0: experts 0,1 (2 replicas each) + expert 3 (3 replicas);
+        // expert 2 has zero real load. Layer 1: 4 experts × 2 replicas.
+        assert_eq!(detailed.replica_times.len(), 2 + 2 + 3 + 8);
+        for &((l, e, g), t) in &detailed.replica_times {
+            assert!(t > 0.0, "replica ({l},{e},{g}) has non-positive time {t}");
+            assert!(real[l][e] > 0);
+        }
+        // Warm replica (g=0) runs faster than its cold sibling (g=1).
+        let time_of = |key: (usize, usize, usize)| {
+            detailed
+                .replica_times
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, t)| *t)
+                .unwrap()
+        };
+        assert!(time_of((0, 0, 0)) < time_of((0, 0, 1)));
     }
 
     #[test]

@@ -24,8 +24,8 @@
 pub mod timing;
 
 pub use timing::{
-    layer_cost, layer_latency, mixed_replica_times, replica_time, ExpertPlan, LayerPlan,
-    LayerTiming,
+    effective_replica_time, layer_cost, layer_latency, mixed_replica_times, replica_time,
+    ExpertPlan, LayerPlan, LayerTiming, MEMORY_THRASH_FACTOR,
 };
 
 /// The communication method a_e ∈ 𝔸 = {1, 2, 3}.

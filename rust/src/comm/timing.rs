@@ -144,6 +144,39 @@ pub fn mixed_replica_times(
     (t_cold, w as f64 * t_warm + (g - w) as f64 * t_cold)
 }
 
+/// Thrash multiplier when real load exceeds the configured memory (case (i)
+/// of Alg. 2): the function pages/spills (or OOM-retries on a replica),
+/// inflating its run time. The paper treats this as a hard feedback signal.
+pub const MEMORY_THRASH_FACTOR: f64 = 2.5;
+
+/// Per-replica execution time under *realized* constraint outcomes: applies
+/// the memory-thrash multiplier (case i) and, under direct transfer, the
+/// payload-overflow fallback to indirect (case ii — pay the slower of the
+/// two paths plus a retry's access delay) on top of [`replica_time`]. This
+/// is the shared penalty model of both serving paths in `bo::feedback`.
+#[allow(clippy::too_many_arguments)]
+pub fn effective_replica_time(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &ExpertPlan,
+    method: CommMethod,
+    beta: usize,
+    warm: bool,
+    mem_bad: bool,
+    payload_bad: bool,
+) -> f64 {
+    let mut t_rep = replica_time(cfg, spec, layer, plan, method, beta, warm);
+    if mem_bad {
+        t_rep *= MEMORY_THRASH_FACTOR;
+    }
+    if payload_bad {
+        let t_ind = replica_time(cfg, spec, layer, plan, CommMethod::Indirect, 1, warm);
+        t_rep = t_rep.max(t_ind) + cfg.storage_access_delay;
+    }
+    t_rep
+}
+
 /// Direct-transfer feasibility (constraint (12f)): the per-replica payloads
 /// must fit within D_p in both directions.
 pub fn direct_feasible(cfg: &PlatformConfig, spec: &MoeModelSpec, plan: &ExpertPlan) -> bool {

@@ -223,9 +223,11 @@ mod tests {
 
     #[test]
     fn roundtrip_via_json() {
-        let mut c = Config::default();
-        c.deploy.t_limit = 123.0;
-        c.bo.q = 77;
+        let c = Config {
+            deploy: DeployConfig { t_limit: 123.0, ..DeployConfig::default() },
+            bo: BoConfig { q: 77, ..BoConfig::default() },
+            ..Config::default()
+        };
         let j = c.to_json();
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.deploy.t_limit, 123.0);
@@ -240,8 +242,8 @@ mod tests {
 
     #[test]
     fn bo_rejects_bad_ordering() {
-        let mut b = BoConfig::default();
-        b.rho1 = b.rho + 1.0;
+        let d = BoConfig::default();
+        let b = BoConfig { rho1: d.rho + 1.0, ..d };
         assert!(b.validate().is_err());
     }
 

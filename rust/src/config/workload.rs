@@ -128,9 +128,11 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let mut w = WorkloadConfig::default();
-        w.corpus = CorpusPreset::Wmt19;
-        w.batch_tokens = 256;
+        let w = WorkloadConfig {
+            corpus: CorpusPreset::Wmt19,
+            batch_tokens: 256,
+            ..WorkloadConfig::default()
+        };
         let w2 = WorkloadConfig::from_json(&w.to_json()).unwrap();
         assert_eq!(w2.corpus, CorpusPreset::Wmt19);
         assert_eq!(w2.batch_tokens, 256);

@@ -17,7 +17,9 @@ use crate::predictor::bayes::TokenPrior;
 use crate::predictor::eval::{predicted_counts, real_counts};
 use crate::predictor::profile::profile_batches;
 use crate::predictor::{BayesPredictor, DatasetTable};
-use crate::traffic::{ArrivalGen, ArrivalProcess, EpochSimulator, SimReport, TrafficConfig};
+use crate::traffic::{
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimReport, TrafficConfig,
+};
 use crate::util::table::{fcost, fnum, ftime, Table};
 use crate::workload::{Corpus, RequestGenerator, TimedBatch};
 
@@ -76,19 +78,35 @@ impl TrafficScenario {
 }
 
 /// The TrafficConfig used across the scenario runs (and the regression
-/// tests, so golden numbers stay pinned to one configuration).
+/// tests, so golden numbers stay pinned to one configuration). Concurrency
+/// is left unbounded here — the PR 1 serving semantics the original golden
+/// numbers were pinned under; the queueing regime is exercised by
+/// [`scenario_config_queued`] and the dedicated comparison table.
 pub fn scenario_config(quick: bool) -> TrafficConfig {
-    let mut cfg = TrafficConfig::default();
-    cfg.epoch_secs = 60.0;
-    cfg.keep_alive = 900.0;
-    cfg.prewarm = true;
-    cfg.drift_threshold = 0.15;
-    // Tight enough that the heavy phase-A batches force replica/memory
-    // upgrades on popular experts — the over-provisioning that goes to
-    // waste once traffic drifts light.
-    cfg.t_limit = if quick { 200.0 } else { 300.0 };
-    cfg.solver_time_limit = if quick { 0.3 } else { 2.0 };
-    cfg
+    TrafficConfig {
+        epoch_secs: 60.0,
+        keep_alive: 900.0,
+        concurrency: None,
+        prewarm: true,
+        drift_threshold: 0.15,
+        // Tight enough that the heavy phase-A batches force replica/memory
+        // upgrades on popular experts — the over-provisioning that goes to
+        // waste once traffic drifts light.
+        t_limit: if quick { 200.0 } else { 300.0 },
+        solver_time_limit: if quick { 0.3 } else { 2.0 },
+        ..TrafficConfig::default()
+    }
+}
+
+/// Queueing-enabled variant pinned by its own golden fixture: Lambda-style
+/// per-instance concurrency 1 with the queue-depth autoscaler nudging
+/// replica counts between redeploys.
+pub fn scenario_config_queued(quick: bool) -> TrafficConfig {
+    TrafficConfig {
+        concurrency: Some(1),
+        autoscale: AutoscalePolicy::QueueDepth { max_wait: 5.0, idle_below: 0.2 },
+        ..scenario_config(quick)
+    }
 }
 
 /// Two-phase drifted traffic: phase A serves heavy requests from one
@@ -267,6 +285,54 @@ pub fn run(quick: bool) -> Vec<Table> {
             ]);
         }
         tables.push(tt);
+
+        // Queueing regime: the same stream on the static deployment under
+        // unbounded concurrency (PR 1 model), Lambda-style concurrency 1,
+        // and concurrency 1 with epoch-level autoscaling.
+        let mut qt = Table::new(
+            &format!("Traffic — {name}: per-instance queueing + autoscaling (static deployment)"),
+            &[
+                "regime",
+                "billed cost",
+                "p95 latency",
+                "mean queue delay",
+                "max util",
+                "scale out/in",
+            ],
+        );
+        for (label, conc, pol) in [
+            ("unbounded (PR 1 model)", None, AutoscalePolicy::Off),
+            ("concurrency 1", Some(1), AutoscalePolicy::Off),
+            (
+                "concurrency 1 + autoscale",
+                Some(1),
+                AutoscalePolicy::TargetUtilization { target: 0.7 },
+            ),
+        ] {
+            let cfg_q = TrafficConfig {
+                reoptimize: false,
+                concurrency: conc,
+                autoscale: pol,
+                ..cfg.clone()
+            };
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                cfg_q,
+            );
+            let r = sim.run(&scn.traffic);
+            qt.row(vec![
+                label.into(),
+                fcost(r.total_cost),
+                ftime(r.p95_latency),
+                ftime(r.mean_queue_delay),
+                fnum(r.max_utilization),
+                format!("{}/{}", r.scale_outs, r.scale_ins),
+            ]);
+        }
+        tables.push(qt);
     }
     tables
 }

@@ -1,4 +1,5 @@
-//! Instance-lifecycle model: per-replica warm pools with keep-alive expiry.
+//! Instance-lifecycle model: per-replica warm pools with keep-alive expiry
+//! and bounded per-instance concurrency (FIFO request queueing).
 //!
 //! The seed pipeline threaded a hardcoded `warm: bool` through the timing
 //! models — fine for one pre-warmed batch, wrong for sustained traffic where
@@ -10,6 +11,16 @@
 //! (`reset`), which is exactly why the ≥60 s deployment gap of §II
 //! Challenge 1 must be charged against availability by the traffic
 //! simulator.
+//!
+//! On top of warmness, each instance has a bounded number of concurrency
+//! *slots* (Lambda executes one invocation per environment — `Some(1)`; the
+//! PR 1 serving model is `None` = unbounded). Work that arrives while every
+//! slot is occupied waits in an implicit FIFO queue: [`WarmPool::admit`]
+//! schedules each invocation at the earliest work-conserving start time
+//! (`max(arrival, earliest slot release)`), which for admissions issued in
+//! non-decreasing arrival order yields per-instance FIFO service. The pool
+//! also keeps the busy-seconds and queue-wait ledgers the `SimReport`
+//! utilization metrics are built from.
 
 use crate::comm::LayerPlan;
 use std::collections::HashMap;
@@ -29,16 +40,45 @@ pub struct WarmPool {
     /// Invocation counters, split by derived start state.
     pub warm_hits: u64,
     pub cold_starts: u64,
+    /// Concurrent invocations one instance can execute (`None` = unbounded,
+    /// the PR 1 serving model; Lambda's environment semantics are `Some(1)`).
+    pub concurrency: Option<usize>,
+    /// Release times of each instance's concurrency slots (always exactly
+    /// `concurrency` entries once the instance has been touched).
+    slots: HashMap<ReplicaKey, Vec<f64>>,
+    /// Cumulative execution seconds admitted per instance (across the whole
+    /// run — kept through `reset` so end-of-run utilization stays meaningful).
+    busy: HashMap<ReplicaKey, f64>,
+    /// Running total of `busy` in admission order (deterministic float sum,
+    /// unlike summing the map).
+    total_busy: f64,
+    /// Admissions that had to wait for a slot, and their summed FIFO wait.
+    pub queued_jobs: u64,
+    pub total_queue_wait: f64,
 }
 
 impl WarmPool {
     pub fn new(keep_alive: f64) -> WarmPool {
+        WarmPool::with_concurrency(keep_alive, None)
+    }
+
+    /// Pool with a per-instance concurrency limit (`None` = unbounded).
+    pub fn with_concurrency(keep_alive: f64, concurrency: Option<usize>) -> WarmPool {
         assert!(keep_alive >= 0.0, "negative keep-alive");
+        if let Some(c) = concurrency {
+            assert!(c >= 1, "concurrency limit must be >= 1 (got {c})");
+        }
         WarmPool {
             warm_until: HashMap::new(),
             keep_alive,
             warm_hits: 0,
             cold_starts: 0,
+            concurrency,
+            slots: HashMap::new(),
+            busy: HashMap::new(),
+            total_busy: 0.0,
+            queued_jobs: 0,
+            total_queue_wait: 0.0,
         }
     }
 
@@ -88,9 +128,103 @@ impl WarmPool {
         warm
     }
 
-    /// Tear down every instance (redeployment): everything starts cold.
+    /// Earliest time `key` can begin an invocation that becomes ready at
+    /// `arrival`: `arrival` itself when a slot is free, otherwise the
+    /// earliest slot-release time (work-conserving FIFO). Pure peek — call
+    /// [`WarmPool::admit`] to actually reserve the slot.
+    pub fn earliest_start(&self, key: ReplicaKey, arrival: f64) -> f64 {
+        if self.concurrency.is_none() {
+            return arrival;
+        }
+        match self.slots.get(&key) {
+            None => arrival,
+            Some(slots) => {
+                let min_free = slots.iter().cloned().fold(f64::INFINITY, f64::min);
+                arrival.max(min_free)
+            }
+        }
+    }
+
+    /// Admit one invocation of `key` that becomes ready at `arrival` and
+    /// executes for `service` seconds; returns the scheduled start time
+    /// (== [`WarmPool::earliest_start`] for the same state). Records the
+    /// busy-seconds and queue-wait ledgers. Admissions must be issued in
+    /// non-decreasing `arrival` order for the schedule to be FIFO.
+    pub fn admit(&mut self, key: ReplicaKey, arrival: f64, service: f64) -> f64 {
+        debug_assert!(service >= 0.0, "negative service time");
+        let start = match self.concurrency {
+            None => arrival,
+            Some(c) => {
+                let slots = self
+                    .slots
+                    .entry(key)
+                    .or_insert_with(|| vec![f64::NEG_INFINITY; c]);
+                let mut idx = 0usize;
+                for (i, &free) in slots.iter().enumerate() {
+                    if free < slots[idx] {
+                        idx = i;
+                    }
+                }
+                let start = arrival.max(slots[idx]);
+                slots[idx] = start + service;
+                start
+            }
+        };
+        *self.busy.entry(key).or_insert(0.0) += service;
+        self.total_busy += service;
+        let wait = start - arrival;
+        if wait > 0.0 {
+            self.queued_jobs += 1;
+        }
+        self.total_queue_wait += wait;
+        start
+    }
+
+    /// Whether `key` has no invocation still executing at `t` (its queue has
+    /// fully drained) — the autoscaler's scale-in guard. Unbounded pools
+    /// don't track slots and always report idle.
+    pub fn idle_at(&self, key: ReplicaKey, t: f64) -> bool {
+        match self.slots.get(&key) {
+            None => true,
+            Some(slots) => slots.iter().all(|&free| free <= t),
+        }
+    }
+
+    /// Cumulative execution seconds admitted on `key` over the run.
+    pub fn busy_secs(&self, key: ReplicaKey) -> f64 {
+        self.busy.get(&key).copied().unwrap_or(0.0)
+    }
+
+    /// Cumulative execution seconds across all instances (deterministic
+    /// admission-order sum).
+    pub fn total_busy_secs(&self) -> f64 {
+        self.total_busy
+    }
+
+    /// Highest single-instance busy fraction of a `horizon`-second run.
+    /// With bounded concurrency c this is ≤ c by construction (≤ 1 for the
+    /// Lambda `Some(1)` semantics, modulo instances respawned by redeploys).
+    pub fn max_utilization(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        self.busy.values().fold(0.0f64, |acc, &b| acc.max(b / horizon))
+    }
+
+    /// Tear down one instance (autoscaler scale-in): its warm environment
+    /// is released, so a later scale-out of the same replica index starts
+    /// cold again. The busy/queue ledgers survive.
+    pub fn evict(&mut self, key: ReplicaKey) {
+        self.warm_until.remove(&key);
+        self.slots.remove(&key);
+    }
+
+    /// Tear down every instance (redeployment): everything starts cold and
+    /// all concurrency slots are released. The busy/queue ledgers survive —
+    /// they describe the run, not the current deployment generation.
     pub fn reset(&mut self) {
         self.warm_until.clear();
+        self.slots.clear();
     }
 
     /// Fraction of invocations so far that started warm (1.0 before any).
@@ -153,6 +287,67 @@ mod tests {
         assert_eq!(p.warm_count(0, 1, 3, 1.0e9), 3);
         p.reset();
         assert_eq!(p.warm_count(0, 0, 3, 0.0), 0);
+    }
+
+    #[test]
+    fn bounded_concurrency_serializes_invocations_fifo() {
+        let mut p = WarmPool::with_concurrency(100.0, Some(1));
+        let k = (0, 0, 0);
+        assert_eq!(p.earliest_start(k, 0.0), 0.0);
+        assert_eq!(p.admit(k, 0.0, 5.0), 0.0);
+        // Second invocation arrives mid-execution: waits for the slot.
+        assert_eq!(p.earliest_start(k, 1.0), 5.0);
+        assert_eq!(p.admit(k, 1.0, 2.0), 5.0);
+        // Third arrives after the queue drains: starts immediately.
+        assert_eq!(p.admit(k, 20.0, 1.0), 20.0);
+        assert_eq!(p.queued_jobs, 1);
+        assert!((p.total_queue_wait - 4.0).abs() < 1e-12);
+        assert!((p.busy_secs(k) - 8.0).abs() < 1e-12);
+        assert!((p.total_busy_secs() - 8.0).abs() < 1e-12);
+        assert!(!p.idle_at(k, 20.5));
+        assert!(p.idle_at(k, 21.0));
+        // One instance can never exceed 100% busy over the span it ran in.
+        assert!(p.max_utilization(21.0) <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn two_slots_overlap_then_queue() {
+        let mut p = WarmPool::with_concurrency(100.0, Some(2));
+        let k = (1, 0, 0);
+        assert_eq!(p.admit(k, 0.0, 10.0), 0.0);
+        assert_eq!(p.admit(k, 1.0, 10.0), 1.0); // second slot free
+        // Both slots busy: the third invocation waits for the earlier
+        // release (t = 10).
+        assert_eq!(p.earliest_start(k, 2.0), 10.0);
+        assert_eq!(p.admit(k, 2.0, 1.0), 10.0);
+        assert_eq!(p.queued_jobs, 1);
+    }
+
+    #[test]
+    fn unbounded_pool_never_queues() {
+        let mut p = WarmPool::new(100.0);
+        let k = (0, 1, 0);
+        for i in 0..10 {
+            let at = i as f64 * 0.01;
+            assert_eq!(p.admit(k, at, 50.0), at);
+        }
+        assert_eq!(p.queued_jobs, 0);
+        assert_eq!(p.total_queue_wait, 0.0);
+        assert!((p.total_busy_secs() - 500.0).abs() < 1e-9);
+        assert!(p.idle_at(k, 0.0), "unbounded pools track no slots");
+    }
+
+    #[test]
+    fn reset_releases_slots_but_keeps_ledgers() {
+        let mut p = WarmPool::with_concurrency(10.0, Some(1));
+        let k = (0, 0, 1);
+        p.admit(k, 0.0, 100.0);
+        assert_eq!(p.earliest_start(k, 1.0), 100.0);
+        p.reset();
+        // Fresh deployment generation: the slot is free again...
+        assert_eq!(p.earliest_start(k, 1.0), 1.0);
+        // ...but the run-level busy ledger survives.
+        assert!((p.total_busy_secs() - 100.0).abs() < 1e-12);
     }
 
     #[test]

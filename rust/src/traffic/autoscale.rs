@@ -1,0 +1,319 @@
+//! Epoch-level replica autoscaling between full ODS redeploys.
+//!
+//! A full re-deployment (new memory sizes, communication methods, β) costs
+//! the ≥60 s gap of §II Challenge 1, so it is reserved for genuine
+//! popularity drift. Between redeploys the serving layer can still adjust
+//! the *replica count* of each expert cheaply — the knob Remoe
+//! (arXiv 2512.18674) and FaaSMoE (arXiv 2604.26881) show dominates tail
+//! latency and cost under bursty serverless traffic:
+//!
+//!  - **scale out** launches fresh instances; they join the pool cold, so
+//!    their first invocation pays the cold start through the existing
+//!    lifecycle accounting (no separate billing path);
+//!  - **scale in** stops routing to the highest-indexed replicas; only
+//!    instances whose FIFO queue has drained are reaped (busy ones finish
+//!    their backlog first), and reaping evicts the instance's warm
+//!    environment — scaling the same index back out later starts cold
+//!    again.
+//!
+//! Policies are pluggable via [`AutoscalePolicy`]; decisions are evaluated
+//! once per epoch from the per-expert stats of the epoch that just ended.
+
+use crate::deploy::DeploymentPolicy;
+use crate::platform::WarmPool;
+use std::collections::HashMap;
+
+/// Pluggable replica-scaling policy evaluated at epoch boundaries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscalePolicy {
+    /// Fixed replica counts (the PR 1 behavior).
+    Off,
+    /// Keep per-expert utilization (busy seconds per replica per epoch
+    /// second) near `target`: scale out proportionally when above it, scale
+    /// in one replica per epoch when the shrunk pool would stay below it.
+    TargetUtilization { target: f64 },
+    /// Scale out one replica when the mean per-invocation FIFO wait over the
+    /// last epoch exceeds `max_wait` seconds; scale in one when the epoch
+    /// saw no queueing and utilization stayed below `idle_below`. Requires
+    /// bounded concurrency: on an unbounded pool there is no FIFO signal, so
+    /// the policy holds replica counts rather than ratcheting them down.
+    QueueDepth { max_wait: f64, idle_below: f64 },
+}
+
+/// Per-expert serving statistics accumulated over one epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExpertEpochStats {
+    /// Replica invocations admitted (one per replica per request served).
+    pub invocations: u64,
+    /// Summed execution seconds across the expert's replicas.
+    pub busy_secs: f64,
+    /// Summed FIFO queue wait across those invocations.
+    pub queue_wait: f64,
+}
+
+/// Accumulates per-expert epoch stats and applies the scaling policy at
+/// epoch boundaries.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub policy: AutoscalePolicy,
+    /// Hard replica ceiling (the deployment problem's G).
+    pub max_replicas: usize,
+    stats: HashMap<(usize, usize), ExpertEpochStats>,
+    /// `(virtual time, replicas added (+) or reaped (-))` per decision.
+    pub events: Vec<(f64, i64)>,
+    pub scale_outs: u64,
+    pub scale_ins: u64,
+}
+
+impl Autoscaler {
+    pub fn new(policy: AutoscalePolicy, max_replicas: usize) -> Autoscaler {
+        Autoscaler {
+            policy,
+            max_replicas: max_replicas.max(1),
+            stats: HashMap::new(),
+            events: Vec::new(),
+            scale_outs: 0,
+            scale_ins: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.policy != AutoscalePolicy::Off
+    }
+
+    /// Record one admitted replica invocation of `(layer, expert)` with its
+    /// execution time and FIFO wait.
+    pub fn record(&mut self, layer: usize, expert: usize, service: f64, wait: f64) {
+        let st = self.stats.entry((layer, expert)).or_default();
+        st.invocations += 1;
+        st.busy_secs += service;
+        st.queue_wait += wait;
+    }
+
+    /// Drop the accumulated stats (fresh epoch, or a full redeploy made
+    /// them describe a deployment that no longer exists).
+    pub fn reset_epoch(&mut self) {
+        self.stats.clear();
+    }
+
+    /// Apply the policy to `policy`'s replica counts at epoch boundary
+    /// `now`, then start a fresh stats window. Scale-in only reaps replicas
+    /// whose queue in `pool` has drained — and evicts their warm
+    /// environments, so scaling the same index back out later starts cold.
+    /// Returns the number of experts whose replica count changed.
+    pub fn rescale(
+        &mut self,
+        policy: &mut DeploymentPolicy,
+        pool: &mut WarmPool,
+        now: f64,
+        epoch_secs: f64,
+    ) -> usize {
+        if !self.enabled() || !epoch_secs.is_finite() || epoch_secs <= 0.0 {
+            return 0;
+        }
+        // An unbounded pool produces no FIFO-wait signal; queue-driven
+        // decisions must not fire on it (they could only ever scale in).
+        let queue_signals = pool.concurrency.is_some();
+        let mut changes = 0usize;
+        for (l, lp) in policy.layers.iter_mut().enumerate() {
+            for (i, ep) in lp.experts.iter_mut().enumerate() {
+                let st = self.stats.get(&(l, i)).copied().unwrap_or_default();
+                let g = ep.replicas.max(1);
+                let util = st.busy_secs / (g as f64 * epoch_secs);
+                let mean_wait = if st.invocations > 0 {
+                    st.queue_wait / st.invocations as f64
+                } else {
+                    0.0
+                };
+                let desired = match self.policy {
+                    AutoscalePolicy::Off => g,
+                    AutoscalePolicy::TargetUtilization { target } => {
+                        let t = target.max(1e-6);
+                        if util > t {
+                            ((g as f64 * util / t).ceil() as usize).min(self.max_replicas)
+                        } else if g > 1
+                            && util < 0.5 * t
+                            && st.busy_secs / ((g - 1) as f64 * epoch_secs) < t
+                        {
+                            g - 1
+                        } else {
+                            g
+                        }
+                    }
+                    AutoscalePolicy::QueueDepth { max_wait, idle_below } => {
+                        if !queue_signals {
+                            g
+                        } else if mean_wait > max_wait {
+                            (g + 1).min(self.max_replicas)
+                        } else if g > 1 && st.queue_wait <= 0.0 && util < idle_below {
+                            g - 1
+                        } else {
+                            g
+                        }
+                    }
+                };
+                if desired > g {
+                    // Scale out: fresh instances join cold — their first
+                    // invocation pays the cold start via the warm pool.
+                    self.events.push((now, (desired - g) as i64));
+                    self.scale_outs += (desired - g) as u64;
+                    ep.replicas = desired;
+                    changes += 1;
+                } else if desired < g {
+                    // Scale in: reap idle replicas from the top index down;
+                    // a replica still draining its queue stays for now.
+                    let mut shrunk = g;
+                    while shrunk > desired && pool.idle_at((l, i, shrunk - 1), now) {
+                        shrunk -= 1;
+                    }
+                    if shrunk < g {
+                        // Evict the reaped instances' warm environments so a
+                        // later scale-out of the same index starts cold.
+                        for gg in shrunk..g {
+                            pool.evict((l, i, gg));
+                        }
+                        self.events.push((now, -((g - shrunk) as i64)));
+                        self.scale_ins += (g - shrunk) as u64;
+                        ep.replicas = shrunk;
+                        changes += 1;
+                    }
+                }
+            }
+        }
+        self.reset_epoch();
+        changes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommMethod, ExpertPlan, LayerPlan};
+
+    fn one_layer_policy(replicas0: usize, replicas1: usize) -> DeploymentPolicy {
+        DeploymentPolicy {
+            layers: vec![LayerPlan {
+                method: CommMethod::Indirect,
+                beta: 1,
+                experts: vec![
+                    ExpertPlan { mem_mb: 1024, replicas: replicas0, tokens: 100 },
+                    ExpertPlan { mem_mb: 1024, replicas: replicas1, tokens: 100 },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn overloaded_expert_scales_out_proportionally() {
+        let mut auto = Autoscaler::new(AutoscalePolicy::TargetUtilization { target: 0.5 }, 8);
+        let mut policy = one_layer_policy(1, 1);
+        let mut pool = WarmPool::with_concurrency(100.0, Some(1));
+        // Expert 0: 30 busy seconds in a 10 s epoch → util 3.0 → wants
+        // ceil(1 * 3.0 / 0.5) = 6 replicas. Expert 1 idle: stays at 1.
+        auto.record(0, 0, 30.0, 12.0);
+        let changed = auto.rescale(&mut policy, &mut pool, 10.0, 10.0);
+        assert_eq!(changed, 1);
+        assert_eq!(policy.layers[0].experts[0].replicas, 6);
+        assert_eq!(policy.layers[0].experts[1].replicas, 1);
+        assert_eq!(auto.scale_outs, 5);
+        assert_eq!(auto.events, vec![(10.0, 5)]);
+    }
+
+    #[test]
+    fn scale_out_respects_max_replicas() {
+        let mut auto = Autoscaler::new(AutoscalePolicy::TargetUtilization { target: 0.1 }, 4);
+        let mut policy = one_layer_policy(2, 1);
+        let mut pool = WarmPool::with_concurrency(100.0, Some(1));
+        auto.record(0, 0, 500.0, 0.0);
+        auto.rescale(&mut policy, &mut pool, 10.0, 10.0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 4);
+    }
+
+    #[test]
+    fn idle_expert_scales_in_one_replica_per_epoch() {
+        let mut auto = Autoscaler::new(
+            AutoscalePolicy::QueueDepth { max_wait: 1.0, idle_below: 0.3 },
+            8,
+        );
+        let mut policy = one_layer_policy(3, 1);
+        let mut pool = WarmPool::with_concurrency(100.0, Some(1));
+        auto.record(0, 0, 0.5, 0.0); // util 0.5/(3*10) ≈ 0.017, no queueing
+        auto.rescale(&mut policy, &mut pool, 10.0, 10.0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 2);
+        assert_eq!(auto.scale_ins, 1);
+        // Stats were reset: the next epoch decides from fresh numbers.
+        auto.rescale(&mut policy, &mut pool, 20.0, 10.0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 1);
+        assert_eq!(policy.layers[0].experts[1].replicas, 1, "floor is one replica");
+        assert_eq!(auto.scale_ins, 2);
+    }
+
+    #[test]
+    fn queue_depth_scales_out_on_waits_and_skips_busy_reaps() {
+        let mut auto = Autoscaler::new(
+            AutoscalePolicy::QueueDepth { max_wait: 0.5, idle_below: 0.3 },
+            8,
+        );
+        let mut policy = one_layer_policy(1, 1);
+        let mut pool = WarmPool::with_concurrency(100.0, Some(1));
+        auto.record(0, 1, 2.0, 4.0); // mean wait 4 s > 0.5 s
+        auto.rescale(&mut policy, &mut pool, 10.0, 10.0);
+        assert_eq!(policy.layers[0].experts[1].replicas, 2);
+
+        // Scale-in must not reap a replica whose queue hasn't drained.
+        let mut busy_pool = WarmPool::with_concurrency(100.0, Some(1));
+        busy_pool.admit((0, 1, 1), 0.0, 1000.0); // busy far past the boundary
+        auto.rescale(&mut policy, &mut busy_pool, 20.0, 10.0);
+        assert_eq!(policy.layers[0].experts[1].replicas, 2, "busy replica kept");
+        // Expert 0 (idle, replicas 1) is already at the floor.
+        assert_eq!(policy.layers[0].experts[0].replicas, 1);
+    }
+
+    #[test]
+    fn reaped_replicas_are_evicted_and_rejoin_cold() {
+        let mut auto = Autoscaler::new(
+            AutoscalePolicy::QueueDepth { max_wait: 0.5, idle_below: 0.3 },
+            8,
+        );
+        let mut policy = one_layer_policy(2, 1);
+        let mut pool = WarmPool::with_concurrency(900.0, Some(1));
+        pool.prewarm_plan(&policy.layers);
+        assert!(pool.is_warm((0, 0, 1), 50.0));
+        // Idle epoch: expert 0 scales 2 → 1 and the reaped instance's warm
+        // environment is evicted, not left warm-forever from the prewarm.
+        auto.rescale(&mut policy, &mut pool, 10.0, 10.0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 1);
+        assert!(
+            !pool.is_warm((0, 0, 1), 50.0),
+            "a reaped replica must not rejoin warm on a later scale-out"
+        );
+        assert!(pool.is_warm((0, 0, 0), 50.0), "surviving replica stays warm");
+    }
+
+    #[test]
+    fn queue_depth_holds_on_unbounded_pool() {
+        // Without bounded concurrency there is no FIFO-wait signal: the
+        // queue-depth policy must hold replica counts, not ratchet them
+        // down one idle epoch at a time.
+        let mut auto = Autoscaler::new(
+            AutoscalePolicy::QueueDepth { max_wait: 0.5, idle_below: 0.3 },
+            8,
+        );
+        let mut policy = one_layer_policy(3, 2);
+        let mut pool = WarmPool::new(900.0); // unbounded
+        assert_eq!(auto.rescale(&mut policy, &mut pool, 10.0, 10.0), 0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 3);
+        assert_eq!(policy.layers[0].experts[1].replicas, 2);
+    }
+
+    #[test]
+    fn disabled_policy_never_changes_anything() {
+        let mut auto = Autoscaler::new(AutoscalePolicy::Off, 8);
+        let mut policy = one_layer_policy(2, 2);
+        let mut pool = WarmPool::with_concurrency(100.0, Some(1));
+        auto.record(0, 0, 1000.0, 1000.0);
+        assert_eq!(auto.rescale(&mut policy, &mut pool, 10.0, 10.0), 0);
+        assert_eq!(policy.layers[0].experts[0].replicas, 2);
+        assert!(!auto.enabled());
+    }
+}

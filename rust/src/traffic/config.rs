@@ -1,0 +1,107 @@
+//! Traffic-simulation configuration: epoching, lifecycle, queueing and
+//! autoscaling knobs, plus the deployment problem they pose.
+
+use super::autoscale::AutoscalePolicy;
+use crate::config::{DeployConfig, PlatformConfig};
+use crate::deploy::DeployProblem;
+use crate::model::MoeModelSpec;
+
+/// Traffic-simulation knobs.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Epoch length: how often drift is reviewed and the autoscaler runs
+    /// (seconds).
+    pub epoch_secs: f64,
+    /// Instance keep-alive after an invocation finishes (seconds;
+    /// `f64::INFINITY` never expires).
+    pub keep_alive: f64,
+    /// Concurrent invocations one replica instance can execute. `Some(1)`
+    /// is the Lambda semantics (one invocation per environment — the
+    /// default); `None` is unbounded, the PR 1 serving model in which
+    /// overlapping requests never queue.
+    pub concurrency: Option<usize>,
+    /// Replica autoscaling between full redeploys (see
+    /// [`super::autoscale::Autoscaler`]); `Off` by default.
+    pub autoscale: AutoscalePolicy,
+    /// Pre-warm every replica of the initial deployment (the paper's
+    /// warm-up invocation before measurement).
+    pub prewarm: bool,
+    /// Enable online re-optimization at epoch boundaries.
+    pub reoptimize: bool,
+    /// BO refinement iterations per re-optimization (0 = pure ODS re-solve).
+    pub bo_round_iters: usize,
+    /// Total-variation drift (realized vs deployed-for popularity, averaged
+    /// over layers, in [0, 1]) that triggers re-deployment.
+    pub drift_threshold: f64,
+    /// EMA smoothing factor for realized popularity.
+    pub ema_alpha: f64,
+    /// Serving SLO T_limit handed to the deployment problem.
+    pub t_limit: f64,
+    /// Per-fixed-method solver time limit (seconds).
+    pub solver_time_limit: f64,
+    pub max_replicas: usize,
+    pub beta_grid: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        let deploy = DeployConfig::default();
+        Self {
+            epoch_secs: 60.0,
+            keep_alive: 900.0,
+            concurrency: Some(1),
+            autoscale: AutoscalePolicy::Off,
+            prewarm: true,
+            reoptimize: true,
+            bo_round_iters: 0,
+            drift_threshold: 0.2,
+            ema_alpha: 0.3,
+            t_limit: 3000.0,
+            solver_time_limit: 0.5,
+            max_replicas: deploy.max_replicas,
+            beta_grid: deploy.beta_grid,
+            seed: 0x7_1AFF,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Degenerate configuration for cross-validation against the seed
+    /// single-batch pipeline: one infinite epoch, a pre-warmed pool that
+    /// never expires, unbounded concurrency, no autoscaling, no
+    /// re-optimization — serving one batch must then reproduce
+    /// `serve_with_real_counts(.., warm = true)` exactly.
+    pub fn degenerate() -> TrafficConfig {
+        TrafficConfig {
+            epoch_secs: f64::INFINITY,
+            keep_alive: f64::INFINITY,
+            concurrency: None,
+            autoscale: AutoscalePolicy::Off,
+            prewarm: true,
+            reoptimize: false,
+            bo_round_iters: 0,
+            ..TrafficConfig::default()
+        }
+    }
+
+    /// The deployment problem this configuration poses for a predicted (or
+    /// real) token distribution — shared by the epoch loop and the baseline
+    /// builders so every run solves the same problem shape.
+    pub fn problem<'b>(
+        &self,
+        platform: &'b PlatformConfig,
+        spec: &'b MoeModelSpec,
+        tokens: Vec<Vec<u64>>,
+    ) -> DeployProblem<'b> {
+        DeployProblem {
+            cfg: platform,
+            spec,
+            tokens,
+            t_limit: self.t_limit,
+            max_replicas: self.max_replicas,
+            beta_grid: self.beta_grid.clone(),
+            warm: true,
+        }
+    }
+}

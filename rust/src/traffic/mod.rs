@@ -7,27 +7,38 @@
 //! loop in which the predictor re-learns expert popularity as traffic
 //! shifts (§IV, Alg. 1). This subsystem provides all three:
 //!
-//!  - [`arrivals`] — deterministic-rate, Poisson and two-state MMPP arrival
+//!  - [`arrivals`]  — deterministic-rate, Poisson and two-state MMPP arrival
 //!    generators producing timestamped requests;
-//!  - [`trace`]    — a JSON request-trace format with replay (schema
+//!  - [`trace`]     — a JSON request-trace format with replay (schema
 //!    documented on [`trace::Trace`]);
-//!  - [`epoch`]    — the epoch loop: serve a traffic window against the
+//!  - [`config`]    — the [`config::TrafficConfig`] knobs (epoching,
+//!    keep-alive, per-instance concurrency, autoscaling policy);
+//!  - [`epoch`]     — the epoch loop: serve a traffic window against the
 //!    current deployment with warmness derived from the
-//!    `platform::lifecycle::WarmPool` virtual clock, feed realized expert
-//!    counts back into the predictor's dataset table, and re-run ODS
-//!    (optionally after a BO refinement round) when realized popularity
-//!    drifts past a threshold — charging the ≥60 s redeployment gap against
-//!    availability (§II Challenge 1);
-//!  - [`report`]   — the [`report::SimReport`] aggregate (billed cost over
-//!    time, throughput, latency percentiles) used by the golden-regression
-//!    fixtures and the `experiments::traffic` scenario runner.
+//!    `platform::lifecycle::WarmPool` virtual clock and overlapping
+//!    requests queued FIFO per instance under bounded concurrency, feed
+//!    realized expert counts back into the predictor's dataset table, and
+//!    re-run ODS (optionally after a BO refinement round) when realized
+//!    popularity drifts past a threshold — charging the ≥60 s redeployment
+//!    gap against availability (§II Challenge 1);
+//!  - [`autoscale`] — epoch-level replica autoscaling between redeploys
+//!    (target-utilization and queue-depth policies; scale-out lands cold,
+//!    scale-in reaps idle instances and evicts their warm environments);
+//!  - [`report`]    — the [`report::SimReport`] aggregate (billed cost over
+//!    time, throughput, latency and queue-delay percentiles, utilization)
+//!    used by the golden-regression fixtures and the `experiments::traffic`
+//!    scenario runner.
 
 pub mod arrivals;
+pub mod autoscale;
+pub mod config;
 pub mod epoch;
 pub mod report;
 pub mod trace;
 
 pub use arrivals::{ArrivalGen, ArrivalProcess};
-pub use epoch::{EpochSimulator, TrafficConfig};
+pub use autoscale::{AutoscalePolicy, Autoscaler};
+pub use config::TrafficConfig;
+pub use epoch::EpochSimulator;
 pub use report::SimReport;
 pub use trace::{Trace, TraceRequest};

@@ -27,6 +27,22 @@ pub struct SimReport {
     pub cold_invocations: u64,
     /// Batches that hit a memory violation (case (i) of Alg. 2).
     pub violation_batches: u64,
+    /// Per-request FIFO queue delay (the longest wait among the replicas a
+    /// request needed) under bounded per-instance concurrency. All zero
+    /// with unbounded concurrency.
+    pub mean_queue_delay: f64,
+    pub p95_queue_delay: f64,
+    pub max_queue_delay: f64,
+    /// Replica invocations that had to wait for a busy instance.
+    pub queued_invocations: u64,
+    /// Summed execution seconds across all replica invocations.
+    pub busy_secs: f64,
+    /// Highest single-instance busy fraction of the run span (≤ 1 under
+    /// concurrency 1, barring instances respawned mid-run by redeploys).
+    pub max_utilization: f64,
+    /// Autoscaler actions over the run: replicas added / reaped.
+    pub scale_outs: u64,
+    pub scale_ins: u64,
     /// (time, cumulative billed cost) at each served request.
     pub cost_timeline: Vec<(f64, f64)>,
 }
@@ -58,6 +74,14 @@ impl SimReport {
             warm_invocations: 0,
             cold_invocations: 0,
             violation_batches: 0,
+            mean_queue_delay: 0.0,
+            p95_queue_delay: 0.0,
+            max_queue_delay: 0.0,
+            queued_invocations: 0,
+            busy_secs: 0.0,
+            max_utilization: 0.0,
+            scale_outs: 0,
+            scale_ins: 0,
             cost_timeline: Vec::new(),
         }
     }
@@ -88,6 +112,14 @@ impl SimReport {
             ("warm_invocations", Json::num(self.warm_invocations as f64)),
             ("cold_invocations", Json::num(self.cold_invocations as f64)),
             ("violation_batches", Json::num(self.violation_batches as f64)),
+            ("mean_queue_delay", Json::num(self.mean_queue_delay)),
+            ("p95_queue_delay", Json::num(self.p95_queue_delay)),
+            ("max_queue_delay", Json::num(self.max_queue_delay)),
+            ("queued_invocations", Json::num(self.queued_invocations as f64)),
+            ("busy_secs", Json::num(self.busy_secs)),
+            ("max_utilization", Json::num(self.max_utilization)),
+            ("scale_outs", Json::num(self.scale_outs as f64)),
+            ("scale_ins", Json::num(self.scale_ins as f64)),
         ])
     }
 
@@ -96,6 +128,9 @@ impl SimReport {
             j.get_f64(k)
                 .ok_or_else(|| anyhow::anyhow!("sim report missing '{k}'"))
         };
+        // Queueing/autoscaling fields default to zero so pre-queueing golden
+        // entries still parse.
+        let opt = |k: &str| j.get_f64(k).unwrap_or(0.0);
         Ok(SimReport {
             requests: need("requests")? as u64,
             tokens: need("tokens")? as u64,
@@ -111,6 +146,14 @@ impl SimReport {
             warm_invocations: need("warm_invocations")? as u64,
             cold_invocations: need("cold_invocations")? as u64,
             violation_batches: need("violation_batches")? as u64,
+            mean_queue_delay: opt("mean_queue_delay"),
+            p95_queue_delay: opt("p95_queue_delay"),
+            max_queue_delay: opt("max_queue_delay"),
+            queued_invocations: opt("queued_invocations") as u64,
+            busy_secs: opt("busy_secs"),
+            max_utilization: opt("max_utilization"),
+            scale_outs: opt("scale_outs") as u64,
+            scale_ins: opt("scale_ins") as u64,
             cost_timeline: Vec::new(),
         })
     }
@@ -132,6 +175,7 @@ impl SimReport {
         check("total_cost", self.total_cost, golden.total_cost)?;
         check("throughput_tps", self.throughput_tps, golden.throughput_tps)?;
         check("p95_latency", self.p95_latency, golden.p95_latency)?;
+        check("mean_queue_delay", self.mean_queue_delay, golden.mean_queue_delay)?;
         if self.requests != golden.requests {
             return Err(format!(
                 "requests: got {} vs golden {}",
@@ -152,6 +196,14 @@ mod tests {
         r.redeploys = 1;
         r.warm_invocations = 30;
         r.cold_invocations = 10;
+        r.mean_queue_delay = 0.75;
+        r.p95_queue_delay = 2.5;
+        r.max_queue_delay = 3.0;
+        r.queued_invocations = 7;
+        r.busy_secs = 42.0;
+        r.max_utilization = 0.8;
+        r.scale_outs = 2;
+        r.scale_ins = 1;
         r
     }
 
@@ -171,7 +223,22 @@ mod tests {
         assert_eq!(back.requests, r.requests);
         assert_eq!(back.total_cost, r.total_cost);
         assert_eq!(back.p95_latency, r.p95_latency);
+        assert_eq!(back.mean_queue_delay, r.mean_queue_delay);
+        assert_eq!(back.queued_invocations, r.queued_invocations);
+        assert_eq!(back.busy_secs, r.busy_secs);
+        assert_eq!(back.max_utilization, r.max_utilization);
+        assert_eq!(back.scale_outs, r.scale_outs);
+        assert_eq!(back.scale_ins, r.scale_ins);
         assert!(back.close_to(&r, 1e-12).is_ok());
+    }
+
+    #[test]
+    fn close_to_detects_queue_delay_drift() {
+        let r = sample();
+        let mut off = r.clone();
+        off.mean_queue_delay *= 2.0;
+        let err = r.close_to(&off, 1e-6).unwrap_err();
+        assert!(err.contains("mean_queue_delay"), "{err}");
     }
 
     #[test]

@@ -1,27 +1,46 @@
 //! Traffic-subsystem integration tests:
 //!
 //!  - property tests (in-repo `util::check` harness) on the arrival
-//!    generators and the trace format;
+//!    generators, the trace format, and the per-instance FIFO queueing
+//!    model (work conservation, FIFO order, capacity, Little's-law
+//!    consistency and an M/M/1 cross-validation on Poisson traffic);
 //!  - cross-validation that the epoch simulator degenerates to the seed
 //!    single-batch pipeline (`serve_with_real_counts` at 1e-6 relative
-//!    error, `platform::events::simulate_layer` within modeling slack);
-//!  - golden-regression fixtures (committed JSON trace + expected
-//!    `SimReport` numbers; self-initializing on first run) so future perf
-//!    PRs can't silently change serving semantics;
-//!  - the drift claim: online re-optimization beats the static initial
+//!    error, `platform::events::simulate_layer` within modeling slack) and
+//!    that with unbounded concurrency + autoscaling off it reproduces the
+//!    PR 1 `serve_with_warmness` serving loop;
+//!  - golden-regression fixtures: committed queue-schedule numbers
+//!    (`golden_queueing.json`, exact) plus expected `SimReport` numbers per
+//!    scenario (`golden_traffic.json`; self-initializing on first run — CI
+//!    runs the suite twice so the second pass regresses against the first);
+//!  - the drift claim (online re-optimization beats the static initial
 //!    deployment on cumulative billed cost under a skew-shifting MMPP
-//!    workload.
+//!    workload) and the autoscaling claim (lower p95 latency at
+//!    equal-or-lower billed cost under a bursty overload).
 
-use serverless_moe::bo::feedback::serve_with_real_counts;
+use serverless_moe::bo::feedback::{serve_with_real_counts, serve_with_warmness};
+use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
 use serverless_moe::config::workload::CorpusPreset;
-use serverless_moe::experiments::traffic::{drift_scenario, scenario_config};
+use serverless_moe::config::PlatformConfig;
+use serverless_moe::deploy::DeploymentPolicy;
+use serverless_moe::experiments::traffic::{
+    drift_scenario, scenario_config, scenario_config_queued,
+};
+use serverless_moe::gating::SimGate;
 use serverless_moe::model::ModelPreset;
 use serverless_moe::platform::events::simulate_layer;
+use serverless_moe::platform::WarmPool;
 use serverless_moe::predictor::eval::real_counts;
-use serverless_moe::traffic::{ArrivalGen, ArrivalProcess, EpochSimulator, Trace, TrafficConfig};
+use serverless_moe::predictor::profile::profile_batches;
+use serverless_moe::predictor::BayesPredictor;
+use serverless_moe::traffic::{
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimReport, Trace, TrafficConfig,
+};
 use serverless_moe::util::check::{ensure, forall, forall_default, Config};
 use serverless_moe::util::json::Json;
-use serverless_moe::workload::Corpus;
+use serverless_moe::util::rng::Rng;
+use serverless_moe::util::MB;
+use serverless_moe::workload::{Corpus, RequestGenerator, TimedBatch};
 use std::path::{Path, PathBuf};
 
 fn data_path(name: &str) -> PathBuf {
@@ -168,6 +187,181 @@ fn committed_trace_replays_in_order_with_token_targets() {
     }
 }
 
+// ---------------------------------------------------------- FIFO queueing
+
+/// Work conservation, FIFO order and slot capacity of the per-instance
+/// queue, for random job streams and concurrency limits 1..=3.
+#[test]
+fn prop_instance_queue_work_conserving_fifo() {
+    forall_default(
+        |rng| {
+            let c = 1 + rng.index(3);
+            let n = 1 + rng.index(40);
+            let mut t = 0.0;
+            let jobs: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    t += rng.range_f64(0.0, 2.0);
+                    (t, rng.range_f64(0.0, 3.0))
+                })
+                .collect();
+            (c, jobs)
+        },
+        |(c, jobs)| {
+            let mut pool = WarmPool::with_concurrency(f64::INFINITY, Some(*c));
+            let key = (0, 0, 0);
+            // (arrival, start, finish) in admission order.
+            let mut sched: Vec<(f64, f64, f64)> = Vec::new();
+            for &(arrival, service) in jobs {
+                let peek = pool.earliest_start(key, arrival);
+                let start = pool.admit(key, arrival, service);
+                ensure(peek == start, format!("peek {peek} != admitted {start}"))?;
+                ensure(start >= arrival, "job started before it arrived")?;
+                sched.push((arrival, start, start + service));
+            }
+            // FIFO: starts are non-decreasing in arrival order.
+            ensure(
+                sched.windows(2).all(|w| w[0].1 <= w[1].1),
+                "FIFO start order broken",
+            )?;
+            for (i, &(arrival, start, _)) in sched.iter().enumerate() {
+                // Capacity: at a job's start at most c-1 earlier jobs still run.
+                let running = sched[..i].iter().filter(|&&(_, _, f)| f > start).count();
+                ensure(
+                    running + 1 <= *c,
+                    format!("job {i}: {running} other jobs running at start, cap {c}"),
+                )?;
+                // Work conservation: a job only waits while every slot is
+                // occupied — i.e. at least c earlier jobs finish at or after
+                // its start (the instance was never idle with a queue).
+                if start > arrival {
+                    let occupied =
+                        sched[..i].iter().filter(|&&(_, _, f)| f >= start).count();
+                    ensure(
+                        occupied >= *c,
+                        format!("job {i} waited while only {occupied}/{c} slots were busy"),
+                    )?;
+                }
+            }
+            // Concurrency 1: service windows are disjoint, so one instance
+            // can never be more than 100% utilized.
+            if *c == 1 {
+                ensure(
+                    sched.windows(2).all(|w| w[1].1 >= w[0].2),
+                    "c=1 service windows overlap",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Little's-law consistency and an analytic M/M/1 cross-validation of the
+/// FIFO queue on Poisson traffic (λ = 0.8, μ = 1.25, ρ = 0.64): the
+/// time-average number of waiting jobs must match arrival rate × mean wait,
+/// and the mean wait itself must match the closed form W_q = ρ/(μ−λ).
+#[test]
+fn prop_queue_littles_law_and_mm1_cross_validation() {
+    let lambda = 0.8;
+    let mu = 1.25;
+    let n = 20_000;
+    let mut rng = Rng::new(0xFA1FA);
+    let mut pool = WarmPool::with_concurrency(f64::INFINITY, Some(1));
+    let key = (0, 0, 0);
+    let mut arrivals: Vec<f64> = Vec::with_capacity(n);
+    let mut starts: Vec<f64> = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for _ in 0..n {
+        t += rng.exponential(lambda);
+        let service = rng.exponential(mu);
+        let start = pool.admit(key, t, service);
+        arrivals.push(t);
+        starts.push(start);
+    }
+    let horizon = t;
+    let lam_hat = n as f64 / horizon;
+    let w_hat = arrivals
+        .iter()
+        .zip(&starts)
+        .map(|(&a, &s)| s - a)
+        .sum::<f64>()
+        / n as f64;
+    assert!(w_hat > 0.0, "overloadable queue must actually wait");
+
+    // Little's law: L_q ≈ λ·W_q, with L_q estimated by sampling the
+    // waiting-count step function at evenly spaced times.
+    let samples = 2000;
+    let mut acc = 0.0;
+    for j in 0..samples {
+        let s = horizon * (j as f64 + 0.5) / samples as f64;
+        acc += arrivals
+            .iter()
+            .zip(&starts)
+            .filter(|&(&a, &st)| a <= s && s < st)
+            .count() as f64;
+    }
+    let l_hat = acc / samples as f64;
+    let little = lam_hat * w_hat;
+    let rel = (l_hat - little).abs() / little.max(1e-9);
+    assert!(
+        rel < 0.15,
+        "Little's law violated: L={l_hat:.3} vs λW={little:.3} (rel {rel:.3})"
+    );
+
+    // M/M/1: W_q = ρ/(μ−λ).
+    let rho = lambda / mu;
+    let wq = rho / (mu - lambda);
+    let relq = (w_hat - wq).abs() / wq;
+    assert!(
+        relq < 0.3,
+        "M/M/1 cross-validation failed: simulated W_q {w_hat:.3} vs analytic {wq:.3} (rel {relq:.3})"
+    );
+}
+
+/// Committed queue-schedule numbers (exactly representable binary fractions,
+/// so the comparison is bit-exact): replaying the fixture's job streams
+/// through the instance queue must reproduce every start/finish time.
+#[test]
+fn golden_queueing_schedule_matches_committed_fixture() {
+    let j = Json::read_file(&data_path("golden_queueing.json")).expect("fixture parses");
+    let cases = j.get("cases").and_then(Json::as_arr).expect("cases array");
+    assert_eq!(cases.len(), 2, "fixture covers c=1 and c=2");
+    for case in cases {
+        let name = case.get_str("name").unwrap_or("?").to_string();
+        let c = case.get_usize("concurrency").expect("concurrency");
+        let nums = |k: &str| -> Vec<f64> {
+            case.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default()
+        };
+        let arrivals = nums("arrivals");
+        let services = nums("services");
+        let starts = nums("starts");
+        let finishes = nums("finishes");
+        assert_eq!(arrivals.len(), services.len(), "{name}");
+        assert_eq!(arrivals.len(), starts.len(), "{name}");
+        assert_eq!(arrivals.len(), finishes.len(), "{name}");
+        assert!(!arrivals.is_empty(), "{name}: empty case");
+        let mut pool = WarmPool::with_concurrency(f64::INFINITY, Some(c));
+        let key = (0, 0, 0);
+        for (i, (&a, &s)) in arrivals.iter().zip(&services).enumerate() {
+            let start = pool.admit(key, a, s);
+            assert_eq!(start, starts[i], "{name}: job {i} start");
+            assert_eq!(start + s, finishes[i], "{name}: job {i} finish");
+        }
+        assert_eq!(
+            pool.total_queue_wait,
+            case.get_f64("total_wait").expect("total_wait"),
+            "{name}: total wait"
+        );
+        assert_eq!(
+            pool.total_busy_secs(),
+            case.get_f64("busy_secs").expect("busy_secs"),
+            "{name}: busy seconds"
+        );
+    }
+}
+
 // -------------------------------------------------------- cross-validation
 
 /// One epoch, all-warm never-expiring pool, no re-optimization: the traffic
@@ -230,39 +424,195 @@ fn degenerate_sim_matches_flat_pipeline_and_event_model() {
     );
 }
 
+/// With unbounded concurrency and autoscaling off, the queued epoch loop
+/// must reproduce the PR 1 serving loop — re-implemented here verbatim on
+/// `serve_with_warmness` + a plain `WarmPool` — within 1e-6 relative error
+/// (same pattern as the degenerate checks above, but over a multi-request
+/// stream with finite keep-alive, so warm/cold transitions are exercised).
+#[test]
+fn unbounded_concurrency_reproduces_pr1_serving_loop() {
+    let scn = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 0xAB1E);
+    let traffic: Vec<TimedBatch> = scn.traffic.iter().take(12).cloned().collect();
+    let cfg = TrafficConfig {
+        concurrency: None,
+        autoscale: AutoscalePolicy::Off,
+        reoptimize: false,
+        prewarm: true,
+        keep_alive: 30.0,
+        t_limit: scenario_config(true).t_limit,
+        ..TrafficConfig::default()
+    };
+    let mut sim = EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg);
+    let policy = sim.initial_policy(&traffic);
+    let report = sim.run_with_policy(policy.clone(), &traffic);
+
+    // PR 1 reference loop: serve each request independently at its arrival
+    // time, warmness judged at the request start.
+    let mut pool = WarmPool::new(30.0);
+    pool.prewarm_plan(&policy.layers);
+    let mut total_cost = 0.0;
+    let mut latencies: Vec<f64> = Vec::new();
+    for tb in &traffic {
+        let start = tb.at;
+        let real = real_counts(&scn.gate, &tb.batch);
+        let outcome = serve_with_warmness(
+            &scn.platform,
+            &scn.spec,
+            &policy,
+            &real,
+            &mut |l, e, g| pool.is_warm((l, e, g), start),
+        );
+        let finish = start + outcome.latency;
+        for (l, lp) in policy.layers.iter().enumerate() {
+            for (i, ep) in lp.experts.iter().enumerate() {
+                if real[l][i] == 0 {
+                    continue;
+                }
+                for g in 0..ep.replicas {
+                    pool.invoke((l, i, g), start, finish);
+                }
+            }
+        }
+        total_cost += outcome.cost;
+        latencies.push(finish - tb.at);
+    }
+
+    let rel_cost = (report.total_cost - total_cost).abs() / total_cost;
+    assert!(
+        rel_cost < 1e-6,
+        "queued loop (unbounded) cost {} vs PR 1 loop {} (rel {rel_cost})",
+        report.total_cost,
+        total_cost
+    );
+    let p95_ref = serverless_moe::util::stats::percentile(&latencies, 95.0);
+    let rel_p95 = (report.p95_latency - p95_ref).abs() / p95_ref;
+    assert!(
+        rel_p95 < 1e-6,
+        "queued loop (unbounded) p95 {} vs PR 1 loop {} (rel {rel_p95})",
+        report.p95_latency,
+        p95_ref
+    );
+    assert_eq!(report.requests, traffic.len() as u64);
+    assert_eq!(report.mean_queue_delay, 0.0, "unbounded pools never queue");
+    assert_eq!(report.queued_invocations, 0);
+    assert_eq!(
+        report.warm_invocations + report.cold_invocations,
+        pool.warm_hits + pool.cold_starts
+    );
+}
+
+/// Acceptance criterion: with concurrency 1 under an overload trace the
+/// reported queue delay is positive and no instance exceeds 100%
+/// utilization — while the billed cost is unchanged from the unbounded run
+/// (billing meters busy time, which queueing only shifts later; the
+/// all-warm never-expiring pool keeps service times identical).
+#[test]
+fn overload_queueing_positive_delay_bounded_utilization() {
+    let platform = PlatformConfig::default();
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 3);
+    let corpus = Corpus::new(CorpusPreset::Enwik8, 5);
+    let mut gen = RequestGenerator::new(corpus, 6, 1024);
+    // 20 requests/s: far above the per-replica service rate (the warm head
+    // time alone is ~0.13 s), so the bounded pool must queue.
+    let arrivals = ArrivalGen::new(ArrivalProcess::Deterministic { rate: 20.0 }, 1)
+        .arrivals_until(0.8);
+    let traffic = gen.timed_batches(&arrivals);
+    assert!(traffic.len() >= 12);
+    let profile = profile_batches(&gate, &gen.profile_set(4));
+    let base = TrafficConfig {
+        reoptimize: false,
+        prewarm: true,
+        keep_alive: f64::INFINITY,
+        epoch_secs: f64::INFINITY,
+        ..TrafficConfig::default()
+    };
+
+    let cfg_q = TrafficConfig { concurrency: Some(1), ..base.clone() };
+    let mut sim_q = EpochSimulator::new(
+        &platform,
+        &spec,
+        &gate,
+        BayesPredictor::new(profile.table.clone(), profile.prior.clone()),
+        cfg_q,
+    );
+    let policy = sim_q.initial_policy(&traffic);
+    let queued = sim_q.run_with_policy(policy.clone(), &traffic);
+
+    let cfg_u = TrafficConfig { concurrency: None, ..base };
+    let mut sim_u = EpochSimulator::new(
+        &platform,
+        &spec,
+        &gate,
+        BayesPredictor::new(profile.table.clone(), profile.prior.clone()),
+        cfg_u,
+    );
+    let unbounded = sim_u.run_with_policy(policy, &traffic);
+
+    assert!(queued.mean_queue_delay > 0.0, "overload must produce queue delay");
+    assert!(queued.max_queue_delay >= queued.p95_queue_delay);
+    assert!(queued.p95_queue_delay >= queued.mean_queue_delay * 0.5);
+    assert!(queued.queued_invocations > 0);
+    assert!(
+        queued.max_utilization > 0.0 && queued.max_utilization <= 1.0 + 1e-9,
+        "utilization must stay within [0, 1]: {}",
+        queued.max_utilization
+    );
+    assert!(queued.busy_secs > 0.0);
+    assert!(queued.p95_latency >= unbounded.p95_latency);
+    assert!(queued.mean_latency > unbounded.mean_latency);
+    let rel = (queued.total_cost - unbounded.total_cost).abs() / unbounded.total_cost;
+    assert!(
+        rel < 1e-9,
+        "queueing must not change all-warm billed cost: {} vs {}",
+        queued.total_cost,
+        unbounded.total_cost
+    );
+    assert_eq!(unbounded.mean_queue_delay, 0.0);
+}
+
 // ------------------------------------------------------- golden regression
 
-fn golden_run(preset: ModelPreset) -> serverless_moe::traffic::SimReport {
+fn golden_run(preset: ModelPreset, mut cfg: TrafficConfig) -> SimReport {
     let scn = drift_scenario(preset, true, 0x601D);
-    let mut cfg = scenario_config(true);
     cfg.reoptimize = true;
     cfg.bo_round_iters = 0;
     let mut sim = EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg);
     sim.run(&scn.traffic)
 }
 
-/// Committed expected `SimReport` numbers per model preset at a fixed RNG
-/// seed. On first run (or after deleting the fixture) the file is
-/// initialized from the current implementation and the test asks for a
-/// rerun; afterwards any drift in cost/throughput/p95 beyond 1e-6 relative
-/// error fails with a diff.
+/// Committed expected `SimReport` numbers per scenario at a fixed RNG seed
+/// (the PR 1 unbounded-concurrency runs plus a queueing-enabled run). On
+/// first run (or after deleting the fixture) the file is initialized from
+/// the current implementation and the test asks for a rerun; afterwards any
+/// drift in cost/throughput/p95/queue-delay beyond 1e-6 relative error
+/// fails with a diff. CI runs the suite twice so a freshly initialized
+/// fixture is still regressed within one workflow run.
 #[test]
 fn golden_regression_fixed_seed_reports() {
-    use serverless_moe::traffic::SimReport;
     let path = data_path("golden_traffic.json");
     let mut golden = Json::read_file(&path).unwrap_or_else(|_| Json::obj());
     let mut initialized: Vec<&str> = Vec::new();
-    for (key, preset) in [
-        ("bert-moe", ModelPreset::BertMoe { experts: 4, top_k: 1 }),
-        ("gpt2-moe", ModelPreset::Gpt2Moe { top_k: 1 }),
+    for (key, preset, cfg) in [
+        (
+            "bert-moe",
+            ModelPreset::BertMoe { experts: 4, top_k: 1 },
+            scenario_config(true),
+        ),
+        ("gpt2-moe", ModelPreset::Gpt2Moe { top_k: 1 }, scenario_config(true)),
+        (
+            "bert-moe-queued",
+            ModelPreset::BertMoe { experts: 4, top_k: 1 },
+            scenario_config_queued(true),
+        ),
     ] {
-        let report = golden_run(preset);
+        let report = golden_run(preset, cfg.clone());
         assert!(report.requests > 10, "{key}: degenerate scenario");
         assert!(report.total_cost > 0.0 && report.total_cost.is_finite());
         assert!(report.p50_latency <= report.p95_latency);
         assert!(report.p95_latency <= report.p99_latency);
         // Determinism: an immediate re-run must reproduce the numbers.
-        let again = golden_run(preset);
+        let again = golden_run(preset, cfg);
         if let Err(e) = report.close_to(&again, 1e-9) {
             panic!("{key}: simulator is nondeterministic across reruns: {e}");
         }
@@ -335,4 +685,138 @@ fn reoptimization_beats_static_deployment_under_drift() {
     // The gap is availability, not free lunch: the shared pre-drift
     // requests bound ours' tail latency from below.
     assert!(ours.p99_latency >= stat.p99_latency * 0.5);
+}
+
+// --------------------------------------------- queueing + autoscaling claims
+
+/// One fully-seeded autoscaled run: bursty MMPP traffic on the tiny model
+/// with concurrency 1 and the target-utilization policy. The deployment is
+/// hand-built (no ODS call) so the whole path is free of wall-clock-limited
+/// search — byte-identical output is then a hard guarantee, not luck.
+fn autoscaled_tiny_run() -> SimReport {
+    let platform = PlatformConfig::default();
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 0xD0);
+    let corpus = Corpus::new(CorpusPreset::Enwik8, 0xD1);
+    let mut gen = RequestGenerator::new(corpus, 0xD2, 2048);
+    let profile = profile_batches(&gate, &gen.profile_set(4));
+    let arrivals = ArrivalGen::new(
+        ArrivalProcess::Mmpp { rate0: 5.0, rate1: 0.1, hold0: 30.0, hold1: 30.0 },
+        0xD3,
+    )
+    .arrivals_until(150.0);
+    let traffic = gen.timed_batches(&arrivals);
+    let policy = DeploymentPolicy {
+        layers: (0..spec.num_moe_layers())
+            .map(|_| LayerPlan {
+                method: CommMethod::Indirect,
+                beta: 1,
+                experts: vec![ExpertPlan { mem_mb: 1152, replicas: 1, tokens: 512 }; 4],
+            })
+            .collect(),
+    };
+    let cfg = TrafficConfig {
+        reoptimize: false,
+        concurrency: Some(1),
+        autoscale: AutoscalePolicy::TargetUtilization { target: 0.6 },
+        epoch_secs: 20.0,
+        ..TrafficConfig::default()
+    };
+    let mut sim = EpochSimulator::new(
+        &platform,
+        &spec,
+        &gate,
+        BayesPredictor::new(profile.table, profile.prior),
+        cfg,
+    );
+    sim.run_with_policy(policy, &traffic)
+}
+
+/// Deterministic-seed regression: two fully independent runs (fresh gate,
+/// corpus, generator, simulator) with the same seeds and an autoscaling
+/// policy must produce byte-identical `SimReport` JSON.
+#[test]
+fn autoscaled_sim_report_is_byte_identical_across_reruns() {
+    let a = autoscaled_tiny_run();
+    let b = autoscaled_tiny_run();
+    assert!(
+        a.scale_outs + a.scale_ins > 0,
+        "scenario must actually exercise the autoscaler"
+    );
+    assert!(a.mean_queue_delay > 0.0, "burst phase must queue");
+    assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+}
+
+/// The autoscaling claim under a bursty MMPP overload: a one-replica static
+/// deployment whose experts thrash (Alg. 2 case i — the fat runtime leaves
+/// ~1280 tokens of headroom at 768 MB while every 8192-token request puts
+/// ≥ 2048 tokens on some expert) queues up and pays the 2.5× thrash factor
+/// on billed busy time. Scaling out restores memory feasibility and drains
+/// the queues: strictly lower p95 latency at equal-or-lower billed cost.
+#[test]
+fn autoscaler_beats_static_under_bursty_overload() {
+    let platform = PlatformConfig::default();
+    let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+    spec.layers.truncate(1);
+    spec.runtime_overhead_bytes = 720 * MB;
+    let gate = SimGate::new(&spec, 0x21);
+    let corpus = Corpus::new(CorpusPreset::Enwik8, 0x22);
+    let mut gen = RequestGenerator::new(corpus, 0x23, 8192);
+    let arrivals = ArrivalGen::new(
+        ArrivalProcess::Mmpp { rate0: 0.5, rate1: 0.05, hold0: 40.0, hold1: 40.0 },
+        0x24,
+    )
+    .arrivals_until(200.0);
+    let traffic = gen.timed_batches(&arrivals);
+    assert!(traffic.len() >= 10, "need sustained traffic, got {}", traffic.len());
+
+    let static_policy = DeploymentPolicy {
+        layers: vec![LayerPlan {
+            method: CommMethod::Indirect,
+            beta: 1,
+            experts: vec![ExpertPlan { mem_mb: 768, replicas: 1, tokens: 2048 }; 4],
+        }],
+    };
+    let profile = profile_batches(&gate, &gen.profile_set(2));
+
+    let run = |autoscale: AutoscalePolicy| -> SimReport {
+        let cfg = TrafficConfig {
+            epoch_secs: 15.0,
+            keep_alive: 900.0,
+            concurrency: Some(1),
+            autoscale,
+            prewarm: true,
+            reoptimize: false,
+            max_replicas: 8,
+            ..TrafficConfig::default()
+        };
+        let predictor = BayesPredictor::new(profile.table.clone(), profile.prior.clone());
+        let mut sim = EpochSimulator::new(&platform, &spec, &gate, predictor, cfg);
+        sim.run_with_policy(static_policy.clone(), &traffic)
+    };
+
+    let stat = run(AutoscalePolicy::Off);
+    let auto = run(AutoscalePolicy::TargetUtilization { target: 0.7 });
+
+    assert!(
+        stat.violation_batches > 0,
+        "the one-replica static deployment must hit memory thrash"
+    );
+    assert!(stat.mean_queue_delay > 0.0, "overload must queue on the static deployment");
+    assert_eq!(stat.scale_outs, 0);
+    assert!(auto.scale_outs >= 1, "autoscaler must scale out under overload");
+    assert!(
+        auto.p95_latency < stat.p95_latency,
+        "autoscaling must cut tail latency: {} vs static {}",
+        auto.p95_latency,
+        stat.p95_latency
+    );
+    assert!(
+        auto.total_cost <= stat.total_cost,
+        "autoscaling must not bill more than thrashing: {} vs static {}",
+        auto.total_cost,
+        stat.total_cost
+    );
+    assert!(auto.max_utilization <= 1.0 + 1e-9);
+    assert!(stat.max_utilization <= 1.0 + 1e-9);
 }
