@@ -1,0 +1,260 @@
+//! Million-request traffic bench: event engine vs the legacy PR 2 loop.
+//!
+//! Generates an N-request Poisson trace (default 1M requests of ~64 tokens
+//! on the tiny model), serves it through four configurations of the same
+//! simulator — the event engine with layer-pipelined dispatch under
+//! streaming and exact metrics, the event engine with monolithic dispatch
+//! (the fidelity control: it must reproduce the legacy numbers), and the
+//! legacy serial loop — and writes `BENCH_traffic.json` with wall-clock
+//! throughput, a peak-RSS proxy (`VmHWM`/`VmRSS` from /proc, best effort),
+//! the streaming-p95 fidelity versus exact, and the headline speedup.
+//!
+//! Runs are ordered smallest-footprint first so the monotone `VmHWM`
+//! high-water mark read after each run brackets that run's peak.
+//!
+//! Run:
+//!   cargo run --release --example bench_traffic
+//!   cargo run --release --example bench_traffic -- --requests 20000
+//!
+//! Options:
+//!   --requests N   trace length                    (default 1,000,000)
+//!   --rate R       Poisson arrival rate, req/s     (default 2.0)
+//!   --tokens T     target tokens per request       (default 64)
+//!   --seed S       trace RNG seed                  (default 0xBE7C4)
+//!   --out PATH     output JSON                     (default BENCH_traffic.json)
+
+use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
+use serverless_moe::config::workload::CorpusPreset;
+use serverless_moe::config::PlatformConfig;
+use serverless_moe::deploy::DeploymentPolicy;
+use serverless_moe::gating::SimGate;
+use serverless_moe::model::ModelPreset;
+use serverless_moe::predictor::profile::profile_batches;
+use serverless_moe::predictor::BayesPredictor;
+use serverless_moe::traffic::{
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine,
+    SimReport, TrafficConfig,
+};
+use serverless_moe::util::cli::Args;
+use serverless_moe::util::json::Json;
+use serverless_moe::util::stats::LogHistogram;
+use serverless_moe::util::table::{fnum, Table};
+use serverless_moe::workload::{Corpus, RequestGenerator, TimedBatch};
+use std::time::Instant;
+
+/// (VmRSS, VmHWM) in MB from /proc/self/status; zeros off-Linux.
+fn rss_mb() -> (f64, f64) {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return (0.0, 0.0);
+    };
+    let grab = |key: &str| {
+        text.lines()
+            .find(|l| l.starts_with(key))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse::<f64>().ok())
+            .map(|kb| kb / 1024.0)
+            .unwrap_or(0.0)
+    };
+    (grab("VmRSS:"), grab("VmHWM:"))
+}
+
+struct RunResult {
+    label: &'static str,
+    wall_secs: f64,
+    report: SimReport,
+    vm_rss_mb: f64,
+    vm_hwm_mb: f64,
+}
+
+impl RunResult {
+    fn requests_per_sec(&self) -> f64 {
+        self.report.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("requests_per_sec", Json::num(self.requests_per_sec())),
+            ("total_cost", Json::num(self.report.total_cost)),
+            ("mean_latency", Json::num(self.report.mean_latency)),
+            ("p95_latency", Json::num(self.report.p95_latency)),
+            ("mean_queue_delay", Json::num(self.report.mean_queue_delay)),
+            ("queued_invocations", Json::num(self.report.queued_invocations as f64)),
+            ("warm_fraction", Json::num(self.report.warm_fraction())),
+            ("vm_rss_mb", Json::num(self.vm_rss_mb)),
+            ("vm_hwm_mb", Json::num(self.vm_hwm_mb)),
+        ])
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    serverless_moe::util::log::init_from_env();
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 1_000_000);
+    let rate = args.get_f64("rate", 2.0);
+    let target_tokens = args.get_usize("tokens", 64);
+    let seed = args.get_u64("seed", 0xBE7C4);
+    let out = args.get_or("out", "BENCH_traffic.json");
+
+    let platform = PlatformConfig::default();
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 0xB11D);
+    // Wmt19 has the shortest sequences, so request sizes track the target.
+    let corpus = Corpus::new(CorpusPreset::Wmt19, seed);
+    let mut gen = RequestGenerator::new(corpus, seed ^ 0x7, target_tokens);
+    let profile = profile_batches(&gate, &gen.profile_set(4));
+
+    eprintln!("generating {n}-request Poisson trace at {rate} req/s ...");
+    let t0 = Instant::now();
+    let mut arr = ArrivalGen::new(ArrivalProcess::Poisson { rate }, seed ^ 0x31);
+    let mut at = 0.0f64;
+    let mut traffic: Vec<TimedBatch> = Vec::with_capacity(n);
+    for _ in 0..n {
+        at += arr.next_gap();
+        traffic.push(TimedBatch { at, batch: gen.next_batch() });
+    }
+    let trace_gen_secs = t0.elapsed().as_secs_f64();
+    let total_tokens: u64 = traffic.iter().map(|tb| tb.batch.total_tokens as u64).sum();
+    eprintln!(
+        "trace ready: {total_tokens} tokens over {:.0} virtual secs ({trace_gen_secs:.1}s to generate)",
+        at
+    );
+
+    // Hand-built static deployment: 2 MoE layers × 4 experts × 2 replicas,
+    // Lambda-style concurrency 1 — no solver on the benched path, so both
+    // engines measure pure dispatch machinery.
+    let policy = DeploymentPolicy {
+        layers: (0..spec.num_moe_layers())
+            .map(|_| LayerPlan {
+                method: CommMethod::Indirect,
+                beta: 1,
+                experts: vec![ExpertPlan { mem_mb: 1152, replicas: 2, tokens: 512 }; 4],
+            })
+            .collect(),
+    };
+    let base_cfg = TrafficConfig {
+        epoch_secs: f64::INFINITY,
+        keep_alive: 900.0,
+        concurrency: Some(1),
+        autoscale: AutoscalePolicy::Off,
+        prewarm: true,
+        reoptimize: false,
+        ..TrafficConfig::default()
+    };
+
+    let run = |label: &'static str, engine: SimEngine, metrics: MetricsMode| -> RunResult {
+        eprintln!("running {label} ...");
+        let cfg = TrafficConfig { engine, metrics, ..base_cfg.clone() };
+        let mut sim = EpochSimulator::new(
+            &platform,
+            &spec,
+            &gate,
+            BayesPredictor::new(profile.table.clone(), profile.prior.clone()),
+            cfg,
+        );
+        let t = Instant::now();
+        let report = sim.run_with_policy(policy.clone(), &traffic);
+        let wall_secs = t.elapsed().as_secs_f64();
+        let (vm_rss_mb, vm_hwm_mb) = rss_mb();
+        eprintln!(
+            "  {label}: {wall_secs:.2}s ({:.0} req/s), cost {:.4}, p95 {:.3}s",
+            report.requests as f64 / wall_secs.max(1e-9),
+            report.total_cost,
+            report.p95_latency
+        );
+        RunResult { label, wall_secs, report, vm_rss_mb, vm_hwm_mb }
+    };
+
+    // Smallest memory footprint first: VmHWM is monotone.
+    let streaming = run(
+        "event pipelined (streaming)",
+        SimEngine::Event { pipeline: true },
+        MetricsMode::Streaming,
+    );
+    let exact = run(
+        "event pipelined (exact)",
+        SimEngine::Event { pipeline: true },
+        MetricsMode::Exact,
+    );
+    let mono = run(
+        "event monolithic (exact)",
+        SimEngine::Event { pipeline: false },
+        MetricsMode::Exact,
+    );
+    let legacy = run("legacy serial loop", SimEngine::Legacy, MetricsMode::Exact);
+
+    let speedup_streaming = legacy.wall_secs / streaming.wall_secs.max(1e-9);
+    let speedup_exact = legacy.wall_secs / exact.wall_secs.max(1e-9);
+    let cost_rel = (mono.report.total_cost - legacy.report.total_cost).abs()
+        / legacy.report.total_cost.max(1e-12);
+    let p95_rel_mono = (mono.report.p95_latency - legacy.report.p95_latency).abs()
+        / legacy.report.p95_latency.max(1e-12);
+    let p95_rel_stream = (streaming.report.p95_latency - exact.report.p95_latency).abs()
+        / exact.report.p95_latency.max(1e-12);
+    let hist = LogHistogram::latency_default();
+    let within_one_bucket =
+        hist.within_one_bucket(streaming.report.p95_latency, exact.report.p95_latency);
+    // Engine-internal metric memory: 2 vectors + timeline vs 2 histograms.
+    let metrics_bytes_exact = (n * 8 * 2 + n * 16) as f64;
+    let metrics_bytes_streaming = (2 * hist.mem_bytes()) as f64;
+
+    let mut t = Table::new(
+        "bench_traffic — 4 runs over the same trace",
+        &["run", "wall (s)", "req/s", "p95 (s)", "VmHWM (MB)"],
+    );
+    for r in [&streaming, &exact, &mono, &legacy] {
+        t.row(vec![
+            r.label.into(),
+            format!("{:.2}", r.wall_secs),
+            fnum(r.requests_per_sec()),
+            format!("{:.4}", r.report.p95_latency),
+            format!("{:.0}", r.vm_hwm_mb),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nspeedup vs legacy: {speedup_streaming:.1}x (streaming), {speedup_exact:.1}x (exact); \
+         monolithic fidelity: cost rel {cost_rel:.2e}, p95 rel {p95_rel_mono:.2e}; \
+         streaming p95 rel err {p95_rel_stream:.2e} (within one bucket: {within_one_bucket})"
+    );
+
+    let j = Json::from_pairs(vec![
+        ("requests", Json::num(n as f64)),
+        ("tokens", Json::num(total_tokens as f64)),
+        ("rate", Json::num(rate)),
+        ("virtual_secs", Json::num(at)),
+        ("trace_gen_secs", Json::num(trace_gen_secs)),
+        (
+            "runs",
+            Json::from_pairs(vec![
+                ("event_streaming", streaming.to_json()),
+                ("event_exact", exact.to_json()),
+                ("event_monolithic", mono.to_json()),
+                ("legacy", legacy.to_json()),
+            ]),
+        ),
+        ("speedup_streaming_vs_legacy", Json::num(speedup_streaming)),
+        ("speedup_exact_vs_legacy", Json::num(speedup_exact)),
+        (
+            "fidelity",
+            Json::from_pairs(vec![
+                ("monolithic_vs_legacy_cost_rel", Json::num(cost_rel)),
+                ("monolithic_vs_legacy_p95_rel", Json::num(p95_rel_mono)),
+                ("p95_exact", Json::num(exact.report.p95_latency)),
+                ("p95_streaming", Json::num(streaming.report.p95_latency)),
+                ("p95_rel_err", Json::num(p95_rel_stream)),
+                ("within_one_bucket", Json::Bool(within_one_bucket)),
+            ]),
+        ),
+        (
+            "memory",
+            Json::from_pairs(vec![
+                ("metrics_bytes_exact", Json::num(metrics_bytes_exact)),
+                ("metrics_bytes_streaming", Json::num(metrics_bytes_streaming)),
+            ]),
+        ),
+    ]);
+    j.write_file(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -16,12 +16,19 @@
 //!   --concurrency N  invocations one instance runs at once; 0 = unbounded
 //!                    (default 0, the PR 1 model; 1 = Lambda semantics)
 //!   --autoscale P    off | util:<target> | queue:<max_wait_secs>
+//!   --engine E       event | legacy  (default event — the discrete-event
+//!                    engine with layer-pipelined dispatch)
+//!   --no-pipeline    event engine with monolithic per-request dispatch
+//!                    (reproduces the legacy loop bit-for-bit)
+//!   --streaming      O(1)-memory histogram metrics (event engine only)
 //!   --full           full-scale scenario (quick otherwise)
 
 use serverless_moe::config::workload::CorpusPreset;
 use serverless_moe::experiments::traffic::{drift_scenario, scenario_config};
 use serverless_moe::model::ModelPreset;
-use serverless_moe::traffic::{AutoscalePolicy, EpochSimulator, SimReport, Trace};
+use serverless_moe::traffic::{
+    AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine, SimReport, Trace,
+};
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::table::{fcost, fnum, ftime, Table};
 use serverless_moe::workload::Corpus;
@@ -92,6 +99,14 @@ fn main() -> anyhow::Result<()> {
         c => Some(c),
     };
     cfg.autoscale = parse_autoscale(&args.get_or("autoscale", "off"))?;
+    cfg.engine = match args.get_or("engine", "event").as_str() {
+        "legacy" => SimEngine::Legacy,
+        "event" => SimEngine::Event { pipeline: !args.flag("no-pipeline") },
+        other => anyhow::bail!("unknown --engine '{other}' (event | legacy)"),
+    };
+    if args.flag("streaming") {
+        cfg.metrics = MetricsMode::Streaming;
+    }
 
     // Ours: online re-optimization (+ one BO refinement round per redeploy).
     let mut cfg_ours = cfg.clone();

@@ -130,9 +130,87 @@ pub struct ReplicaServeOutcome {
     pub replica_times: Vec<((usize, usize, usize), f64)>,
 }
 
+/// One MoE layer's serving outcome under the instance-lifecycle model — the
+/// per-layer decomposition behind [`serve_with_warmness_detailed`] and the
+/// unit the event engine's layer-pipelined dispatch schedules: a request's
+/// layer *k+1* is dispatched when layer *k*'s `max_service` straggler plus
+/// its non-replica `latency` tail have completed.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerServe {
+    /// Billed cost of the layer (busy-time metered across replicas).
+    pub cost: f64,
+    /// MoE-E2E latency contribution t^lat of the layer.
+    pub latency: f64,
+    /// Slowest replica's execution time; `latency − max_service` is the
+    /// non-replica tail (scatter/gather stages, next-layer load) that rides
+    /// after the last replica finish — it is ≥ 0 by construction.
+    pub max_service: f64,
+}
+
+/// Serve one MoE layer whose expert plans already carry the *real* routed
+/// token counts, with per-replica warmness decided by `warm_of` (queried in
+/// expert-major, replica-minor order). Appends each invoked replica's
+/// `((layer, expert, replica), execution_secs)` to `replica_times` and any
+/// constraint violations to the caller's ledgers. The accounting is
+/// identical to the flat path: summing `cost`/`latency` over layers
+/// reproduces [`serve_with_warmness`] bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_layer_with_warmness(
+    cfg: &PlatformConfig,
+    spec: &MoeModelSpec,
+    layer: usize,
+    plan: &LayerPlan,
+    warm_of: &mut dyn FnMut(usize, usize, usize) -> bool,
+    replica_times: &mut Vec<((usize, usize, usize), f64)>,
+    memory_violations: &mut Vec<(usize, usize)>,
+    payload_violations: &mut Vec<(usize, usize)>,
+) -> LayerServe {
+    let mut layer_cost = 0.0;
+    let mut max_finish = 0.0f64;
+    for (i, ep) in plan.experts.iter().enumerate() {
+        if ep.tokens == 0 {
+            continue;
+        }
+        // Constraint checks are plan-level, exactly as in the flat path.
+        let mem_bad = !memory_feasible(spec, layer, ep);
+        if mem_bad {
+            memory_violations.push((layer, i));
+        }
+        let payload_bad =
+            plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep);
+        if payload_bad {
+            payload_violations.push((layer, i));
+        }
+        let mut busy = 0.0;
+        for g in 0..ep.replicas {
+            let warm = warm_of(layer, i, g);
+            let t_rep = effective_replica_time(
+                cfg, spec, layer, ep, plan.method, plan.beta, warm, mem_bad, payload_bad,
+            );
+            busy += t_rep;
+            max_finish = max_finish.max(t_rep);
+            replica_times.push(((layer, i, g), t_rep));
+        }
+        layer_cost +=
+            cfg.run_cost(ep.mem_mb, busy) + ep.replicas as f64 * cfg.price_per_invocation;
+    }
+    let base_lat = crate::comm::layer_latency(cfg, spec, layer, plan, true);
+    let worst_clean = plan
+        .experts
+        .iter()
+        .map(|ep| replica_time(cfg, spec, layer, ep, plan.method, plan.beta, true))
+        .fold(0.0, f64::max);
+    LayerServe {
+        cost: layer_cost,
+        latency: base_lat + (max_finish - worst_clean).max(0.0),
+        max_service: max_finish,
+    }
+}
+
 /// Primary implementation behind [`serve_with_warmness`]: identical
 /// accounting, but also returns each replica's execution time so callers
-/// (the queued epoch loop) can reserve per-instance busy windows.
+/// (the queued epoch loop) can reserve per-instance busy windows. A thin
+/// layer-by-layer fold of [`serve_layer_with_warmness`].
 pub fn serve_with_warmness_detailed(
     cfg: &PlatformConfig,
     spec: &MoeModelSpec,
@@ -151,43 +229,18 @@ pub fn serve_with_warmness_detailed(
         for (i, ep) in real_plan.experts.iter_mut().enumerate() {
             ep.tokens = real_tokens[e][i];
         }
-        let mut layer_cost = 0.0;
-        let mut max_finish = 0.0f64;
-        for (i, ep) in real_plan.experts.iter().enumerate() {
-            if ep.tokens == 0 {
-                continue;
-            }
-            // Constraint checks are plan-level, exactly as in the flat path.
-            let mem_bad = !memory_feasible(spec, e, ep);
-            if mem_bad {
-                memory_violations.push((e, i));
-            }
-            let payload_bad =
-                plan.method == CommMethod::Direct && !direct_feasible(cfg, spec, ep);
-            if payload_bad {
-                payload_violations.push((e, i));
-            }
-            let mut busy = 0.0;
-            for g in 0..ep.replicas {
-                let warm = warm_of(e, i, g);
-                let t_rep = effective_replica_time(
-                    cfg, spec, e, ep, plan.method, plan.beta, warm, mem_bad, payload_bad,
-                );
-                busy += t_rep;
-                max_finish = max_finish.max(t_rep);
-                replica_times.push(((e, i, g), t_rep));
-            }
-            layer_cost +=
-                cfg.run_cost(ep.mem_mb, busy) + ep.replicas as f64 * cfg.price_per_invocation;
-        }
-        cost += layer_cost;
-        let base_lat = crate::comm::layer_latency(cfg, spec, e, &real_plan, true);
-        let worst_clean = real_plan
-            .experts
-            .iter()
-            .map(|ep| replica_time(cfg, spec, e, ep, plan.method, plan.beta, true))
-            .fold(0.0, f64::max);
-        latency += base_lat + (max_finish - worst_clean).max(0.0);
+        let ls = serve_layer_with_warmness(
+            cfg,
+            spec,
+            e,
+            &real_plan,
+            warm_of,
+            &mut replica_times,
+            &mut memory_violations,
+            &mut payload_violations,
+        );
+        cost += ls.cost;
+        latency += ls.latency;
     }
 
     ReplicaServeOutcome {
@@ -320,6 +373,49 @@ mod tests {
                 .unwrap()
         };
         assert!(time_of((0, 0, 0)) < time_of((0, 0, 1)));
+    }
+
+    #[test]
+    fn layer_decomposition_sums_to_detailed_path_with_nonnegative_tails() {
+        let cfg = PlatformConfig::default();
+        let mut spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        spec.layers.truncate(2);
+        let mut pol = policy(3072, 2, 1000, CommMethod::Indirect);
+        pol.layers[1].experts[2].replicas = 3;
+        let real = vec![vec![1400, 900, 0, 100], vec![2000, 500, 100, 100]];
+        let mut warm_of = |_: usize, _: usize, g: usize| g == 0;
+        let whole = serve_with_warmness_detailed(&cfg, &spec, &pol, &real, &mut warm_of);
+
+        let mut cost = 0.0;
+        let mut latency = 0.0;
+        let mut times = Vec::new();
+        let mut mem_v = Vec::new();
+        let mut pay_v = Vec::new();
+        for (e, plan) in pol.layers.iter().enumerate() {
+            let mut real_plan = plan.clone();
+            for (i, ep) in real_plan.experts.iter_mut().enumerate() {
+                ep.tokens = real[e][i];
+            }
+            let ls = serve_layer_with_warmness(
+                &cfg, &spec, e, &real_plan, &mut warm_of, &mut times, &mut mem_v, &mut pay_v,
+            );
+            // The pipelining invariant: every layer's non-replica tail
+            // (latency − straggler service) is non-negative, so chaining
+            // layer completions never moves a completion backwards.
+            assert!(
+                ls.latency >= ls.max_service,
+                "layer {e}: latency {} < max_service {}",
+                ls.latency,
+                ls.max_service
+            );
+            cost += ls.cost;
+            latency += ls.latency;
+        }
+        assert_eq!(cost, whole.outcome.cost, "per-layer cost sum drifted");
+        assert_eq!(latency, whole.outcome.latency, "per-layer latency sum drifted");
+        assert_eq!(times, whole.replica_times);
+        assert_eq!(mem_v, whole.outcome.memory_violations);
+        assert_eq!(pay_v, whole.outcome.payload_violations);
     }
 
     #[test]

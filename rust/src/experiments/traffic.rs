@@ -18,7 +18,8 @@ use crate::predictor::eval::{predicted_counts, real_counts};
 use crate::predictor::profile::profile_batches;
 use crate::predictor::{BayesPredictor, DatasetTable};
 use crate::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimReport, TrafficConfig,
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimEngine, SimReport,
+    TrafficConfig,
 };
 use crate::util::table::{fcost, fnum, ftime, Table};
 use crate::workload::{Corpus, RequestGenerator, TimedBatch};
@@ -333,6 +334,56 @@ pub fn run(quick: bool) -> Vec<Table> {
             ]);
         }
         tables.push(qt);
+
+        // Dispatch engines on the Lambda-style (concurrency 1) static
+        // deployment: the legacy serial loop, the event engine with
+        // monolithic dispatch (must reproduce legacy), and the event engine
+        // with layer-pipelined dispatch — later layers' queue waits overlap
+        // earlier layers' compute, which shows up as lower latency at
+        // identical billed cost (billing meters busy time).
+        let mut et = Table::new(
+            &format!("Traffic — {name}: dispatch engines (concurrency 1, static deployment)"),
+            &["engine", "billed cost", "p50 latency", "p95 latency", "mean queue delay"],
+        );
+        let cfg_eng = TrafficConfig {
+            reoptimize: false,
+            concurrency: Some(1),
+            autoscale: AutoscalePolicy::Off,
+            ..cfg.clone()
+        };
+        // One ODS solve shared by all three rows: the deployment is truly
+        // static, so the rows differ only in dispatch discipline.
+        let engine_policy = EpochSimulator::new(
+            &scn.platform,
+            &scn.spec,
+            &scn.gate,
+            scn.predictor(),
+            cfg_eng.clone(),
+        )
+        .initial_policy(&scn.traffic);
+        for (label, engine) in [
+            ("legacy serial loop", SimEngine::Legacy),
+            ("event, monolithic", SimEngine::Event { pipeline: false }),
+            ("event, pipelined", SimEngine::Event { pipeline: true }),
+        ] {
+            let cfg_e = TrafficConfig { engine, ..cfg_eng.clone() };
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                cfg_e,
+            );
+            let r = sim.run_with_policy(engine_policy.clone(), &scn.traffic);
+            et.row(vec![
+                label.into(),
+                fcost(r.total_cost),
+                ftime(r.p50_latency),
+                ftime(r.p95_latency),
+                ftime(r.mean_queue_delay),
+            ]);
+        }
+        tables.push(et);
     }
     tables
 }

@@ -150,6 +150,87 @@ impl SimGate {
     }
 }
 
+/// Memoized routing for the serving hot path.
+///
+/// [`SimGate`] logits are a pure function of `(token_id, position bucket,
+/// attention_id)` — exactly a [`features::FeatKey`] — so per-layer top-k
+/// selections can be cached and replayed bit-for-bit. Natural-language token
+/// streams are Zipf-distributed, so a small working set of feature keys
+/// covers almost all routed tokens; the event-driven traffic engine uses
+/// this to take per-token routing off its million-request critical path
+/// (`route_token` allocates two vectors and sorts per call). Counts produced
+/// through the cache are identical to [`predictor::eval::real_counts`]:
+/// the regression tests pin the equivalence exactly.
+///
+/// [`predictor::eval::real_counts`]: crate::predictor::eval::real_counts
+#[derive(Debug, Clone)]
+pub struct RouterCache {
+    /// Per-layer memo: feature key → packed top-k expert selection
+    /// (expert `j` of the selection in byte `j`, low to high).
+    maps: Vec<crate::util::hash::FastMap<features::FeatKey, u32>>,
+    top_k: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RouterCache {
+    pub fn new(gate: &SimGate) -> RouterCache {
+        assert!(gate.top_k <= 4, "packed selections hold at most 4 experts");
+        RouterCache {
+            maps: (0..gate.num_layers).map(|_| Default::default()).collect(),
+            top_k: gate.top_k,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Top-k selection for one token feature at one layer, memoized.
+    #[inline]
+    fn select(&mut self, gate: &SimGate, layer: usize, f: &TokenFeature) -> u32 {
+        let key = features::FeatKey::new(f);
+        if let Some(&packed) = self.maps[layer].get(&key) {
+            self.hits += 1;
+            return packed;
+        }
+        self.misses += 1;
+        let sel = gate.route_token(layer, f);
+        let packed = sel
+            .iter()
+            .enumerate()
+            .fold(0u32, |acc, (j, &e)| acc | ((e as u32) << (8 * j)));
+        self.maps[layer].insert(key, packed);
+        packed
+    }
+
+    /// Per-expert token counts of `batch` for every layer, written into
+    /// `out` (resized/zeroed as needed) — the cached equivalent of
+    /// `real_counts`, bit-identical by construction.
+    pub fn counts_into(&mut self, gate: &SimGate, batch: &Batch, out: &mut Vec<Vec<u64>>) {
+        out.resize(gate.num_layers, Vec::new());
+        for (layer, row) in out.iter_mut().enumerate() {
+            let n_exp = gate.experts_per_layer[layer];
+            row.clear();
+            row.resize(n_exp, 0);
+            for (t, p, a) in batch.tokens() {
+                let f = TokenFeature {
+                    token_id: t,
+                    position_id: p,
+                    attention_id: a,
+                };
+                let packed = self.select(gate, layer, &f);
+                for j in 0..self.top_k {
+                    row[((packed >> (8 * j)) & 0xFF) as usize] += 1;
+                }
+            }
+        }
+    }
+
+    /// Distinct feature keys cached across all layers.
+    pub fn entries(&self) -> usize {
+        self.maps.iter().map(|m| m.len()).sum()
+    }
+}
+
 /// Indices of the k largest values (ties broken by lower index).
 pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u8> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
@@ -248,6 +329,44 @@ mod tests {
         }
         assert!(n > 10.0);
         assert!(agree / n > 0.55, "majority agreement {}", agree / n);
+    }
+
+    #[test]
+    fn router_cache_counts_match_uncached_routing() {
+        let g = gate();
+        let mut cache = RouterCache::new(&g);
+        let mut out = Vec::new();
+        for seed in [1u64, 2] {
+            let c = Corpus::new(CorpusPreset::Enwik8, seed);
+            let b = RequestGenerator::new(c, seed ^ 9, 700).next_batch();
+            cache.counts_into(&g, &b, &mut out);
+            for layer in 0..g.num_layers {
+                assert_eq!(
+                    out[layer],
+                    g.route_batch(layer, &b).expert_counts,
+                    "cached counts drift at layer {layer}"
+                );
+            }
+        }
+        // Zipf token streams repeat features: the memo must actually hit.
+        assert!(cache.hits > 0, "hits {} misses {}", cache.hits, cache.misses);
+        assert!(cache.entries() > 0);
+    }
+
+    #[test]
+    fn router_cache_supports_top2() {
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 2 }.spec();
+        let g = SimGate::new(&spec, 7);
+        let mut cache = RouterCache::new(&g);
+        let c = Corpus::new(CorpusPreset::Enwik8, 3);
+        let b = RequestGenerator::new(c, 4, 300).next_batch();
+        let mut out = Vec::new();
+        cache.counts_into(&g, &b, &mut out);
+        for layer in 0..g.num_layers {
+            assert_eq!(out[layer], g.route_batch(layer, &b).expert_counts);
+            let total: u64 = out[layer].iter().sum();
+            assert_eq!(total as usize, b.total_tokens * 2, "top-2 routes two per token");
+        }
     }
 
     #[test]

@@ -29,6 +29,41 @@ use std::collections::HashMap;
 /// `(moe_layer, expert, replica)`.
 pub type ReplicaKey = (usize, usize, usize);
 
+/// The lifecycle surface the epoch-boundary machinery (autoscaler scale-in,
+/// redeployment teardown, pre-warming) needs from an instance pool. Both the
+/// legacy [`WarmPool`] and the event engine's flat `traffic::sim::SlotArena`
+/// implement it, so the boundary logic is written once and cross-validates
+/// bit-for-bit across engines.
+pub trait InstancePool {
+    /// Per-instance concurrency limit (`None` = unbounded). Queue-driven
+    /// autoscaling policies hold on unbounded pools (no FIFO signal).
+    fn concurrency_limit(&self) -> Option<usize>;
+
+    /// Whether `key` has no invocation still executing at `t` (its queue has
+    /// fully drained) — the autoscaler's scale-in guard.
+    fn idle_at(&self, key: ReplicaKey, t: f64) -> bool;
+
+    /// Tear down one instance (scale-in): its warm environment is released.
+    fn evict(&mut self, key: ReplicaKey);
+
+    /// Tear down every instance (redeployment).
+    fn reset(&mut self);
+
+    /// Mark one instance warm forever (a deploy-time warm-up invocation).
+    fn prewarm(&mut self, key: ReplicaKey);
+
+    /// Pre-warm every replica of every expert in a deployment plan.
+    fn prewarm_plan(&mut self, layers: &[LayerPlan]) {
+        for (l, plan) in layers.iter().enumerate() {
+            for (e, ep) in plan.experts.iter().enumerate() {
+                for g in 0..ep.replicas {
+                    self.prewarm((l, e, g));
+                }
+            }
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct WarmPool {
     /// Virtual time until which each instance stays warm. Instances absent
@@ -44,7 +79,9 @@ pub struct WarmPool {
     /// the PR 1 serving model; Lambda's environment semantics are `Some(1)`).
     pub concurrency: Option<usize>,
     /// Release times of each instance's concurrency slots (always exactly
-    /// `concurrency` entries once the instance has been touched).
+    /// `concurrency` entries once the instance has been touched), kept
+    /// sorted ascending so the min-free slot is `slots[0]` — admission is an
+    /// O(1) peek plus an ordered re-insert instead of a full rescan.
     slots: HashMap<ReplicaKey, Vec<f64>>,
     /// Cumulative execution seconds admitted per instance (across the whole
     /// run — kept through `reset` so end-of-run utilization stays meaningful).
@@ -83,20 +120,11 @@ impl WarmPool {
     }
 
     /// Mark one instance warm forever (a warm-up invocation at deploy time,
-    /// as the paper's measurements do before Fig. 8).
+    /// as the paper's measurements do before Fig. 8). Whole-plan pre-warming
+    /// lives on the [`InstancePool`] trait (`prewarm_plan`), shared with the
+    /// event engine's arena so the two cannot drift apart.
     pub fn prewarm(&mut self, key: ReplicaKey) {
         self.warm_until.insert(key, f64::INFINITY);
-    }
-
-    /// Pre-warm every replica of every expert in a deployment plan.
-    pub fn prewarm_plan(&mut self, layers: &[LayerPlan]) {
-        for (l, plan) in layers.iter().enumerate() {
-            for (e, ep) in plan.experts.iter().enumerate() {
-                for g in 0..ep.replicas {
-                    self.prewarm((l, e, g));
-                }
-            }
-        }
     }
 
     /// Whether `key`'s next invocation at virtual time `now` starts warm.
@@ -138,10 +166,8 @@ impl WarmPool {
         }
         match self.slots.get(&key) {
             None => arrival,
-            Some(slots) => {
-                let min_free = slots.iter().cloned().fold(f64::INFINITY, f64::min);
-                arrival.max(min_free)
-            }
+            // Sorted invariant: the min-free slot is always at index 0.
+            Some(slots) => arrival.max(slots[0]),
         }
     }
 
@@ -159,14 +185,16 @@ impl WarmPool {
                     .slots
                     .entry(key)
                     .or_insert_with(|| vec![f64::NEG_INFINITY; c]);
-                let mut idx = 0usize;
-                for (i, &free) in slots.iter().enumerate() {
-                    if free < slots[idx] {
-                        idx = i;
-                    }
+                // Take the min-free slot (index 0 by the sorted invariant)
+                // and re-insert its new release time in order — no rescan.
+                let start = arrival.max(slots[0]);
+                let fin = start + service;
+                let mut i = 0usize;
+                while i + 1 < slots.len() && slots[i + 1] < fin {
+                    slots[i] = slots[i + 1];
+                    i += 1;
                 }
-                let start = arrival.max(slots[idx]);
-                slots[idx] = start + service;
+                slots[i] = fin;
                 start
             }
         };
@@ -186,7 +214,8 @@ impl WarmPool {
     pub fn idle_at(&self, key: ReplicaKey, t: f64) -> bool {
         match self.slots.get(&key) {
             None => true,
-            Some(slots) => slots.iter().all(|&free| free <= t),
+            // Sorted invariant: the last slot holds the latest release.
+            Some(slots) => slots.last().is_none_or(|&free| free <= t),
         }
     }
 
@@ -235,6 +264,28 @@ impl WarmPool {
         } else {
             self.warm_hits as f64 / total as f64
         }
+    }
+}
+
+impl InstancePool for WarmPool {
+    fn concurrency_limit(&self) -> Option<usize> {
+        self.concurrency
+    }
+
+    fn idle_at(&self, key: ReplicaKey, t: f64) -> bool {
+        WarmPool::idle_at(self, key, t)
+    }
+
+    fn evict(&mut self, key: ReplicaKey) {
+        WarmPool::evict(self, key)
+    }
+
+    fn reset(&mut self) {
+        WarmPool::reset(self)
+    }
+
+    fn prewarm(&mut self, key: ReplicaKey) {
+        WarmPool::prewarm(self, key)
     }
 }
 
@@ -348,6 +399,25 @@ mod tests {
         assert_eq!(p.earliest_start(k, 1.0), 1.0);
         // ...but the run-level busy ledger survives.
         assert!((p.total_busy_secs() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_slots_survive_out_of_order_finishes() {
+        // A short job admitted after a long one releases *earlier*; the
+        // ordered re-insert must keep the min-free slot at index 0 so the
+        // next admission still lands on the true earliest release.
+        let mut p = WarmPool::with_concurrency(f64::INFINITY, Some(3));
+        let k = (2, 1, 0);
+        assert_eq!(p.admit(k, 0.0, 100.0), 0.0); // releases at 100
+        assert_eq!(p.admit(k, 1.0, 2.0), 1.0); // releases at 3
+        assert_eq!(p.admit(k, 2.0, 50.0), 2.0); // releases at 52
+        // All slots busy; earliest release is the short job at t=3.
+        assert_eq!(p.earliest_start(k, 2.5), 3.0);
+        assert_eq!(p.admit(k, 2.5, 1.0), 3.0); // releases at 4
+        // Next earliest is now t=4, not 52 or 100.
+        assert_eq!(p.earliest_start(k, 0.0), 4.0);
+        assert!(!p.idle_at(k, 99.0));
+        assert!(p.idle_at(k, 100.0));
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub use billing::Ledger;
 pub use cpu_cluster::CpuCluster;
 pub use deployer::Deployment;
 pub use function::FunctionInstance;
-pub use lifecycle::{ReplicaKey, WarmPool};
+pub use lifecycle::{InstancePool, ReplicaKey, WarmPool};
 pub use storage::ExternalStorage;
 
 use crate::config::PlatformConfig;

@@ -20,7 +20,7 @@
 //! once per epoch from the per-expert stats of the epoch that just ended.
 
 use crate::deploy::DeploymentPolicy;
-use crate::platform::WarmPool;
+use crate::platform::InstancePool;
 use std::collections::HashMap;
 
 /// Pluggable replica-scaling policy evaluated at epoch boundaries.
@@ -100,11 +100,13 @@ impl Autoscaler {
     /// `now`, then start a fresh stats window. Scale-in only reaps replicas
     /// whose queue in `pool` has drained — and evicts their warm
     /// environments, so scaling the same index back out later starts cold.
-    /// Returns the number of experts whose replica count changed.
-    pub fn rescale(
+    /// Returns the number of experts whose replica count changed. Generic
+    /// over the pool so the legacy `WarmPool` and the event engine's flat
+    /// `SlotArena` share one scaling implementation.
+    pub fn rescale<P: InstancePool + ?Sized>(
         &mut self,
         policy: &mut DeploymentPolicy,
-        pool: &mut WarmPool,
+        pool: &mut P,
         now: f64,
         epoch_secs: f64,
     ) -> usize {
@@ -113,7 +115,7 @@ impl Autoscaler {
         }
         // An unbounded pool produces no FIFO-wait signal; queue-driven
         // decisions must not fire on it (they could only ever scale in).
-        let queue_signals = pool.concurrency.is_some();
+        let queue_signals = pool.concurrency_limit().is_some();
         let mut changes = 0usize;
         for (l, lp) in policy.layers.iter_mut().enumerate() {
             for (i, ep) in lp.experts.iter_mut().enumerate() {
@@ -189,6 +191,7 @@ impl Autoscaler {
 mod tests {
     use super::*;
     use crate::comm::{CommMethod, ExpertPlan, LayerPlan};
+    use crate::platform::WarmPool;
 
     fn one_layer_policy(replicas0: usize, replicas1: usize) -> DeploymentPolicy {
         DeploymentPolicy {

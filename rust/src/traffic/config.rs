@@ -6,6 +6,35 @@ use crate::config::{DeployConfig, PlatformConfig};
 use crate::deploy::DeployProblem;
 use crate::model::MoeModelSpec;
 
+/// Which dispatch engine [`super::epoch::EpochSimulator`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEngine {
+    /// The PR 2 serial per-request loop: all of a request's layers are
+    /// dispatched at its ready time. Kept reachable as the cross-validation
+    /// baseline and the bench harness's reference.
+    Legacy,
+    /// Event-driven discrete-event engine over a flat replica-slot arena
+    /// (`super::sim`). With `pipeline: false` it reproduces the legacy
+    /// monolithic dispatch bit-for-bit; with `pipeline: true` each request's
+    /// layer *k+1* is dispatched when layer *k* completes, so later layers'
+    /// queue waits overlap earlier layers' compute across concurrent
+    /// requests — the paper's pipelined scatter-gather at the serving level.
+    Event { pipeline: bool },
+}
+
+/// How the engine aggregates per-request metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricsMode {
+    /// Exact per-request vectors: sorted percentiles and the cumulative
+    /// cost timeline (memory grows with the request count).
+    Exact,
+    /// O(1)-memory log-scale histograms ([`crate::util::stats::LogHistogram`]):
+    /// percentile estimates within one bucket width (5% relative), exact
+    /// mean/max, no cost timeline. Event engine only — the legacy loop
+    /// always aggregates exactly.
+    Streaming,
+}
+
 /// Traffic-simulation knobs.
 #[derive(Debug, Clone)]
 pub struct TrafficConfig {
@@ -42,6 +71,12 @@ pub struct TrafficConfig {
     pub max_replicas: usize,
     pub beta_grid: Vec<usize>,
     pub seed: u64,
+    /// Dispatch engine (event-driven and layer-pipelined by default; the
+    /// legacy PR 2 loop stays reachable for cross-validation).
+    pub engine: SimEngine,
+    /// Metric aggregation (exact by default; streaming keeps memory O(1) in
+    /// the request count for million-request runs).
+    pub metrics: MetricsMode,
 }
 
 impl Default for TrafficConfig {
@@ -62,6 +97,8 @@ impl Default for TrafficConfig {
             max_replicas: deploy.max_replicas,
             beta_grid: deploy.beta_grid,
             seed: 0x7_1AFF,
+            engine: SimEngine::Event { pipeline: true },
+            metrics: MetricsMode::Exact,
         }
     }
 }

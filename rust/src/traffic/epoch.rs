@@ -17,11 +17,19 @@
 //! (scatter/gather stages, next-layer load) of the analytic model. With
 //! unbounded concurrency every dispatch starts at the ready time and the
 //! loop reproduces the PR 1 serving path bit-for-bit (pinned by the
-//! cross-validation tests). Layer pipelining within one request is
-//! abstracted exactly as in PR 1: all of a request's replicas are dispatched
-//! at the same ready time.
+//! cross-validation tests).
+//!
+//! Two dispatch engines implement this model (selected by
+//! [`TrafficConfig::engine`]): the event-driven, optionally layer-pipelined
+//! engine in [`super::sim`] (the default — layer *k+1* of a request is
+//! dispatched when layer *k* completes, so later layers' queue waits overlap
+//! earlier layers' compute across concurrent requests), and the legacy PR 2
+//! serial loop kept here ([`SimEngine::Legacy`]), which dispatches all of a
+//! request's layers monolithically at its ready time. With pipelining
+//! disabled the event engine reproduces the legacy loop bit-for-bit (pinned
+//! at 1e-6 by the cross-validation tests in `rust/tests/traffic.rs`).
 
-pub use super::config::TrafficConfig;
+pub use super::config::{MetricsMode, SimEngine, TrafficConfig};
 
 use super::autoscale::Autoscaler;
 use super::report::SimReport;
@@ -34,12 +42,12 @@ use crate::deploy::ods::ods_full;
 use crate::deploy::DeploymentPolicy;
 use crate::gating::SimGate;
 use crate::model::MoeModelSpec;
-use crate::platform::{ReplicaKey, WarmPool};
+use crate::platform::{InstancePool, ReplicaKey, WarmPool};
 use crate::predictor::eval::{predicted_counts, real_counts};
 use crate::predictor::profile::absorb_batch;
 use crate::predictor::BayesPredictor;
 use crate::util::stats;
-use crate::workload::TimedBatch;
+use crate::workload::{Batch, TimedBatch};
 use std::collections::HashMap;
 
 /// The epoch-based traffic simulator. Owns the (online-updated) predictor;
@@ -58,10 +66,15 @@ pub struct EpochSimulator<'a> {
     /// `(virtual time, replicas added (+) / reaped (-))` autoscaler actions
     /// of the last run.
     pub autoscale_events: Vec<(f64, i64)>,
+    /// Per-request latency of the last run, indexed in arrival order —
+    /// populated under [`MetricsMode::Exact`] (empty under streaming). The
+    /// pipelined-vs-monolithic dominance tests compare runs request by
+    /// request through this.
+    pub last_latencies: Vec<f64>,
 }
 
 /// Per-layer popularity fractions (uniform for an all-zero layer).
-fn fractions(counts: &[Vec<u64>]) -> Vec<Vec<f64>> {
+pub(crate) fn fractions(counts: &[Vec<u64>]) -> Vec<Vec<f64>> {
     counts
         .iter()
         .map(|row| {
@@ -105,6 +118,7 @@ impl<'a> EpochSimulator<'a> {
             last_policy: None,
             redeploy_times: Vec::new(),
             autoscale_events: Vec::new(),
+            last_latencies: Vec::new(),
         }
     }
 
@@ -132,10 +146,12 @@ impl<'a> EpochSimulator<'a> {
     }
 
     /// Serve `traffic` starting from an explicit deployment (used for the
-    /// LambdaML and static-deployment baselines).
+    /// LambdaML and static-deployment baselines). Dispatches to the engine
+    /// selected by [`TrafficConfig::engine`]: the event-driven engine
+    /// (default, `traffic::sim`) or the legacy PR 2 serial loop.
     pub fn run_with_policy(
         &mut self,
-        mut policy: DeploymentPolicy,
+        policy: DeploymentPolicy,
         traffic: &[TimedBatch],
     ) -> SimReport {
         assert!(
@@ -144,6 +160,77 @@ impl<'a> EpochSimulator<'a> {
         );
         self.redeploy_times.clear();
         self.autoscale_events.clear();
+        self.last_latencies.clear();
+        match self.cfg.engine {
+            SimEngine::Legacy => self.run_legacy(policy, traffic),
+            SimEngine::Event { pipeline } => self.run_event(policy, traffic, pipeline),
+        }
+    }
+
+    /// Shared epoch-boundary machinery of both engines: replica autoscaling,
+    /// then (under `reoptimize`) the drift check and full ODS/BO
+    /// re-deployment with its ≥60 s availability gap and warm-up billing.
+    /// Returns whether the deployment changed (replica counts or a full
+    /// redeploy) so the event engine can refresh its scratch plans.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn epoch_boundary(
+        &mut self,
+        boundary: f64,
+        policy: &mut DeploymentPolicy,
+        pool: &mut dyn InstancePool,
+        autoscaler: &mut Autoscaler,
+        last_batch: Option<&Batch>,
+        basis: &mut Vec<Vec<f64>>,
+        ema: &mut Vec<Vec<f64>>,
+        total_cost: &mut f64,
+        redeploy_ready: &mut f64,
+        redeploys: &mut u64,
+    ) -> bool {
+        // Replica autoscaling first: the cheap between-redeploy nudge. A
+        // successful full re-deployment below overrides whatever it decided.
+        let mut changed = autoscaler.rescale(policy, pool, boundary, self.cfg.epoch_secs) > 0;
+        if self.cfg.reoptimize {
+            if let Some(pb) = last_batch {
+                if tv_distance(ema, basis) > self.cfg.drift_threshold {
+                    if self.cfg.bo_round_iters > 0 {
+                        self.bo_round(pb);
+                    }
+                    let pred = predicted_counts(self.gate, &self.predictor, pb);
+                    let problem = self.cfg.problem(self.platform, self.spec, pred.clone());
+                    if let Some(o) = ods_full(&problem, self.cfg.solver_time_limit) {
+                        *policy = o.policy;
+                        *basis = fractions(&pred);
+                        *ema = basis.clone();
+                        // Challenge 1: the ≥60 s redeployment gap blocks
+                        // serving and tears every instance down. With
+                        // `prewarm`, the operator issues warm-up invocations
+                        // during the gap (as the paper does before
+                        // measuring) — one cold head per replica, billed.
+                        pool.reset();
+                        autoscaler.reset_epoch();
+                        if self.cfg.prewarm {
+                            pool.prewarm_plan(&policy.layers);
+                            *total_cost += self.warmup_cost(policy);
+                        }
+                        *redeploy_ready =
+                            redeploy_ready.max(boundary + self.platform.deploy_time);
+                        self.redeploy_times.push(boundary);
+                        *redeploys += 1;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        changed
+    }
+
+    /// The PR 2 serial per-request loop ([`SimEngine::Legacy`]): every
+    /// request's layers are dispatched monolithically at its ready time.
+    fn run_legacy(
+        &mut self,
+        mut policy: DeploymentPolicy,
+        traffic: &[TimedBatch],
+    ) -> SimReport {
         let mut pool = WarmPool::with_concurrency(self.cfg.keep_alive, self.cfg.concurrency);
         if self.cfg.prewarm {
             pool.prewarm_plan(&policy.layers);
@@ -168,7 +255,10 @@ impl<'a> EpochSimulator<'a> {
         let mut redeploy_ready = 0.0f64;
         let mut next_epoch = self.cfg.epoch_secs;
         let mut timeline: Vec<(f64, f64)> = Vec::with_capacity(traffic.len());
-        let mut last_batch: Option<crate::workload::Batch> = None;
+        // Borrowed, not cloned: re-optimization only needs to *read* the
+        // most recent batch at epoch boundaries, so cloning every batch on
+        // the hot path was pure overhead.
+        let mut last_batch: Option<&Batch> = None;
         let mut last_finish = 0.0f64;
 
         for tb in traffic {
@@ -178,43 +268,18 @@ impl<'a> EpochSimulator<'a> {
             while t >= next_epoch {
                 let boundary = next_epoch;
                 epochs += 1;
-                // Replica autoscaling first: the cheap between-redeploy
-                // nudge. A successful full re-deployment below overrides
-                // whatever it decided.
-                autoscaler.rescale(&mut policy, &mut pool, boundary, self.cfg.epoch_secs);
-                if self.cfg.reoptimize {
-                    if let Some(pb) = last_batch.clone() {
-                        if tv_distance(&ema, &basis) > self.cfg.drift_threshold {
-                            if self.cfg.bo_round_iters > 0 {
-                                self.bo_round(&pb);
-                            }
-                            let pred = predicted_counts(self.gate, &self.predictor, &pb);
-                            let problem =
-                                self.cfg.problem(self.platform, self.spec, pred.clone());
-                            if let Some(o) = ods_full(&problem, self.cfg.solver_time_limit) {
-                                policy = o.policy;
-                                basis = fractions(&pred);
-                                ema = basis.clone();
-                                // Challenge 1: the ≥60 s redeployment gap
-                                // blocks serving and tears every instance
-                                // down. With `prewarm`, the operator issues
-                                // warm-up invocations during the gap (as the
-                                // paper does before measuring) — one cold
-                                // head per replica, billed.
-                                pool.reset();
-                                autoscaler.reset_epoch();
-                                if self.cfg.prewarm {
-                                    pool.prewarm_plan(&policy.layers);
-                                    total_cost += self.warmup_cost(&policy);
-                                }
-                                redeploy_ready =
-                                    redeploy_ready.max(boundary + self.platform.deploy_time);
-                                self.redeploy_times.push(boundary);
-                                redeploys += 1;
-                            }
-                        }
-                    }
-                }
+                self.epoch_boundary(
+                    boundary,
+                    &mut policy,
+                    &mut pool,
+                    &mut autoscaler,
+                    last_batch,
+                    &mut basis,
+                    &mut ema,
+                    &mut total_cost,
+                    &mut redeploy_ready,
+                    &mut redeploys,
+                );
                 next_epoch += self.cfg.epoch_secs;
             }
 
@@ -298,7 +363,7 @@ impl<'a> EpochSimulator<'a> {
                     *e = (1.0 - alpha) * *e + alpha * f;
                 }
             }
-            last_batch = Some(tb.batch.clone());
+            last_batch = Some(&tb.batch);
         }
 
         let mut report = SimReport::from_samples(&latencies, tokens, last_finish, total_cost);
@@ -318,6 +383,7 @@ impl<'a> EpochSimulator<'a> {
         report.scale_ins = autoscaler.scale_ins;
         self.autoscale_events = autoscaler.events.clone();
         self.last_policy = Some(policy);
+        self.last_latencies = latencies;
         report
     }
 

@@ -24,6 +24,14 @@
 //!  - [`autoscale`] — epoch-level replica autoscaling between redeploys
 //!    (target-utilization and queue-depth policies; scale-out lands cold,
 //!    scale-in reaps idle instances and evicts their warm environments);
+//!  - [`sim`]      — the event-driven engine (default): a `BinaryHeap`
+//!    event queue with layer-pipelined dispatch (a request's layer k+1 is
+//!    enqueued when layer k completes), a flat [`sim::SlotArena`] replacing
+//!    per-request hash lookups, memoized routing, and optional O(1)-memory
+//!    streaming metrics — built for million-request traces (see
+//!    `examples/bench_traffic.rs`); the legacy serial loop stays reachable
+//!    via [`config::SimEngine::Legacy`] and is reproduced bit-for-bit when
+//!    pipelining is disabled;
 //!  - [`report`]    — the [`report::SimReport`] aggregate (billed cost over
 //!    time, throughput, latency and queue-delay percentiles, utilization)
 //!    used by the golden-regression fixtures and the `experiments::traffic`
@@ -34,11 +42,13 @@ pub mod autoscale;
 pub mod config;
 pub mod epoch;
 pub mod report;
+pub mod sim;
 pub mod trace;
 
 pub use arrivals::{ArrivalGen, ArrivalProcess};
 pub use autoscale::{AutoscalePolicy, Autoscaler};
-pub use config::TrafficConfig;
+pub use config::{MetricsMode, SimEngine, TrafficConfig};
 pub use epoch::EpochSimulator;
 pub use report::SimReport;
+pub use sim::SlotArena;
 pub use trace::{Trace, TraceRequest};

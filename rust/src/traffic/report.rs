@@ -3,7 +3,7 @@
 //! the `experiments::traffic` tables print.
 
 use crate::util::json::Json;
-use crate::util::stats;
+use crate::util::stats::{self, LogHistogram};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
@@ -84,6 +84,30 @@ impl SimReport {
             scale_ins: 0,
             cost_timeline: Vec::new(),
         }
+    }
+
+    /// Build from the event engine's streaming aggregates: mean/max are
+    /// exact (tracked alongside the buckets), percentiles are histogram
+    /// estimates within one bucket width, and there is no cost timeline —
+    /// memory stays O(1) in the request count.
+    pub fn from_histograms(
+        requests: u64,
+        tokens: u64,
+        duration: f64,
+        total_cost: f64,
+        latency: &LogHistogram,
+        queue_delay: &LogHistogram,
+    ) -> SimReport {
+        let mut r = SimReport::from_samples(&[], tokens, duration, total_cost);
+        r.requests = requests;
+        r.mean_latency = latency.mean();
+        r.p50_latency = latency.percentile(50.0);
+        r.p95_latency = latency.percentile(95.0);
+        r.p99_latency = latency.percentile(99.0);
+        r.mean_queue_delay = queue_delay.mean();
+        r.p95_queue_delay = queue_delay.percentile(95.0);
+        r.max_queue_delay = queue_delay.max();
+        r
     }
 
     /// Fraction of invocations that started warm (1.0 before any).

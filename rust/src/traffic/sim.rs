@@ -1,0 +1,910 @@
+//! Event-driven simulation core: layer-pipelined dispatch at
+//! million-request scale.
+//!
+//! The PR 2 loop in [`super::epoch`] serves requests one at a time in
+//! arrival order and dispatches *all* of a request's layers at its ready
+//! time — the abstraction the ROADMAP flagged, because it lets a request's
+//! layer-5 work reserve (and occupy) an instance while its layer-0 work is
+//! still computing. This module replaces it with a discrete-event engine:
+//!
+//!  - a [`std::collections::BinaryHeap`] event queue over `(time, seq)`
+//!    ordered events — request arrivals are consumed from the (sorted)
+//!    traffic slice, layer-dispatch events flow through the heap, and epoch
+//!    boundaries are evaluated exactly as the legacy loop does (lazily, as
+//!    arrivals cross them, after draining every in-flight event due before
+//!    the boundary);
+//!  - **layer-pipelined dispatch** (`pipeline: true`): a request's layer
+//!    *k+1* is enqueued when layer *k* completes (straggler replica plus the
+//!    non-replica scatter/gather tail of the analytic model), so later
+//!    layers' queue waits overlap earlier layers' compute across concurrent
+//!    requests — the paper's pipelined scatter-gather realized at the
+//!    serving level. With `pipeline: false` every layer is dispatched at the
+//!    request's ready time and the engine reproduces the legacy loop
+//!    bit-for-bit (cross-validation pinned at 1e-6 in `tests/traffic.rs`);
+//!  - a [`SlotArena`]: replica slot state (warm-until, sorted concurrency
+//!    slot releases, busy ledgers) in flat arrays indexed by a precomputed
+//!    `(layer, expert, replica) → usize` map, replacing the per-request
+//!    `HashMap<ReplicaKey, _>` lookups of [`crate::platform::WarmPool`];
+//!  - a [`crate::gating::RouterCache`], so per-token routing is memoized
+//!    (bit-identical to the uncached gate) instead of re-sorting logits for
+//!    every token of every request;
+//!  - optional streaming metrics ([`MetricsMode::Streaming`]): fixed-bucket
+//!    log-scale histograms for latency and queue-delay percentiles keep
+//!    memory O(1) in the request count (exact mean/max; estimates within
+//!    one bucket width of the exact order statistics).
+//!
+//! Model-fidelity notes. Under pipelining, warm/cold starts are judged at
+//! each layer's actual dispatch time and an instance's keep-alive window
+//! extends from its *own* execution end (the monolithic dispatch extends
+//! every window to the whole request's finish); the ≥60 s redeploy gap
+//! blocks in-flight requests' remaining layers too (`blocked_until`), and
+//! the cost timeline is stamped at each request's final-layer dispatch time
+//! so it stays time-sorted. Pipelining is
+//! work-conserving but not a per-request dominance: removing the monolithic
+//! model's acausal head start (later layers occupying instances before
+//! earlier layers finish) can delay a request that benefited from it; the
+//! dominance tests therefore pin equality on homogeneous traces and the
+//! strict win on the contended-downstream-instance case the paper's
+//! pipelining argument is about. When `reoptimize` is off the engine also
+//! skips the predictor-feedback bookkeeping (dataset-table absorption and
+//! the popularity EMA) whose outputs nothing would read — the `SimReport`
+//! is unaffected; only the predictor's end-of-run state differs from a
+//! legacy run.
+
+use super::autoscale::Autoscaler;
+use super::config::MetricsMode;
+use super::epoch::{fractions, EpochSimulator};
+use super::report::SimReport;
+use crate::bo::feedback::serve_layer_with_warmness;
+use crate::comm::LayerPlan;
+use crate::config::PlatformConfig;
+use crate::deploy::DeploymentPolicy;
+use crate::gating::RouterCache;
+use crate::model::MoeModelSpec;
+use crate::platform::{InstancePool, ReplicaKey};
+use crate::predictor::profile::absorb_batch;
+use crate::util::stats::{self, LogHistogram};
+use crate::workload::{Batch, TimedBatch};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+// ------------------------------------------------------------- slot arena
+
+/// Flat arena of replica-instance states: the event engine's replacement
+/// for [`crate::platform::WarmPool`]'s keyed hash maps. Instance identity is
+/// a precomputed dense index `(layer_offset[l] + e) · G + g` with `G` the
+/// replica ceiling, so the hot path (peek, admit, invoke) is pure array
+/// arithmetic. Semantics match `WarmPool` exactly — same keep-alive rule,
+/// same sorted-slot FIFO admission, same busy/queue ledgers — which the
+/// parity property test below pins.
+#[derive(Debug, Clone)]
+pub struct SlotArena {
+    /// Per-layer starting offset into the dense expert enumeration.
+    layer_off: Vec<usize>,
+    /// Replica ceiling G per expert (arena stride).
+    pub max_replicas: usize,
+    /// Concurrent invocations one instance executes (`None` = unbounded).
+    pub concurrency: Option<usize>,
+    pub keep_alive: f64,
+    /// Virtual time until which each instance stays warm
+    /// (`NEG_INFINITY` = cold / never invoked).
+    warm_until: Vec<f64>,
+    /// Slot release times, `c` per instance, each segment sorted ascending
+    /// (empty when unbounded).
+    slot_free: Vec<f64>,
+    /// Cumulative execution seconds admitted per instance (kept through
+    /// `reset`, like the `WarmPool` ledgers).
+    busy: Vec<f64>,
+    total_busy: f64,
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+    pub queued_jobs: u64,
+    pub total_queue_wait: f64,
+}
+
+impl SlotArena {
+    pub fn new(
+        spec: &MoeModelSpec,
+        max_replicas: usize,
+        keep_alive: f64,
+        concurrency: Option<usize>,
+    ) -> SlotArena {
+        assert!(keep_alive >= 0.0, "negative keep-alive");
+        if let Some(c) = concurrency {
+            assert!(c >= 1, "concurrency limit must be >= 1 (got {c})");
+        }
+        let mut layer_off = Vec::with_capacity(spec.num_moe_layers());
+        let mut total = 0usize;
+        for l in 0..spec.num_moe_layers() {
+            layer_off.push(total);
+            total += spec.experts_at(l);
+        }
+        let g = max_replicas.max(1);
+        let n = total * g;
+        let c = concurrency.unwrap_or(0);
+        SlotArena {
+            layer_off,
+            max_replicas: g,
+            concurrency,
+            keep_alive,
+            warm_until: vec![f64::NEG_INFINITY; n],
+            slot_free: vec![f64::NEG_INFINITY; n * c],
+            busy: vec![0.0; n],
+            total_busy: 0.0,
+            warm_hits: 0,
+            cold_starts: 0,
+            queued_jobs: 0,
+            total_queue_wait: 0.0,
+        }
+    }
+
+    /// Dense index of instance `(layer, expert, replica)`.
+    #[inline]
+    pub fn index(&self, layer: usize, expert: usize, replica: usize) -> usize {
+        debug_assert!(replica < self.max_replicas, "replica {replica} out of arena bounds");
+        (self.layer_off[layer] + expert) * self.max_replicas + replica
+    }
+
+    /// Whether the instance's next invocation at `now` starts warm.
+    #[inline]
+    pub fn is_warm_at(&self, idx: usize, now: f64) -> bool {
+        now <= self.warm_until[idx]
+    }
+
+    /// Earliest work-conserving start for work ready at `arrival` — O(1):
+    /// the min-free slot is the head of the sorted segment.
+    #[inline]
+    pub fn earliest_start(&self, idx: usize, arrival: f64) -> f64 {
+        match self.concurrency {
+            None => arrival,
+            Some(c) => arrival.max(self.slot_free[idx * c]),
+        }
+    }
+
+    /// Admit one invocation (FIFO when issued in non-decreasing arrival
+    /// order); returns the scheduled start and records the ledgers.
+    pub fn admit(&mut self, idx: usize, arrival: f64, service: f64) -> f64 {
+        debug_assert!(service >= 0.0, "negative service time");
+        let start = match self.concurrency {
+            None => arrival,
+            Some(c) => {
+                let s = &mut self.slot_free[idx * c..(idx + 1) * c];
+                let start = arrival.max(s[0]);
+                let fin = start + service;
+                let mut i = 0usize;
+                while i + 1 < c && s[i + 1] < fin {
+                    s[i] = s[i + 1];
+                    i += 1;
+                }
+                s[i] = fin;
+                start
+            }
+        };
+        self.busy[idx] += service;
+        self.total_busy += service;
+        let wait = start - arrival;
+        if wait > 0.0 {
+            self.queued_jobs += 1;
+        }
+        self.total_queue_wait += wait;
+        start
+    }
+
+    /// Record an invocation `[now, end]`: counts the derived start state and
+    /// extends the keep-alive window past `end`.
+    pub fn invoke(&mut self, idx: usize, now: f64, end: f64) -> bool {
+        debug_assert!(end >= now, "invocation ends before it starts");
+        let warm = self.is_warm_at(idx, now);
+        if warm {
+            self.warm_hits += 1;
+        } else {
+            self.cold_starts += 1;
+        }
+        let until = &mut self.warm_until[idx];
+        *until = until.max(end + self.keep_alive);
+        warm
+    }
+
+    pub fn total_busy_secs(&self) -> f64 {
+        self.total_busy
+    }
+
+    /// Highest single-instance busy fraction of a `horizon`-second run.
+    pub fn max_utilization(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        self.busy.iter().fold(0.0f64, |acc, &b| acc.max(b / horizon))
+    }
+}
+
+impl InstancePool for SlotArena {
+    fn concurrency_limit(&self) -> Option<usize> {
+        self.concurrency
+    }
+
+    fn idle_at(&self, key: ReplicaKey, t: f64) -> bool {
+        match self.concurrency {
+            None => true,
+            Some(c) => {
+                let idx = self.index(key.0, key.1, key.2);
+                // Sorted invariant: the last slot holds the latest release.
+                self.slot_free[idx * c + (c - 1)] <= t
+            }
+        }
+    }
+
+    fn evict(&mut self, key: ReplicaKey) {
+        let idx = self.index(key.0, key.1, key.2);
+        self.warm_until[idx] = f64::NEG_INFINITY;
+        if let Some(c) = self.concurrency {
+            self.slot_free[idx * c..(idx + 1) * c].fill(f64::NEG_INFINITY);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.warm_until.fill(f64::NEG_INFINITY);
+        self.slot_free.fill(f64::NEG_INFINITY);
+    }
+
+    fn prewarm(&mut self, key: ReplicaKey) {
+        let idx = self.index(key.0, key.1, key.2);
+        self.warm_until[idx] = f64::INFINITY;
+    }
+}
+
+// ------------------------------------------------------------ event types
+
+/// One scheduled layer-dispatch event. Total order `(at, seq)` makes heap
+/// pops deterministic: earlier virtual time first, FIFO among ties.
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    at: f64,
+    seq: u64,
+    req: u32,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> Ordering {
+        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// An admitted request whose layers are still being dispatched (pipelined
+/// mode only). Slots are recycled through a free list, so live memory is
+/// O(concurrent in-flight requests), not O(trace length).
+#[derive(Debug, Default)]
+struct InFlight {
+    traffic_idx: usize,
+    arrival: f64,
+    counts: Vec<Vec<u64>>,
+    next_layer: usize,
+    queue_delay: f64,
+    violated: bool,
+}
+
+/// Reusable per-dispatch scratch buffers (cleared per layer dispatch).
+#[derive(Debug, Default)]
+struct DispatchBufs {
+    starts: Vec<f64>,
+    idxs: Vec<usize>,
+    replica: Vec<(ReplicaKey, f64)>,
+    mem_v: Vec<(usize, usize)>,
+    pay_v: Vec<(usize, usize)>,
+}
+
+/// Metric sink: exact per-request vectors or O(1) streaming histograms.
+#[derive(Debug)]
+struct Metrics {
+    exact: bool,
+    latencies: Vec<f64>,
+    queue_delays: Vec<f64>,
+    timeline: Vec<(f64, f64)>,
+    lat_hist: LogHistogram,
+    qd_hist: LogHistogram,
+}
+
+impl Metrics {
+    fn new(exact: bool, n: usize) -> Metrics {
+        Metrics {
+            exact,
+            latencies: if exact { vec![0.0; n] } else { Vec::new() },
+            queue_delays: if exact { vec![0.0; n] } else { Vec::new() },
+            timeline: Vec::with_capacity(if exact { n } else { 0 }),
+            lat_hist: LogHistogram::latency_default(),
+            qd_hist: LogHistogram::latency_default(),
+        }
+    }
+
+    fn record(&mut self, idx: usize, latency: f64, queue_delay: f64, at: f64, total_cost: f64) {
+        if self.exact {
+            self.latencies[idx] = latency;
+            self.queue_delays[idx] = queue_delay;
+            self.timeline.push((at, total_cost));
+        } else {
+            self.lat_hist.add(latency);
+            self.qd_hist.add(queue_delay);
+        }
+    }
+
+    fn build_report(&mut self, requests: u64, tokens: u64, duration: f64, cost: f64) -> SimReport {
+        if self.exact {
+            let mut r = SimReport::from_samples(&self.latencies, tokens, duration, cost);
+            r.mean_queue_delay = stats::mean(&self.queue_delays);
+            r.p95_queue_delay = stats::percentile(&self.queue_delays, 95.0);
+            r.max_queue_delay = self.queue_delays.iter().cloned().fold(0.0, f64::max);
+            r.cost_timeline = std::mem::take(&mut self.timeline);
+            r
+        } else {
+            SimReport::from_histograms(
+                requests,
+                tokens,
+                duration,
+                cost,
+                &self.lat_hist,
+                &self.qd_hist,
+            )
+        }
+    }
+}
+
+// ---------------------------------------------------------- layer dispatch
+
+/// Outcome of dispatching one layer of one request at one ready time.
+struct LayerDispatch {
+    cost: f64,
+    latency: f64,
+    max_service: f64,
+    /// `max(start + service)` over the layer's replicas
+    /// (`NEG_INFINITY` if the layer routed no tokens).
+    service_finish: f64,
+    queue_delay: f64,
+    violated: bool,
+}
+
+/// Dispatch one layer: write the real token counts into the scratch plan,
+/// peek each needed instance's FIFO start (warm/cold is judged at that
+/// start), price the layer via the shared per-layer serving decomposition,
+/// then admit every replica. Appends `(arena idx, start, service)` to
+/// `pending` so the caller decides the keep-alive end (request finish under
+/// monolithic dispatch, own execution end under pipelining).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_layer(
+    platform: &PlatformConfig,
+    spec: &MoeModelSpec,
+    arena: &mut SlotArena,
+    autoscaler: &mut Autoscaler,
+    plan: &mut LayerPlan,
+    layer: usize,
+    counts: &[u64],
+    ready: f64,
+    pending: &mut Vec<(usize, f64, f64)>,
+    bufs: &mut DispatchBufs,
+) -> LayerDispatch {
+    let DispatchBufs { starts, idxs, replica, mem_v, pay_v } = bufs;
+    starts.clear();
+    idxs.clear();
+    replica.clear();
+    mem_v.clear();
+    pay_v.clear();
+
+    for (ep, &c) in plan.experts.iter_mut().zip(counts) {
+        ep.tokens = c;
+    }
+    for (i, ep) in plan.experts.iter().enumerate() {
+        if ep.tokens == 0 {
+            continue;
+        }
+        for g in 0..ep.replicas {
+            let idx = arena.index(layer, i, g);
+            idxs.push(idx);
+            starts.push(arena.earliest_start(idx, ready));
+        }
+    }
+
+    // The serving decomposition queries warmness in exactly the
+    // expert-major, replica-minor order the peek loop above filled.
+    let arena_ro: &SlotArena = arena;
+    let mut k = 0usize;
+    let ls = serve_layer_with_warmness(
+        platform,
+        spec,
+        layer,
+        plan,
+        &mut |_l, _e, _g| {
+            let warm = arena_ro.is_warm_at(idxs[k], starts[k]);
+            k += 1;
+            warm
+        },
+        replica,
+        mem_v,
+        pay_v,
+    );
+    debug_assert_eq!(k, idxs.len(), "peek/serve replica order diverged");
+
+    let mut service_finish = f64::NEG_INFINITY;
+    let mut queue_delay = 0.0f64;
+    let enabled = autoscaler.enabled();
+    for (j, &(key, t_rep)) in replica.iter().enumerate() {
+        let idx = idxs[j];
+        let start = arena.admit(idx, ready, t_rep);
+        debug_assert_eq!(start, starts[j], "peeked start must match admission");
+        queue_delay = queue_delay.max(start - ready);
+        service_finish = service_finish.max(start + t_rep);
+        if enabled {
+            autoscaler.record(key.0, key.1, t_rep, start - ready);
+        }
+        pending.push((idx, start, t_rep));
+    }
+
+    LayerDispatch {
+        cost: ls.cost,
+        latency: ls.latency,
+        max_service: ls.max_service,
+        service_finish,
+        queue_delay,
+        // `SimReport::violation_batches` counts memory violations (Alg. 2
+        // case (i)) only, exactly as the legacy loop does.
+        violated: !mem_v.is_empty(),
+    }
+}
+
+// ---------------------------------------------------------------- engine
+
+struct EventEngine<'a> {
+    platform: &'a PlatformConfig,
+    spec: &'a MoeModelSpec,
+    num_layers: usize,
+    arena: SlotArena,
+    autoscaler: Autoscaler,
+    /// Policy layer plans with per-request token counts scribbled in;
+    /// refreshed whenever the policy changes at an epoch boundary.
+    scratch: Vec<LayerPlan>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    inflight: Vec<InFlight>,
+    free: Vec<usize>,
+    seq: u64,
+    pending: Vec<(usize, f64, f64)>,
+    bufs: DispatchBufs,
+    metrics: Metrics,
+    total_cost: f64,
+    violation_batches: u64,
+    last_finish: f64,
+    /// Virtual time before which no layer may dispatch: the ≥60 s redeploy
+    /// gap blocks *all* serving, including the remaining layers of requests
+    /// already in flight when the re-deployment fires (layer-0 admission is
+    /// clamped by the run loop; chained layer events are clamped here).
+    blocked_until: f64,
+}
+
+impl EventEngine<'_> {
+    fn push_event(&mut self, at: f64, req: usize) {
+        self.heap.push(Reverse(Ev { at, seq: self.seq, req: req as u32 }));
+        self.seq += 1;
+    }
+
+    /// Process every pending layer event due at or before `limit`.
+    fn drain_until(&mut self, limit: f64) {
+        while let Some(&Reverse(ev)) = self.heap.peek() {
+            if ev.at > limit {
+                break;
+            }
+            self.heap.pop();
+            self.dispatch(ev.req as usize, ev.at);
+        }
+    }
+
+    /// Pipelined admission: take an in-flight slot and dispatch layer 0 at
+    /// the ready time (via the heap when the redeploy gap delays it).
+    fn admit_request(&mut self, ri: usize, t: f64, ready: f64, counts: &mut Vec<Vec<u64>>) {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.inflight.push(InFlight::default());
+                self.inflight.len() - 1
+            }
+        };
+        let fl = &mut self.inflight[slot];
+        fl.traffic_idx = ri;
+        fl.arrival = t;
+        fl.next_layer = 0;
+        fl.queue_delay = 0.0;
+        fl.violated = false;
+        std::mem::swap(&mut fl.counts, counts);
+        if ready > t {
+            self.push_event(ready, slot);
+        } else {
+            self.dispatch(slot, ready);
+        }
+    }
+
+    /// Dispatch the next layer of an in-flight request at `now` (clamped
+    /// past any redeploy gap); chain the following layer at this layer's
+    /// completion, or finalize the request.
+    fn dispatch(&mut self, slot: usize, now: f64) {
+        let now = now.max(self.blocked_until);
+        let l = self.inflight[slot].next_layer;
+        self.pending.clear();
+        let d = dispatch_layer(
+            self.platform,
+            self.spec,
+            &mut self.arena,
+            &mut self.autoscaler,
+            &mut self.scratch[l],
+            l,
+            &self.inflight[slot].counts[l],
+            now,
+            &mut self.pending,
+            &mut self.bufs,
+        );
+        // Keep-alive runs from each replica's own execution end.
+        for &(idx, start, t_rep) in &self.pending {
+            self.arena.invoke(idx, start, start + t_rep);
+        }
+        self.total_cost += d.cost;
+        let completion = d.service_finish.max(now) + (d.latency - d.max_service).max(0.0);
+        let fl = &mut self.inflight[slot];
+        fl.queue_delay = fl.queue_delay.max(d.queue_delay);
+        fl.violated |= d.violated;
+        fl.next_layer += 1;
+        if fl.next_layer < self.num_layers {
+            self.push_event(completion, slot);
+        } else {
+            self.finalize(slot, now, completion);
+        }
+    }
+
+    /// Close out a finished request. `now` is the final layer's dispatch
+    /// time — dispatches happen in nondecreasing virtual-time order, so
+    /// stamping the cost timeline with it (all of the request's cost has
+    /// accrued by then) keeps the timeline time-sorted, which
+    /// `cost_at`-style consumers rely on; `finish` (the request completion,
+    /// later than `now`) is what latency is measured to.
+    fn finalize(&mut self, slot: usize, now: f64, finish: f64) {
+        let fl = &self.inflight[slot];
+        let latency = finish - fl.arrival;
+        let queue_delay = fl.queue_delay;
+        let idx = fl.traffic_idx;
+        let violated = fl.violated;
+        self.metrics.record(idx, latency, queue_delay, now, self.total_cost);
+        if violated {
+            self.violation_batches += 1;
+        }
+        self.last_finish = self.last_finish.max(finish);
+        self.free.push(slot);
+    }
+
+    /// Monolithic dispatch of a whole request at `ready` — the exact PR 2
+    /// accounting (same peek order, same max/tail arithmetic, keep-alive
+    /// extended to the request finish), over the arena.
+    fn serve_monolithic(&mut self, ri: usize, t: f64, ready: f64, counts: &[Vec<u64>]) {
+        self.pending.clear();
+        let mut queue_delay = 0.0f64;
+        let mut max_service = 0.0f64;
+        let mut service_finish = ready;
+        let mut latency_sum = 0.0f64;
+        let mut cost_sum = 0.0f64;
+        let mut violated = false;
+        for l in 0..self.num_layers {
+            let d = dispatch_layer(
+                self.platform,
+                self.spec,
+                &mut self.arena,
+                &mut self.autoscaler,
+                &mut self.scratch[l],
+                l,
+                &counts[l],
+                ready,
+                &mut self.pending,
+                &mut self.bufs,
+            );
+            queue_delay = queue_delay.max(d.queue_delay);
+            max_service = max_service.max(d.max_service);
+            service_finish = service_finish.max(d.service_finish);
+            latency_sum += d.latency;
+            cost_sum += d.cost;
+            violated |= d.violated;
+        }
+        // The request's non-replica latency tail rides on top of the last
+        // service finish (identical arithmetic to the legacy loop).
+        let tail = (latency_sum - max_service).max(0.0);
+        let finish = service_finish + tail;
+        for &(idx, start, _) in &self.pending {
+            self.arena.invoke(idx, start, finish);
+        }
+        self.total_cost += cost_sum;
+        if violated {
+            self.violation_batches += 1;
+        }
+        self.metrics.record(ri, finish - t, queue_delay, t, self.total_cost);
+        self.last_finish = self.last_finish.max(finish);
+    }
+}
+
+// ------------------------------------------------------------- run loop
+
+impl EpochSimulator<'_> {
+    /// The event-driven engine behind [`EpochSimulator::run_with_policy`]
+    /// (see the module docs). `pipeline: false` reproduces the legacy loop;
+    /// `pipeline: true` chains each request's layers through the event heap.
+    pub(crate) fn run_event(
+        &mut self,
+        mut policy: DeploymentPolicy,
+        traffic: &[TimedBatch],
+        pipeline: bool,
+    ) -> SimReport {
+        let platform = self.platform;
+        let spec = self.spec;
+        let gate = self.gate;
+        let num_layers = spec.num_moe_layers();
+        debug_assert_eq!(policy.layers.len(), num_layers);
+
+        // Arena stride: the autoscaler caps at cfg.max_replicas, but a
+        // hand-built initial policy may exceed it.
+        let policy_g = policy
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter().map(|e| e.replicas))
+            .max()
+            .unwrap_or(1);
+        let mut arena = SlotArena::new(
+            spec,
+            self.cfg.max_replicas.max(policy_g),
+            self.cfg.keep_alive,
+            self.cfg.concurrency,
+        );
+        if self.cfg.prewarm {
+            arena.prewarm_plan(&policy.layers);
+        }
+        let exact = self.cfg.metrics == MetricsMode::Exact;
+        let mut eng = EventEngine {
+            platform,
+            spec,
+            num_layers,
+            arena,
+            autoscaler: Autoscaler::new(self.cfg.autoscale, self.cfg.max_replicas),
+            scratch: policy.layers.clone(),
+            heap: BinaryHeap::new(),
+            inflight: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+            pending: Vec::new(),
+            bufs: DispatchBufs::default(),
+            metrics: Metrics::new(exact, traffic.len()),
+            total_cost: 0.0,
+            violation_batches: 0,
+            last_finish: 0.0,
+            blocked_until: 0.0,
+        };
+        let mut router = RouterCache::new(gate);
+        let mut counts_buf: Vec<Vec<u64>> = Vec::new();
+
+        // Popularity the current deployment was sized for, vs realized EMA.
+        let plan_counts: Vec<Vec<u64>> = policy
+            .layers
+            .iter()
+            .map(|l| l.experts.iter().map(|ep| ep.tokens).collect())
+            .collect();
+        let mut basis = fractions(&plan_counts);
+        let mut ema = basis.clone();
+
+        let mut tokens = 0u64;
+        let mut redeploys = 0u64;
+        let mut epochs = 0u64;
+        let mut redeploy_ready = 0.0f64;
+        let mut next_epoch = self.cfg.epoch_secs;
+        let mut last_batch: Option<&Batch> = None;
+
+        for (ri, tb) in traffic.iter().enumerate() {
+            let t = tb.at;
+
+            // ---- epoch boundaries crossed since the previous arrival ----
+            while t >= next_epoch {
+                let boundary = next_epoch;
+                // In-flight work due before the boundary lands on the
+                // pre-boundary deployment generation.
+                eng.drain_until(boundary);
+                epochs += 1;
+                let changed = self.epoch_boundary(
+                    boundary,
+                    &mut policy,
+                    &mut eng.arena,
+                    &mut eng.autoscaler,
+                    last_batch,
+                    &mut basis,
+                    &mut ema,
+                    &mut eng.total_cost,
+                    &mut redeploy_ready,
+                    &mut redeploys,
+                );
+                if changed {
+                    eng.scratch.clone_from(&policy.layers);
+                }
+                // A redeploy blocks all serving for the gap — including the
+                // remaining layers of requests already in flight.
+                eng.blocked_until = redeploy_ready;
+                next_epoch += self.cfg.epoch_secs;
+            }
+            eng.drain_until(t);
+
+            // ---- admit the request ----
+            let ready = t.max(redeploy_ready);
+            router.counts_into(gate, &tb.batch, &mut counts_buf);
+            tokens += tb.batch.total_tokens as u64;
+
+            if self.cfg.reoptimize {
+                // Online feedback: realized routing → table + EMA. Skipped
+                // entirely when re-optimization is off — nothing downstream
+                // reads it and the report is unaffected.
+                absorb_batch(&mut self.predictor.table, gate, &tb.batch);
+                let frac = fractions(&counts_buf);
+                let alpha = self.cfg.ema_alpha;
+                for (el, fl) in ema.iter_mut().zip(&frac) {
+                    for (e, &f) in el.iter_mut().zip(fl) {
+                        *e = (1.0 - alpha) * *e + alpha * f;
+                    }
+                }
+            }
+            last_batch = Some(&tb.batch);
+
+            if pipeline {
+                eng.admit_request(ri, t, ready, &mut counts_buf);
+            } else {
+                eng.serve_monolithic(ri, t, ready, &counts_buf);
+            }
+        }
+        // Drain every remaining in-flight layer event.
+        eng.drain_until(f64::INFINITY);
+
+        // ---- report ----
+        let requests = traffic.len() as u64;
+        let mut report =
+            eng.metrics
+                .build_report(requests, tokens, eng.last_finish, eng.total_cost);
+        report.epochs = epochs;
+        report.redeploys = redeploys;
+        report.warm_invocations = eng.arena.warm_hits;
+        report.cold_invocations = eng.arena.cold_starts;
+        report.violation_batches = eng.violation_batches;
+        report.queued_invocations = eng.arena.queued_jobs;
+        report.busy_secs = eng.arena.total_busy_secs();
+        report.max_utilization = eng.arena.max_utilization(eng.last_finish);
+        report.scale_outs = eng.autoscaler.scale_outs;
+        report.scale_ins = eng.autoscaler.scale_ins;
+        self.autoscale_events = eng.autoscaler.events.clone();
+        self.last_policy = Some(policy);
+        self.last_latencies = std::mem::take(&mut eng.metrics.latencies);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPreset;
+    use crate::platform::WarmPool;
+    use crate::util::check::{ensure, forall_default};
+
+    #[test]
+    fn arena_index_is_dense_and_unique() {
+        let spec = ModelPreset::TinyMoe.spec();
+        let a = SlotArena::new(&spec, 3, 10.0, Some(1));
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..spec.num_moe_layers() {
+            for e in 0..spec.experts_at(l) {
+                for g in 0..3 {
+                    assert!(seen.insert(a.index(l, e, g)), "index collision at ({l},{e},{g})");
+                }
+            }
+        }
+        let n = seen.len();
+        assert!(seen.iter().all(|&i| i < n), "indices not dense");
+    }
+
+    /// The arena must reproduce `WarmPool` exactly: same admission starts,
+    /// same warm/cold judgments, same ledgers — on random job streams over
+    /// random keys, with prewarm/evict/reset events mixed in.
+    #[test]
+    fn prop_arena_matches_warm_pool() {
+        let spec = ModelPreset::TinyMoe.spec();
+        forall_default(
+            |rng| {
+                let conc = match rng.index(3) {
+                    0 => None,
+                    1 => Some(1),
+                    _ => Some(2),
+                };
+                let keep_alive = rng.range_f64(0.0, 20.0);
+                let n = 1 + rng.index(60);
+                let mut t = 0.0;
+                let jobs: Vec<(usize, usize, usize, f64, f64, u8)> = (0..n)
+                    .map(|_| {
+                        t += rng.range_f64(0.0, 1.5);
+                        (
+                            rng.index(2),
+                            rng.index(4),
+                            rng.index(2),
+                            t,
+                            rng.range_f64(0.0, 4.0),
+                            rng.index(12) as u8,
+                        )
+                    })
+                    .collect();
+                (conc, keep_alive, jobs)
+            },
+            |(conc, keep_alive, jobs)| {
+                let mut pool = WarmPool::with_concurrency(*keep_alive, *conc);
+                let mut arena = SlotArena::new(&spec, 2, *keep_alive, *conc);
+                for &(l, e, g, at, service, action) in jobs {
+                    let key = (l, e, g);
+                    let idx = arena.index(l, e, g);
+                    match action {
+                        0 => {
+                            InstancePool::prewarm(&mut pool, key);
+                            InstancePool::prewarm(&mut arena, key);
+                        }
+                        1 => {
+                            InstancePool::evict(&mut pool, key);
+                            InstancePool::evict(&mut arena, key);
+                        }
+                        2 => {
+                            InstancePool::reset(&mut pool);
+                            InstancePool::reset(&mut arena);
+                        }
+                        _ => {
+                            let peek_p = pool.earliest_start(key, at);
+                            let peek_a = arena.earliest_start(idx, at);
+                            ensure(peek_p == peek_a, format!("peek {peek_p} vs {peek_a}"))?;
+                            let s_p = pool.admit(key, at, service);
+                            let s_a = arena.admit(idx, at, service);
+                            ensure(s_p == s_a, format!("start {s_p} vs {s_a}"))?;
+                            let end = s_p + service;
+                            let w_p = pool.invoke(key, s_p, end);
+                            let w_a = arena.invoke(idx, s_a, end);
+                            ensure(w_p == w_a, format!("warmness {w_p} vs {w_a}"))?;
+                        }
+                    }
+                    ensure(
+                        pool.idle_at(key, at) == InstancePool::idle_at(&arena, key, at),
+                        "idle_at diverged",
+                    )?;
+                }
+                ensure(pool.warm_hits == arena.warm_hits, "warm hits diverged")?;
+                ensure(pool.cold_starts == arena.cold_starts, "cold starts diverged")?;
+                ensure(pool.queued_jobs == arena.queued_jobs, "queued jobs diverged")?;
+                ensure(
+                    pool.total_queue_wait == arena.total_queue_wait,
+                    "queue wait diverged",
+                )?;
+                ensure(
+                    pool.total_busy_secs() == arena.total_busy_secs(),
+                    "busy ledger diverged",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn event_order_is_time_then_seq() {
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        heap.push(Reverse(Ev { at: 2.0, seq: 0, req: 0 }));
+        heap.push(Reverse(Ev { at: 1.0, seq: 2, req: 1 }));
+        heap.push(Reverse(Ev { at: 1.0, seq: 1, req: 2 }));
+        let order: Vec<u32> = std::iter::from_fn(|| heap.pop().map(|Reverse(e)| e.req)).collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! A fast, non-cryptographic `BuildHasher` for hot-path maps.
+//!
+//! `std`'s default SipHash is DoS-resistant but ~5× slower than needed for
+//! the simulator's internal maps, whose keys are trusted `u64` feature keys
+//! (`gating::FeatKey`) or small tuples. This is a splitmix64-style mixer in
+//! the spirit of rustc's FxHash — deterministic across runs (no random
+//! state), which the byte-identical-report regression tests rely on.
+
+use std::hash::{BuildHasher, Hasher};
+
+const SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Splitmix64 finalizer: full-avalanche mix of one word.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        mix(self.state)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic fallback: fold 8-byte chunks (and the tail) into the state.
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            let word = u64::from_le_bytes(c.try_into().unwrap());
+            self.write_u64(word);
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut word = 0u64;
+            for (i, &b) in rem.iter().enumerate() {
+                word |= (b as u64) << (8 * i);
+            }
+            self.write_u64(word ^ ((rem.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.state = (self.state.rotate_left(5) ^ n).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// Zero-sized deterministic builder — drop-in for `RandomState`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FastHashBuilder;
+
+impl BuildHasher for FastHashBuilder {
+    type Hasher = FastHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FastHasher {
+        FastHasher::default()
+    }
+}
+
+/// `HashMap` keyed with the fast deterministic hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FastHashBuilder>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let h = |n: u64| {
+            let mut hasher = FastHashBuilder.build_hasher();
+            hasher.write_u64(n);
+            hasher.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(42), h(43));
+        // Nearby keys avalanche apart (the arena/feature keys are dense).
+        let a = h(0x1000) ^ h(0x1001);
+        assert!(a.count_ones() > 8, "weak avalanche: {a:b}");
+    }
+
+    #[test]
+    fn map_works_with_u64_keys() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 3) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&500), Some(&1500));
+    }
+}

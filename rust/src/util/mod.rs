@@ -4,6 +4,7 @@
 
 pub mod check;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod log;
 pub mod rng;

@@ -29,18 +29,21 @@ use serverless_moe::experiments::traffic::{
 use serverless_moe::gating::SimGate;
 use serverless_moe::model::ModelPreset;
 use serverless_moe::platform::events::simulate_layer;
-use serverless_moe::platform::WarmPool;
+use serverless_moe::platform::{InstancePool, WarmPool};
 use serverless_moe::predictor::eval::real_counts;
 use serverless_moe::predictor::profile::profile_batches;
 use serverless_moe::predictor::BayesPredictor;
+use serverless_moe::gating::TokenFeature;
 use serverless_moe::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimReport, Trace, TrafficConfig,
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine,
+    SimReport, Trace, TrafficConfig,
 };
 use serverless_moe::util::check::{ensure, forall, forall_default, Config};
 use serverless_moe::util::json::Json;
 use serverless_moe::util::rng::Rng;
+use serverless_moe::util::stats::LogHistogram;
 use serverless_moe::util::MB;
-use serverless_moe::workload::{Corpus, RequestGenerator, TimedBatch};
+use serverless_moe::workload::{Batch, Corpus, RequestGenerator, Sequence, TimedBatch};
 use std::path::{Path, PathBuf};
 
 fn data_path(name: &str) -> PathBuf {
@@ -569,6 +572,292 @@ fn overload_queueing_positive_delay_bounded_utilization() {
         unbounded.total_cost
     );
     assert_eq!(unbounded.mean_queue_delay, 0.0);
+}
+
+// --------------------------------------------- event engine cross-validation
+
+/// Acceptance criterion of the event-engine PR: with pipelining disabled
+/// the event engine must reproduce the PR 2 queued loop within 1e-6 on the
+/// golden scenario traces — both the unbounded re-optimizing configuration
+/// and the queued + autoscaled one. Integer counters (epochs, redeploys,
+/// warm/cold/queued invocations, scale actions) must match exactly.
+#[test]
+fn event_engine_monolithic_reproduces_legacy_loop_on_golden_traces() {
+    for (label, base_cfg) in [
+        ("unbounded", scenario_config(true)),
+        ("queued+autoscaled", scenario_config_queued(true)),
+    ] {
+        let scn = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 0x601D);
+        let mut legacy_cfg = base_cfg.clone();
+        legacy_cfg.engine = SimEngine::Legacy;
+        let mut event_cfg = base_cfg.clone();
+        event_cfg.engine = SimEngine::Event { pipeline: false };
+
+        let mut sim_l =
+            EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), legacy_cfg);
+        let policy = sim_l.initial_policy(&scn.traffic);
+        let legacy = sim_l.run_with_policy(policy.clone(), &scn.traffic);
+
+        let mut sim_e =
+            EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), event_cfg);
+        let event = sim_e.run_with_policy(policy, &scn.traffic);
+
+        if let Err(e) = event.close_to(&legacy, 1e-6) {
+            panic!("{label}: event engine (pipeline off) drifted from legacy loop: {e}");
+        }
+        assert_eq!(event.requests, legacy.requests, "{label}");
+        assert_eq!(event.epochs, legacy.epochs, "{label}");
+        assert_eq!(event.redeploys, legacy.redeploys, "{label}");
+        assert_eq!(event.warm_invocations, legacy.warm_invocations, "{label}");
+        assert_eq!(event.cold_invocations, legacy.cold_invocations, "{label}");
+        assert_eq!(event.queued_invocations, legacy.queued_invocations, "{label}");
+        assert_eq!(event.violation_batches, legacy.violation_batches, "{label}");
+        assert_eq!(event.scale_outs, legacy.scale_outs, "{label}");
+        assert_eq!(event.scale_ins, legacy.scale_ins, "{label}");
+        let close = |name: &str, a: f64, b: f64| {
+            let rel = (a - b).abs() / b.abs().max(1e-12);
+            assert!(rel < 1e-9, "{label}/{name}: {a} vs {b} (rel {rel})");
+        };
+        close("mean_latency", event.mean_latency, legacy.mean_latency);
+        close("p50_latency", event.p50_latency, legacy.p50_latency);
+        close("p99_latency", event.p99_latency, legacy.p99_latency);
+        close("busy_secs", event.busy_secs, legacy.busy_secs);
+        close("max_utilization", event.max_utilization, legacy.max_utilization);
+        close("max_queue_delay", event.max_queue_delay, legacy.max_queue_delay);
+        // Per-request latencies match too, not just the aggregates.
+        assert_eq!(sim_l.last_latencies.len(), sim_e.last_latencies.len());
+        for (i, (a, b)) in sim_e.last_latencies.iter().zip(&sim_l.last_latencies).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-12);
+            assert!(rel < 1e-9, "{label}: request {i}: event {a} vs legacy {b}");
+        }
+    }
+}
+
+/// A batch of `n` identical tokens — routes every token to one expert per
+/// layer, giving the dominance tests full control over contention.
+fn uniform_batch(token: u32, n: usize) -> Batch {
+    Batch::from_sequences(vec![Sequence {
+        tokens: vec![token; n],
+        positions: vec![0; n],
+        attention_ids: vec![token; n],
+    }])
+}
+
+/// Hand-built two-layer single-replica deployment on the tiny model.
+fn two_layer_policy() -> DeploymentPolicy {
+    DeploymentPolicy {
+        layers: (0..2)
+            .map(|_| LayerPlan {
+                method: CommMethod::Indirect,
+                beta: 1,
+                experts: vec![ExpertPlan { mem_mb: 1152, replicas: 1, tokens: 512 }; 4],
+            })
+            .collect(),
+    }
+}
+
+fn pipeline_test_config(engine: SimEngine) -> TrafficConfig {
+    TrafficConfig {
+        concurrency: Some(1),
+        prewarm: true,
+        keep_alive: f64::INFINITY,
+        epoch_secs: f64::INFINITY,
+        reoptimize: false,
+        autoscale: AutoscalePolicy::Off,
+        engine,
+        ..TrafficConfig::default()
+    }
+}
+
+fn run_pipeline_case(
+    engine: SimEngine,
+    traffic: &[TimedBatch],
+) -> (SimReport, Vec<f64>) {
+    let platform = PlatformConfig::default();
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 0x9A7E);
+    let corpus = Corpus::new(CorpusPreset::Enwik8, 1);
+    let mut gen = RequestGenerator::new(corpus, 2, 256);
+    let profile = profile_batches(&gate, &gen.profile_set(2));
+    let mut sim = EpochSimulator::new(
+        &platform,
+        &spec,
+        &gate,
+        BayesPredictor::new(profile.table, profile.prior),
+        pipeline_test_config(engine),
+    );
+    let report = sim.run_with_policy(two_layer_policy(), traffic);
+    (report, sim.last_latencies.clone())
+}
+
+/// Satellite claim, part 1 — the constructed two-layer contention case the
+/// paper's pipelining argument is about: request A is heavy at both layers,
+/// request B (arriving just after, on a different layer-0 expert but the
+/// same layer-1 expert) is light. Monolithic dispatch reserves A's layer-1
+/// instance at A's ready time, so B queues behind the whole of A; pipelined
+/// dispatch only occupies layer 1 when A actually reaches it, and B — whose
+/// layer-0 finishes long before A's — slips in and out first. B must finish
+/// strictly earlier, A no later, and billed cost must be identical (busy
+/// time is only shifted, never changed, on an all-warm pool).
+#[test]
+fn pipelined_dispatch_beats_monolithic_on_two_layer_contention() {
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 0x9A7E);
+    // Find two tokens sharing a layer-1 expert but differing at layer 0
+    // (position 0, attention = self, so each batch is one feature class).
+    let route = |tk: u32, layer: usize| {
+        let f = TokenFeature { token_id: tk, position_id: 0, attention_id: tk };
+        gate.route_token(layer, &f)[0] as usize
+    };
+    let mut pair = None;
+    'search: for j in 0..4usize {
+        let mut by_l0: [Option<u32>; 4] = [None; 4];
+        for tk in 0..1024u32 {
+            if route(tk, 1) == j {
+                let e0 = route(tk, 0);
+                if by_l0[e0].is_none() {
+                    by_l0[e0] = Some(tk);
+                }
+            }
+            let found: Vec<u32> = by_l0.iter().flatten().copied().collect();
+            if found.len() >= 2 {
+                pair = Some((found[0], found[1]));
+                break 'search;
+            }
+        }
+    }
+    let (tok_a, tok_b) = pair.expect("gate must offer two l0-distinct tokens sharing an l1 expert");
+
+    // A: 60k tokens (its layer 0 runs for seconds); B: 100 tokens at +50 ms.
+    let traffic = vec![
+        TimedBatch { at: 0.0, batch: uniform_batch(tok_a, 60_000) },
+        TimedBatch { at: 0.05, batch: uniform_batch(tok_b, 100) },
+    ];
+    let (mono_r, mono) = run_pipeline_case(SimEngine::Legacy, &traffic);
+    let (pipe_r, pipe) = run_pipeline_case(SimEngine::Event { pipeline: true }, &traffic);
+    assert_eq!(mono.len(), 2);
+    assert_eq!(pipe.len(), 2);
+    for i in 0..2 {
+        assert!(
+            pipe[i] <= mono[i] * (1.0 + 1e-9),
+            "request {i}: pipelined {} later than monolithic {}",
+            pipe[i],
+            mono[i]
+        );
+    }
+    assert!(
+        pipe[1] < 0.5 * mono[1],
+        "contended light request must finish far earlier pipelined: {} vs {}",
+        pipe[1],
+        mono[1]
+    );
+    let rel = (pipe_r.total_cost - mono_r.total_cost).abs() / mono_r.total_cost;
+    assert!(
+        rel < 1e-9,
+        "pipelining must not change all-warm billed cost: {} vs {}",
+        pipe_r.total_cost,
+        mono_r.total_cost
+    );
+}
+
+/// Satellite claim, part 2 — on a homogeneous trace (identical requests
+/// through one shared instance chain) the pipeline is saturated and every
+/// request finishes at the same time under both dispatch disciplines: the
+/// bottleneck layer governs. Pinned per request at 1e-7 relative error.
+#[test]
+fn pipelined_dispatch_matches_monolithic_on_homogeneous_trace() {
+    let spec = ModelPreset::TinyMoe.spec();
+    let gate = SimGate::new(&spec, 0x9A7E);
+    let tok = (0..1024u32)
+        .find(|&tk| {
+            let f = TokenFeature { token_id: tk, position_id: 0, attention_id: tk };
+            gate.route_token(0, &f)[0] < 4
+        })
+        .unwrap();
+    let traffic: Vec<TimedBatch> = (0..10)
+        .map(|i| TimedBatch { at: i as f64 * 0.25, batch: uniform_batch(tok, 1000) })
+        .collect();
+    let (_, mono) = run_pipeline_case(SimEngine::Legacy, &traffic);
+    let (_, pipe) = run_pipeline_case(SimEngine::Event { pipeline: true }, &traffic);
+    assert_eq!(mono.len(), pipe.len());
+    for (i, (p, m)) in pipe.iter().zip(&mono).enumerate() {
+        let rel = (p - m).abs() / m.abs().max(1e-12);
+        assert!(rel < 1e-7, "request {i}: pipelined {p} vs monolithic {m} (rel {rel})");
+    }
+}
+
+/// Streaming metrics: same engine, same trace — histogram percentiles land
+/// within one bucket of the exact ones, exact-by-construction fields match
+/// bit-for-bit, and the cost timeline is dropped (the O(1)-memory mode).
+#[test]
+fn streaming_metrics_match_exact_within_one_bucket() {
+    let scn = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 0xFEED);
+    let mk_cfg = |metrics: MetricsMode| TrafficConfig {
+        reoptimize: false,
+        concurrency: Some(1),
+        metrics,
+        ..scenario_config(true)
+    };
+    let mut sim_x = EpochSimulator::new(
+        &scn.platform,
+        &scn.spec,
+        &scn.gate,
+        scn.predictor(),
+        mk_cfg(MetricsMode::Exact),
+    );
+    let policy = sim_x.initial_policy(&scn.traffic);
+    let exact = sim_x.run_with_policy(policy.clone(), &scn.traffic);
+    let mut sim_s = EpochSimulator::new(
+        &scn.platform,
+        &scn.spec,
+        &scn.gate,
+        scn.predictor(),
+        mk_cfg(MetricsMode::Streaming),
+    );
+    let streamed = sim_s.run_with_policy(policy, &scn.traffic);
+
+    assert_eq!(streamed.requests, exact.requests);
+    assert_eq!(streamed.total_cost, exact.total_cost, "cost is metric-mode independent");
+    assert_eq!(streamed.busy_secs, exact.busy_secs);
+    assert_eq!(streamed.warm_invocations, exact.warm_invocations);
+    let rel_mean = (streamed.mean_latency - exact.mean_latency).abs() / exact.mean_latency;
+    assert!(rel_mean < 1e-12, "histogram mean must be exact: {rel_mean}");
+    // Streaming percentiles must land within one bucket of the exact order
+    // statistic at the same rank (the exact run's per-request latencies are
+    // the ground truth; `stats::percentile` interpolates between ranks, so
+    // it is only an upper bound for a bucketed estimator).
+    let h = LogHistogram::latency_default();
+    let mut lats = sim_x.last_latencies.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(lats.len() as u64, exact.requests);
+    for (name, p, s) in [
+        ("p50", 50.0, streamed.p50_latency),
+        ("p95", 95.0, streamed.p95_latency),
+        ("p99", 99.0, streamed.p99_latency),
+    ] {
+        let rank = (p / 100.0) * (lats.len() - 1) as f64;
+        let stat = lats[rank.floor() as usize];
+        assert!(
+            h.within_one_bucket(s, stat),
+            "{name}: streaming {s} vs exact order stat {stat} beyond one bucket"
+        );
+        assert!(s <= exact.p99_latency * 1.06 + 1e-9, "{name}: runaway estimate {s}");
+    }
+    // Queue-delay p95: the floor-rank estimate can undershoot the
+    // interpolated exact value, but never overshoot it past one bucket.
+    assert!(
+        streamed.p95_queue_delay <= exact.p95_queue_delay * 1.06 + 1e-9,
+        "streaming queue-delay p95 {} overshoots exact {}",
+        streamed.p95_queue_delay,
+        exact.p95_queue_delay
+    );
+    let rel_mq =
+        (streamed.mean_queue_delay - exact.mean_queue_delay).abs()
+            / exact.mean_queue_delay.max(1e-12);
+    assert!(rel_mq < 1e-12, "queue-delay mean must be exact");
+    assert_eq!(streamed.max_queue_delay, exact.max_queue_delay, "max is tracked exactly");
+    assert!(streamed.cost_timeline.is_empty(), "streaming mode keeps no timeline");
+    assert!(sim_s.last_latencies.is_empty(), "streaming mode keeps no per-request vector");
 }
 
 // ------------------------------------------------------- golden regression
