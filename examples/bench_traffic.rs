@@ -1,13 +1,20 @@
-//! Million-request traffic bench: event engine vs the legacy PR 2 loop.
+//! Million-request traffic bench: event engine vs the legacy PR 2 loop,
+//! driven through the declarative Scenario API.
 //!
-//! Generates an N-request Poisson trace (default 1M requests of ~64 tokens
-//! on the tiny model), serves it through four configurations of the same
-//! simulator — the event engine with layer-pipelined dispatch under
-//! streaming and exact metrics, the event engine with monolithic dispatch
-//! (the fidelity control: it must reproduce the legacy numbers), and the
-//! legacy serial loop — and writes `BENCH_traffic.json` with wall-clock
-//! throughput, a peak-RSS proxy (`VmHWM`/`VmRSS` from /proc, best effort),
-//! the streaming-p95 fidelity versus exact, and the headline speedup.
+//! Builds an N-request Poisson scenario (default 1M requests of ~64 tokens
+//! on the tiny model), compiles it once, and serves it through four
+//! configurations of the same compiled scenario — the event engine with
+//! layer-pipelined dispatch under streaming and exact metrics, the event
+//! engine with monolithic dispatch (the fidelity control: it must reproduce
+//! the legacy numbers), and the legacy serial loop — then writes
+//! `BENCH_traffic.json` with wall-clock throughput, a peak-RSS proxy
+//! (`VmHWM`/`VmRSS` from /proc, best effort), the streaming-p95 fidelity
+//! versus exact, and the headline speedup.
+//!
+//! The deployment is hand-built (2 MoE layers × 4 experts × 2 replicas,
+//! Lambda-style concurrency 1) and injected via
+//! `TrafficScenario::run_with_policy`, so no solver runs on the benched
+//! path — both engines measure pure dispatch machinery.
 //!
 //! Runs are ordered smallest-footprint first so the monotone `VmHWM`
 //! high-water mark read after each run brackets that run's peak.
@@ -25,21 +32,15 @@
 
 use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
 use serverless_moe::config::workload::CorpusPreset;
-use serverless_moe::config::PlatformConfig;
 use serverless_moe::deploy::DeploymentPolicy;
-use serverless_moe::gating::SimGate;
-use serverless_moe::model::ModelPreset;
-use serverless_moe::predictor::profile::profile_batches;
-use serverless_moe::predictor::BayesPredictor;
+use serverless_moe::traffic::scenario::{Scenario, TrafficSource};
 use serverless_moe::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine,
-    SimReport, TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, MetricsMode, SimEngine, SimReport, TrafficConfig,
 };
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::json::Json;
 use serverless_moe::util::stats::LogHistogram;
 use serverless_moe::util::table::{fnum, Table};
-use serverless_moe::workload::{Corpus, RequestGenerator, TimedBatch};
 use std::time::Instant;
 
 /// (VmRSS, VmHWM) in MB from /proc/self/status; zeros off-Linux.
@@ -96,35 +97,36 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 0xBE7C4);
     let out = args.get_or("out", "BENCH_traffic.json");
 
-    let platform = PlatformConfig::default();
-    let spec = ModelPreset::TinyMoe.spec();
-    let gate = SimGate::new(&spec, 0xB11D);
-    // Wmt19 has the shortest sequences, so request sizes track the target.
-    let corpus = Corpus::new(CorpusPreset::Wmt19, seed);
-    let mut gen = RequestGenerator::new(corpus, seed ^ 0x7, target_tokens);
-    let profile = profile_batches(&gate, &gen.profile_set(4));
+    // The whole bench workload as one declarative scenario. Wmt19 has the
+    // shortest sequences, so request sizes track the target.
+    let scenario = Scenario::builder("bench-poisson-tiny")
+        .model("tiny")?
+        .seed(seed)
+        .gate_seed(0xB11D)
+        .corpus(CorpusPreset::Wmt19)
+        .profile(4, target_tokens)
+        .traffic(TrafficSource::Synthetic {
+            process: ArrivalProcess::Poisson { rate },
+            duration: None,
+            requests: Some(n),
+            tokens_per_request: target_tokens,
+        })
+        .build()?;
 
-    eprintln!("generating {n}-request Poisson trace at {rate} req/s ...");
+    eprintln!("materializing {n}-request Poisson scenario at {rate} req/s ...");
     let t0 = Instant::now();
-    let mut arr = ArrivalGen::new(ArrivalProcess::Poisson { rate }, seed ^ 0x31);
-    let mut at = 0.0f64;
-    let mut traffic: Vec<TimedBatch> = Vec::with_capacity(n);
-    for _ in 0..n {
-        at += arr.next_gap();
-        traffic.push(TimedBatch { at, batch: gen.next_batch() });
-    }
+    let scn = scenario.materialize()?;
     let trace_gen_secs = t0.elapsed().as_secs_f64();
-    let total_tokens: u64 = traffic.iter().map(|tb| tb.batch.total_tokens as u64).sum();
+    let total_tokens: u64 = scn.traffic.iter().map(|tb| tb.batch.total_tokens as u64).sum();
+    let virtual_secs = scn.traffic.last().map(|tb| tb.at).unwrap_or(0.0);
     eprintln!(
-        "trace ready: {total_tokens} tokens over {:.0} virtual secs ({trace_gen_secs:.1}s to generate)",
-        at
+        "trace ready: {total_tokens} tokens over {virtual_secs:.0} virtual secs \
+         ({trace_gen_secs:.1}s to materialize)"
     );
 
-    // Hand-built static deployment: 2 MoE layers × 4 experts × 2 replicas,
-    // Lambda-style concurrency 1 — no solver on the benched path, so both
-    // engines measure pure dispatch machinery.
+    // Hand-built static deployment: no solver on the benched path.
     let policy = DeploymentPolicy {
-        layers: (0..spec.num_moe_layers())
+        layers: (0..scn.spec.num_moe_layers())
             .map(|_| LayerPlan {
                 method: CommMethod::Indirect,
                 beta: 1,
@@ -145,15 +147,8 @@ fn main() -> anyhow::Result<()> {
     let run = |label: &'static str, engine: SimEngine, metrics: MetricsMode| -> RunResult {
         eprintln!("running {label} ...");
         let cfg = TrafficConfig { engine, metrics, ..base_cfg.clone() };
-        let mut sim = EpochSimulator::new(
-            &platform,
-            &spec,
-            &gate,
-            BayesPredictor::new(profile.table.clone(), profile.prior.clone()),
-            cfg,
-        );
         let t = Instant::now();
-        let report = sim.run_with_policy(policy.clone(), &traffic);
+        let report = scn.run_with_policy(&cfg, policy.clone()).report;
         let wall_secs = t.elapsed().as_secs_f64();
         let (vm_rss_mb, vm_hwm_mb) = rss_mb();
         eprintln!(
@@ -222,8 +217,9 @@ fn main() -> anyhow::Result<()> {
         ("requests", Json::num(n as f64)),
         ("tokens", Json::num(total_tokens as f64)),
         ("rate", Json::num(rate)),
-        ("virtual_secs", Json::num(at)),
+        ("virtual_secs", Json::num(virtual_secs)),
         ("trace_gen_secs", Json::num(trace_gen_secs)),
+        ("scenario", scenario.to_json()),
         (
             "runs",
             Json::from_pairs(vec![

@@ -1,20 +1,22 @@
-//! Trace-driven multi-request serving: run the epoch-based traffic
-//! simulator over a synthetic drift scenario or a JSON request trace, and
-//! print the ours-vs-static-vs-LambdaML-vs-CPU comparison over time.
+//! Trace-driven multi-request serving through the declarative Scenario API:
+//! load (or build) a scenario, compile it once, and print the
+//! ours-vs-static-vs-LambdaML-vs-CPU comparison over time.
 //!
 //! Run:
 //!   cargo run --release --example serve_traffic
+//!   cargo run --release --example serve_traffic -- --scenario rust/tests/data/scenarios/drift_bert_quick.json
 //!   cargo run --release --example serve_traffic -- --model gpt2 --full
 //!   cargo run --release --example serve_traffic -- --trace rust/tests/data/trace_small.json
 //!   cargo run --release --example serve_traffic -- --concurrency 1 --autoscale queue:5
 //!
-//! Options:
+//! Options (each is a thin overlay on the scenario):
+//!   --scenario PATH  load a scenario JSON file (strict parsing; the other
+//!                    flags below override individual fields of it)
 //!   --model M        bert | gpt2 | bert2bert | tiny     (default bert)
 //!   --trace PATH     replay a JSON trace (see traffic::trace for schema)
 //!   --seed N         scenario RNG seed                  (default 0x5EED)
 //!   --no-reopt       disable online re-optimization for the "ours" run
 //!   --concurrency N  invocations one instance runs at once; 0 = unbounded
-//!                    (default 0, the PR 1 model; 1 = Lambda semantics)
 //!   --autoscale P    off | util:<target> | queue:<max_wait_secs>
 //!   --engine E       event | legacy  (default event — the discrete-event
 //!                    engine with layer-pipelined dispatch)
@@ -23,15 +25,10 @@
 //!   --streaming      O(1)-memory histogram metrics (event engine only)
 //!   --full           full-scale scenario (quick otherwise)
 
-use serverless_moe::config::workload::CorpusPreset;
-use serverless_moe::experiments::traffic::{drift_scenario, scenario_config};
-use serverless_moe::model::ModelPreset;
-use serverless_moe::traffic::{
-    AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine, SimReport, Trace,
-};
+use serverless_moe::traffic::scenario::{scenario_config, Baseline, Scenario, TrafficSource};
+use serverless_moe::traffic::{AutoscalePolicy, MetricsMode, SimEngine, SimReport};
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::table::{fcost, fnum, ftime, Table};
-use serverless_moe::workload::Corpus;
 
 fn report_row(t: &mut Table, label: &str, r: &SimReport) {
     t.row(vec![
@@ -49,104 +46,89 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
     ]);
 }
 
-fn parse_autoscale(spec: &str) -> anyhow::Result<AutoscalePolicy> {
-    if spec == "off" {
-        return Ok(AutoscalePolicy::Off);
-    }
-    if let Some(target) = spec.strip_prefix("util:") {
-        return Ok(AutoscalePolicy::TargetUtilization { target: target.parse()? });
-    }
-    if let Some(max_wait) = spec.strip_prefix("queue:") {
-        return Ok(AutoscalePolicy::QueueDepth {
-            max_wait: max_wait.parse()?,
-            idle_below: 0.2,
-        });
-    }
-    anyhow::bail!("unknown --autoscale '{spec}' (off | util:<target> | queue:<max_wait_secs>)")
-}
-
 fn main() -> anyhow::Result<()> {
     serverless_moe::util::log::init_from_env();
     let args = Args::from_env();
-    let preset = ModelPreset::from_name(&args.get_or("model", "bert"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
     let quick = !args.flag("full");
-    let seed = args.get_u64("seed", 0x5EED);
 
-    let mut scn = drift_scenario(preset, quick, seed);
+    // The scenario: a committed JSON file, or the default two-phase drift
+    // workload. Flags overlay individual fields either way.
+    let mut scenario = match args.get("scenario") {
+        Some(path) => Scenario::load(std::path::Path::new(path))?,
+        None => {
+            // The built-in drift comparison reoptimizes with one BO
+            // refinement round per redeploy; a scenario file sets its own
+            // reoptimize/bo_round_iters (so it can express the ablation).
+            let mut cfg = scenario_config(quick);
+            cfg.bo_round_iters = 1;
+            Scenario::builder("drift")
+                .traffic(TrafficSource::Drift { quick })
+                .config(cfg)
+                .build()?
+        }
+    };
+    if let Some(model) = args.get("model") {
+        let preset = serverless_moe::model::ModelPreset::from_name(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        scenario.model = serverless_moe::traffic::ModelSource::Preset(preset);
+    }
+    if let Some(seed) = args.get("seed") {
+        scenario.seed = seed.parse()?;
+    }
     if let Some(path) = args.get("trace") {
-        let trace = Trace::load(std::path::Path::new(path))?;
-        println!(
-            "replaying trace {path}: {} requests, {} tokens over {:.1}s",
-            trace.requests.len(),
-            trace.total_tokens(),
-            trace.duration()
-        );
-        let corpus = Corpus::new(CorpusPreset::Enwik8, seed);
-        scn.traffic = trace.replay(&corpus, seed);
-    } else {
-        println!(
-            "synthetic drift scenario: {} requests ({} heavy then {} light), bursty MMPP arrivals",
+        scenario.source = TrafficSource::TracePath { path: path.to_string() };
+    }
+    if let Some(conc) = args.get("concurrency") {
+        scenario.cfg.concurrency = match conc.parse::<usize>()? {
+            0 => None,
+            c => Some(c),
+        };
+    }
+    if let Some(spec) = args.get("autoscale") {
+        scenario.cfg.autoscale = AutoscalePolicy::parse_cli(spec)?;
+    }
+    if let Some(engine) = args.get("engine") {
+        scenario.cfg.engine = match engine {
+            "legacy" => SimEngine::Legacy,
+            "event" => SimEngine::Event { pipeline: !args.flag("no-pipeline") },
+            other => anyhow::bail!("unknown --engine '{other}' (event | legacy)"),
+        };
+    } else if args.flag("no-pipeline") {
+        scenario.cfg.engine = SimEngine::Event { pipeline: false };
+    }
+    if args.flag("streaming") {
+        scenario.cfg.metrics = MetricsMode::Streaming;
+    }
+    scenario.validate()?;
+
+    // Compile once; every baseline serves the same traffic from the same
+    // profiled predictor state.
+    let scn = scenario.materialize()?;
+    match &scenario.source {
+        TrafficSource::TracePath { path } => println!(
+            "replaying trace {path}: {} requests over {:.1}s",
+            scn.traffic.len(),
+            scn.traffic.last().map(|tb| tb.at).unwrap_or(0.0),
+        ),
+        _ => println!(
+            "scenario '{}': {} requests ({} heavy then {} light)",
+            scenario.name,
             scn.traffic.len(),
             scn.traffic.iter().filter(|tb| tb.batch.total_tokens > 1024).count(),
             scn.traffic.iter().filter(|tb| tb.batch.total_tokens <= 1024).count(),
-        );
+        ),
     }
 
-    let mut cfg = scenario_config(quick);
-    cfg.concurrency = match args.get_usize("concurrency", 0) {
-        0 => None,
-        c => Some(c),
-    };
-    cfg.autoscale = parse_autoscale(&args.get_or("autoscale", "off"))?;
-    cfg.engine = match args.get_or("engine", "event").as_str() {
-        "legacy" => SimEngine::Legacy,
-        "event" => SimEngine::Event { pipeline: !args.flag("no-pipeline") },
-        other => anyhow::bail!("unknown --engine '{other}' (event | legacy)"),
-    };
-    if args.flag("streaming") {
-        cfg.metrics = MetricsMode::Streaming;
+    // Ours: online re-optimization as the scenario configures it; the
+    // --no-reopt flag overlays it off.
+    let mut cfg_ours = scenario.cfg.clone();
+    if args.flag("no-reopt") {
+        cfg_ours.reoptimize = false;
     }
-
-    // Ours: online re-optimization (+ one BO refinement round per redeploy).
-    let mut cfg_ours = cfg.clone();
-    cfg_ours.reoptimize = !args.flag("no-reopt");
-    cfg_ours.bo_round_iters = 1;
-    let mut sim_ours =
-        EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg_ours);
-    let ours = sim_ours.run(&scn.traffic);
-
-    // Static initial deployment.
-    let stat = {
-        let mut cfg_static = cfg.clone();
-        cfg_static.reoptimize = false;
-        let mut sim = EpochSimulator::new(
-            &scn.platform,
-            &scn.spec,
-            &scn.gate,
-            scn.predictor(),
-            cfg_static,
-        );
-        sim.run(&scn.traffic)
-    };
-
-    // LambdaML over-provisioning.
-    let lam = {
-        let mut cfg_lam = cfg.clone();
-        cfg_lam.reoptimize = false;
-        let lam_policy = scn.lambdaml(&cfg_lam);
-        let mut sim = EpochSimulator::new(
-            &scn.platform,
-            &scn.spec,
-            &scn.gate,
-            scn.predictor(),
-            cfg_lam,
-        );
-        sim.run_with_policy(lam_policy, &scn.traffic)
-    };
-
-    // CPU cluster.
-    let cpu = scn.cpu_cluster(false);
+    let ours = scn.run(&cfg_ours, Baseline::Ours);
+    let stat = scn.run(&scenario.cfg, Baseline::Static).report;
+    let lam = scn.run(&scenario.cfg, Baseline::LambdaML).report;
+    let cpu = scn.run(&scenario.cfg, Baseline::CpuCluster).report;
 
     let mut t = Table::new(
         &format!("traffic serving — {}", scn.spec.name),
@@ -164,7 +146,7 @@ fn main() -> anyhow::Result<()> {
             "warm frac",
         ],
     );
-    report_row(&mut t, "ours (online re-opt)", &ours);
+    report_row(&mut t, "ours (online re-opt)", &ours.report);
     report_row(&mut t, "static initial", &stat);
     report_row(&mut t, "LambdaML (max mem)", &lam);
     report_row(&mut t, "CPU cluster", &cpu);
@@ -172,20 +154,25 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "\nsavings: {}% vs static, {}% vs LambdaML, {}% vs CPU cluster",
-        fnum((1.0 - ours.total_cost / stat.total_cost.max(1e-12)) * 100.0),
-        fnum((1.0 - ours.total_cost / lam.total_cost.max(1e-12)) * 100.0),
-        fnum((1.0 - ours.total_cost / cpu.total_cost.max(1e-12)) * 100.0),
+        fnum((1.0 - ours.report.total_cost / stat.total_cost.max(1e-12)) * 100.0),
+        fnum((1.0 - ours.report.total_cost / lam.total_cost.max(1e-12)) * 100.0),
+        fnum((1.0 - ours.report.total_cost / cpu.total_cost.max(1e-12)) * 100.0),
     );
-    if !sim_ours.redeploy_times.is_empty() {
-        println!("re-deployments at t = {:?} (s)", sim_ours.redeploy_times);
-    }
-    if !sim_ours.autoscale_events.is_empty() {
+    let art = &ours.artifacts;
+    if !art.redeploy_times.is_empty() {
         println!(
-            "autoscaler actions (t, +out/-in replicas): {:?}",
-            sim_ours.autoscale_events
+            "re-deployments at t = {:?} (s); {} deployments served overall",
+            art.redeploy_times,
+            art.policy_history.len(),
         );
     }
-    if let Some(policy) = &sim_ours.last_policy {
+    if !art.autoscale_events.is_empty() {
+        println!(
+            "autoscaler actions (t, +out/-in replicas): {:?}",
+            art.autoscale_events
+        );
+    }
+    if let Some(policy) = &art.final_policy {
         // Materialize the final deployment to show its platform footprint.
         let deployment = serverless_moe::platform::Deployment::deploy(
             &scn.platform,

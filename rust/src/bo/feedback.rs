@@ -1,6 +1,12 @@
 //! Serving-cost evaluation of a deployment under *real* routing — the
 //! feedback signal c_τ of Alg. 2 (lines 25-28), plus the per-expert
 //! constraint checks driving the feedback cases (lines 11-19).
+//!
+//! These free functions are the *analytic core* shared by the BO loop and
+//! the traffic engines, not the public serving API: drive simulations
+//! through [`crate::traffic::scenario::Scenario`] (which runs them behind
+//! the epoch/event engines) rather than calling them directly — the
+//! cross-validation tests are the intended remaining direct callers.
 
 use crate::comm::timing::{
     direct_feasible, effective_replica_time, memory_feasible, replica_time,

@@ -5,160 +5,23 @@
 //! counterpart of Fig. 14: the same cost comparison, but accumulated over a
 //! request stream whose expert popularity shifts mid-run instead of a
 //! single pre-warmed batch.
+//!
+//! Everything here drives the simulator through the declarative
+//! [`Scenario`] front door: one scenario per model, compiled once
+//! ([`Scenario::materialize`]), then served under each [`Baseline`] and
+//! engine configuration from identical starting state.
 
-use crate::config::workload::CorpusPreset;
-use crate::config::{CpuClusterConfig, PlatformConfig};
-use crate::deploy::baselines::lambdaml_policy;
-use crate::deploy::DeploymentPolicy;
-use crate::gating::SimGate;
-use crate::model::{ModelPreset, MoeModelSpec};
-use crate::platform::CpuCluster;
-use crate::predictor::bayes::TokenPrior;
-use crate::predictor::eval::{predicted_counts, real_counts};
-use crate::predictor::profile::profile_batches;
-use crate::predictor::{BayesPredictor, DatasetTable};
-use crate::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, SimEngine, SimReport,
-    TrafficConfig,
-};
+use crate::model::ModelPreset;
+use crate::traffic::scenario::{Baseline, Scenario, TrafficSource};
+use crate::traffic::{AutoscalePolicy, SimEngine, SimReport, TrafficConfig};
 use crate::util::table::{fcost, fnum, ftime, Table};
-use crate::workload::{Corpus, RequestGenerator, TimedBatch};
 
-/// A fully-built serving scenario: platform, model, gate, a profiled
-/// predictor state, and a timestamped request stream.
-pub struct TrafficScenario {
-    pub platform: PlatformConfig,
-    pub cpu: CpuClusterConfig,
-    pub spec: MoeModelSpec,
-    pub gate: SimGate,
-    pub table: DatasetTable,
-    pub prior: TokenPrior,
-    pub traffic: Vec<TimedBatch>,
-}
-
-impl TrafficScenario {
-    /// A fresh predictor at the profiled (pre-serving) state — each
-    /// simulation run starts from identical beliefs.
-    pub fn predictor(&self) -> BayesPredictor {
-        BayesPredictor::new(self.table.clone(), self.prior.clone())
-    }
-
-    /// LambdaML over-provisioning policy for this scenario's first request.
-    pub fn lambdaml(&self, cfg: &TrafficConfig) -> DeploymentPolicy {
-        let predictor = self.predictor();
-        let counts = match self.traffic.first() {
-            Some(tb) => predicted_counts(&self.gate, &predictor, &tb.batch),
-            None => (0..self.spec.num_moe_layers())
-                .map(|e| vec![1; self.spec.experts_at(e)])
-                .collect(),
-        };
-        let problem = cfg.problem(&self.platform, &self.spec, counts);
-        lambdaml_policy(&problem)
-    }
-
-    /// Serve the whole stream on the CPU cluster baseline: per-batch
-    /// straggler-bound execution, coarse-grained rental billing over the
-    /// occupied span.
-    pub fn cpu_cluster(&self, better_transformer: bool) -> SimReport {
-        let cluster = CpuCluster::new(self.cpu.clone(), better_transformer);
-        let mut exec_each: Vec<f64> = Vec::with_capacity(self.traffic.len());
-        let mut tokens = 0u64;
-        let mut span = 0.0f64;
-        for tb in &self.traffic {
-            let real = real_counts(&self.gate, &tb.batch);
-            let run = cluster.serve(&self.spec, &real, tb.batch.total_tokens);
-            exec_each.push(run.exec_secs);
-            tokens += tb.batch.total_tokens as u64;
-            span = span.max(tb.at + run.exec_secs);
-        }
-        // No per-request cost timeline: the cluster bills by occupied span
-        // (coarse rental periods), so the over-time table queries
-        // `cpu.job_cost(t)` directly.
-        SimReport::from_samples(&exec_each, tokens, span, self.cpu.job_cost(span.max(1.0)))
-    }
-}
-
-/// The TrafficConfig used across the scenario runs (and the regression
-/// tests, so golden numbers stay pinned to one configuration). Concurrency
-/// is left unbounded here — the PR 1 serving semantics the original golden
-/// numbers were pinned under; the queueing regime is exercised by
-/// [`scenario_config_queued`] and the dedicated comparison table.
-pub fn scenario_config(quick: bool) -> TrafficConfig {
-    TrafficConfig {
-        epoch_secs: 60.0,
-        keep_alive: 900.0,
-        concurrency: None,
-        prewarm: true,
-        drift_threshold: 0.15,
-        // Tight enough that the heavy phase-A batches force replica/memory
-        // upgrades on popular experts — the over-provisioning that goes to
-        // waste once traffic drifts light.
-        t_limit: if quick { 200.0 } else { 300.0 },
-        solver_time_limit: if quick { 0.3 } else { 2.0 },
-        ..TrafficConfig::default()
-    }
-}
-
-/// Queueing-enabled variant pinned by its own golden fixture: Lambda-style
-/// per-instance concurrency 1 with the queue-depth autoscaler nudging
-/// replica counts between redeploys.
-pub fn scenario_config_queued(quick: bool) -> TrafficConfig {
-    TrafficConfig {
-        concurrency: Some(1),
-        autoscale: AutoscalePolicy::QueueDepth { max_wait: 5.0, idle_below: 0.2 },
-        ..scenario_config(quick)
-    }
-}
-
-/// Two-phase drifted traffic: phase A serves heavy requests from one
-/// corpus (the deployment gets sized — replicas, memory, β — for that
-/// load), then phase B shifts to light requests from a *re-permuted*
-/// corpus: a fresh token-rank permutation re-draws which experts are
-/// popular under the fixed gate, so the static deployment keeps billing
-/// replica head-times and above-saturation memory for experts that are no
-/// longer hot. Arrivals come from a bursty two-state MMPP.
-pub fn drift_scenario(preset: ModelPreset, quick: bool, seed: u64) -> TrafficScenario {
-    let platform = PlatformConfig::default();
-    let cpu = CpuClusterConfig::default();
-    let spec = preset.spec();
-    let gate = SimGate::new(&spec, 0xA11CE);
-
-    // Phase A: heavy requests; profile the predictor on the same corpus.
-    let batch_a = if quick { 2048 } else { 4096 };
-    let batch_b = if quick { 512 } else { 1024 };
-    let corpus_a = Corpus::new(CorpusPreset::Enwik8, seed);
-    let mut gen_a = RequestGenerator::new(corpus_a, seed ^ 0x11, batch_a);
-    let n_profile = if quick { 6 } else { 24 };
-    let profile = profile_batches(&gate, &gen_a.profile_set(n_profile));
-
-    // Bursty arrivals over the horizon.
-    let duration = if quick { 600.0 } else { 1500.0 };
-    let process = ArrivalProcess::Mmpp {
-        rate0: 0.8,
-        rate1: 0.1,
-        hold0: 40.0,
-        hold1: 50.0,
-    };
-    let arrivals = ArrivalGen::new(process, seed ^ 0x22).arrivals_until(duration);
-    let split = arrivals.len() / 4;
-
-    // Phase B: re-permuted corpus (new popular tokens → new popular
-    // experts) at 1/8 the request size.
-    let corpus_b = Corpus::new(CorpusPreset::Enwik8, seed ^ 0xD21F7);
-    let mut gen_b = RequestGenerator::new(corpus_b, seed ^ 0x33, batch_b);
-    let mut traffic = gen_a.timed_batches(&arrivals[..split]);
-    traffic.extend(gen_b.timed_batches(&arrivals[split..]));
-
-    TrafficScenario {
-        platform,
-        cpu,
-        spec,
-        gate,
-        table: profile.table,
-        prior: profile.prior,
-        traffic,
-    }
-}
+// Deprecation shims (one release): these moved to `traffic::scenario` when
+// the Scenario API became the front door. Import from there instead.
+#[doc(hidden)]
+pub use crate::traffic::scenario::{
+    drift_scenario, scenario_config, scenario_config_queued, TrafficScenario,
+};
 
 /// Cumulative cost at `t` from a report's timeline (0 before the first
 /// request).
@@ -184,58 +47,29 @@ pub fn run(quick: bool) -> Vec<Table> {
     };
 
     for (name, preset) in models {
-        let scn = drift_scenario(preset, quick, 0x5EED);
         let cfg = scenario_config(quick);
-
-        // Each simulator is scoped so its online-learned table is dropped
-        // before the next run starts.
+        let scenario = Scenario::builder(name)
+            .model_preset(preset)
+            .seed(0x5EED)
+            .traffic(TrafficSource::Drift { quick })
+            .config(cfg.clone())
+            .build()
+            .expect("drift scenario is valid by construction");
+        let scn = scenario.materialize().expect("drift scenario materializes");
 
         // (1) ours: online re-optimization with a BO refinement round.
         let ours = {
             let mut cfg_ours = cfg.clone();
             cfg_ours.reoptimize = true;
             cfg_ours.bo_round_iters = 1;
-            let mut sim = EpochSimulator::new(
-                &scn.platform,
-                &scn.spec,
-                &scn.gate,
-                scn.predictor(),
-                cfg_ours,
-            );
-            sim.run(&scn.traffic)
+            scn.run(&cfg_ours, Baseline::Ours).report
         };
-
         // (2) static: the same initial deployment, never re-optimized.
-        let stat = {
-            let mut cfg_static = cfg.clone();
-            cfg_static.reoptimize = false;
-            let mut sim = EpochSimulator::new(
-                &scn.platform,
-                &scn.spec,
-                &scn.gate,
-                scn.predictor(),
-                cfg_static,
-            );
-            sim.run(&scn.traffic)
-        };
-
+        let stat = scn.run(&cfg, Baseline::Static).report;
         // (3) LambdaML over-provisioning, never re-optimized.
-        let lam = {
-            let mut cfg_lam = cfg.clone();
-            cfg_lam.reoptimize = false;
-            let lam_policy = scn.lambdaml(&cfg_lam);
-            let mut sim = EpochSimulator::new(
-                &scn.platform,
-                &scn.spec,
-                &scn.gate,
-                scn.predictor(),
-                cfg_lam,
-            );
-            sim.run_with_policy(lam_policy, &scn.traffic)
-        };
-
+        let lam = scn.run(&cfg, Baseline::LambdaML).report;
         // (4) CPU cluster.
-        let cpu = scn.cpu_cluster(false);
+        let cpu = scn.run(&cfg, Baseline::CpuCluster).report;
 
         let mut t = Table::new(
             &format!("Traffic — {name}: sustained serving under drifting MMPP load"),
@@ -311,19 +145,11 @@ pub fn run(quick: bool) -> Vec<Table> {
             ),
         ] {
             let cfg_q = TrafficConfig {
-                reoptimize: false,
                 concurrency: conc,
                 autoscale: pol,
                 ..cfg.clone()
             };
-            let mut sim = EpochSimulator::new(
-                &scn.platform,
-                &scn.spec,
-                &scn.gate,
-                scn.predictor(),
-                cfg_q,
-            );
-            let r = sim.run(&scn.traffic);
+            let r = scn.run(&cfg_q, Baseline::Static).report;
             qt.row(vec![
                 label.into(),
                 fcost(r.total_cost),
@@ -353,28 +179,14 @@ pub fn run(quick: bool) -> Vec<Table> {
         };
         // One ODS solve shared by all three rows: the deployment is truly
         // static, so the rows differ only in dispatch discipline.
-        let engine_policy = EpochSimulator::new(
-            &scn.platform,
-            &scn.spec,
-            &scn.gate,
-            scn.predictor(),
-            cfg_eng.clone(),
-        )
-        .initial_policy(&scn.traffic);
+        let engine_policy = scn.initial_policy(&cfg_eng);
         for (label, engine) in [
             ("legacy serial loop", SimEngine::Legacy),
             ("event, monolithic", SimEngine::Event { pipeline: false }),
             ("event, pipelined", SimEngine::Event { pipeline: true }),
         ] {
             let cfg_e = TrafficConfig { engine, ..cfg_eng.clone() };
-            let mut sim = EpochSimulator::new(
-                &scn.platform,
-                &scn.spec,
-                &scn.gate,
-                scn.predictor(),
-                cfg_e,
-            );
-            let r = sim.run_with_policy(engine_policy.clone(), &scn.traffic);
+            let r = scn.run_with_policy(&cfg_e, engine_policy.clone()).report;
             et.row(vec![
                 label.into(),
                 fcost(r.total_cost),

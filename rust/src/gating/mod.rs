@@ -202,6 +202,32 @@ impl RouterCache {
         packed
     }
 
+    /// Visit the memoized top-k selection of every token of `batch` at
+    /// `layer`, in batch token order (experts of one token visited low
+    /// selection rank first) — selections are bit-identical to
+    /// [`SimGate::route_token`] by construction. This is the shared
+    /// iteration under [`RouterCache::counts_into`] and the cached
+    /// online-absorb path (`predictor::profile::absorb_batch`).
+    pub fn route_layer(
+        &mut self,
+        gate: &SimGate,
+        layer: usize,
+        batch: &Batch,
+        mut visit: impl FnMut(&TokenFeature, u8),
+    ) {
+        for (t, p, a) in batch.tokens() {
+            let f = TokenFeature {
+                token_id: t,
+                position_id: p,
+                attention_id: a,
+            };
+            let packed = self.select(gate, layer, &f);
+            for j in 0..self.top_k {
+                visit(&f, ((packed >> (8 * j)) & 0xFF) as u8);
+            }
+        }
+    }
+
     /// Per-expert token counts of `batch` for every layer, written into
     /// `out` (resized/zeroed as needed) — the cached equivalent of
     /// `real_counts`, bit-identical by construction.
@@ -211,17 +237,7 @@ impl RouterCache {
             let n_exp = gate.experts_per_layer[layer];
             row.clear();
             row.resize(n_exp, 0);
-            for (t, p, a) in batch.tokens() {
-                let f = TokenFeature {
-                    token_id: t,
-                    position_id: p,
-                    attention_id: a,
-                };
-                let packed = self.select(gate, layer, &f);
-                for j in 0..self.top_k {
-                    row[((packed >> (8 * j)) & 0xFF) as usize] += 1;
-                }
-            }
+            self.route_layer(gate, layer, batch, |_, expert| row[expert as usize] += 1);
         }
     }
 

@@ -57,6 +57,24 @@ impl ModelPreset {
         }
     }
 
+    /// Canonical scenario/CLI name of the preset — the inverse of
+    /// [`ModelPreset::from_name`] (`None` for parameterizations that name
+    /// does not reach; scenario files fall back to the inline spec encoding
+    /// for those).
+    pub fn canonical_name(self) -> Option<&'static str> {
+        match self {
+            ModelPreset::BertMoe { experts: 4, top_k: 1 } => Some("bert"),
+            ModelPreset::BertMoe { experts: 8, top_k: 1 } => Some("bert8"),
+            ModelPreset::BertMoe { experts: 16, top_k: 1 } => Some("bert16"),
+            ModelPreset::BertMoe { experts: 4, top_k: 2 } => Some("bert-top2"),
+            ModelPreset::Gpt2Moe { top_k: 1 } => Some("gpt2"),
+            ModelPreset::Gpt2Moe { top_k: 2 } => Some("gpt2-top2"),
+            ModelPreset::Bert2BertMoe { top_k: 1 } => Some("bert2bert"),
+            ModelPreset::TinyMoe => Some("tiny"),
+            _ => None,
+        }
+    }
+
     pub fn from_name(s: &str) -> Option<ModelPreset> {
         match s {
             "bert" | "bert-moe" => Some(ModelPreset::BertMoe { experts: 4, top_k: 1 }),
@@ -127,5 +145,15 @@ mod tests {
             assert!(ModelPreset::from_name(n).is_some(), "{n}");
         }
         assert!(ModelPreset::from_name("unknown").is_none());
+    }
+
+    #[test]
+    fn canonical_name_inverts_from_name() {
+        for n in ["bert", "bert8", "bert16", "bert-top2", "gpt2", "gpt2-top2", "bert2bert", "tiny"]
+        {
+            let p = ModelPreset::from_name(n).unwrap();
+            assert_eq!(p.canonical_name(), Some(n));
+        }
+        assert_eq!(ModelPreset::BertMoe { experts: 32, top_k: 1 }.canonical_name(), None);
     }
 }

@@ -6,7 +6,7 @@
 use super::bayes::TokenPrior;
 use super::lina::LinaPredictor;
 use super::table::DatasetTable;
-use crate::gating::{SimGate, TokenFeature};
+use crate::gating::{RouterCache, SimGate, TokenFeature};
 use crate::workload::Batch;
 
 /// Result of profiling: the dataset table, the Lina counts, and the token
@@ -57,18 +57,22 @@ pub fn profile_batches(gate: &SimGate, batches: &[Batch]) -> ProfileResult {
 /// existing table — the Alg. 1 feedback path the traffic simulator drives
 /// between epochs, so the predictor tracks shifting expert popularity
 /// without a fresh offline profiling pass.
-pub fn absorb_batch(table: &mut DatasetTable, gate: &SimGate, batch: &Batch) {
+///
+/// Routing goes through the shared [`RouterCache`] memo: `SimGate` logits
+/// are a pure function of the token feature, so the Zipf-repeated features
+/// of a serving stream hit the cache instead of re-sorting logits per token
+/// per layer (the same optimization the event engine applies to serving).
+/// Cached selections are bit-identical to [`SimGate::route_token`], so the
+/// absorbed table — and hence the predictor end-state — is bit-identical to
+/// the uncached path (pinned by `cached_absorb_is_bit_identical`).
+pub fn absorb_batch(
+    table: &mut DatasetTable,
+    gate: &SimGate,
+    router: &mut RouterCache,
+    batch: &Batch,
+) {
     for layer in 0..gate.num_layers {
-        for (t, p, a) in batch.tokens() {
-            let f = TokenFeature {
-                token_id: t,
-                position_id: p,
-                attention_id: a,
-            };
-            for &expert in &gate.route_token(layer, &f) {
-                table.add(layer, &f, expert, 1.0);
-            }
-        }
+        router.route_layer(gate, layer, batch, |f, expert| table.add(layer, f, expert, 1.0));
     }
 }
 
@@ -103,13 +107,60 @@ mod tests {
         let mut gen = RequestGenerator::new(corpus, 5, 256);
         let batches = gen.profile_set(2);
         let offline = profile_batches(&gate, &batches);
+        let mut router = RouterCache::new(&gate);
         let mut online = DatasetTable::new(&gate.experts_per_layer);
         for b in &batches {
-            absorb_batch(&mut online, &gate, b);
+            absorb_batch(&mut online, &gate, &mut router, b);
         }
         for (a, b) in offline.table.layers.iter().zip(&online.layers) {
             assert_eq!(a.num_keys(), b.num_keys());
             assert_eq!(a.expert_totals(), b.expert_totals());
+        }
+    }
+
+    /// The ROADMAP satellite's contract: routing the online-absorb path
+    /// through the `RouterCache` memo must leave the dataset table — every
+    /// (layer, feature key, expert, count) entry — bit-identical to the
+    /// uncached per-token re-routing it replaces, across repeated batches
+    /// (where the memo actually hits).
+    #[test]
+    fn cached_absorb_is_bit_identical() {
+        let spec = ModelPreset::TinyMoe.spec();
+        let gate = SimGate::new(&spec, 9);
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 4);
+        let mut gen = RequestGenerator::new(corpus, 11, 384);
+        let batches = gen.profile_set(3);
+
+        let mut cached = DatasetTable::new(&gate.experts_per_layer);
+        let mut router = RouterCache::new(&gate);
+        // Reference: the pre-satellite uncached loop, verbatim.
+        let mut uncached = DatasetTable::new(&gate.experts_per_layer);
+        for b in &batches {
+            absorb_batch(&mut cached, &gate, &mut router, b);
+            for layer in 0..gate.num_layers {
+                for (t, p, a) in b.tokens() {
+                    let f = TokenFeature {
+                        token_id: t,
+                        position_id: p,
+                        attention_id: a,
+                    };
+                    for &expert in &gate.route_token(layer, &f) {
+                        uncached.add(layer, &f, expert, 1.0);
+                    }
+                }
+            }
+        }
+        assert!(router.hits > 0, "repeated batches must hit the memo");
+        let sorted = |t: &DatasetTable| {
+            let mut e = t.entries();
+            e.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+            e
+        };
+        let (a, b) = (sorted(&cached), sorted(&uncached));
+        assert_eq!(a.len(), b.len());
+        for ((la, ka, ea, ca), (lb, kb, eb, cb)) in a.iter().zip(&b) {
+            assert_eq!((la, ka, ea), (lb, kb, eb));
+            assert!(ca == cb, "count drift at ({la}, {ka:?}, {ea}): {ca} vs {cb}");
         }
     }
 

@@ -6,6 +6,8 @@
 //! experts are hot — the dynamic-workload regime that Remoe and FaaSMoE
 //! stress and that the BO re-optimization loop exists to handle.
 
+use super::error::{self, ScenarioError};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The stochastic process generating request arrival times.
@@ -50,10 +52,22 @@ impl ArrivalProcess {
         }
     }
 
-    fn validate(&self) {
+    /// Non-panicking parameter validation — what the scenario builder
+    /// surfaces as a typed error; [`ArrivalGen::new`] asserts on it.
+    pub fn check(&self) -> Result<(), ScenarioError> {
+        let positive = |field: &str, v: f64| {
+            if v > 0.0 && v.is_finite() {
+                Ok(())
+            } else {
+                Err(ScenarioError::invalid(
+                    format!("traffic.process.{field}"),
+                    format!("must be finite and > 0, got {v}"),
+                ))
+            }
+        };
         match *self {
             ArrivalProcess::Deterministic { rate } | ArrivalProcess::Poisson { rate } => {
-                assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be > 0");
+                positive("rate", rate)
             }
             ArrivalProcess::Mmpp {
                 rate0,
@@ -61,16 +75,83 @@ impl ArrivalProcess {
                 hold0,
                 hold1,
             } => {
-                assert!(
-                    rate0 > 0.0 && rate1 > 0.0 && rate0.is_finite() && rate1.is_finite(),
-                    "MMPP rates must be finite and > 0"
-                );
-                assert!(
-                    hold0 > 0.0 && hold1 > 0.0 && hold0.is_finite() && hold1.is_finite(),
-                    "MMPP holding times must be finite and > 0"
-                );
+                positive("rate0", rate0)?;
+                positive("rate1", rate1)?;
+                positive("hold0", hold0)?;
+                positive("hold1", hold1)
             }
         }
+    }
+
+    fn validate(&self) {
+        if let Err(e) = self.check() {
+            panic!("{e}");
+        }
+    }
+
+    /// Scenario-file encoding: a tagged object, e.g.
+    /// `{"kind": "poisson", "rate": 2.0}`.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ArrivalProcess::Deterministic { rate } => Json::from_pairs(vec![
+                ("kind", Json::str("deterministic")),
+                ("rate", Json::num(rate)),
+            ]),
+            ArrivalProcess::Poisson { rate } => Json::from_pairs(vec![
+                ("kind", Json::str("poisson")),
+                ("rate", Json::num(rate)),
+            ]),
+            ArrivalProcess::Mmpp {
+                rate0,
+                rate1,
+                hold0,
+                hold1,
+            } => Json::from_pairs(vec![
+                ("kind", Json::str("mmpp")),
+                ("rate0", Json::num(rate0)),
+                ("rate1", Json::num(rate1)),
+                ("hold0", Json::num(hold0)),
+                ("hold1", Json::num(hold1)),
+            ]),
+        }
+    }
+
+    /// Strict inverse of [`ArrivalProcess::to_json`]: unknown kinds and
+    /// unknown fields are rejected, parameters are range-checked.
+    pub fn from_json(j: &Json) -> Result<ArrivalProcess, ScenarioError> {
+        const SECTION: &str = "traffic.process";
+        let process = match error::req_str(j, SECTION, "kind")? {
+            "deterministic" => {
+                error::check_keys(j, SECTION, &["kind", "rate"])?;
+                ArrivalProcess::Deterministic {
+                    rate: error::req_f64(j, SECTION, "rate")?,
+                }
+            }
+            "poisson" => {
+                error::check_keys(j, SECTION, &["kind", "rate"])?;
+                ArrivalProcess::Poisson {
+                    rate: error::req_f64(j, SECTION, "rate")?,
+                }
+            }
+            "mmpp" => {
+                error::check_keys(j, SECTION, &["kind", "rate0", "rate1", "hold0", "hold1"])?;
+                ArrivalProcess::Mmpp {
+                    rate0: error::req_f64(j, SECTION, "rate0")?,
+                    rate1: error::req_f64(j, SECTION, "rate1")?,
+                    hold0: error::req_f64(j, SECTION, "hold0")?,
+                    hold1: error::req_f64(j, SECTION, "hold1")?,
+                }
+            }
+            other => {
+                return Err(ScenarioError::UnknownName {
+                    what: "arrival process",
+                    name: other.to_string(),
+                    known: "deterministic | poisson | mmpp",
+                })
+            }
+        };
+        process.check()?;
+        Ok(process)
     }
 }
 
@@ -197,6 +278,33 @@ mod tests {
         assert_eq!(a, b);
         let c = ArrivalGen::new(p, 43).arrivals_until(100.0);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejection() {
+        for p in [
+            ArrivalProcess::Deterministic { rate: 4.0 },
+            ArrivalProcess::Poisson { rate: 0.5 },
+            ArrivalProcess::Mmpp { rate0: 20.0, rate1: 2.0, hold0: 5.0, hold1: 5.0 },
+        ] {
+            let back = ArrivalProcess::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+        let bad_kind = Json::parse(r#"{"kind":"uniform","rate":1}"#).unwrap();
+        assert!(matches!(
+            ArrivalProcess::from_json(&bad_kind),
+            Err(ScenarioError::UnknownName { .. })
+        ));
+        let typo = Json::parse(r#"{"kind":"poisson","rte":1}"#).unwrap();
+        assert!(matches!(
+            ArrivalProcess::from_json(&typo),
+            Err(ScenarioError::UnknownField { .. })
+        ));
+        let neg = Json::parse(r#"{"kind":"poisson","rate":-2}"#).unwrap();
+        assert!(matches!(
+            ArrivalProcess::from_json(&neg),
+            Err(ScenarioError::Invalid { .. })
+        ));
     }
 
     #[test]

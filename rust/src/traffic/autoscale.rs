@@ -19,8 +19,10 @@
 //! Policies are pluggable via [`AutoscalePolicy`]; decisions are evaluated
 //! once per epoch from the per-expert stats of the epoch that just ended.
 
+use super::error::{self, ScenarioError};
 use crate::deploy::DeploymentPolicy;
 use crate::platform::InstancePool;
+use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// Pluggable replica-scaling policy evaluated at epoch boundaries.
@@ -38,6 +40,120 @@ pub enum AutoscalePolicy {
     /// bounded concurrency: on an unbounded pool there is no FIFO signal, so
     /// the policy holds replica counts rather than ratcheting them down.
     QueueDepth { max_wait: f64, idle_below: f64 },
+}
+
+impl AutoscalePolicy {
+    /// Scenario-file encoding: a tagged object, e.g.
+    /// `{"kind": "queue-depth", "max_wait": 5.0, "idle_below": 0.2}`.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            AutoscalePolicy::Off => Json::from_pairs(vec![("kind", Json::str("off"))]),
+            AutoscalePolicy::TargetUtilization { target } => Json::from_pairs(vec![
+                ("kind", Json::str("target-utilization")),
+                ("target", Json::num(target)),
+            ]),
+            AutoscalePolicy::QueueDepth { max_wait, idle_below } => Json::from_pairs(vec![
+                ("kind", Json::str("queue-depth")),
+                ("max_wait", Json::num(max_wait)),
+                ("idle_below", Json::num(idle_below)),
+            ]),
+        }
+    }
+
+    /// Strict inverse of [`AutoscalePolicy::to_json`].
+    pub fn from_json(j: &Json) -> Result<AutoscalePolicy, ScenarioError> {
+        const SECTION: &str = "config.autoscale";
+        let policy = match error::req_str(j, SECTION, "kind")? {
+            "off" => {
+                error::check_keys(j, SECTION, &["kind"])?;
+                AutoscalePolicy::Off
+            }
+            "target-utilization" => {
+                error::check_keys(j, SECTION, &["kind", "target"])?;
+                AutoscalePolicy::TargetUtilization {
+                    target: error::req_f64(j, SECTION, "target")?,
+                }
+            }
+            "queue-depth" => {
+                error::check_keys(j, SECTION, &["kind", "max_wait", "idle_below"])?;
+                AutoscalePolicy::QueueDepth {
+                    max_wait: error::req_f64(j, SECTION, "max_wait")?,
+                    idle_below: error::req_f64(j, SECTION, "idle_below")?,
+                }
+            }
+            other => {
+                return Err(ScenarioError::UnknownName {
+                    what: "autoscale policy",
+                    name: other.to_string(),
+                    known: "off | target-utilization | queue-depth",
+                })
+            }
+        };
+        policy.check()?;
+        Ok(policy)
+    }
+
+    /// CLI shorthand shared by the examples:
+    /// `off | util:<target> | queue:<max_wait_secs>`.
+    pub fn parse_cli(spec: &str) -> Result<AutoscalePolicy, ScenarioError> {
+        let policy = if spec == "off" {
+            AutoscalePolicy::Off
+        } else if let Some(target) = spec.strip_prefix("util:") {
+            AutoscalePolicy::TargetUtilization {
+                target: target.parse().map_err(|_| {
+                    ScenarioError::invalid("autoscale", format!("bad utilization '{target}'"))
+                })?,
+            }
+        } else if let Some(max_wait) = spec.strip_prefix("queue:") {
+            AutoscalePolicy::QueueDepth {
+                max_wait: max_wait.parse().map_err(|_| {
+                    ScenarioError::invalid("autoscale", format!("bad max wait '{max_wait}'"))
+                })?,
+                idle_below: 0.2,
+            }
+        } else {
+            return Err(ScenarioError::UnknownName {
+                what: "autoscale policy",
+                name: spec.to_string(),
+                known: "off | util:<target> | queue:<max_wait_secs>",
+            });
+        };
+        policy.check()?;
+        Ok(policy)
+    }
+
+    /// Parameter validation as a typed error (scenario builder surface).
+    pub fn check(&self) -> Result<(), ScenarioError> {
+        match *self {
+            AutoscalePolicy::Off => Ok(()),
+            AutoscalePolicy::TargetUtilization { target } => {
+                if target > 0.0 && target <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(ScenarioError::invalid(
+                        "config.autoscale.target",
+                        format!("utilization target must be in (0, 1], got {target}"),
+                    ))
+                }
+            }
+            AutoscalePolicy::QueueDepth { max_wait, idle_below } => {
+                if !(max_wait >= 0.0 && max_wait.is_finite()) {
+                    return Err(ScenarioError::invalid(
+                        "config.autoscale.max_wait",
+                        format!("must be finite and >= 0, got {max_wait}"),
+                    ));
+                }
+                if (0.0..=1.0).contains(&idle_below) {
+                    Ok(())
+                } else {
+                    Err(ScenarioError::invalid(
+                        "config.autoscale.idle_below",
+                        format!("must be in [0, 1], got {idle_below}"),
+                    ))
+                }
+            }
+        }
+    }
 }
 
 /// Per-expert serving statistics accumulated over one epoch.
@@ -307,6 +423,33 @@ mod tests {
         assert_eq!(auto.rescale(&mut policy, &mut pool, 10.0, 10.0), 0);
         assert_eq!(policy.layers[0].experts[0].replicas, 3);
         assert_eq!(policy.layers[0].experts[1].replicas, 2);
+    }
+
+    #[test]
+    fn policy_json_and_cli_roundtrip() {
+        for p in [
+            AutoscalePolicy::Off,
+            AutoscalePolicy::TargetUtilization { target: 0.7 },
+            AutoscalePolicy::QueueDepth { max_wait: 5.0, idle_below: 0.2 },
+        ] {
+            assert_eq!(AutoscalePolicy::from_json(&p.to_json()).unwrap(), p);
+        }
+        assert_eq!(AutoscalePolicy::parse_cli("off").unwrap(), AutoscalePolicy::Off);
+        assert_eq!(
+            AutoscalePolicy::parse_cli("util:0.7").unwrap(),
+            AutoscalePolicy::TargetUtilization { target: 0.7 }
+        );
+        assert_eq!(
+            AutoscalePolicy::parse_cli("queue:5").unwrap(),
+            AutoscalePolicy::QueueDepth { max_wait: 5.0, idle_below: 0.2 }
+        );
+        assert!(AutoscalePolicy::parse_cli("utilization").is_err());
+        assert!(AutoscalePolicy::parse_cli("util:2.0").is_err(), "target > 1 rejected");
+        let typo = crate::util::json::Json::parse(r#"{"kind":"off","extra":1}"#).unwrap();
+        assert!(matches!(
+            AutoscalePolicy::from_json(&typo),
+            Err(ScenarioError::UnknownField { .. })
+        ));
     }
 
     #[test]

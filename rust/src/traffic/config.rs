@@ -2,9 +2,11 @@
 //! autoscaling knobs, plus the deployment problem they pose.
 
 use super::autoscale::AutoscalePolicy;
+use super::error::{self, ScenarioError};
 use crate::config::{DeployConfig, PlatformConfig};
 use crate::deploy::DeployProblem;
 use crate::model::MoeModelSpec;
+use crate::util::json::Json;
 
 /// Which dispatch engine [`super::epoch::EpochSimulator`] runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +24,43 @@ pub enum SimEngine {
     Event { pipeline: bool },
 }
 
+impl SimEngine {
+    /// Scenario-file encoding: `{"kind": "legacy"}` or
+    /// `{"kind": "event", "pipeline": true}`.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            SimEngine::Legacy => Json::from_pairs(vec![("kind", Json::str("legacy"))]),
+            SimEngine::Event { pipeline } => Json::from_pairs(vec![
+                ("kind", Json::str("event")),
+                ("pipeline", Json::Bool(pipeline)),
+            ]),
+        }
+    }
+
+    /// Strict inverse of [`SimEngine::to_json`] (`pipeline` defaults to
+    /// `true` when omitted, matching [`TrafficConfig::default`]).
+    pub fn from_json(j: &Json) -> Result<SimEngine, ScenarioError> {
+        const SECTION: &str = "config.engine";
+        match error::req_str(j, SECTION, "kind")? {
+            "legacy" => {
+                error::check_keys(j, SECTION, &["kind"])?;
+                Ok(SimEngine::Legacy)
+            }
+            "event" => {
+                error::check_keys(j, SECTION, &["kind", "pipeline"])?;
+                Ok(SimEngine::Event {
+                    pipeline: error::opt_bool(j, SECTION, "pipeline", true)?,
+                })
+            }
+            other => Err(ScenarioError::UnknownName {
+                what: "sim engine",
+                name: other.to_string(),
+                known: "legacy | event",
+            }),
+        }
+    }
+}
+
 /// How the engine aggregates per-request metrics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MetricsMode {
@@ -33,6 +72,27 @@ pub enum MetricsMode {
     /// mean/max, no cost timeline. Event engine only — the legacy loop
     /// always aggregates exactly.
     Streaming,
+}
+
+impl MetricsMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricsMode::Exact => "exact",
+            MetricsMode::Streaming => "streaming",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<MetricsMode, ScenarioError> {
+        match s {
+            "exact" => Ok(MetricsMode::Exact),
+            "streaming" => Ok(MetricsMode::Streaming),
+            other => Err(ScenarioError::UnknownName {
+                what: "metrics mode",
+                name: other.to_string(),
+                known: "exact | streaming",
+            }),
+        }
+    }
 }
 
 /// Traffic-simulation knobs.
@@ -104,6 +164,196 @@ impl Default for TrafficConfig {
 }
 
 impl TrafficConfig {
+    /// Scenario-file encoding: a flat object, every field optional with the
+    /// [`TrafficConfig::default`] value. Two conventions inherited from the
+    /// rest of the traffic schema: infinite durations (`epoch_secs`,
+    /// `keep_alive`) serialize as JSON `null`, and `"concurrency": 0` means
+    /// unbounded (`None`), mirroring the CLI flag.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("epoch_secs", Json::num(self.epoch_secs)),
+            ("keep_alive", Json::num(self.keep_alive)),
+            (
+                "concurrency",
+                Json::num(self.concurrency.unwrap_or(0) as f64),
+            ),
+            ("autoscale", self.autoscale.to_json()),
+            ("prewarm", Json::Bool(self.prewarm)),
+            ("reoptimize", Json::Bool(self.reoptimize)),
+            ("bo_round_iters", Json::num(self.bo_round_iters as f64)),
+            ("drift_threshold", Json::num(self.drift_threshold)),
+            ("ema_alpha", Json::num(self.ema_alpha)),
+            ("t_limit", Json::num(self.t_limit)),
+            ("solver_time_limit", Json::num(self.solver_time_limit)),
+            ("max_replicas", Json::num(self.max_replicas as f64)),
+            (
+                "beta_grid",
+                Json::arr_u64(&self.beta_grid.iter().map(|&b| b as u64).collect::<Vec<_>>()),
+            ),
+            ("seed", Json::num(self.seed as f64)),
+            ("engine", self.engine.to_json()),
+            ("metrics", Json::str(self.metrics.name())),
+        ])
+    }
+
+    /// Strict inverse of [`TrafficConfig::to_json`]: unknown fields are
+    /// rejected, values are range-checked via [`TrafficConfig::validate`].
+    pub fn from_json(j: &Json) -> Result<TrafficConfig, ScenarioError> {
+        const SECTION: &str = "config";
+        error::check_keys(
+            j,
+            SECTION,
+            &[
+                "epoch_secs",
+                "keep_alive",
+                "concurrency",
+                "autoscale",
+                "prewarm",
+                "reoptimize",
+                "bo_round_iters",
+                "drift_threshold",
+                "ema_alpha",
+                "t_limit",
+                "solver_time_limit",
+                "max_replicas",
+                "beta_grid",
+                "seed",
+                "engine",
+                "metrics",
+            ],
+        )?;
+        let d = TrafficConfig::default();
+        let beta_grid = match j.get("beta_grid") {
+            None => d.beta_grid.clone(),
+            Some(Json::Arr(items)) => {
+                let mut grid = Vec::with_capacity(items.len());
+                for item in items {
+                    match item.as_u64() {
+                        Some(b) if b >= 1 => grid.push(b as usize),
+                        _ => {
+                            return Err(ScenarioError::invalid(
+                                "config.beta_grid",
+                                format!("entries must be integers >= 1, got {item:?}"),
+                            ))
+                        }
+                    }
+                }
+                grid
+            }
+            Some(other) => {
+                return Err(ScenarioError::invalid(
+                    "config.beta_grid",
+                    format!("expected an array, got {other:?}"),
+                ))
+            }
+        };
+        let cfg = TrafficConfig {
+            epoch_secs: error::opt_duration(j, SECTION, "epoch_secs", d.epoch_secs)?,
+            keep_alive: error::opt_duration(j, SECTION, "keep_alive", d.keep_alive)?,
+            concurrency: match error::opt_u64(
+                j,
+                SECTION,
+                "concurrency",
+                d.concurrency.unwrap_or(0) as u64,
+            )? {
+                0 => None,
+                c => Some(c as usize),
+            },
+            autoscale: match j.get("autoscale") {
+                None => d.autoscale,
+                Some(a) => AutoscalePolicy::from_json(a)?,
+            },
+            prewarm: error::opt_bool(j, SECTION, "prewarm", d.prewarm)?,
+            reoptimize: error::opt_bool(j, SECTION, "reoptimize", d.reoptimize)?,
+            bo_round_iters: error::opt_usize(j, SECTION, "bo_round_iters", d.bo_round_iters)?,
+            drift_threshold: error::opt_f64(j, SECTION, "drift_threshold", d.drift_threshold)?,
+            ema_alpha: error::opt_f64(j, SECTION, "ema_alpha", d.ema_alpha)?,
+            t_limit: error::opt_f64(j, SECTION, "t_limit", d.t_limit)?,
+            solver_time_limit: error::opt_f64(
+                j,
+                SECTION,
+                "solver_time_limit",
+                d.solver_time_limit,
+            )?,
+            max_replicas: error::opt_usize(j, SECTION, "max_replicas", d.max_replicas)?,
+            beta_grid,
+            seed: error::opt_u64(j, SECTION, "seed", d.seed)?,
+            engine: match j.get("engine") {
+                None => d.engine,
+                Some(e) => SimEngine::from_json(e)?,
+            },
+            metrics: match j.get("metrics") {
+                None => d.metrics,
+                Some(Json::Str(s)) => MetricsMode::from_name(s)?,
+                Some(other) => {
+                    return Err(ScenarioError::invalid(
+                        "config.metrics",
+                        format!("expected a string, got {other:?}"),
+                    ))
+                }
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range checks shared by the builder and the JSON loader. Keeps the
+    /// long-standing panics (`epoch_secs > 0`) out of `run()` by rejecting
+    /// bad values at construction time with a typed error.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let ensure = |ok: bool, field: &str, reason: String| {
+            if ok {
+                Ok(())
+            } else {
+                Err(ScenarioError::invalid(format!("config.{field}"), reason))
+            }
+        };
+        ensure(
+            self.epoch_secs > 0.0,
+            "epoch_secs",
+            format!("must be > 0 (null/inf = one epoch), got {}", self.epoch_secs),
+        )?;
+        ensure(
+            self.keep_alive >= 0.0,
+            "keep_alive",
+            format!("must be >= 0, got {}", self.keep_alive),
+        )?;
+        if let Some(c) = self.concurrency {
+            ensure(c >= 1, "concurrency", format!("limit must be >= 1, got {c}"))?;
+        }
+        ensure(
+            self.ema_alpha > 0.0 && self.ema_alpha <= 1.0,
+            "ema_alpha",
+            format!("must be in (0, 1], got {}", self.ema_alpha),
+        )?;
+        ensure(
+            self.drift_threshold.is_finite() && self.drift_threshold <= 1.0,
+            "drift_threshold",
+            format!("must be finite and <= 1 (TV distance), got {}", self.drift_threshold),
+        )?;
+        ensure(
+            self.t_limit > 0.0 && self.t_limit.is_finite(),
+            "t_limit",
+            format!("must be finite and > 0, got {}", self.t_limit),
+        )?;
+        ensure(
+            self.solver_time_limit > 0.0 && self.solver_time_limit.is_finite(),
+            "solver_time_limit",
+            format!("must be finite and > 0, got {}", self.solver_time_limit),
+        )?;
+        ensure(
+            self.max_replicas >= 1,
+            "max_replicas",
+            format!("must be >= 1, got {}", self.max_replicas),
+        )?;
+        ensure(
+            !self.beta_grid.is_empty(),
+            "beta_grid",
+            "must not be empty".to_string(),
+        )?;
+        self.autoscale.check()
+    }
+
     /// Degenerate configuration for cross-validation against the seed
     /// single-batch pipeline: one infinite epoch, a pre-warmed pool that
     /// never expires, unbounded concurrency, no autoscaling, no
@@ -140,5 +390,73 @@ impl TrafficConfig {
             beta_grid: self.beta_grid.clone(),
             warm: true,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_default_and_degenerate() {
+        for cfg in [TrafficConfig::default(), TrafficConfig::degenerate()] {
+            let j = cfg.to_json();
+            let back = TrafficConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap())
+                .expect("config roundtrips");
+            // No PartialEq on TrafficConfig: canonical JSON is the identity.
+            assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+            // Infinite durations survive the null encoding.
+            assert_eq!(back.epoch_secs, cfg.epoch_secs);
+            assert_eq!(back.keep_alive, cfg.keep_alive);
+            assert_eq!(back.concurrency, cfg.concurrency);
+            assert_eq!(back.engine, cfg.engine);
+            assert_eq!(back.metrics, cfg.metrics);
+        }
+    }
+
+    #[test]
+    fn empty_object_is_all_defaults() {
+        let cfg = TrafficConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        let d = TrafficConfig::default();
+        assert_eq!(cfg.to_json().to_string_pretty(), d.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn strict_parsing_rejects_typos_and_bad_values() {
+        let typo = Json::parse(r#"{"epoch_sec": 60}"#).unwrap();
+        assert!(matches!(
+            TrafficConfig::from_json(&typo),
+            Err(ScenarioError::UnknownField { .. })
+        ));
+        let bad_type = Json::parse(r#"{"epoch_secs": "fast"}"#).unwrap();
+        assert!(matches!(
+            TrafficConfig::from_json(&bad_type),
+            Err(ScenarioError::Invalid { .. })
+        ));
+        let bad_value = Json::parse(r#"{"ema_alpha": 1.5}"#).unwrap();
+        assert!(matches!(
+            TrafficConfig::from_json(&bad_value),
+            Err(ScenarioError::Invalid { .. })
+        ));
+        let bad_engine = Json::parse(r#"{"engine": {"kind": "warp"}}"#).unwrap();
+        assert!(matches!(
+            TrafficConfig::from_json(&bad_engine),
+            Err(ScenarioError::UnknownName { .. })
+        ));
+        let bad_beta = Json::parse(r#"{"beta_grid": [1, 0]}"#).unwrap();
+        assert!(TrafficConfig::from_json(&bad_beta).is_err());
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut cfg = TrafficConfig::default();
+        cfg.epoch_secs = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrafficConfig::default();
+        cfg.concurrency = Some(0);
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrafficConfig::default();
+        cfg.drift_threshold = -1.0; // forced drift: legal (tests rely on it)
+        assert!(cfg.validate().is_ok());
     }
 }

@@ -40,7 +40,7 @@ use crate::config::{BoConfig, DeployConfig, PlatformConfig};
 use crate::deploy::baselines::lambdaml_policy;
 use crate::deploy::ods::ods_full;
 use crate::deploy::DeploymentPolicy;
-use crate::gating::SimGate;
+use crate::gating::{RouterCache, SimGate};
 use crate::model::MoeModelSpec;
 use crate::platform::{InstancePool, ReplicaKey, WarmPool};
 use crate::predictor::eval::{predicted_counts, real_counts};
@@ -71,6 +71,16 @@ pub struct EpochSimulator<'a> {
     /// pipelined-vs-monolithic dominance tests compare runs request by
     /// request through this.
     pub last_latencies: Vec<f64>,
+    /// Every deployment the last run served under, in order: the initial
+    /// policy followed by one entry per drift-triggered re-deployment
+    /// (replica-count nudges by the autoscaler mutate the current entry's
+    /// successor in place and are tracked via [`Self::autoscale_events`]).
+    /// Surfaced to callers as `scenario::RunArtifacts::policy_history`.
+    pub policy_history: Vec<DeploymentPolicy>,
+    /// Memoized token routing shared by the serving engines and the online
+    /// absorb path; persists across runs (the gate is fixed for the
+    /// simulator's lifetime, so entries never go stale).
+    pub(crate) router: RouterCache,
 }
 
 /// Per-layer popularity fractions (uniform for an all-zero layer).
@@ -109,6 +119,7 @@ impl<'a> EpochSimulator<'a> {
         predictor: BayesPredictor,
         cfg: TrafficConfig,
     ) -> EpochSimulator<'a> {
+        let router = RouterCache::new(gate);
         EpochSimulator {
             platform,
             spec,
@@ -119,6 +130,8 @@ impl<'a> EpochSimulator<'a> {
             redeploy_times: Vec::new(),
             autoscale_events: Vec::new(),
             last_latencies: Vec::new(),
+            policy_history: Vec::new(),
+            router,
         }
     }
 
@@ -161,6 +174,8 @@ impl<'a> EpochSimulator<'a> {
         self.redeploy_times.clear();
         self.autoscale_events.clear();
         self.last_latencies.clear();
+        self.policy_history.clear();
+        self.policy_history.push(policy.clone());
         match self.cfg.engine {
             SimEngine::Legacy => self.run_legacy(policy, traffic),
             SimEngine::Event { pipeline } => self.run_event(policy, traffic, pipeline),
@@ -215,6 +230,7 @@ impl<'a> EpochSimulator<'a> {
                         *redeploy_ready =
                             redeploy_ready.max(boundary + self.platform.deploy_time);
                         self.redeploy_times.push(boundary);
+                        self.policy_history.push(policy.clone());
                         *redeploys += 1;
                         changed = true;
                     }
@@ -355,7 +371,7 @@ impl<'a> EpochSimulator<'a> {
             timeline.push((t, total_cost));
 
             // ---- online feedback: realized routing → table + EMA ----
-            absorb_batch(&mut self.predictor.table, self.gate, &tb.batch);
+            absorb_batch(&mut self.predictor.table, self.gate, &mut self.router, &tb.batch);
             let frac = fractions(&real);
             let alpha = self.cfg.ema_alpha;
             for (el, fl) in ema.iter_mut().zip(&frac) {

@@ -1,0 +1,259 @@
+//! Typed errors for the scenario front door.
+//!
+//! The traffic subsystem's library surface reports failures through
+//! [`ScenarioError`] instead of `anyhow` — callers can match on the variant
+//! (the strict-parsing tests do), and binaries still get ergonomic `?`
+//! propagation because the enum implements [`std::error::Error`] (the
+//! vendored `anyhow` shim converts any such error).
+//!
+//! Parsing is *strict*: unknown fields in any scenario-owned JSON object are
+//! rejected ([`ScenarioError::UnknownField`]) so a typo in a committed
+//! scenario file fails loudly instead of silently falling back to a default.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Everything that can go wrong building, parsing or running a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// Reading or writing a scenario/trace file failed.
+    Io { path: String, detail: String },
+    /// The file was not valid JSON.
+    Parse { detail: String },
+    /// A required field was absent.
+    MissingField { section: String, field: String },
+    /// Strict parsing: a field not in the schema (typo guard).
+    UnknownField { section: String, field: String },
+    /// A field parsed but its value is out of range or of the wrong type.
+    Invalid { field: String, reason: String },
+    /// A name did not resolve (model preset, corpus, baseline, ...).
+    UnknownName {
+        what: &'static str,
+        name: String,
+        known: &'static str,
+    },
+    /// The traffic source materialized zero requests.
+    EmptyTraffic,
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::Io { path, detail } => {
+                write!(f, "scenario i/o error at {path}: {detail}")
+            }
+            ScenarioError::Parse { detail } => write!(f, "scenario parse error: {detail}"),
+            ScenarioError::MissingField { section, field } => {
+                write!(f, "scenario: missing required field '{field}' in {section}")
+            }
+            ScenarioError::UnknownField { section, field } => {
+                write!(f, "scenario: unknown field '{field}' in {section}")
+            }
+            ScenarioError::Invalid { field, reason } => {
+                write!(f, "scenario: invalid value for '{field}': {reason}")
+            }
+            ScenarioError::UnknownName { what, name, known } => {
+                write!(f, "scenario: unknown {what} '{name}' (known: {known})")
+            }
+            ScenarioError::EmptyTraffic => {
+                write!(f, "scenario: traffic source materialized zero requests")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+impl ScenarioError {
+    pub(crate) fn invalid(field: impl Into<String>, reason: impl Into<String>) -> ScenarioError {
+        ScenarioError::Invalid {
+            field: field.into(),
+            reason: reason.into(),
+        }
+    }
+
+    pub(crate) fn missing(section: impl Into<String>, field: impl Into<String>) -> ScenarioError {
+        ScenarioError::MissingField {
+            section: section.into(),
+            field: field.into(),
+        }
+    }
+}
+
+// ---------------------------------------------------- strict JSON helpers
+
+/// Read and parse a JSON file with the two failure modes kept apart:
+/// unreadable file → [`ScenarioError::Io`]; malformed JSON →
+/// [`ScenarioError::Parse`].
+pub(crate) fn read_json(path: &std::path::Path) -> Result<Json, ScenarioError> {
+    let text = std::fs::read_to_string(path).map_err(|e| ScenarioError::Io {
+        path: path.display().to_string(),
+        detail: e.to_string(),
+    })?;
+    Json::parse(&text).map_err(|e| ScenarioError::Parse {
+        detail: format!("{}: {e}", path.display()),
+    })
+}
+
+/// The object under `j`, or a typed error naming `section`.
+pub(crate) fn as_obj<'a>(
+    j: &'a Json,
+    section: &str,
+) -> Result<&'a std::collections::BTreeMap<String, Json>, ScenarioError> {
+    j.as_obj()
+        .ok_or_else(|| ScenarioError::invalid(section, "expected a JSON object"))
+}
+
+/// Strict parsing: every key of the `section` object must be in `allowed`.
+pub(crate) fn check_keys(j: &Json, section: &str, allowed: &[&str]) -> Result<(), ScenarioError> {
+    for key in as_obj(j, section)?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(ScenarioError::UnknownField {
+                section: section.to_string(),
+                field: key.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Optional finite number with a default; present-but-not-a-number is an
+/// error (strict), as is a non-finite value.
+pub(crate) fn opt_f64(
+    j: &Json,
+    section: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64, ScenarioError> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Num(x)) if x.is_finite() => Ok(*x),
+        Some(other) => Err(ScenarioError::invalid(
+            format!("{section}.{key}"),
+            format!("expected a finite number, got {other:?}"),
+        )),
+    }
+}
+
+/// Optional duration with a default: JSON `null` encodes `f64::INFINITY`
+/// (JSON has no Inf literal; the serializer emits `null` for it).
+pub(crate) fn opt_duration(
+    j: &Json,
+    section: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64, ScenarioError> {
+    match j.get(key) {
+        Some(Json::Null) => Ok(f64::INFINITY),
+        // In-memory values that never went through text keep the raw Inf.
+        Some(Json::Num(x)) if x.is_infinite() && *x > 0.0 => Ok(f64::INFINITY),
+        _ => opt_f64(j, section, key, default),
+    }
+}
+
+/// Optional non-negative integer with a default (strict about type and about
+/// the 2^53 JSON-number precision limit, like the trace seeds).
+pub(crate) fn opt_u64(
+    j: &Json,
+    section: &str,
+    key: &str,
+    default: u64,
+) -> Result<u64, ScenarioError> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 && *x < (1u64 << 53) as f64 => {
+            Ok(*x as u64)
+        }
+        Some(other) => Err(ScenarioError::invalid(
+            format!("{section}.{key}"),
+            format!("expected an integer in [0, 2^53), got {other:?}"),
+        )),
+    }
+}
+
+pub(crate) fn opt_usize(
+    j: &Json,
+    section: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize, ScenarioError> {
+    opt_u64(j, section, key, default as u64).map(|v| v as usize)
+}
+
+pub(crate) fn opt_bool(
+    j: &Json,
+    section: &str,
+    key: &str,
+    default: bool,
+) -> Result<bool, ScenarioError> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => Err(ScenarioError::invalid(
+            format!("{section}.{key}"),
+            format!("expected a bool, got {other:?}"),
+        )),
+    }
+}
+
+/// Required finite number.
+pub(crate) fn req_f64(j: &Json, section: &str, key: &str) -> Result<f64, ScenarioError> {
+    if j.get(key).is_none() {
+        return Err(ScenarioError::missing(section, key));
+    }
+    opt_f64(j, section, key, 0.0)
+}
+
+/// Required string.
+pub(crate) fn req_str<'a>(j: &'a Json, section: &str, key: &str) -> Result<&'a str, ScenarioError> {
+    match j.get(key) {
+        None => Err(ScenarioError::missing(section, key)),
+        Some(Json::Str(s)) => Ok(s),
+        Some(other) => Err(ScenarioError::invalid(
+            format!("{section}.{key}"),
+            format!("expected a string, got {other:?}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ScenarioError::UnknownField {
+            section: "config".into(),
+            field: "epoch_sec".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("epoch_sec") && s.contains("config"), "{s}");
+        let e = ScenarioError::UnknownName {
+            what: "baseline",
+            name: "cpu".into(),
+            known: "ours | static | lambdaml | cpu-cluster",
+        };
+        assert!(e.to_string().contains("cpu-cluster"));
+    }
+
+    #[test]
+    fn strict_helpers_reject_bad_types() {
+        let j = Json::parse(r#"{"a": 1.5, "b": "x", "c": null, "d": true, "e": -1}"#).unwrap();
+        assert_eq!(opt_f64(&j, "t", "a", 0.0).unwrap(), 1.5);
+        assert!(opt_f64(&j, "t", "b", 0.0).is_err());
+        assert_eq!(opt_f64(&j, "t", "missing", 7.0).unwrap(), 7.0);
+        assert_eq!(opt_duration(&j, "t", "c", 0.0).unwrap(), f64::INFINITY);
+        assert!(opt_bool(&j, "t", "d", false).unwrap());
+        assert!(opt_u64(&j, "t", "a", 0).is_err(), "fractional int rejected");
+        assert!(opt_u64(&j, "t", "e", 0).is_err(), "negative int rejected");
+        assert!(matches!(
+            req_str(&j, "t", "nope"),
+            Err(ScenarioError::MissingField { .. })
+        ));
+        assert!(check_keys(&j, "t", &["a", "b", "c", "d", "e"]).is_ok());
+        assert!(matches!(
+            check_keys(&j, "t", &["a"]),
+            Err(ScenarioError::UnknownField { .. })
+        ));
+    }
+}

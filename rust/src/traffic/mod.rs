@@ -1,5 +1,5 @@
 //! Epoch-based traffic simulation (the serving dimension the single-batch
-//! seed lacked).
+//! seed lacked) behind one declarative front door: [`scenario::Scenario`].
 //!
 //! The paper's headline numbers are measured under *sustained* request
 //! traffic on AWS Lambda; reproducing them needs an arrival process, a
@@ -7,12 +7,21 @@
 //! loop in which the predictor re-learns expert popularity as traffic
 //! shifts (§IV, Alg. 1). This subsystem provides all three:
 //!
+//!  - [`scenario`]  — **the public entry point**: a serde-style
+//!    (de)serializable [`scenario::Scenario`] describing model, platform,
+//!    traffic source, engine configuration and baseline;
+//!    [`scenario::Scenario::run`] returns the [`report::SimReport`] plus
+//!    [`scenario::RunArtifacts`] (deployment history, redeploy/autoscale
+//!    events, latencies). Examples, experiments and the CLI all drive
+//!    simulations through it; errors are typed ([`error::ScenarioError`]),
+//!    parsing is strict (unknown fields rejected);
 //!  - [`arrivals`]  — deterministic-rate, Poisson and two-state MMPP arrival
 //!    generators producing timestamped requests;
 //!  - [`trace`]     — a JSON request-trace format with replay (schema
 //!    documented on [`trace::Trace`]);
 //!  - [`config`]    — the [`config::TrafficConfig`] knobs (epoching,
-//!    keep-alive, per-instance concurrency, autoscaling policy);
+//!    keep-alive, per-instance concurrency, autoscaling policy), JSON
+//!    round-trippable as the scenario's `config` section;
 //!  - [`epoch`]     — the epoch loop: serve a traffic window against the
 //!    current deployment with warmness derived from the
 //!    `platform::lifecycle::WarmPool` virtual clock and overlapping
@@ -36,19 +45,36 @@
 //!    time, throughput, latency and queue-delay percentiles, utilization)
 //!    used by the golden-regression fixtures and the `experiments::traffic`
 //!    scenario runner.
+//!
+//! [`epoch::EpochSimulator`] remains the engine *behind* the scenario
+//! façade; construct simulations through [`scenario::Scenario`] /
+//! [`scenario::ScenarioBuilder`] instead of wiring it by hand.
 
 pub mod arrivals;
 pub mod autoscale;
 pub mod config;
 pub mod epoch;
+pub mod error;
 pub mod report;
+pub mod scenario;
 pub mod sim;
 pub mod trace;
 
 pub use arrivals::{ArrivalGen, ArrivalProcess};
 pub use autoscale::{AutoscalePolicy, Autoscaler};
 pub use config::{MetricsMode, SimEngine, TrafficConfig};
-pub use epoch::EpochSimulator;
+pub use error::ScenarioError;
 pub use report::SimReport;
+pub use scenario::{
+    Baseline, ModelSource, RunArtifacts, Scenario, ScenarioBuilder, ScenarioOutcome,
+    TrafficScenario, TrafficSource,
+};
 pub use sim::SlotArena;
 pub use trace::{Trace, TraceRequest};
+
+/// Deprecation shim (one release): the epoch engine now lives behind the
+/// [`scenario::Scenario`] façade — drive simulations through it instead of
+/// constructing the simulator by hand. Kept reachable for the engine
+/// cross-validation tests.
+#[doc(hidden)]
+pub use epoch::EpochSimulator;

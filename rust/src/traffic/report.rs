@@ -2,6 +2,7 @@
 //! percentiles — the quantity the golden-regression fixtures pin down and
 //! the `experiments::traffic` tables print.
 
+use super::error::ScenarioError;
 use crate::util::json::Json;
 use crate::util::stats::{self, LogHistogram};
 
@@ -147,10 +148,10 @@ impl SimReport {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<SimReport> {
+    pub fn from_json(j: &Json) -> Result<SimReport, ScenarioError> {
         let need = |k: &str| {
             j.get_f64(k)
-                .ok_or_else(|| anyhow::anyhow!("sim report missing '{k}'"))
+                .ok_or_else(|| ScenarioError::missing("sim report", k))
         };
         // Queueing/autoscaling fields default to zero so pre-queueing golden
         // entries still parse.

@@ -59,7 +59,6 @@ use crate::bo::feedback::serve_layer_with_warmness;
 use crate::comm::LayerPlan;
 use crate::config::PlatformConfig;
 use crate::deploy::DeploymentPolicy;
-use crate::gating::RouterCache;
 use crate::model::MoeModelSpec;
 use crate::platform::{InstancePool, ReplicaKey};
 use crate::predictor::profile::absorb_batch;
@@ -690,7 +689,6 @@ impl EpochSimulator<'_> {
             last_finish: 0.0,
             blocked_until: 0.0,
         };
-        let mut router = RouterCache::new(gate);
         let mut counts_buf: Vec<Vec<u64>> = Vec::new();
 
         // Popularity the current deployment was sized for, vs realized EMA.
@@ -743,14 +741,15 @@ impl EpochSimulator<'_> {
 
             // ---- admit the request ----
             let ready = t.max(redeploy_ready);
-            router.counts_into(gate, &tb.batch, &mut counts_buf);
+            self.router.counts_into(gate, &tb.batch, &mut counts_buf);
             tokens += tb.batch.total_tokens as u64;
 
             if self.cfg.reoptimize {
-                // Online feedback: realized routing → table + EMA. Skipped
+                // Online feedback: realized routing → table + EMA, absorbed
+                // through the same routing memo serving uses. Skipped
                 // entirely when re-optimization is off — nothing downstream
                 // reads it and the report is unaffected.
-                absorb_batch(&mut self.predictor.table, gate, &tb.batch);
+                absorb_batch(&mut self.predictor.table, gate, &mut self.router, &tb.batch);
                 let frac = fractions(&counts_buf);
                 let alpha = self.cfg.ema_alpha;
                 for (el, fl) in ema.iter_mut().zip(&frac) {

@@ -19,6 +19,7 @@
 //! through the corpus model, preserving order and token targets.
 
 use super::arrivals::{ArrivalGen, ArrivalProcess};
+use super::error::ScenarioError;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Batch, Corpus, TimedBatch};
@@ -42,37 +43,51 @@ pub struct Trace {
 }
 
 impl Trace {
-    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+    pub fn from_json(j: &Json) -> Result<Trace, ScenarioError> {
+        super::error::check_keys(j, "trace", &["version", "requests"])?;
         let arr = j
             .get("requests")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("trace missing 'requests' array"))?;
+            .ok_or_else(|| ScenarioError::missing("trace", "requests"))?;
         let mut requests = Vec::with_capacity(arr.len());
         for (i, r) in arr.iter().enumerate() {
+            let section = format!("trace request {i}");
+            super::error::check_keys(r, &section, &["time", "tokens", "seed"])?;
             let time = r
                 .get_f64("time")
-                .ok_or_else(|| anyhow::anyhow!("trace request {i}: missing 'time'"))?;
+                .ok_or_else(|| ScenarioError::missing(&*section, "time"))?;
             let tokens = r
                 .get_usize("tokens")
-                .ok_or_else(|| anyhow::anyhow!("trace request {i}: missing 'tokens'"))?;
-            anyhow::ensure!(
-                time.is_finite() && time >= 0.0,
-                "trace request {i}: bad time {time}"
-            );
-            anyhow::ensure!(tokens > 0, "trace request {i}: zero tokens");
+                .ok_or_else(|| ScenarioError::missing(&*section, "tokens"))?;
+            if !(time.is_finite() && time >= 0.0) {
+                return Err(ScenarioError::invalid(
+                    format!("{section}.time"),
+                    format!("must be finite and >= 0, got {time}"),
+                ));
+            }
+            if tokens == 0 {
+                return Err(ScenarioError::invalid(
+                    format!("{section}.tokens"),
+                    "must be > 0".to_string(),
+                ));
+            }
             let seed = r.get("seed").and_then(Json::as_u64).unwrap_or(i as u64);
             // Seeds travel as JSON numbers (f64): values at or above 2^53
             // would silently round, so reject them loudly instead.
-            anyhow::ensure!(
-                seed < (1u64 << 53),
-                "trace request {i}: seed {seed} exceeds the 2^53 JSON-number range"
-            );
+            if seed >= (1u64 << 53) {
+                return Err(ScenarioError::invalid(
+                    format!("{section}.seed"),
+                    format!("{seed} exceeds the 2^53 JSON-number range"),
+                ));
+            }
             requests.push(TraceRequest { time, tokens, seed });
         }
-        anyhow::ensure!(
-            requests.windows(2).all(|w| w[0].time <= w[1].time),
-            "trace timestamps must be non-decreasing"
-        );
+        if !requests.windows(2).all(|w| w[0].time <= w[1].time) {
+            return Err(ScenarioError::invalid(
+                "trace.requests",
+                "timestamps must be non-decreasing".to_string(),
+            ));
+        }
         Ok(Trace { requests })
     }
 
@@ -97,12 +112,15 @@ impl Trace {
         ])
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<Trace> {
-        Self::from_json(&Json::read_file(path)?)
+    pub fn load(path: &Path) -> Result<Trace, ScenarioError> {
+        Self::from_json(&super::error::read_json(path)?)
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        self.to_json().write_file(path)
+    pub fn save(&self, path: &Path) -> Result<(), ScenarioError> {
+        self.to_json().write_file(path).map_err(|e| ScenarioError::Io {
+            path: path.display().to_string(),
+            detail: e.to_string(),
+        })
     }
 
     pub fn total_tokens(&self) -> usize {

@@ -13,19 +13,22 @@
 //!    (`golden_queueing.json`, exact) plus expected `SimReport` numbers per
 //!    scenario (`golden_traffic.json`; self-initializing on first run — CI
 //!    runs the suite twice so the second pass regresses against the first);
+//!    the golden runs drive the simulator through the `Scenario` front door;
 //!  - the drift claim (online re-optimization beats the static initial
 //!    deployment on cumulative billed cost under a skew-shifting MMPP
 //!    workload) and the autoscaling claim (lower p95 latency at
 //!    equal-or-lower billed cost under a bursty overload).
+//!
+//! The engine cross-validation and dominance tests below construct
+//! `EpochSimulator` directly — they compare engine internals (shared
+//! policies, per-request latency vectors) that the scenario façade
+//! intentionally does not expose; they are the sanctioned "shim tests".
 
 use serverless_moe::bo::feedback::{serve_with_real_counts, serve_with_warmness};
 use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
 use serverless_moe::config::workload::CorpusPreset;
 use serverless_moe::config::PlatformConfig;
 use serverless_moe::deploy::DeploymentPolicy;
-use serverless_moe::experiments::traffic::{
-    drift_scenario, scenario_config, scenario_config_queued,
-};
 use serverless_moe::gating::SimGate;
 use serverless_moe::model::ModelPreset;
 use serverless_moe::platform::events::simulate_layer;
@@ -34,6 +37,9 @@ use serverless_moe::predictor::eval::real_counts;
 use serverless_moe::predictor::profile::profile_batches;
 use serverless_moe::predictor::BayesPredictor;
 use serverless_moe::gating::TokenFeature;
+use serverless_moe::traffic::scenario::{
+    drift_scenario, scenario_config, scenario_config_queued, Baseline, Scenario, TrafficSource,
+};
 use serverless_moe::traffic::{
     ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine,
     SimReport, Trace, TrafficConfig,
@@ -863,11 +869,18 @@ fn streaming_metrics_match_exact_within_one_bucket() {
 // ------------------------------------------------------- golden regression
 
 fn golden_run(preset: ModelPreset, mut cfg: TrafficConfig) -> SimReport {
-    let scn = drift_scenario(preset, true, 0x601D);
     cfg.reoptimize = true;
     cfg.bo_round_iters = 0;
-    let mut sim = EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg);
-    sim.run(&scn.traffic)
+    Scenario::builder("golden")
+        .model_preset(preset)
+        .seed(0x601D)
+        .traffic(TrafficSource::Drift { quick: true })
+        .config(cfg)
+        .build()
+        .expect("golden scenario is valid")
+        .run()
+        .expect("golden scenario runs")
+        .report
 }
 
 /// Committed expected `SimReport` numbers per scenario at a fixed RNG seed
@@ -936,44 +949,41 @@ fn golden_regression_fixed_seed_reports() {
 /// whole stream on the static initial deployment.
 #[test]
 fn reoptimization_beats_static_deployment_under_drift() {
+    // One compiled scenario, two baselines — the Scenario-API shape of the
+    // claim (each run starts from the same profiled predictor state).
     let scn = drift_scenario(ModelPreset::BertMoe { experts: 4, top_k: 1 }, true, 0x5EED);
 
-    let ours = {
-        let mut cfg_ours = scenario_config(true);
-        cfg_ours.reoptimize = true;
-        cfg_ours.bo_round_iters = 1;
-        let mut sim =
-            EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg_ours);
-        sim.run(&scn.traffic)
-    };
-
-    let stat = {
-        let mut cfg_static = scenario_config(true);
-        cfg_static.reoptimize = false;
-        let mut sim = EpochSimulator::new(
-            &scn.platform,
-            &scn.spec,
-            &scn.gate,
-            scn.predictor(),
-            cfg_static,
-        );
-        sim.run(&scn.traffic)
-    };
+    let mut cfg_ours = scenario_config(true);
+    cfg_ours.reoptimize = true;
+    cfg_ours.bo_round_iters = 1;
+    let ours = scn.run(&cfg_ours, Baseline::Ours);
+    let stat = scn.run(&scenario_config(true), Baseline::Static).report;
 
     assert!(
-        ours.redeploys >= 1,
+        ours.report.redeploys >= 1,
         "drift must trigger at least one re-optimization (tv threshold too high?)"
     );
     assert_eq!(stat.redeploys, 0);
     assert!(
-        ours.total_cost < stat.total_cost,
+        ours.report.total_cost < stat.total_cost,
         "online re-optimization must cut cumulative billed cost: ours {} vs static {}",
-        ours.total_cost,
+        ours.report.total_cost,
         stat.total_cost
     );
     // The gap is availability, not free lunch: the shared pre-drift
     // requests bound ours' tail latency from below.
-    assert!(ours.p99_latency >= stat.p99_latency * 0.5);
+    assert!(ours.report.p99_latency >= stat.p99_latency * 0.5);
+    // The artifacts mirror the report: one policy per redeploy on top of
+    // the initial deployment, stamped with the redeploy times.
+    let art = &ours.artifacts;
+    assert_eq!(
+        art.policy_history.len() as u64,
+        1 + ours.report.redeploys,
+        "policy history = initial + one per redeploy"
+    );
+    assert_eq!(art.redeploy_times.len() as u64, ours.report.redeploys);
+    assert!(art.final_policy.is_some());
+    assert_eq!(art.latencies.len() as u64, ours.report.requests);
 }
 
 // --------------------------------------------- queueing + autoscaling claims
