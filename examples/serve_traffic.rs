@@ -5,6 +5,7 @@
 //! Run:
 //!   cargo run --release --example serve_traffic
 //!   cargo run --release --example serve_traffic -- --scenario rust/tests/data/scenarios/drift_bert_quick.json
+//!   cargo run --release --example serve_traffic -- --fleet rust/tests/data/scenarios/fleet_two_tenant.json
 //!   cargo run --release --example serve_traffic -- --model gpt2 --full
 //!   cargo run --release --example serve_traffic -- --trace rust/tests/data/trace_small.json
 //!   cargo run --release --example serve_traffic -- --concurrency 1 --autoscale queue:5
@@ -12,6 +13,11 @@
 //! Options (each is a thin overlay on the scenario):
 //!   --scenario PATH  load a scenario JSON file (strict parsing; the other
 //!                    flags below override individual fields of it)
+//!   --fleet PATH     load a multi-tenant FleetScenario JSON file and serve
+//!                    every tenant jointly behind the shared account cap,
+//!                    printing per-tenant reports plus the isolation
+//!                    baseline (each tenant alone on its weighted cap
+//!                    share); ignores the single-scenario flags below
 //!   --model M        bert | gpt2 | bert2bert | tiny     (default bert)
 //!   --trace PATH     replay a JSON trace (see traffic::trace for schema)
 //!   --seed N         scenario RNG seed                  (default 0x5EED)
@@ -25,8 +31,9 @@
 //!   --streaming      O(1)-memory histogram metrics (event engine only)
 //!   --full           full-scale scenario (quick otherwise)
 
+use serverless_moe::traffic::fleet::FleetScenario;
 use serverless_moe::traffic::scenario::{scenario_config, Baseline, Scenario, TrafficSource};
-use serverless_moe::traffic::{AutoscalePolicy, MetricsMode, SimEngine, SimReport};
+use serverless_moe::traffic::{AutoscalePolicy, FleetReport, MetricsMode, SimEngine, SimReport};
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::table::{fcost, fnum, ftime, Table};
 
@@ -46,9 +53,80 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
     ]);
 }
 
+/// Serve a multi-tenant fleet file: the shared account pool first, then the
+/// isolation baseline for comparison.
+fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
+    let fleet = FleetScenario::load(path)?;
+    println!(
+        "fleet '{}': {} tenants, account cap {}, {} arbitration",
+        fleet.name,
+        fleet.tenants.len(),
+        fleet
+            .account_cap
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "unbounded".into()),
+        fleet.arbitration.name(),
+    );
+    let shared = fleet.run()?.report;
+    let isolated = fleet.run_isolated()?.report;
+
+    let mut t = Table::new(
+        "fleet serving — per tenant (shared account pool)",
+        &[
+            "tenant",
+            "weight",
+            "requests",
+            "billed cost",
+            "p50",
+            "p95",
+            "SLO",
+            "capped",
+            "mean cap delay",
+            "warm frac",
+        ],
+    );
+    for tr in &shared.tenants {
+        t.row(vec![
+            tr.name.clone(),
+            fnum(tr.weight),
+            tr.report.requests.to_string(),
+            fcost(tr.report.total_cost),
+            ftime(tr.report.p50_latency),
+            ftime(tr.report.p95_latency),
+            match tr.slo_p95 {
+                Some(_) if tr.slo_met() => "met".into(),
+                Some(_) => "MISSED".into(),
+                None => "-".into(),
+            },
+            tr.capped_requests.to_string(),
+            ftime(tr.mean_cap_delay),
+            fnum(tr.report.warm_fraction()),
+        ]);
+    }
+    t.print();
+
+    let mut c = Table::new(
+        "fleet serving — shared pool vs isolated per-tenant cap shares",
+        &FleetReport::comparison_columns(),
+    );
+    c.row(shared.comparison_row("shared"));
+    c.row(isolated.comparison_row("isolated"));
+    c.print();
+
+    println!(
+        "\nshared pool: {}% of isolated billed cost at {} fairness",
+        fnum(shared.total_cost / isolated.total_cost.max(1e-12) * 100.0),
+        fnum(shared.fairness),
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     serverless_moe::util::log::init_from_env();
     let args = Args::from_env();
+    if let Some(path) = args.get("fleet") {
+        return run_fleet(std::path::Path::new(path));
+    }
     let quick = !args.flag("full");
 
     // The scenario: a committed JSON file, or the default two-phase drift

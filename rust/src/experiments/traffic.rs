@@ -12,16 +12,13 @@
 //! engine configuration from identical starting state.
 
 use crate::model::ModelPreset;
-use crate::traffic::scenario::{Baseline, Scenario, TrafficSource};
-use crate::traffic::{AutoscalePolicy, SimEngine, SimReport, TrafficConfig};
-use crate::util::table::{fcost, fnum, ftime, Table};
-
-// Deprecation shims (one release): these moved to `traffic::scenario` when
-// the Scenario API became the front door. Import from there instead.
-#[doc(hidden)]
-pub use crate::traffic::scenario::{
-    drift_scenario, scenario_config, scenario_config_queued, TrafficScenario,
+use crate::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
+use crate::traffic::scenario::{scenario_config, Baseline, Scenario, TrafficSource};
+use crate::traffic::{
+    ArrivalProcess, AutoscalePolicy, FleetArbitration, FleetReport, SimEngine, SimReport,
+    TrafficConfig,
 };
+use crate::util::table::{fcost, fnum, ftime, Table};
 
 /// Cumulative cost at `t` from a report's timeline (0 before the first
 /// request).
@@ -197,12 +194,66 @@ pub fn run(quick: bool) -> Vec<Table> {
         }
         tables.push(et);
     }
+
+    // Multi-tenant fleet: two tiny tenants with anti-correlated MMPP
+    // bursts behind one shared account-level concurrency cap, versus the
+    // isolation baseline (each tenant alone on its weighted cap share).
+    // Anti-correlation is the point: the bursting tenant borrows the idle
+    // tenant's slots, so the shared pool admits bursts the isolated shares
+    // must queue.
+    let fleet = demo_fleet();
+    let shared = fleet.run().expect("demo fleet runs").report;
+    let isolated = fleet.run_isolated().expect("isolated baseline runs").report;
+    let mut ft = Table::new(
+        "Traffic — fleet: shared account pool vs isolated per-tenant shares (cap 2, tiny x2)",
+        &FleetReport::comparison_columns(),
+    );
+    ft.row(shared.comparison_row("shared (weighted-fair)"));
+    ft.row(isolated.comparison_row("isolated shares"));
+    tables.push(ft);
+
     tables
+}
+
+/// The canned two-tenant demo fleet: tiny models, LambdaML deployments
+/// (closed-form — nothing solver-bound on this path), anti-correlated MMPP
+/// bursts, a shared cap of 2 split weighted-fair.
+fn demo_fleet() -> FleetScenario {
+    let tenant = |name: &str, seed: u64, burst_first: bool| {
+        let (rate0, rate1) = if burst_first { (2.0, 0.05) } else { (0.05, 2.0) };
+        let scenario = Scenario::builder(name)
+            .model_preset(ModelPreset::TinyMoe)
+            .seed(seed)
+            .profile(2, 128)
+            .traffic(TrafficSource::Synthetic {
+                process: ArrivalProcess::Mmpp { rate0, rate1, hold0: 20.0, hold1: 20.0 },
+                duration: Some(40.0),
+                requests: None,
+                tokens_per_request: 128,
+            })
+            .config(TrafficConfig { reoptimize: false, ..TrafficConfig::default() })
+            .baseline(Baseline::LambdaML)
+            .build()
+            .expect("demo tenant is valid by construction");
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1.0,
+            slo_p95: None,
+            source: TenantSource::Inline(scenario),
+        }
+    };
+    FleetScenario {
+        name: "demo-fleet".to_string(),
+        account_cap: Some(2),
+        arbitration: FleetArbitration::WeightedFair,
+        tenants: vec![tenant("chat", 0xF1, true), tenant("batch", 0xF2, false)],
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::traffic::scenario::drift_scenario;
 
     #[test]
     fn scenario_is_two_phase_and_deterministic() {

@@ -156,6 +156,45 @@ impl AutoscalePolicy {
     }
 }
 
+/// How freed account-cap slots are granted to waiting tenants in a
+/// multi-tenant fleet (`traffic::fleet`). Per-tenant replica autoscaling
+/// (the policies above) keeps running unchanged *under* this arbitration:
+/// arbitration decides which tenant's request gets an account slot, the
+/// tenant's own [`AutoscalePolicy`] decides how many replicas serve it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetArbitration {
+    /// Strict arrival order across the whole fleet: the request parked
+    /// earliest (ties by tenant index) gets the next freed slot.
+    Fifo,
+    /// Weighted-fair: the waiting tenant with the least account capacity in
+    /// use relative to its configured weight gets the next freed slot (ties
+    /// by tenant index; FIFO within a tenant). A bursting tenant can borrow
+    /// the whole idle cap, but never starves a lighter tenant past its
+    /// weighted share.
+    WeightedFair,
+}
+
+impl FleetArbitration {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetArbitration::Fifo => "fifo",
+            FleetArbitration::WeightedFair => "weighted-fair",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<FleetArbitration, ScenarioError> {
+        match s {
+            "fifo" => Ok(FleetArbitration::Fifo),
+            "weighted-fair" => Ok(FleetArbitration::WeightedFair),
+            other => Err(ScenarioError::UnknownName {
+                what: "fleet arbitration",
+                name: other.to_string(),
+                known: "fifo | weighted-fair",
+            }),
+        }
+    }
+}
+
 /// Per-expert serving statistics accumulated over one epoch.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExpertEpochStats {
@@ -449,6 +488,17 @@ mod tests {
         assert!(matches!(
             AutoscalePolicy::from_json(&typo),
             Err(ScenarioError::UnknownField { .. })
+        ));
+    }
+
+    #[test]
+    fn fleet_arbitration_names_roundtrip() {
+        for a in [FleetArbitration::Fifo, FleetArbitration::WeightedFair] {
+            assert_eq!(FleetArbitration::from_name(a.name()).unwrap(), a);
+        }
+        assert!(matches!(
+            FleetArbitration::from_name("round-robin"),
+            Err(ScenarioError::UnknownName { .. })
         ));
     }
 

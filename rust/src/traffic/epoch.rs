@@ -167,6 +167,18 @@ impl<'a> EpochSimulator<'a> {
         policy: DeploymentPolicy,
         traffic: &[TimedBatch],
     ) -> SimReport {
+        self.begin_run(&policy);
+        match self.cfg.engine {
+            SimEngine::Legacy => self.run_legacy(policy, traffic),
+            SimEngine::Event { pipeline } => self.run_event(policy, traffic, pipeline),
+        }
+    }
+
+    /// Reset the per-run artifact state and record the starting deployment —
+    /// the run prologue shared by [`Self::run_with_policy`] and the fleet
+    /// driver (`traffic::fleet`), which drives several simulators' lanes
+    /// jointly instead of calling `run_with_policy` per tenant.
+    pub(crate) fn begin_run(&mut self, policy: &DeploymentPolicy) {
         assert!(
             self.cfg.epoch_secs > 0.0,
             "epoch_secs must be > 0 (use f64::INFINITY for a single epoch)"
@@ -176,10 +188,6 @@ impl<'a> EpochSimulator<'a> {
         self.last_latencies.clear();
         self.policy_history.clear();
         self.policy_history.push(policy.clone());
-        match self.cfg.engine {
-            SimEngine::Legacy => self.run_legacy(policy, traffic),
-            SimEngine::Event { pipeline } => self.run_event(policy, traffic, pipeline),
-        }
     }
 
     /// Shared epoch-boundary machinery of both engines: replica autoscaling,

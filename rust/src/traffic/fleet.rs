@@ -1,0 +1,633 @@
+//! Multi-tenant fleet serving: several models behind one shared
+//! account-level concurrency pool.
+//!
+//! The paper minimizes billed cost for *one* MoE model, but a real
+//! serverless account serves many models at once under a shared account
+//! concurrency limit — the multi-tenant setting FaaSMoE (arXiv 2604.26881)
+//! targets, and where MoEless-style function pooling pays off most because
+//! load skew *across* tenants is even stronger than skew within one model.
+//! A [`FleetScenario`] names a set of tenants (each an ordinary
+//! [`Scenario`], inline or referenced by file), gives each a weighted-fair
+//! share of an account-level concurrency cap and an optional p95 SLO, and
+//! serves them **jointly**: every tenant runs as one event-engine lane
+//! (`traffic::sim::EventLane`) against a single globally-ordered event
+//! queue, with requests admitted through the shared
+//! [`AccountCap`](super::sim::AccountCap) ledger — one slot per in-flight
+//! request, freed at request completion, granted to parked requests per the
+//! [`FleetArbitration`] policy. Per-tenant machinery (deployment policies,
+//! epoch clocks, drift re-optimization, replica autoscaling) is untouched
+//! and runs *under* the fleet arbitration.
+//!
+//! Determinism: lanes interleave on the `(time, tenant, seq)` event order,
+//! so a fleet run is exactly reproducible; with a single tenant and no cap
+//! the fleet engine reproduces [`Scenario::run`] byte-for-byte (pinned by
+//! `rust/tests/fleet.rs`).
+//!
+//! ```no_run
+//! use serverless_moe::traffic::fleet::FleetScenario;
+//! let fleet = FleetScenario::load(std::path::Path::new("fleet.json"))?;
+//! let outcome = fleet.run()?;
+//! println!("fleet billed cost: {}", outcome.report.total_cost);
+//! # Ok::<(), serverless_moe::traffic::ScenarioError>(())
+//! ```
+//!
+//! The isolation baseline ([`FleetScenario::run_isolated`]) serves each
+//! tenant alone on its weighted share of the cap — what per-tenant account
+//! reservations would buy — and is what the shared-beats-isolated claim
+//! test compares against: under anti-correlated bursts the shared pool
+//! serves the same fleet at lower billed cost and no worse p95, the
+//! cross-tenant version of the paper's core skew argument.
+
+use super::autoscale::FleetArbitration;
+use super::config::SimEngine;
+use super::epoch::EpochSimulator;
+use super::error::{self, ScenarioError};
+use super::report::{FleetReport, TenantReport};
+use super::scenario::{Baseline, RunArtifacts, Scenario, TrafficScenario};
+use super::sim::{drive, AccountCap, EventLane, EventQueue};
+use crate::deploy::DeploymentPolicy;
+use crate::util::json::Json;
+use crate::util::stats;
+use std::path::Path;
+
+/// Where a tenant's scenario comes from.
+#[derive(Debug, Clone)]
+pub enum TenantSource {
+    /// The tenant's full scenario inlined into the fleet file.
+    Inline(Scenario),
+    /// A reference to a scenario JSON file, resolved against the current
+    /// working directory at materialization time (like
+    /// [`super::scenario::TrafficSource::TracePath`]).
+    Ref(String),
+}
+
+/// One named tenant of a fleet.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Weighted-fair share of the account cap (finite, > 0; defaults to 1).
+    pub weight: f64,
+    /// Optional p95 latency SLO (seconds) recorded per tenant in the
+    /// [`FleetReport`].
+    pub slo_p95: Option<f64>,
+    pub source: TenantSource,
+}
+
+impl TenantSpec {
+    /// A tenant wrapping an inline scenario with weight 1 and no SLO.
+    pub fn inline(name: &str, scenario: Scenario) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1.0,
+            slo_p95: None,
+            source: TenantSource::Inline(scenario),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("weight", Json::num(self.weight)),
+        ];
+        if let Some(slo) = self.slo_p95 {
+            pairs.push(("slo_p95", Json::num(slo)));
+        }
+        pairs.push((
+            "scenario",
+            match &self.source {
+                TenantSource::Inline(s) => s.to_json(),
+                TenantSource::Ref(p) => Json::str(p),
+            },
+        ));
+        Json::from_pairs(pairs)
+    }
+
+    pub fn from_json(j: &Json, idx: usize) -> Result<TenantSpec, ScenarioError> {
+        let section = format!("tenants[{idx}]");
+        error::check_keys(j, &section, &["name", "weight", "slo_p95", "scenario"])?;
+        let name = error::req_str(j, &section, "name")?.to_string();
+        let weight = error::opt_f64(j, &section, "weight", 1.0)?;
+        let slo_p95 = match j.get("slo_p95") {
+            None => None,
+            Some(_) => Some(error::req_f64(j, &section, "slo_p95")?),
+        };
+        let source = match j.get("scenario") {
+            None => return Err(ScenarioError::missing(&*section, "scenario")),
+            Some(Json::Str(p)) => TenantSource::Ref(p.clone()),
+            Some(obj) => TenantSource::Inline(Scenario::from_json(obj)?),
+        };
+        Ok(TenantSpec { name, weight, slo_p95, source })
+    }
+}
+
+/// A complete, serializable multi-tenant simulation description: named
+/// tenants, the shared account-level concurrency cap, and the arbitration
+/// policy that splits it. Construct in code (fields are public) or load
+/// from JSON ([`FleetScenario::load`], strict parsing); run with
+/// [`FleetScenario::run`].
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    pub name: String,
+    /// Account-level concurrency cap: how many requests the whole fleet may
+    /// have in flight at once (`None` = unbounded — the provider's account
+    /// limit lifted). Serialized as `0` for `None`, mirroring the
+    /// `concurrency` convention.
+    pub account_cap: Option<usize>,
+    pub arbitration: FleetArbitration,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// One fleet run's results: the aggregate [`FleetReport`] plus per-tenant
+/// [`RunArtifacts`] in tenant order.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub report: FleetReport,
+    pub artifacts: Vec<RunArtifacts>,
+}
+
+impl FleetScenario {
+    /// Validate the fleet description: at least one tenant, unique
+    /// non-empty names, positive finite weights and SLOs, and — for inline
+    /// tenants — a valid scenario the fleet engine can serve (event engine,
+    /// serverless baseline). Referenced scenario files are checked at
+    /// [`FleetScenario::run`] time, after loading.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if self.tenants.is_empty() {
+            return Err(ScenarioError::invalid(
+                "fleet.tenants",
+                "must name at least one tenant",
+            ));
+        }
+        if self.account_cap == Some(0) {
+            return Err(ScenarioError::invalid(
+                "fleet.account_cap",
+                "must be >= 1 (use None / 0-in-JSON for unbounded)",
+            ));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                return Err(ScenarioError::invalid(
+                    format!("tenants[{i}].name"),
+                    "must not be empty",
+                ));
+            }
+            if !seen.insert(t.name.as_str()) {
+                return Err(ScenarioError::invalid(
+                    format!("tenants[{i}].name"),
+                    format!("duplicate tenant name '{}'", t.name),
+                ));
+            }
+            if !(t.weight.is_finite() && t.weight > 0.0) {
+                return Err(ScenarioError::invalid(
+                    format!("tenants[{i}].weight"),
+                    format!("must be finite and > 0, got {}", t.weight),
+                ));
+            }
+            if let Some(slo) = t.slo_p95 {
+                if !(slo.is_finite() && slo > 0.0) {
+                    return Err(ScenarioError::invalid(
+                        format!("tenants[{i}].slo_p95"),
+                        format!("must be finite and > 0, got {slo}"),
+                    ));
+                }
+            }
+            match &t.source {
+                TenantSource::Inline(s) => {
+                    s.validate()?;
+                    check_tenant_scenario(i, s)?;
+                }
+                TenantSource::Ref(p) => {
+                    if p.is_empty() {
+                        return Err(ScenarioError::invalid(
+                            format!("tenants[{i}].scenario"),
+                            "referenced scenario path must not be empty",
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("version", Json::num(1.0)),
+            ("name", Json::str(&self.name)),
+            (
+                "account_cap",
+                Json::num(self.account_cap.unwrap_or(0) as f64),
+            ),
+            ("arbitration", Json::str(self.arbitration.name())),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Strict inverse of [`FleetScenario::to_json`]: unknown fields
+    /// anywhere in the fleet-owned schema (including each tenant entry and
+    /// inline tenant scenarios) are rejected, values validated.
+    pub fn from_json(j: &Json) -> Result<FleetScenario, ScenarioError> {
+        const SECTION: &str = "fleet";
+        error::check_keys(
+            j,
+            SECTION,
+            &["version", "name", "account_cap", "arbitration", "tenants"],
+        )?;
+        let version = error::opt_u64(j, SECTION, "version", 1)?;
+        if version != 1 {
+            return Err(ScenarioError::invalid(
+                "version",
+                format!("unsupported fleet version {version} (this build reads 1)"),
+            ));
+        }
+        let name = error::req_str(j, SECTION, "name")?.to_string();
+        let account_cap = match error::opt_u64(j, SECTION, "account_cap", 0)? {
+            0 => None,
+            c => Some(c as usize),
+        };
+        let arbitration = match j.get("arbitration") {
+            None => FleetArbitration::WeightedFair,
+            Some(Json::Str(s)) => FleetArbitration::from_name(s)?,
+            Some(other) => {
+                return Err(ScenarioError::invalid(
+                    "fleet.arbitration",
+                    format!("expected a string, got {other:?}"),
+                ))
+            }
+        };
+        let tenant_entries = j
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ScenarioError::missing(SECTION, "tenants"))?;
+        let mut tenants = Vec::with_capacity(tenant_entries.len());
+        for (i, tj) in tenant_entries.iter().enumerate() {
+            tenants.push(TenantSpec::from_json(tj, i)?);
+        }
+        let fleet = FleetScenario { name, account_cap, arbitration, tenants };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+
+    pub fn load(path: &Path) -> Result<FleetScenario, ScenarioError> {
+        Self::from_json(&error::read_json(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ScenarioError> {
+        self.to_json()
+            .write_file(path)
+            .map_err(|e| ScenarioError::Io {
+                path: path.display().to_string(),
+                detail: e.to_string(),
+            })
+    }
+
+    /// Resolve every tenant to a concrete [`Scenario`] (loading `Ref`
+    /// sources) and re-check fleet eligibility on the loaded files.
+    fn resolved(&self) -> Result<Vec<Scenario>, ScenarioError> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let s = match &t.source {
+                    TenantSource::Inline(s) => s.clone(),
+                    TenantSource::Ref(p) => Scenario::load(Path::new(p))?,
+                };
+                check_tenant_scenario(i, &s)?;
+                Ok(s)
+            })
+            .collect()
+    }
+
+    /// Serve the whole fleet jointly under the shared account cap. Each
+    /// tenant keeps its own baseline semantics (the exact cfg munging of
+    /// [`TrafficScenario::run`]): `static`/`lambdaml` force re-optimization
+    /// off, `ours` takes the tenant's config as written.
+    pub fn run(&self) -> Result<FleetOutcome, ScenarioError> {
+        self.validate()?;
+        let scenarios = self.resolved()?;
+        let compiled = scenarios
+            .iter()
+            .map(Scenario::materialize)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(self.run_compiled(&scenarios, &compiled))
+    }
+
+    /// The isolation baseline: every tenant served *alone* on its
+    /// weighted-fair reservation of the account cap — what per-tenant
+    /// reserved concurrency would buy instead of the shared pool. The
+    /// reservations partition the cap *exactly* (largest-remainder
+    /// apportionment by weight, at least one slot each; a fleet with more
+    /// tenants than cap slots cannot be isolated and is a typed error), so
+    /// the baseline never models more concurrency than the account owns.
+    /// Uncapped fleets isolate to uncapped single runs. Tenants are
+    /// resolved and materialized once, not per single run.
+    pub fn run_isolated(&self) -> Result<FleetOutcome, ScenarioError> {
+        self.validate()?;
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        let shares = isolated_shares(self.account_cap, &weights)?;
+        let scenarios = self.resolved()?;
+        let compiled = scenarios
+            .iter()
+            .map(Scenario::materialize)
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut tenants = Vec::with_capacity(self.tenants.len());
+        let mut artifacts = Vec::with_capacity(self.tenants.len());
+        for (i, t) in self.tenants.iter().enumerate() {
+            let single = FleetScenario {
+                name: format!("{}/{}", self.name, t.name),
+                account_cap: shares[i],
+                arbitration: self.arbitration,
+                tenants: vec![t.clone()],
+            };
+            let mut out = single.run_compiled(&scenarios[i..=i], &compiled[i..=i]);
+            tenants.push(out.report.tenants.pop().expect("single-tenant fleet"));
+            artifacts.push(out.artifacts.pop().expect("single-tenant fleet"));
+        }
+        Ok(FleetOutcome {
+            report: FleetReport::from_tenants(self.account_cap, tenants),
+            artifacts,
+        })
+    }
+
+    /// The joint run over already-resolved, already-materialized tenants:
+    /// one simulator + one event lane per tenant, driven to completion
+    /// against one shared event queue and account ledger.
+    fn run_compiled(&self, scenarios: &[Scenario], compiled: &[TrafficScenario]) -> FleetOutcome {
+        let mut sims: Vec<EpochSimulator<'_>> = Vec::with_capacity(compiled.len());
+        let mut policies: Vec<DeploymentPolicy> = Vec::with_capacity(compiled.len());
+        let mut pipelines: Vec<bool> = Vec::with_capacity(compiled.len());
+        for (s, scn) in scenarios.iter().zip(compiled) {
+            let mut cfg = s.cfg.clone();
+            let forced = match s.baseline {
+                Baseline::Ours => None,
+                Baseline::Static => {
+                    cfg.reoptimize = false;
+                    None
+                }
+                Baseline::LambdaML => {
+                    cfg.reoptimize = false;
+                    Some(scn.lambdaml(&cfg))
+                }
+                Baseline::CpuCluster => unreachable!("rejected by validate()"),
+            };
+            let pipeline = match cfg.engine {
+                SimEngine::Event { pipeline } => pipeline,
+                SimEngine::Legacy => unreachable!("rejected by validate()"),
+            };
+            let mut sim =
+                EpochSimulator::new(&scn.platform, &scn.spec, &scn.gate, scn.predictor(), cfg);
+            let policy = match forced {
+                Some(p) => p,
+                None => sim.initial_policy(&scn.traffic),
+            };
+            sim.begin_run(&policy);
+            sims.push(sim);
+            policies.push(policy);
+            pipelines.push(pipeline);
+        }
+
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        let mut cap = AccountCap::new(self.account_cap, self.arbitration, &weights);
+        let capped = cap.enabled();
+        let mut q = EventQueue::new();
+        let mut lanes: Vec<EventLane<'_, '_>> = policies
+            .into_iter()
+            .enumerate()
+            .map(|(i, policy)| {
+                EventLane::new(
+                    &sims[i],
+                    policy,
+                    &compiled[i].traffic,
+                    pipelines[i],
+                    i as u32,
+                    capped,
+                )
+            })
+            .collect();
+        let reports = drive(&mut sims, &mut lanes, &mut q, &mut cap);
+
+        let mut tenants = Vec::with_capacity(reports.len());
+        let mut artifacts = Vec::with_capacity(reports.len());
+        for (i, report) in reports.into_iter().enumerate() {
+            let lane = &lanes[i];
+            let sim = &mut sims[i];
+            tenants.push(TenantReport {
+                name: self.tenants[i].name.clone(),
+                weight: self.tenants[i].weight,
+                slo_p95: self.tenants[i].slo_p95,
+                report,
+                capped_requests: lane.cap_waits.len() as u64,
+                mean_cap_delay: stats::mean(&lane.cap_waits),
+                max_cap_delay: lane.cap_waits.iter().cloned().fold(0.0, f64::max),
+            });
+            artifacts.push(RunArtifacts {
+                policy_history: std::mem::take(&mut sim.policy_history),
+                final_policy: sim.last_policy.take(),
+                redeploy_times: std::mem::take(&mut sim.redeploy_times),
+                autoscale_events: std::mem::take(&mut sim.autoscale_events),
+                latencies: std::mem::take(&mut sim.last_latencies),
+            });
+        }
+        FleetOutcome {
+            report: FleetReport::from_tenants(self.account_cap, tenants),
+            artifacts,
+        }
+    }
+}
+
+/// Partition `cap` into per-tenant isolation reservations: at least one
+/// slot each, the spare slots apportioned by weight with largest-remainder
+/// rounding (ties toward the lower tenant index), summing to exactly `cap`.
+/// `None` (unbounded) isolates to unbounded singles.
+fn isolated_shares(
+    cap: Option<usize>,
+    weights: &[f64],
+) -> Result<Vec<Option<usize>>, ScenarioError> {
+    let n = weights.len();
+    let Some(c) = cap else {
+        return Ok(vec![None; n]);
+    };
+    if c < n {
+        return Err(ScenarioError::invalid(
+            "fleet.account_cap",
+            format!(
+                "the isolation baseline needs at least one reserved slot per tenant \
+                 ({n} tenants, cap {c})"
+            ),
+        ));
+    }
+    let total: f64 = weights.iter().sum();
+    let spare = (c - n) as f64;
+    let quotas: Vec<f64> = weights.iter().map(|w| spare * w / total).collect();
+    let mut shares: Vec<usize> = quotas.iter().map(|q| 1 + q.floor() as usize).collect();
+    let mut assigned: usize = shares.iter().sum();
+    // Largest remainder: the leftover slots go to the biggest fractional
+    // quotas, deterministically (remainder desc, then tenant index asc).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let ra = quotas[a] - quotas[a].floor();
+        let rb = quotas[b] - quotas[b].floor();
+        rb.partial_cmp(&ra).expect("finite remainders").then(a.cmp(&b))
+    });
+    for &i in &order {
+        if assigned >= c {
+            break;
+        }
+        shares[i] += 1;
+        assigned += 1;
+    }
+    debug_assert_eq!(shares.iter().sum::<usize>(), c, "shares must partition the cap");
+    Ok(shares.into_iter().map(Some).collect())
+}
+
+/// Fleet-eligibility checks on one tenant's scenario: the fleet engine
+/// interleaves event lanes, so the legacy serial engine cannot participate,
+/// and the CPU-cluster baseline has no serverless pool to share.
+fn check_tenant_scenario(i: usize, s: &Scenario) -> Result<(), ScenarioError> {
+    if !matches!(s.cfg.engine, SimEngine::Event { .. }) {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.config.engine"),
+            "fleet serving runs on the event engine (legacy is single-tenant only)",
+        ));
+    }
+    if s.baseline == Baseline::CpuCluster {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.baseline"),
+            "cpu-cluster has no serverless pool to share; run it as a standalone scenario",
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::arrivals::ArrivalProcess;
+    use crate::traffic::scenario::TrafficSource;
+    use crate::traffic::TrafficConfig;
+
+    fn tiny_tenant_scenario(seed: u64) -> Scenario {
+        Scenario::builder("tiny-tenant")
+            .model("tiny")
+            .unwrap()
+            .seed(seed)
+            .profile(2, 64)
+            .traffic(TrafficSource::Synthetic {
+                process: ArrivalProcess::Poisson { rate: 1.0 },
+                duration: Some(5.0),
+                requests: None,
+                tokens_per_request: 64,
+            })
+            .config(TrafficConfig { reoptimize: false, ..TrafficConfig::default() })
+            .baseline(Baseline::LambdaML)
+            .build()
+            .unwrap()
+    }
+
+    fn two_tenant_fleet() -> FleetScenario {
+        FleetScenario {
+            name: "test-fleet".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            tenants: vec![
+                TenantSpec {
+                    name: "a".into(),
+                    weight: 2.0,
+                    slo_p95: Some(30.0),
+                    source: TenantSource::Inline(tiny_tenant_scenario(1)),
+                },
+                TenantSpec::inline("b", tiny_tenant_scenario(2)),
+            ],
+        }
+    }
+
+    #[test]
+    fn fleet_json_roundtrip_is_canonical() {
+        let f = two_tenant_fleet();
+        let text = f.to_json().to_string_pretty();
+        let back = FleetScenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(back.tenants.len(), 2);
+        assert_eq!(back.account_cap, Some(2));
+        assert_eq!(back.arbitration, FleetArbitration::WeightedFair);
+        assert_eq!(back.tenants[0].slo_p95, Some(30.0));
+    }
+
+    #[test]
+    fn fleet_validation_rejects_bad_shapes() {
+        let base = two_tenant_fleet();
+
+        let mut empty = base.clone();
+        empty.tenants.clear();
+        assert!(matches!(empty.validate(), Err(ScenarioError::Invalid { .. })));
+
+        let mut dup = base.clone();
+        dup.tenants[1].name = "a".into();
+        let err = dup.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+
+        let mut zero_w = base.clone();
+        zero_w.tenants[0].weight = 0.0;
+        assert!(matches!(zero_w.validate(), Err(ScenarioError::Invalid { .. })));
+
+        let mut legacy = base.clone();
+        if let TenantSource::Inline(s) = &mut legacy.tenants[0].source {
+            s.cfg.engine = SimEngine::Legacy;
+        }
+        let err = legacy.validate().unwrap_err();
+        assert!(err.to_string().contains("engine"), "{err}");
+
+        let mut cpu = base;
+        if let TenantSource::Inline(s) = &mut cpu.tenants[1].source {
+            s.baseline = Baseline::CpuCluster;
+        }
+        assert!(matches!(cpu.validate(), Err(ScenarioError::Invalid { .. })));
+    }
+
+    #[test]
+    fn isolated_shares_partition_the_cap_exactly() {
+        // Equal weights, one spare slot: largest-remainder tie breaks to
+        // the lower tenant index.
+        assert_eq!(
+            isolated_shares(Some(4), &[1.0, 1.0, 1.0]).unwrap(),
+            vec![Some(2), Some(1), Some(1)]
+        );
+        // Heavy skew must not oversubscribe: the old max(1, floor) scheme
+        // would have handed out 3+1+1 = 5 slots of a 4-slot account.
+        assert_eq!(
+            isolated_shares(Some(4), &[10.0, 1.0, 1.0]).unwrap(),
+            vec![Some(2), Some(1), Some(1)]
+        );
+        assert_eq!(
+            isolated_shares(Some(6), &[2.0, 1.0]).unwrap(),
+            vec![Some(4), Some(2)]
+        );
+        // Unbounded fleets isolate to unbounded singles.
+        assert_eq!(isolated_shares(None, &[1.0, 1.0]).unwrap(), vec![None, None]);
+        // More tenants than slots: isolation is impossible, typed error.
+        assert!(matches!(
+            isolated_shares(Some(2), &[1.0, 1.0, 1.0]),
+            Err(ScenarioError::Invalid { .. })
+        ));
+    }
+
+    #[test]
+    fn ref_tenant_missing_file_is_typed_io_error() {
+        let f = FleetScenario {
+            name: "refs".into(),
+            account_cap: None,
+            arbitration: FleetArbitration::Fifo,
+            tenants: vec![TenantSpec {
+                name: "ghost".into(),
+                weight: 1.0,
+                slo_p95: None,
+                source: TenantSource::Ref("no/such/scenario.json".into()),
+            }],
+        };
+        assert!(f.validate().is_ok(), "path existence is a run-time concern");
+        assert!(matches!(f.run(), Err(ScenarioError::Io { .. })));
+    }
+}

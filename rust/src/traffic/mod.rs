@@ -44,37 +44,42 @@
 //!  - [`report`]    — the [`report::SimReport`] aggregate (billed cost over
 //!    time, throughput, latency and queue-delay percentiles, utilization)
 //!    used by the golden-regression fixtures and the `experiments::traffic`
-//!    scenario runner.
+//!    scenario runner, plus the fleet rollups ([`report::FleetReport`],
+//!    [`report::TenantReport`]);
+//!  - [`fleet`]     — multi-tenant fleet serving: a serializable
+//!    [`fleet::FleetScenario`] naming several tenants (each an ordinary
+//!    [`scenario::Scenario`]) served *jointly* behind one shared
+//!    account-level concurrency cap ([`sim::AccountCap`]) with
+//!    weighted-fair slot arbitration ([`autoscale::FleetArbitration`]);
+//!    with one tenant and no cap it reproduces [`scenario::Scenario::run`]
+//!    byte-for-byte.
 //!
 //! [`epoch::EpochSimulator`] remains the engine *behind* the scenario
 //! façade; construct simulations through [`scenario::Scenario`] /
-//! [`scenario::ScenarioBuilder`] instead of wiring it by hand.
+//! [`fleet::FleetScenario`] instead of wiring it by hand (the engine
+//! cross-validation tests that need simulator internals import it from
+//! [`epoch`] directly).
 
 pub mod arrivals;
 pub mod autoscale;
 pub mod config;
 pub mod epoch;
 pub mod error;
+pub mod fleet;
 pub mod report;
 pub mod scenario;
 pub mod sim;
 pub mod trace;
 
 pub use arrivals::{ArrivalGen, ArrivalProcess};
-pub use autoscale::{AutoscalePolicy, Autoscaler};
+pub use autoscale::{AutoscalePolicy, Autoscaler, FleetArbitration};
 pub use config::{MetricsMode, SimEngine, TrafficConfig};
 pub use error::ScenarioError;
-pub use report::SimReport;
+pub use fleet::{FleetOutcome, FleetScenario, TenantSource, TenantSpec};
+pub use report::{FleetReport, SimReport, TenantReport};
 pub use scenario::{
     Baseline, ModelSource, RunArtifacts, Scenario, ScenarioBuilder, ScenarioOutcome,
     TrafficScenario, TrafficSource,
 };
-pub use sim::SlotArena;
+pub use sim::{AccountCap, SlotArena};
 pub use trace::{Trace, TraceRequest};
-
-/// Deprecation shim (one release): the epoch engine now lives behind the
-/// [`scenario::Scenario`] façade — drive simulations through it instead of
-/// constructing the simulator by hand. Kept reachable for the engine
-/// cross-validation tests.
-#[doc(hidden)]
-pub use epoch::EpochSimulator;

@@ -5,6 +5,7 @@
 use super::error::ScenarioError;
 use crate::util::json::Json;
 use crate::util::stats::{self, LogHistogram};
+use crate::util::table::{fcost, fnum, ftime};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
@@ -211,6 +212,170 @@ impl SimReport {
     }
 }
 
+// ----------------------------------------------------------- fleet report
+
+/// One tenant's slice of a fleet run: its [`SimReport`] plus the
+/// account-cap admission statistics and the SLO it was declared with.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    /// Weighted-fair share weight the tenant was configured with.
+    pub weight: f64,
+    /// Declared p95 latency SLO (seconds), if any.
+    pub slo_p95: Option<f64>,
+    pub report: SimReport,
+    /// Requests that had to park for an account slot.
+    pub capped_requests: u64,
+    /// Mean / max admission delay of the parked requests (0 when none).
+    pub mean_cap_delay: f64,
+    pub max_cap_delay: f64,
+}
+
+impl TenantReport {
+    /// Whether the tenant met its declared p95 SLO (vacuously true without
+    /// one).
+    pub fn slo_met(&self) -> bool {
+        self.slo_p95.is_none_or(|slo| self.report.p95_latency <= slo)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("weight", Json::num(self.weight)),
+            ("report", self.report.to_json()),
+            ("capped_requests", Json::num(self.capped_requests as f64)),
+            ("mean_cap_delay", Json::num(self.mean_cap_delay)),
+            ("max_cap_delay", Json::num(self.max_cap_delay)),
+        ];
+        if let Some(slo) = self.slo_p95 {
+            pairs.push(("slo_p95", Json::num(slo)));
+            pairs.push(("slo_met", Json::Bool(self.slo_met())));
+        }
+        Json::from_pairs(pairs)
+    }
+}
+
+/// Aggregate result of a multi-tenant fleet run (`traffic::fleet`): one
+/// [`TenantReport`] per tenant plus the fleet-level rollups — total billed
+/// cost, cap-induced admission delay, and a weighted fairness index.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Account-level concurrency cap the fleet ran under (`None` =
+    /// unbounded).
+    pub account_cap: Option<usize>,
+    pub tenants: Vec<TenantReport>,
+    /// Summed billed cost across tenants — the fleet objective.
+    pub total_cost: f64,
+    /// Requests (fleet-wide) that parked for an account slot, and their
+    /// admission-delay aggregate.
+    pub capped_requests: u64,
+    pub mean_cap_delay: f64,
+    pub max_cap_delay: f64,
+    /// Jain's fairness index over per-tenant weighted service (busy seconds
+    /// per unit weight), in (0, 1]: 1.0 means capacity use was perfectly
+    /// proportional to the configured weights.
+    pub fairness: f64,
+}
+
+impl FleetReport {
+    /// Roll per-tenant reports up into the fleet aggregate. The cap-delay
+    /// mean recombines exactly from the per-tenant means (each is a plain
+    /// average over that tenant's parked requests).
+    pub fn from_tenants(account_cap: Option<usize>, tenants: Vec<TenantReport>) -> FleetReport {
+        let total_cost = tenants.iter().map(|t| t.report.total_cost).sum();
+        let capped_requests: u64 = tenants.iter().map(|t| t.capped_requests).sum();
+        let wait_sum: f64 = tenants
+            .iter()
+            .map(|t| t.mean_cap_delay * t.capped_requests as f64)
+            .sum();
+        let mean_cap_delay = if capped_requests > 0 {
+            wait_sum / capped_requests as f64
+        } else {
+            0.0
+        };
+        let max_cap_delay = tenants.iter().map(|t| t.max_cap_delay).fold(0.0, f64::max);
+        let fairness = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.weight));
+        FleetReport {
+            account_cap,
+            tenants,
+            total_cost,
+            capped_requests,
+            mean_cap_delay,
+            max_cap_delay,
+            fairness,
+        }
+    }
+
+    /// The named tenant's report, if present.
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Worst per-tenant p95 latency — the fleet-level tail number the
+    /// shared-vs-isolated comparisons report (0 for an empty fleet).
+    pub fn max_p95(&self) -> f64 {
+        self.tenants
+            .iter()
+            .map(|t| t.report.p95_latency)
+            .fold(0.0, f64::max)
+    }
+
+    /// Column headers of the shared-vs-isolated comparison tables printed
+    /// by `serve_traffic --fleet` and `experiments traffic` — defined once
+    /// beside [`FleetReport::comparison_row`] so the printers cannot drift.
+    pub fn comparison_columns() -> [&'static str; 6] {
+        ["pool", "billed cost", "max p95", "capped reqs", "mean cap delay", "fairness"]
+    }
+
+    /// One comparison-table row for this fleet report.
+    pub fn comparison_row(&self, label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            fcost(self.total_cost),
+            ftime(self.max_p95()),
+            self.capped_requests.to_string(),
+            ftime(self.mean_cap_delay),
+            fnum(self.fairness),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "account_cap",
+                Json::num(self.account_cap.unwrap_or(0) as f64),
+            ),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(TenantReport::to_json).collect()),
+            ),
+            ("total_cost", Json::num(self.total_cost)),
+            ("capped_requests", Json::num(self.capped_requests as f64)),
+            ("mean_cap_delay", Json::num(self.mean_cap_delay)),
+            ("max_cap_delay", Json::num(self.max_cap_delay)),
+            ("fairness", Json::num(self.fairness)),
+        ])
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative samples;
+/// defined as 1.0 for an empty or all-zero population (nothing was unfair).
+fn jain_index(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut n = 0usize;
+    let mut sum = 0.0f64;
+    let mut sq = 0.0f64;
+    for x in xs {
+        n += 1;
+        sum += x;
+        sq += x * x;
+    }
+    if n == 0 || sq <= 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (n as f64 * sq)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +429,56 @@ mod tests {
         off.mean_queue_delay *= 2.0;
         let err = r.close_to(&off, 1e-6).unwrap_err();
         assert!(err.contains("mean_queue_delay"), "{err}");
+    }
+
+    fn tenant(name: &str, weight: f64, cost: f64, busy: f64) -> TenantReport {
+        let mut r = sample();
+        r.total_cost = cost;
+        r.busy_secs = busy;
+        TenantReport {
+            name: name.to_string(),
+            weight,
+            slo_p95: None,
+            report: r,
+            capped_requests: 2,
+            mean_cap_delay: 1.5,
+            max_cap_delay: 3.0,
+        }
+    }
+
+    #[test]
+    fn fleet_report_rolls_up_cost_delay_and_fairness() {
+        let f = FleetReport::from_tenants(
+            Some(4),
+            vec![tenant("a", 2.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 20.0)],
+        );
+        assert_eq!(f.total_cost, 1.5);
+        assert_eq!(f.capped_requests, 4);
+        assert!((f.mean_cap_delay - 1.5).abs() < 1e-12);
+        assert_eq!(f.max_cap_delay, 3.0);
+        // busy/weight identical (20.0 each): perfectly weight-fair.
+        assert!((f.fairness - 1.0).abs() < 1e-12);
+        assert!(f.tenant("a").is_some() && f.tenant("nope").is_none());
+        // Skewed service vs weight pulls the index below 1.
+        let skew = FleetReport::from_tenants(
+            Some(4),
+            vec![tenant("a", 1.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 4.0)],
+        );
+        assert!(skew.fairness < 1.0);
+        assert!(skew.fairness > 0.0);
+    }
+
+    #[test]
+    fn slo_met_checks_p95_against_declared_target() {
+        let mut t = tenant("a", 1.0, 1.0, 1.0);
+        assert!(t.slo_met(), "no SLO declared is vacuously met");
+        t.slo_p95 = Some(t.report.p95_latency + 1.0);
+        assert!(t.slo_met());
+        t.slo_p95 = Some(t.report.p95_latency * 0.5);
+        assert!(!t.slo_met());
+        let j = t.to_json();
+        assert_eq!(j.get_f64("slo_p95"), t.slo_p95);
+        assert_eq!(j.get("slo_met").and_then(Json::as_bool), Some(false));
     }
 
     #[test]

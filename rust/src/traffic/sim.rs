@@ -7,12 +7,22 @@
 //! layer-5 work reserve (and occupy) an instance while its layer-0 work is
 //! still computing. This module replaces it with a discrete-event engine:
 //!
-//!  - a [`std::collections::BinaryHeap`] event queue over `(time, seq)`
-//!    ordered events — request arrivals are consumed from the (sorted)
-//!    traffic slice, layer-dispatch events flow through the heap, and epoch
-//!    boundaries are evaluated exactly as the legacy loop does (lazily, as
-//!    arrivals cross them, after draining every in-flight event due before
-//!    the boundary);
+//!  - a [`std::collections::BinaryHeap`] event queue over tenant-tagged
+//!    `(time, tenant, seq)` ordered events — request arrivals are consumed
+//!    from the (sorted) traffic slice, layer-dispatch events flow through
+//!    the heap, and epoch boundaries are evaluated exactly as the legacy
+//!    loop does (lazily, as arrivals of the same tenant cross them, after
+//!    draining every in-flight event due before the boundary);
+//!  - **tenant lanes behind one shared [`AccountCap`]**: the run state is an
+//!    [`EventLane`] per tenant (arena, scratch plans, epoch clock, metrics),
+//!    and [`drive`] interleaves any number of lanes deterministically over
+//!    one [`EventQueue`]. When an account-level concurrency cap is set
+//!    (`traffic::fleet`), each request holds one ledger slot from its first
+//!    layer dispatch to its completion — the fleet-wide analogue of PR 2's
+//!    per-instance slots — and over-cap arrivals park until a release event
+//!    grants them a slot per the configured arbitration policy. A
+//!    single-tenant uncapped run is exactly one lane and reproduces the
+//!    pre-fleet engine operation-for-operation;
 //!  - **layer-pipelined dispatch** (`pipeline: true`): a request's layer
 //!    *k+1* is enqueued when layer *k* completes (straggler replica plus the
 //!    non-replica scatter/gather tail of the analytic model), so later
@@ -51,7 +61,7 @@
 //! is unaffected; only the predictor's end-of-run state differs from a
 //! legacy run.
 
-use super::autoscale::Autoscaler;
+use super::autoscale::{Autoscaler, FleetArbitration};
 use super::config::MetricsMode;
 use super::epoch::{fractions, EpochSimulator};
 use super::report::SimReport;
@@ -65,7 +75,7 @@ use crate::predictor::profile::absorb_batch;
 use crate::util::stats::{self, LogHistogram};
 use crate::workload::{Batch, TimedBatch};
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 // ------------------------------------------------------------- slot arena
 
@@ -254,14 +264,23 @@ impl InstancePool for SlotArena {
 
 // ------------------------------------------------------------ event types
 
-/// One scheduled layer-dispatch event. Total order `(at, seq)` makes heap
-/// pops deterministic: earlier virtual time first, FIFO among ties.
+/// One scheduled event: a layer dispatch of an in-flight request, or — when
+/// an account-level cap is active and `req == REQ_RELEASE` — the release of
+/// a finished request's account slot. Events are tenant-tagged; the total
+/// order `(at, tenant, seq)` makes heap pops deterministic across a whole
+/// fleet: earlier virtual time first, lower tenant index among ties, FIFO
+/// within a tenant. A single-tenant run tags everything tenant 0, which
+/// degenerates to the original `(at, seq)` order bit-for-bit.
 #[derive(Debug, Clone, Copy)]
 struct Ev {
     at: f64,
+    tenant: u32,
     seq: u64,
     req: u32,
 }
+
+/// Sentinel `req` marking an account-slot release event.
+const REQ_RELEASE: u32 = u32::MAX;
 
 impl PartialEq for Ev {
     fn eq(&self, other: &Ev) -> bool {
@@ -279,7 +298,175 @@ impl PartialOrd for Ev {
 
 impl Ord for Ev {
     fn cmp(&self, other: &Ev) -> Ordering {
-        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+        self.at
+            .total_cmp(&other.at)
+            .then(self.tenant.cmp(&other.tenant))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The shared event heap of one run: a single globally-ordered stream
+/// spanning every tenant lane, so the fleet driver interleaves tenants
+/// deterministically instead of merging per-tenant heaps ad hoc.
+#[derive(Debug, Default)]
+pub(crate) struct EventQueue {
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub(crate) fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, at: f64, tenant: u32, req: u32) {
+        self.heap.push(Reverse(Ev { at, tenant, seq: self.seq, req }));
+        self.seq += 1;
+    }
+
+    fn peek(&self) -> Option<Ev> {
+        self.heap.peek().map(|r| r.0)
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        self.heap.pop().map(|r| r.0)
+    }
+}
+
+// ----------------------------------------------------- account-level cap
+
+/// One parked request: an in-flight slot of a tenant lane waiting for an
+/// account slot, stamped with the virtual time it became ready.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Waiter {
+    pub(crate) slot: usize,
+    pub(crate) ready: f64,
+    seq: u64,
+}
+
+/// The shared account-level concurrency ledger — the fleet-wide analogue of
+/// PR 2's per-instance slots, modeling the account concurrency limit a
+/// serverless provider imposes across *all* of an account's functions.
+/// Each admitted request holds one slot from its first layer dispatch until
+/// its completion; a request arriving while the ledger is full parks FIFO
+/// in its tenant's queue and is granted a freed slot according to the
+/// [`FleetArbitration`] policy. `cap: None` disables the ledger entirely
+/// (no bookkeeping on the single-tenant hot path).
+#[derive(Debug, Clone)]
+pub struct AccountCap {
+    cap: Option<usize>,
+    arbitration: FleetArbitration,
+    weights: Vec<f64>,
+    in_use: usize,
+    in_use_by: Vec<usize>,
+    waiting: Vec<VecDeque<Waiter>>,
+    waiting_total: usize,
+    park_seq: u64,
+}
+
+impl AccountCap {
+    pub fn new(cap: Option<usize>, arbitration: FleetArbitration, weights: &[f64]) -> AccountCap {
+        if let Some(c) = cap {
+            assert!(c >= 1, "account cap must be >= 1 (use None for unbounded)");
+        }
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "tenant weights must be finite and > 0"
+        );
+        AccountCap {
+            cap,
+            arbitration,
+            weights: weights.to_vec(),
+            in_use: 0,
+            in_use_by: vec![0; weights.len()],
+            waiting: vec![VecDeque::new(); weights.len()],
+            waiting_total: 0,
+            park_seq: 0,
+        }
+    }
+
+    /// An inert ledger: every request is admitted immediately.
+    pub fn unbounded(tenants: usize) -> AccountCap {
+        AccountCap::new(None, FleetArbitration::Fifo, &vec![1.0; tenants])
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap.is_some()
+    }
+
+    /// Requests currently holding an account slot (0 when unbounded).
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Take a slot for `tenant` if one is free *and* no request is already
+    /// waiting (a newly arriving request must not jump the parked queue).
+    pub(crate) fn try_acquire(&mut self, tenant: usize) -> bool {
+        match self.cap {
+            None => true,
+            Some(c) => {
+                if self.in_use < c && self.waiting_total == 0 {
+                    self.in_use += 1;
+                    self.in_use_by[tenant] += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Park a staged request until a slot frees.
+    pub(crate) fn park(&mut self, tenant: usize, slot: usize, ready: f64) {
+        self.waiting[tenant].push_back(Waiter { slot, ready, seq: self.park_seq });
+        self.park_seq += 1;
+        self.waiting_total += 1;
+    }
+
+    /// Return a finished request's slot to the pool.
+    pub(crate) fn release(&mut self, tenant: usize) {
+        debug_assert!(self.in_use > 0 && self.in_use_by[tenant] > 0, "release without acquire");
+        self.in_use -= 1;
+        self.in_use_by[tenant] -= 1;
+    }
+
+    /// Grant a free slot to the next waiter per the arbitration policy;
+    /// `None` when the ledger is full or nothing waits.
+    pub(crate) fn grant(&mut self) -> Option<(usize, Waiter)> {
+        let c = self.cap?;
+        if self.in_use >= c || self.waiting_total == 0 {
+            return None;
+        }
+        let tenant = match self.arbitration {
+            // Park order is the global arrival order, so the front seqs
+            // give strict fleet-wide FIFO.
+            FleetArbitration::Fifo => (0..self.waiting.len())
+                .filter(|&t| !self.waiting[t].is_empty())
+                .min_by_key(|&t| self.waiting[t].front().expect("non-empty queue").seq)
+                .expect("waiting_total > 0"),
+            // Least capacity in use relative to weight; ties break toward
+            // the lower tenant index, FIFO within a tenant.
+            FleetArbitration::WeightedFair => {
+                let mut best = usize::MAX;
+                let mut best_key = f64::INFINITY;
+                for (t, queue) in self.waiting.iter().enumerate() {
+                    if queue.is_empty() {
+                        continue;
+                    }
+                    let key = self.in_use_by[t] as f64 / self.weights[t];
+                    if key < best_key {
+                        best_key = key;
+                        best = t;
+                    }
+                }
+                best
+            }
+        };
+        let w = self.waiting[tenant].pop_front().expect("selected tenant has a waiter");
+        self.waiting_total -= 1;
+        self.in_use += 1;
+        self.in_use_by[tenant] += 1;
+        Some((tenant, w))
     }
 }
 
@@ -462,9 +649,21 @@ fn dispatch_layer(
     }
 }
 
-// ---------------------------------------------------------------- engine
+// ----------------------------------------------------------------- lanes
 
-struct EventEngine<'a> {
+/// One tenant's complete run state: the event-engine dispatch machinery
+/// (slot arena, scratch plans, in-flight requests, metric sinks) plus the
+/// epoch-loop bookkeeping that used to live as locals of the single-tenant
+/// run loop (popularity basis/EMA, epoch clock, redeploy gap, counters).
+/// The single-tenant engine is exactly one lane driven to completion; the
+/// fleet driver (`traffic::fleet`) runs many lanes against one shared
+/// [`EventQueue`] and [`AccountCap`].
+pub(crate) struct EventLane<'a, 't> {
+    tenant: u32,
+    pipeline: bool,
+    /// Whether an account cap is active: requests then hold a ledger slot
+    /// from first dispatch to completion (release events close the loop).
+    capped: bool,
     platform: &'a PlatformConfig,
     spec: &'a MoeModelSpec,
     num_layers: usize,
@@ -473,10 +672,8 @@ struct EventEngine<'a> {
     /// Policy layer plans with per-request token counts scribbled in;
     /// refreshed whenever the policy changes at an epoch boundary.
     scratch: Vec<LayerPlan>,
-    heap: BinaryHeap<Reverse<Ev>>,
     inflight: Vec<InFlight>,
     free: Vec<usize>,
-    seq: u64,
     pending: Vec<(usize, f64, f64)>,
     bufs: DispatchBufs,
     metrics: Metrics,
@@ -486,30 +683,203 @@ struct EventEngine<'a> {
     /// Virtual time before which no layer may dispatch: the ≥60 s redeploy
     /// gap blocks *all* serving, including the remaining layers of requests
     /// already in flight when the re-deployment fires (layer-0 admission is
-    /// clamped by the run loop; chained layer events are clamped here).
+    /// clamped via the ready time; chained layer events are clamped here).
     blocked_until: f64,
+    // ---- epoch-loop state ----
+    policy: DeploymentPolicy,
+    traffic: &'t [TimedBatch],
+    cursor: usize,
+    counts_buf: Vec<Vec<u64>>,
+    basis: Vec<Vec<f64>>,
+    ema: Vec<Vec<f64>>,
+    tokens: u64,
+    redeploys: u64,
+    epochs: u64,
+    redeploy_ready: f64,
+    next_epoch: f64,
+    last_batch: Option<&'t Batch>,
+    // ---- account-cap bookkeeping ----
+    /// Cap-induced admission delay of each parked request, in grant order
+    /// (empty when the run is uncapped or the cap never filled).
+    pub(crate) cap_waits: Vec<f64>,
 }
 
-impl EventEngine<'_> {
-    fn push_event(&mut self, at: f64, req: usize) {
-        self.heap.push(Reverse(Ev { at, seq: self.seq, req: req as u32 }));
-        self.seq += 1;
-    }
-
-    /// Process every pending layer event due at or before `limit`.
-    fn drain_until(&mut self, limit: f64) {
-        while let Some(&Reverse(ev)) = self.heap.peek() {
-            if ev.at > limit {
-                break;
-            }
-            self.heap.pop();
-            self.dispatch(ev.req as usize, ev.at);
+impl<'a, 't> EventLane<'a, 't> {
+    pub(crate) fn new(
+        sim: &EpochSimulator<'a>,
+        policy: DeploymentPolicy,
+        traffic: &'t [TimedBatch],
+        pipeline: bool,
+        tenant: u32,
+        capped: bool,
+    ) -> EventLane<'a, 't> {
+        let spec = sim.spec;
+        let num_layers = spec.num_moe_layers();
+        debug_assert_eq!(policy.layers.len(), num_layers);
+        // Arena stride: the autoscaler caps at cfg.max_replicas, but a
+        // hand-built initial policy may exceed it.
+        let policy_g = policy
+            .layers
+            .iter()
+            .flat_map(|l| l.experts.iter().map(|e| e.replicas))
+            .max()
+            .unwrap_or(1);
+        let mut arena = SlotArena::new(
+            spec,
+            sim.cfg.max_replicas.max(policy_g),
+            sim.cfg.keep_alive,
+            sim.cfg.concurrency,
+        );
+        if sim.cfg.prewarm {
+            arena.prewarm_plan(&policy.layers);
+        }
+        // Popularity the current deployment was sized for, vs realized EMA.
+        let plan_counts: Vec<Vec<u64>> = policy
+            .layers
+            .iter()
+            .map(|l| l.experts.iter().map(|ep| ep.tokens).collect())
+            .collect();
+        let basis = fractions(&plan_counts);
+        let ema = basis.clone();
+        let exact = sim.cfg.metrics == MetricsMode::Exact;
+        EventLane {
+            tenant,
+            pipeline,
+            capped,
+            platform: sim.platform,
+            spec,
+            num_layers,
+            arena,
+            autoscaler: Autoscaler::new(sim.cfg.autoscale, sim.cfg.max_replicas),
+            scratch: policy.layers.clone(),
+            inflight: Vec::new(),
+            free: Vec::new(),
+            pending: Vec::new(),
+            bufs: DispatchBufs::default(),
+            metrics: Metrics::new(exact, traffic.len()),
+            total_cost: 0.0,
+            violation_batches: 0,
+            last_finish: 0.0,
+            blocked_until: 0.0,
+            policy,
+            traffic,
+            cursor: 0,
+            counts_buf: Vec::new(),
+            basis,
+            ema,
+            tokens: 0,
+            redeploys: 0,
+            epochs: 0,
+            redeploy_ready: 0.0,
+            next_epoch: sim.cfg.epoch_secs,
+            last_batch: None,
+            cap_waits: Vec::new(),
         }
     }
 
-    /// Pipelined admission: take an in-flight slot and dispatch layer 0 at
-    /// the ready time (via the heap when the redeploy gap delays it).
-    fn admit_request(&mut self, ri: usize, t: f64, ready: f64, counts: &mut Vec<Vec<u64>>) {
+    /// The lane's next arrival time, if any traffic remains.
+    fn next_arrival(&self) -> Option<f64> {
+        self.traffic.get(self.cursor).map(|tb| tb.at)
+    }
+
+    /// The lane's next epoch boundary, if its next arrival crosses it —
+    /// the lazy-boundary rule of the single-tenant loop preserved per lane:
+    /// boundaries fire only because a later arrival of the *same tenant*
+    /// crosses them, and never after the tenant's last arrival.
+    fn boundary_due(&self) -> Option<f64> {
+        match self.next_arrival() {
+            Some(a) if a >= self.next_epoch => Some(self.next_epoch),
+            _ => None,
+        }
+    }
+
+    /// Process the epoch boundary at `next_epoch`: replica autoscaling and
+    /// (under `reoptimize`) the drift check + full redeploy, via the
+    /// engine-shared machinery on the owning simulator.
+    fn on_boundary(&mut self, sim: &mut EpochSimulator<'a>) {
+        let boundary = self.next_epoch;
+        self.epochs += 1;
+        let changed = sim.epoch_boundary(
+            boundary,
+            &mut self.policy,
+            &mut self.arena,
+            &mut self.autoscaler,
+            self.last_batch,
+            &mut self.basis,
+            &mut self.ema,
+            &mut self.total_cost,
+            &mut self.redeploy_ready,
+            &mut self.redeploys,
+        );
+        if changed {
+            self.scratch.clone_from(&self.policy.layers);
+        }
+        // A redeploy blocks all serving for the gap — including the
+        // remaining layers of requests already in flight.
+        self.blocked_until = self.redeploy_ready;
+        self.next_epoch += sim.cfg.epoch_secs;
+    }
+
+    /// Admit the next arrival: route the batch, feed the predictor, then
+    /// either take an account slot and start serving or park until one
+    /// frees. Operation order is identical to the single-tenant loop.
+    fn on_arrival(
+        &mut self,
+        sim: &mut EpochSimulator<'a>,
+        q: &mut EventQueue,
+        cap: &mut AccountCap,
+    ) {
+        let traffic = self.traffic;
+        let tb = &traffic[self.cursor];
+        let ri = self.cursor;
+        self.cursor += 1;
+        let t = tb.at;
+        let ready = t.max(self.redeploy_ready);
+        sim.router.counts_into(sim.gate, &tb.batch, &mut self.counts_buf);
+        self.tokens += tb.batch.total_tokens as u64;
+
+        if sim.cfg.reoptimize {
+            // Online feedback: realized routing → table + EMA, absorbed
+            // through the same routing memo serving uses. Skipped entirely
+            // when re-optimization is off — nothing downstream reads it
+            // and the report is unaffected.
+            absorb_batch(&mut sim.predictor.table, sim.gate, &mut sim.router, &tb.batch);
+            let frac = fractions(&self.counts_buf);
+            let alpha = sim.cfg.ema_alpha;
+            for (el, fl) in self.ema.iter_mut().zip(&frac) {
+                for (e, &f) in el.iter_mut().zip(fl) {
+                    *e = (1.0 - alpha) * *e + alpha * f;
+                }
+            }
+        }
+        self.last_batch = Some(&tb.batch);
+
+        if !cap.try_acquire(self.tenant as usize) {
+            // Account saturated: hold the routed request until a slot
+            // frees; the driver restarts it from the release event.
+            let slot = self.stage_request(ri, t);
+            cap.park(self.tenant as usize, slot, ready);
+        } else if self.pipeline {
+            let slot = self.stage_request(ri, t);
+            if ready > t {
+                q.push(ready, self.tenant, slot as u32);
+            } else {
+                self.dispatch(q, slot, ready);
+            }
+        } else {
+            let counts = std::mem::take(&mut self.counts_buf);
+            let finish = self.serve_monolithic(ri, t, ready, &counts, t);
+            self.counts_buf = counts;
+            if self.capped {
+                q.push(finish, self.tenant, REQ_RELEASE);
+            }
+        }
+    }
+
+    /// Take (or grow) an in-flight slot and move the routed counts into it.
+    /// Slots are recycled through the free list, so live memory stays
+    /// O(concurrent in-flight requests).
+    fn stage_request(&mut self, ri: usize, t: f64) -> usize {
         let slot = match self.free.pop() {
             Some(s) => s,
             None => {
@@ -523,18 +893,32 @@ impl EventEngine<'_> {
         fl.next_layer = 0;
         fl.queue_delay = 0.0;
         fl.violated = false;
-        std::mem::swap(&mut fl.counts, counts);
-        if ready > t {
-            self.push_event(ready, slot);
+        std::mem::swap(&mut fl.counts, &mut self.counts_buf);
+        slot
+    }
+
+    /// Start a granted (previously cap-parked) request at virtual time
+    /// `at`: first layer dispatch under pipelining, whole-request monolithic
+    /// service otherwise. Only reachable under an active cap.
+    fn start_request(&mut self, q: &mut EventQueue, slot: usize, at: f64) {
+        if self.pipeline {
+            self.dispatch(q, slot, at);
         } else {
-            self.dispatch(slot, ready);
+            let at = at.max(self.blocked_until);
+            let counts = std::mem::take(&mut self.inflight[slot].counts);
+            let ri = self.inflight[slot].traffic_idx;
+            let arrival = self.inflight[slot].arrival;
+            let finish = self.serve_monolithic(ri, arrival, at, &counts, at);
+            self.inflight[slot].counts = counts;
+            self.free.push(slot);
+            q.push(finish, self.tenant, REQ_RELEASE);
         }
     }
 
     /// Dispatch the next layer of an in-flight request at `now` (clamped
     /// past any redeploy gap); chain the following layer at this layer's
     /// completion, or finalize the request.
-    fn dispatch(&mut self, slot: usize, now: f64) {
+    fn dispatch(&mut self, q: &mut EventQueue, slot: usize, now: f64) {
         let now = now.max(self.blocked_until);
         let l = self.inflight[slot].next_layer;
         self.pending.clear();
@@ -561,9 +945,9 @@ impl EventEngine<'_> {
         fl.violated |= d.violated;
         fl.next_layer += 1;
         if fl.next_layer < self.num_layers {
-            self.push_event(completion, slot);
+            q.push(completion, self.tenant, slot as u32);
         } else {
-            self.finalize(slot, now, completion);
+            self.finalize(q, slot, now, completion);
         }
     }
 
@@ -572,8 +956,9 @@ impl EventEngine<'_> {
     /// stamping the cost timeline with it (all of the request's cost has
     /// accrued by then) keeps the timeline time-sorted, which
     /// `cost_at`-style consumers rely on; `finish` (the request completion,
-    /// later than `now`) is what latency is measured to.
-    fn finalize(&mut self, slot: usize, now: f64, finish: f64) {
+    /// later than `now`) is what latency is measured to and when the
+    /// account slot is released.
+    fn finalize(&mut self, q: &mut EventQueue, slot: usize, now: f64, finish: f64) {
         let fl = &self.inflight[slot];
         let latency = finish - fl.arrival;
         let queue_delay = fl.queue_delay;
@@ -585,12 +970,26 @@ impl EventEngine<'_> {
         }
         self.last_finish = self.last_finish.max(finish);
         self.free.push(slot);
+        if self.capped {
+            q.push(finish, self.tenant, REQ_RELEASE);
+        }
     }
 
     /// Monolithic dispatch of a whole request at `ready` — the exact PR 2
     /// accounting (same peek order, same max/tail arithmetic, keep-alive
-    /// extended to the request finish), over the arena.
-    fn serve_monolithic(&mut self, ri: usize, t: f64, ready: f64, counts: &[Vec<u64>]) {
+    /// extended to the request finish), over the arena. Returns the request
+    /// finish time (the account slot's release point under a cap). The cost
+    /// timeline is stamped at `stamp`: the arrival for immediate dispatches
+    /// (matching the legacy loop bit-for-bit) and the grant time for
+    /// cap-parked ones, so the timeline stays time-sorted.
+    fn serve_monolithic(
+        &mut self,
+        ri: usize,
+        t: f64,
+        ready: f64,
+        counts: &[Vec<u64>],
+        stamp: f64,
+    ) -> f64 {
         self.pending.clear();
         let mut queue_delay = 0.0f64;
         let mut max_service = 0.0f64;
@@ -629,165 +1028,128 @@ impl EventEngine<'_> {
         if violated {
             self.violation_batches += 1;
         }
-        self.metrics.record(ri, finish - t, queue_delay, t, self.total_cost);
+        self.metrics.record(ri, finish - t, queue_delay, stamp, self.total_cost);
         self.last_finish = self.last_finish.max(finish);
+        finish
+    }
+
+    /// Assemble the lane's report and hand the run artifacts back to its
+    /// simulator — the single-tenant engine epilogue, per lane.
+    fn finish(&mut self, sim: &mut EpochSimulator<'a>) -> SimReport {
+        debug_assert_eq!(self.cursor, self.traffic.len(), "lane finished with pending arrivals");
+        let requests = self.traffic.len() as u64;
+        let mut report =
+            self.metrics
+                .build_report(requests, self.tokens, self.last_finish, self.total_cost);
+        report.epochs = self.epochs;
+        report.redeploys = self.redeploys;
+        report.warm_invocations = self.arena.warm_hits;
+        report.cold_invocations = self.arena.cold_starts;
+        report.violation_batches = self.violation_batches;
+        report.queued_invocations = self.arena.queued_jobs;
+        report.busy_secs = self.arena.total_busy_secs();
+        report.max_utilization = self.arena.max_utilization(self.last_finish);
+        report.scale_outs = self.autoscaler.scale_outs;
+        report.scale_ins = self.autoscaler.scale_ins;
+        sim.autoscale_events = self.autoscaler.events.clone();
+        sim.last_policy =
+            Some(std::mem::replace(&mut self.policy, DeploymentPolicy { layers: Vec::new() }));
+        sim.last_latencies = std::mem::take(&mut self.metrics.latencies);
+        report
     }
 }
 
 // ------------------------------------------------------------- run loop
 
+/// Step kinds at equal virtual time: pending layer events dispatch first
+/// (they were due at or before the boundary/arrival), then epoch
+/// boundaries, then the arrival itself — the exact operation order of the
+/// single-tenant loop, generalized to many lanes by ordering every step on
+/// `(time, tenant, kind)`.
+const KIND_EVENT: u8 = 0;
+const KIND_BOUNDARY: u8 = 1;
+const KIND_ARRIVAL: u8 = 2;
+
+/// Drive every lane to completion against one shared event queue and
+/// account ledger, returning one report per lane (in lane order). With a
+/// single uncapped lane this reproduces the pre-fleet single-tenant engine
+/// operation-for-operation — the reproduction pin the fleet tests hold.
+pub(crate) fn drive<'a>(
+    sims: &mut [EpochSimulator<'a>],
+    lanes: &mut [EventLane<'a, '_>],
+    q: &mut EventQueue,
+    cap: &mut AccountCap,
+) -> Vec<SimReport> {
+    debug_assert_eq!(sims.len(), lanes.len(), "one simulator per lane");
+    loop {
+        // The globally next step: the heap head (already the minimal event
+        // by `(at, tenant, seq)`) raced against each lane's due boundary
+        // or next arrival.
+        let mut best: Option<(f64, u32, u8)> = None;
+        if let Some(ev) = q.peek() {
+            best = Some((ev.at, ev.tenant, KIND_EVENT));
+        }
+        for lane in lanes.iter() {
+            let cand = match (lane.boundary_due(), lane.next_arrival()) {
+                (Some(b), _) => (b, lane.tenant, KIND_BOUNDARY),
+                (None, Some(a)) => (a, lane.tenant, KIND_ARRIVAL),
+                (None, None) => continue,
+            };
+            let better = match best {
+                None => true,
+                Some(cur) => {
+                    cand.0 < cur.0 || (cand.0 == cur.0 && (cand.1, cand.2) < (cur.1, cur.2))
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        let Some((_, tenant, kind)) = best else { break };
+        let ti = tenant as usize;
+        match kind {
+            KIND_EVENT => {
+                let ev = q.pop().expect("peeked event is still there");
+                if ev.req == REQ_RELEASE {
+                    // A finished request frees its account slot; the
+                    // arbitration policy picks who gets it.
+                    cap.release(ev.tenant as usize);
+                    while let Some((wt, w)) = cap.grant() {
+                        lanes[wt].cap_waits.push((ev.at - w.ready).max(0.0));
+                        lanes[wt].start_request(q, w.slot, ev.at);
+                    }
+                } else {
+                    lanes[ti].dispatch(q, ev.req as usize, ev.at);
+                }
+            }
+            KIND_BOUNDARY => lanes[ti].on_boundary(&mut sims[ti]),
+            _ => lanes[ti].on_arrival(&mut sims[ti], q, cap),
+        }
+    }
+    lanes
+        .iter_mut()
+        .zip(sims.iter_mut())
+        .map(|(lane, sim)| lane.finish(sim))
+        .collect()
+}
+
 impl EpochSimulator<'_> {
     /// The event-driven engine behind [`EpochSimulator::run_with_policy`]
-    /// (see the module docs). `pipeline: false` reproduces the legacy loop;
-    /// `pipeline: true` chains each request's layers through the event heap.
+    /// (see the module docs): one uncapped lane driven to completion.
+    /// `pipeline: false` reproduces the legacy loop; `pipeline: true`
+    /// chains each request's layers through the event heap.
     pub(crate) fn run_event(
         &mut self,
-        mut policy: DeploymentPolicy,
+        policy: DeploymentPolicy,
         traffic: &[TimedBatch],
         pipeline: bool,
     ) -> SimReport {
-        let platform = self.platform;
-        let spec = self.spec;
-        let gate = self.gate;
-        let num_layers = spec.num_moe_layers();
-        debug_assert_eq!(policy.layers.len(), num_layers);
-
-        // Arena stride: the autoscaler caps at cfg.max_replicas, but a
-        // hand-built initial policy may exceed it.
-        let policy_g = policy
-            .layers
-            .iter()
-            .flat_map(|l| l.experts.iter().map(|e| e.replicas))
-            .max()
-            .unwrap_or(1);
-        let mut arena = SlotArena::new(
-            spec,
-            self.cfg.max_replicas.max(policy_g),
-            self.cfg.keep_alive,
-            self.cfg.concurrency,
-        );
-        if self.cfg.prewarm {
-            arena.prewarm_plan(&policy.layers);
-        }
-        let exact = self.cfg.metrics == MetricsMode::Exact;
-        let mut eng = EventEngine {
-            platform,
-            spec,
-            num_layers,
-            arena,
-            autoscaler: Autoscaler::new(self.cfg.autoscale, self.cfg.max_replicas),
-            scratch: policy.layers.clone(),
-            heap: BinaryHeap::new(),
-            inflight: Vec::new(),
-            free: Vec::new(),
-            seq: 0,
-            pending: Vec::new(),
-            bufs: DispatchBufs::default(),
-            metrics: Metrics::new(exact, traffic.len()),
-            total_cost: 0.0,
-            violation_batches: 0,
-            last_finish: 0.0,
-            blocked_until: 0.0,
-        };
-        let mut counts_buf: Vec<Vec<u64>> = Vec::new();
-
-        // Popularity the current deployment was sized for, vs realized EMA.
-        let plan_counts: Vec<Vec<u64>> = policy
-            .layers
-            .iter()
-            .map(|l| l.experts.iter().map(|ep| ep.tokens).collect())
-            .collect();
-        let mut basis = fractions(&plan_counts);
-        let mut ema = basis.clone();
-
-        let mut tokens = 0u64;
-        let mut redeploys = 0u64;
-        let mut epochs = 0u64;
-        let mut redeploy_ready = 0.0f64;
-        let mut next_epoch = self.cfg.epoch_secs;
-        let mut last_batch: Option<&Batch> = None;
-
-        for (ri, tb) in traffic.iter().enumerate() {
-            let t = tb.at;
-
-            // ---- epoch boundaries crossed since the previous arrival ----
-            while t >= next_epoch {
-                let boundary = next_epoch;
-                // In-flight work due before the boundary lands on the
-                // pre-boundary deployment generation.
-                eng.drain_until(boundary);
-                epochs += 1;
-                let changed = self.epoch_boundary(
-                    boundary,
-                    &mut policy,
-                    &mut eng.arena,
-                    &mut eng.autoscaler,
-                    last_batch,
-                    &mut basis,
-                    &mut ema,
-                    &mut eng.total_cost,
-                    &mut redeploy_ready,
-                    &mut redeploys,
-                );
-                if changed {
-                    eng.scratch.clone_from(&policy.layers);
-                }
-                // A redeploy blocks all serving for the gap — including the
-                // remaining layers of requests already in flight.
-                eng.blocked_until = redeploy_ready;
-                next_epoch += self.cfg.epoch_secs;
-            }
-            eng.drain_until(t);
-
-            // ---- admit the request ----
-            let ready = t.max(redeploy_ready);
-            self.router.counts_into(gate, &tb.batch, &mut counts_buf);
-            tokens += tb.batch.total_tokens as u64;
-
-            if self.cfg.reoptimize {
-                // Online feedback: realized routing → table + EMA, absorbed
-                // through the same routing memo serving uses. Skipped
-                // entirely when re-optimization is off — nothing downstream
-                // reads it and the report is unaffected.
-                absorb_batch(&mut self.predictor.table, gate, &mut self.router, &tb.batch);
-                let frac = fractions(&counts_buf);
-                let alpha = self.cfg.ema_alpha;
-                for (el, fl) in ema.iter_mut().zip(&frac) {
-                    for (e, &f) in el.iter_mut().zip(fl) {
-                        *e = (1.0 - alpha) * *e + alpha * f;
-                    }
-                }
-            }
-            last_batch = Some(&tb.batch);
-
-            if pipeline {
-                eng.admit_request(ri, t, ready, &mut counts_buf);
-            } else {
-                eng.serve_monolithic(ri, t, ready, &counts_buf);
-            }
-        }
-        // Drain every remaining in-flight layer event.
-        eng.drain_until(f64::INFINITY);
-
-        // ---- report ----
-        let requests = traffic.len() as u64;
-        let mut report =
-            eng.metrics
-                .build_report(requests, tokens, eng.last_finish, eng.total_cost);
-        report.epochs = epochs;
-        report.redeploys = redeploys;
-        report.warm_invocations = eng.arena.warm_hits;
-        report.cold_invocations = eng.arena.cold_starts;
-        report.violation_batches = eng.violation_batches;
-        report.queued_invocations = eng.arena.queued_jobs;
-        report.busy_secs = eng.arena.total_busy_secs();
-        report.max_utilization = eng.arena.max_utilization(eng.last_finish);
-        report.scale_outs = eng.autoscaler.scale_outs;
-        report.scale_ins = eng.autoscaler.scale_ins;
-        self.autoscale_events = eng.autoscaler.events.clone();
-        self.last_policy = Some(policy);
-        self.last_latencies = std::mem::take(&mut eng.metrics.latencies);
-        report
+        let mut q = EventQueue::new();
+        let mut cap = AccountCap::unbounded(1);
+        let mut lanes = [EventLane::new(self, policy, traffic, pipeline, 0, false)];
+        drive(std::slice::from_mut(self), &mut lanes, &mut q, &mut cap)
+            .pop()
+            .expect("one lane yields one report")
     }
 }
 
@@ -898,12 +1260,74 @@ mod tests {
     }
 
     #[test]
-    fn event_order_is_time_then_seq() {
+    fn event_order_is_time_then_tenant_then_seq() {
         let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-        heap.push(Reverse(Ev { at: 2.0, seq: 0, req: 0 }));
-        heap.push(Reverse(Ev { at: 1.0, seq: 2, req: 1 }));
-        heap.push(Reverse(Ev { at: 1.0, seq: 1, req: 2 }));
+        heap.push(Reverse(Ev { at: 2.0, tenant: 0, seq: 0, req: 0 }));
+        heap.push(Reverse(Ev { at: 1.0, tenant: 1, seq: 1, req: 1 }));
+        heap.push(Reverse(Ev { at: 1.0, tenant: 0, seq: 3, req: 2 }));
+        heap.push(Reverse(Ev { at: 1.0, tenant: 0, seq: 2, req: 3 }));
         let order: Vec<u32> = std::iter::from_fn(|| heap.pop().map(|Reverse(e)| e.req)).collect();
-        assert_eq!(order, vec![2, 1, 0]);
+        // Time first, then tenant index, then FIFO within the tenant.
+        assert_eq!(order, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn account_cap_fifo_and_release_grant_cycle() {
+        let mut cap = AccountCap::new(Some(2), FleetArbitration::Fifo, &[1.0, 1.0]);
+        assert!(cap.enabled());
+        assert!(cap.try_acquire(0));
+        assert!(cap.try_acquire(1));
+        assert_eq!(cap.in_use(), 2);
+        // Full: arrivals park instead of acquiring.
+        assert!(!cap.try_acquire(0));
+        cap.park(0, 7, 3.0);
+        cap.park(1, 8, 3.5);
+        // Nothing free yet: no grant.
+        assert!(cap.grant().is_none());
+        // One release → the earliest-parked waiter (tenant 0) is granted.
+        cap.release(1);
+        let (t, w) = cap.grant().expect("a slot freed with waiters parked");
+        assert_eq!((t, w.slot, w.ready), (0, 7, 3.0));
+        assert!(cap.grant().is_none(), "ledger full again");
+        cap.release(0);
+        let (t, w) = cap.grant().expect("second waiter granted");
+        assert_eq!((t, w.slot), (1, 8));
+        assert_eq!(cap.in_use(), 2);
+    }
+
+    #[test]
+    fn account_cap_weighted_fair_prefers_underweighted_tenant() {
+        let mut cap = AccountCap::new(Some(3), FleetArbitration::WeightedFair, &[2.0, 1.0]);
+        // Tenant 0 holds two slots, tenant 1 one: in_use/weight = 1.0 each.
+        assert!(cap.try_acquire(0));
+        assert!(cap.try_acquire(0));
+        assert!(cap.try_acquire(1));
+        // Both tenants have waiters.
+        cap.park(1, 5, 1.0);
+        cap.park(0, 6, 2.0);
+        cap.release(1);
+        // Keys: tenant 0 = 2/2 = 1.0, tenant 1 = 0/1 = 0.0 → tenant 1 wins.
+        let (t, _) = cap.grant().expect("grant");
+        assert_eq!(t, 1);
+        // Tenant 1 parks again, tenant 0 releases one slot.
+        cap.park(1, 9, 3.0);
+        cap.release(0);
+        // Keys: tenant 0 = 1/2 = 0.5, tenant 1 = 1/1 = 1.0 → tenant 0 wins
+        // even though tenant 1's waiter parked first (weighted, not FIFO).
+        let (t, w) = cap.grant().expect("grant");
+        assert_eq!((t, w.slot), (0, 6));
+    }
+
+    #[test]
+    fn unbounded_cap_is_inert() {
+        let mut cap = AccountCap::unbounded(3);
+        assert!(!cap.enabled());
+        for tenant in 0..3 {
+            for _ in 0..100 {
+                assert!(cap.try_acquire(tenant));
+            }
+        }
+        assert_eq!(cap.in_use(), 0, "no bookkeeping without a cap");
+        assert!(cap.grant().is_none());
     }
 }

@@ -1,0 +1,356 @@
+//! Multi-tenant fleet integration tests:
+//!
+//!  - **reproduction pin**: with one tenant and no account cap, the fleet
+//!    engine reproduces `Scenario::run()` — byte-identically on the
+//!    solver-free committed reference scenario, and within 1e-9 + exact
+//!    integer counters on the ODS-bearing drift reference (its solves are
+//!    wall-clock *limited*, so byte identity cannot be promised even for
+//!    two `Scenario::run()` calls against each other — the same policy the
+//!    golden fixtures use). This extends the PR 1→4 cross-validation
+//!    chain: flat pipeline → legacy loop → event engine → fleet driver.
+//!  - **shared-beats-isolated claim**: two tenants with anti-correlated
+//!    MMPP bursts behind a shared account cap are served at strictly lower
+//!    total billed cost and equal-or-lower p95 than the isolation baseline
+//!    (each tenant alone on its weighted cap share). The construction is
+//!    self-calibrating: it measures the tenant's all-warm request latency
+//!    L, drives the burst at 3 requests per L (saturating the isolated
+//!    share hard and the shared pool mildly), and picks a keep-alive
+//!    between the shared pool's per-instance revisit gap (~L/2) and the
+//!    isolated share's (~L), so cap-serialization pushes the isolated
+//!    run's invocations past keep-alive into billed cold starts while the
+//!    shared pool's stay warm. Everything on the path is closed-form
+//!    (LambdaML deployments, no solver), so the outcome is deterministic.
+
+use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
+use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
+use serverless_moe::traffic::trace::{Trace, TraceRequest};
+use serverless_moe::traffic::{
+    ArrivalGen, ArrivalProcess, FleetArbitration, FleetReport, TrafficConfig,
+};
+use std::path::{Path, PathBuf};
+
+fn scenario_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/scenarios")
+        .join(name)
+}
+
+fn single_tenant_fleet(s: Scenario) -> FleetScenario {
+    FleetScenario {
+        name: format!("pin-{}", s.name),
+        account_cap: None,
+        arbitration: FleetArbitration::Fifo,
+        tenants: vec![TenantSpec::inline("only", s)],
+    }
+}
+
+// --------------------------------------------------------- reproduction pin
+
+/// Solver-free committed scenario: the fleet engine with one tenant and no
+/// cap must reproduce `Scenario::run()` byte-for-byte — report, cost
+/// timeline, and artifacts.
+#[test]
+fn single_tenant_uncapped_fleet_is_byte_identical_to_scenario_run() {
+    let s = Scenario::load(&scenario_path("tiny_trace_lambdaml.json")).expect("scenario loads");
+    let solo = s.run().expect("scenario runs");
+    let fleet = single_tenant_fleet(s).run().expect("fleet runs");
+
+    assert_eq!(fleet.report.tenants.len(), 1);
+    let tenant = &fleet.report.tenants[0];
+    assert_eq!(
+        tenant.report.to_json().to_string_pretty(),
+        solo.report.to_json().to_string_pretty(),
+        "fleet-of-one must reproduce the standalone report byte-for-byte"
+    );
+    // PartialEq covers what the JSON omits (the cost timeline), exactly.
+    assert_eq!(tenant.report, solo.report);
+    assert_eq!(tenant.capped_requests, 0, "no cap, no parking");
+    assert_eq!(tenant.mean_cap_delay, 0.0);
+    assert_eq!(fleet.report.total_cost, solo.report.total_cost);
+    assert_eq!(fleet.report.capped_requests, 0);
+    assert_eq!(fleet.report.fairness, 1.0, "one tenant is trivially fair");
+
+    // Artifacts mirror the standalone run too.
+    let fa = &fleet.artifacts[0];
+    assert_eq!(fa.latencies, solo.artifacts.latencies);
+    assert_eq!(fa.redeploy_times, solo.artifacts.redeploy_times);
+    assert_eq!(fa.autoscale_events, solo.artifacts.autoscale_events);
+    assert_eq!(fa.policy_history.len(), solo.artifacts.policy_history.len());
+    assert!(fa.final_policy.is_some());
+}
+
+/// The ODS-bearing drift reference: 1e-9 relative on the float aggregates,
+/// exact on every integer counter (the wall-clock-limited solver precludes
+/// a byte pin — same tolerance policy as `drift_scenario_roundtrip_*`).
+#[test]
+fn single_tenant_uncapped_fleet_reproduces_drift_reference() {
+    let s = Scenario::load(&scenario_path("drift_bert_quick.json")).expect("scenario loads");
+    let solo = s.run().expect("scenario runs").report;
+    let fleet = single_tenant_fleet(s).run().expect("fleet runs");
+    let t = &fleet.report.tenants[0].report;
+    if let Err(e) = t.close_to(&solo, 1e-9) {
+        panic!("fleet-of-one drifted from Scenario::run on the drift reference: {e}");
+    }
+    assert_eq!(t.requests, solo.requests);
+    assert_eq!(t.epochs, solo.epochs);
+    assert_eq!(t.redeploys, solo.redeploys);
+    assert_eq!(t.warm_invocations, solo.warm_invocations);
+    assert_eq!(t.cold_invocations, solo.cold_invocations);
+    assert_eq!(t.queued_invocations, solo.queued_invocations);
+    assert_eq!(t.violation_batches, solo.violation_batches);
+    assert_eq!(t.scale_outs, solo.scale_outs);
+    assert_eq!(t.scale_ins, solo.scale_ins);
+}
+
+// ------------------------------------------------- shared beats isolated
+
+/// A claim tenant: tiny model, LambdaML deployment (closed-form — nothing
+/// wall-clock-bound anywhere), bursty two-state MMPP.
+fn claim_tenant(
+    name: &str,
+    seed: u64,
+    process: ArrivalProcess,
+    duration: f64,
+    keep_alive: f64,
+) -> TenantSpec {
+    let scenario = Scenario::builder(name)
+        .model("tiny")
+        .expect("tiny preset exists")
+        .seed(seed)
+        .profile(2, 128)
+        .traffic(TrafficSource::Synthetic {
+            process,
+            duration: Some(duration),
+            requests: None,
+            tokens_per_request: 256,
+        })
+        .config(TrafficConfig {
+            reoptimize: false,
+            prewarm: false,
+            keep_alive,
+            epoch_secs: f64::INFINITY,
+            ..TrafficConfig::default()
+        })
+        .baseline(Baseline::LambdaML)
+        .build()
+        .expect("claim tenant is valid by construction");
+    TenantSpec {
+        name: name.to_string(),
+        weight: 1.0,
+        slo_p95: None,
+        source: TenantSource::Inline(scenario),
+    }
+}
+
+fn count_in(arrivals: &[f64], from: f64, to: f64) -> usize {
+    arrivals.iter().filter(|&&t| t >= from && t < to).count()
+}
+
+/// MMPP holding times are exponential draws, so whether the realized
+/// streams are cleanly anti-correlated depends on the seed. Rather than
+/// hope, search (deterministically) for a scenario seed whose realized
+/// arrivals satisfy the wanted burst/quiet structure — reproducing the
+/// exact arrival stream the scenario will serve (`Scenario::materialize`
+/// seeds its `ArrivalGen` with `seed ^ 0x22`).
+fn pick_seed(
+    process: ArrivalProcess,
+    duration: f64,
+    ok: impl Fn(&[f64]) -> bool,
+) -> u64 {
+    for seed in 0..10_000u64 {
+        let arrivals = ArrivalGen::new(process, seed ^ 0x22).arrivals_until(duration);
+        if ok(&arrivals) {
+            return seed;
+        }
+    }
+    panic!("no seed in 0..10000 produced the wanted burst structure");
+}
+
+/// All-warm request latency of the claim tenant's deployment, measured by
+/// serving one inline-trace request on a pre-warmed, never-expiring pool.
+fn calibrate_request_latency() -> f64 {
+    let solo = Scenario::builder("calibrate")
+        .model("tiny")
+        .expect("tiny preset exists")
+        .seed(0xCA11)
+        .profile(2, 128)
+        .traffic(TrafficSource::Inline {
+            trace: Trace {
+                requests: vec![TraceRequest { time: 0.0, tokens: 256, seed: 1 }],
+            },
+        })
+        .config(TrafficConfig {
+            reoptimize: false,
+            prewarm: true,
+            keep_alive: f64::INFINITY,
+            epoch_secs: f64::INFINITY,
+            ..TrafficConfig::default()
+        })
+        .baseline(Baseline::LambdaML)
+        .build()
+        .expect("calibration scenario is valid")
+        .run()
+        .expect("calibration scenario runs");
+    let l = solo.report.mean_latency;
+    assert!(l.is_finite() && l > 0.0, "degenerate calibration latency {l}");
+    l
+}
+
+/// The two anti-correlated claim processes and seeds whose *realized*
+/// streams burst cleanly apart: `early` bursts inside `[0, 15L]` and is
+/// silent from `18L` on; `late` is silent before `18L` and bursts after.
+/// Burst rate is 3 requests per request-latency: the isolated share
+/// (cap 1, capacity 1/L) saturates 3x over, the shared pool (cap 2 while
+/// the other tenant is quiet, capacity 2/L) 1.5x. Both backlog, but the
+/// isolated share serializes request starts ~L apart where the shared pool
+/// keeps them ~L/2 apart — a keep-alive window between those per-instance
+/// revisit gaps turns isolation into billed cold starts.
+fn claim_processes(l: f64) -> (ArrivalProcess, u64, ArrivalProcess, u64, f64) {
+    let burst = 3.0 / l;
+    let quiet = 1e-3;
+    let duration = 45.0 * l;
+    let early = ArrivalProcess::Mmpp {
+        rate0: burst,
+        rate1: quiet,
+        hold0: 12.0 * l,
+        hold1: 1000.0 * l,
+    };
+    let late = ArrivalProcess::Mmpp {
+        rate0: quiet,
+        rate1: burst,
+        hold0: 25.0 * l,
+        hold1: 1000.0 * l,
+    };
+    let early_seed = pick_seed(early, duration, |a| {
+        count_in(a, 0.0, 15.0 * l) >= 25 && count_in(a, 18.0 * l, duration) <= 1
+    });
+    let late_seed = pick_seed(late, duration, |a| {
+        count_in(a, 0.0, 18.0 * l) <= 1 && count_in(a, 18.0 * l, duration) >= 25
+    });
+    (early, early_seed, late, late_seed, duration)
+}
+
+fn claim_fleet(l: f64, keep_alive: f64) -> FleetScenario {
+    let (early, early_seed, late, late_seed, duration) = claim_processes(l);
+    FleetScenario {
+        name: "claim-fleet".to_string(),
+        account_cap: Some(2),
+        arbitration: FleetArbitration::WeightedFair,
+        tenants: vec![
+            claim_tenant("early", early_seed, early, duration, keep_alive),
+            claim_tenant("late", late_seed, late, duration, keep_alive),
+        ],
+    }
+}
+
+fn total_colds(r: &FleetReport) -> u64 {
+    r.tenants.iter().map(|t| t.report.cold_invocations).sum()
+}
+
+/// The payoff claim of the fleet layer: under anti-correlated bursts, the
+/// shared account pool serves the same two tenants at strictly lower total
+/// billed cost and equal-or-lower p95 than isolated per-tenant cap shares.
+/// The keep-alive is swept over fractions of the measured request latency;
+/// the claim must hold at some sweep point (the mechanism — isolation's
+/// wider per-instance revisit gaps crossing keep-alive — is additionally
+/// pinned via the cold-start counters), and the sweep itself documents the
+/// sensitivity of the win to the keep-alive window.
+#[test]
+fn shared_pool_beats_isolated_shares_under_anticorrelated_bursts() {
+    let l = calibrate_request_latency();
+    let mut wins = Vec::new();
+    let mut diagnostics = Vec::new();
+    for frac in [0.75, 0.6, 0.45, 0.3] {
+        let fleet = claim_fleet(l, frac * l);
+        let shared = fleet.run().expect("shared fleet runs").report;
+        let isolated = fleet.run_isolated().expect("isolated baseline runs").report;
+
+        // The cap must actually bind in the shared run, or the comparison
+        // is vacuous.
+        assert!(
+            shared.capped_requests > 0,
+            "account cap never bound at keep_alive {frac}L — burst not saturating?"
+        );
+        let cost_win = shared.total_cost < isolated.total_cost;
+        let p95_win = shared.max_p95() <= isolated.max_p95();
+        let cold_win = total_colds(&shared) < total_colds(&isolated);
+        diagnostics.push(format!(
+            "k={frac}L: cost {:.6} vs {:.6}, p95 {:.3} vs {:.3}, colds {} vs {}",
+            shared.total_cost,
+            isolated.total_cost,
+            shared.max_p95(),
+            isolated.max_p95(),
+            total_colds(&shared),
+            total_colds(&isolated),
+        ));
+        if cost_win && p95_win && cold_win {
+            wins.push((frac, shared, isolated));
+        }
+    }
+    assert!(
+        !wins.is_empty(),
+        "shared pool never beat isolated shares across the keep-alive sweep:\n{}",
+        diagnostics.join("\n")
+    );
+    // At the winning point the mechanism is exactly the advertised one:
+    // fewer cold starts (strictly), strictly lower billed cost, and no p95
+    // regression — with sane fleet-report plumbing around it.
+    let (frac, shared, isolated) = &wins[0];
+    assert!(
+        shared.total_cost < isolated.total_cost,
+        "k={frac}L: shared {} vs isolated {}",
+        shared.total_cost,
+        isolated.total_cost
+    );
+    assert!(shared.max_p95() <= isolated.max_p95());
+    assert!(shared.fairness > 0.0 && shared.fairness <= 1.0 + 1e-12);
+    assert_eq!(
+        shared.tenants.iter().map(|t| t.report.requests).sum::<u64>(),
+        isolated.tenants.iter().map(|t| t.report.requests).sum::<u64>(),
+        "both pools must serve the identical fleet"
+    );
+    // Determinism: the winning configuration reproduces itself exactly.
+    let again = claim_fleet(l, frac * l).run().expect("re-run").report;
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        shared.to_json().to_string_pretty(),
+        "fleet runs must be deterministic"
+    );
+}
+
+// ------------------------------------------------------ committed fixture
+
+/// The committed two-tenant fleet file: strict load, canonical round-trip,
+/// and a full shared-pool run with per-tenant SLO wiring intact.
+#[test]
+fn committed_fleet_scenario_loads_roundtrips_and_runs() {
+    let fleet =
+        FleetScenario::load(&scenario_path("fleet_two_tenant.json")).unwrap_or_else(|e| {
+            panic!("committed fleet scenario must load: {e}");
+        });
+    let text = fleet.to_json().to_string_pretty();
+    let back = serverless_moe::traffic::fleet::FleetScenario::from_json(
+        &serverless_moe::util::json::Json::parse(&text).expect("canonical JSON parses"),
+    )
+    .expect("canonical form re-parses");
+    assert_eq!(
+        back.to_json().to_string_pretty(),
+        text,
+        "fleet serialization must be a fixed point"
+    );
+
+    let outcome = fleet.run().expect("committed fleet runs");
+    let r = &outcome.report;
+    assert_eq!(r.tenants.len(), 2);
+    assert_eq!(r.account_cap, Some(2));
+    assert!(r.total_cost > 0.0);
+    assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+    let chat = r.tenant("chat").expect("chat tenant reported");
+    assert_eq!(chat.slo_p95, Some(60.0));
+    assert!(chat.report.requests > 0);
+    assert_eq!(outcome.artifacts.len(), 2);
+    for (art, tr) in outcome.artifacts.iter().zip(&r.tenants) {
+        assert_eq!(art.latencies.len() as u64, tr.report.requests);
+        assert!(art.final_policy.is_some());
+    }
+}

@@ -207,6 +207,94 @@ fn invalid_values_are_rejected_with_typed_errors() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ------------------------------------------------------- fleet scenarios
+
+/// Strict-parse rejection matrix for the fleet schema: unknown fields at
+/// both the fleet and tenant level, zero/negative weights, duplicate and
+/// empty tenant names, empty fleets, bad arbitration/cap encodings, and
+/// fleet-ineligible tenant scenarios (legacy engine, cpu-cluster baseline).
+#[test]
+fn fleet_unknown_fields_and_invalid_values_rejected() {
+    use serverless_moe::traffic::fleet::FleetScenario;
+    let tenant = |extra: &str| {
+        format!(
+            r#"{{"name": "a", "weight": 1.0{extra}, "scenario": {{"name": "t", "model": "tiny"}}}}"#
+        )
+    };
+    let fleet = |tenants: &str| format!(r#"{{"name": "f", "account_cap": 2, "tenants": [{tenants}]}}"#);
+
+    let unknown_fields = [
+        // Fleet-level typo.
+        format!(r#"{{"name": "f", "cap": 2, "tenants": [{}]}}"#, tenant("")),
+        // Tenant-level typo.
+        fleet(&tenant(r#", "wieght": 2.0"#)),
+        // Typo inside an inline tenant scenario (strictness recurses).
+        fleet(r#"{"name": "a", "scenario": {"name": "t", "modle": "tiny"}}"#),
+    ];
+    for case in &unknown_fields {
+        let err = FleetScenario::from_json(&Json::parse(case).unwrap())
+            .expect_err(&format!("must reject: {case}"));
+        assert!(
+            matches!(err, ScenarioError::UnknownField { .. }),
+            "{case}: expected UnknownField, got {err:?}"
+        );
+    }
+
+    let invalid = [
+        // Zero and negative tenant weight.
+        fleet(r#"{"name": "a", "weight": 0.0, "scenario": {"name": "t", "model": "tiny"}}"#),
+        fleet(r#"{"name": "a", "weight": -1.5, "scenario": {"name": "t", "model": "tiny"}}"#),
+        // Duplicate tenant name.
+        fleet(&format!("{}, {}", tenant(""), tenant(""))),
+        // Empty tenant name and empty tenant list.
+        fleet(r#"{"name": "", "scenario": {"name": "t", "model": "tiny"}}"#),
+        fleet(""),
+        // Non-positive SLO.
+        fleet(r#"{"name": "a", "slo_p95": 0.0, "scenario": {"name": "t", "model": "tiny"}}"#),
+        // Legacy engine cannot join a fleet; nor can the cpu-cluster baseline.
+        fleet(
+            r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "config": {"engine": {"kind": "legacy"}}}}"#,
+        ),
+        fleet(r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "baseline": "cpu-cluster"}}"#),
+        // Unsupported version.
+        format!(r#"{{"name": "f", "version": 2, "tenants": [{}]}}"#, tenant("")),
+    ];
+    for case in &invalid {
+        let err = FleetScenario::from_json(&Json::parse(case).unwrap())
+            .expect_err(&format!("must reject: {case}"));
+        assert!(
+            matches!(err, ScenarioError::Invalid { .. }),
+            "{case}: expected Invalid, got {err:?}"
+        );
+    }
+
+    // Unknown arbitration name is a typed UnknownName.
+    let bad_arb = format!(
+        r#"{{"name": "f", "arbitration": "round-robin", "tenants": [{}]}}"#,
+        tenant("")
+    );
+    assert!(matches!(
+        FleetScenario::from_json(&Json::parse(&bad_arb).unwrap()),
+        Err(ScenarioError::UnknownName { .. })
+    ));
+
+    // Missing tenants section is a typed MissingField.
+    assert!(matches!(
+        FleetScenario::from_json(&Json::parse(r#"{"name": "f"}"#).unwrap()),
+        Err(ScenarioError::MissingField { .. })
+    ));
+
+    // And the happy path still parses: cap 0 decodes as unbounded, the
+    // arbitration default is weighted-fair.
+    let ok = format!(r#"{{"name": "f", "account_cap": 0, "tenants": [{}]}}"#, tenant(""));
+    let parsed = FleetScenario::from_json(&Json::parse(&ok).unwrap()).expect("valid fleet parses");
+    assert_eq!(parsed.account_cap, None);
+    assert_eq!(
+        parsed.arbitration,
+        serverless_moe::traffic::FleetArbitration::WeightedFair
+    );
+}
+
 // ----------------------------------------------------------- run artifacts
 
 /// The façade exposes everything callers previously dug out of

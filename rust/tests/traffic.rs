@@ -37,12 +37,13 @@ use serverless_moe::predictor::eval::real_counts;
 use serverless_moe::predictor::profile::profile_batches;
 use serverless_moe::predictor::BayesPredictor;
 use serverless_moe::gating::TokenFeature;
+use serverless_moe::traffic::epoch::EpochSimulator;
 use serverless_moe::traffic::scenario::{
     drift_scenario, scenario_config, scenario_config_queued, Baseline, Scenario, TrafficSource,
 };
 use serverless_moe::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, EpochSimulator, MetricsMode, SimEngine,
-    SimReport, Trace, TrafficConfig,
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, MetricsMode, SimEngine, SimReport, Trace,
+    TrafficConfig,
 };
 use serverless_moe::util::check::{ensure, forall, forall_default, Config};
 use serverless_moe::util::json::Json;
