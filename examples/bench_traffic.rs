@@ -22,6 +22,7 @@
 //! Run:
 //!   cargo run --release --example bench_traffic
 //!   cargo run --release --example bench_traffic -- --requests 20000
+//!   cargo run --release --example bench_traffic -- --fleet 1000 --budget-secs 300
 //!
 //! Options:
 //!   --requests N   trace length                    (default 1,000,000)
@@ -29,13 +30,25 @@
 //!   --tokens T     target tokens per request       (default 64)
 //!   --seed S       trace RNG seed                  (default 0xBE7C4)
 //!   --out PATH     output JSON                     (default BENCH_traffic.json)
+//!
+//! Fleet mode (`--fleet N` switches the bench to the multi-tenant driver):
+//!   --fleet N        serve N same-preset tenants jointly — shared expert
+//!                    pool, execution-granular account cap 64, weighted-fair
+//!                    arbitration — end-to-end through FleetScenario::run
+//!   --requests R     requests per tenant in fleet mode      (default 3)
+//!   --budget-secs S  fail if the whole fleet run (including per-tenant
+//!                    profiling) exceeds S wall-clock seconds; 0 disables
+//!                    (default 0); output goes to --out (default
+//!                    BENCH_fleet.json in fleet mode)
 
 use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
 use serverless_moe::config::workload::CorpusPreset;
 use serverless_moe::deploy::DeploymentPolicy;
-use serverless_moe::traffic::scenario::{Scenario, TrafficSource};
+use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
+use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::{
-    ArrivalProcess, AutoscalePolicy, MetricsMode, SimEngine, SimReport, TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, CapGranularity, FleetArbitration, MetricsMode, SimEngine,
+    SimReport, TrafficConfig,
 };
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::json::Json;
@@ -88,9 +101,107 @@ impl RunResult {
     }
 }
 
+/// Fleet-scale smoke bench: N identical-preset tenants served jointly by the
+/// candidate-heap driver behind one execution-granular account cap, with the
+/// warm replica pool shared across the whole fleet. Measures the end-to-end
+/// wall clock of `FleetScenario::run` (tenant profiling included) and
+/// optionally enforces a budget — the CI guardrail that thousand-tenant
+/// fleets stay cheap.
+fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
+    let per_tenant = args.get_usize("requests", 3);
+    let budget = args.get_f64("budget-secs", 0.0);
+    let out = args.get_or("out", "BENCH_fleet.json");
+
+    eprintln!("building {tenants_n}-tenant fleet ({per_tenant} requests each) ...");
+    let tenants = (0..tenants_n)
+        .map(|i| {
+            let name = format!("t{i:04}");
+            let scenario = Scenario::builder(&name)
+                .model("tiny")?
+                .seed(0x10_000 + i as u64)
+                .profile(2, 64)
+                .traffic(TrafficSource::Synthetic {
+                    process: ArrivalProcess::Poisson { rate: 1.0 },
+                    duration: None,
+                    requests: Some(per_tenant),
+                    tokens_per_request: 64,
+                })
+                .config(TrafficConfig {
+                    reoptimize: false,
+                    prewarm: false,
+                    epoch_secs: f64::INFINITY,
+                    ..TrafficConfig::default()
+                })
+                .baseline(Baseline::LambdaML)
+                .build()?;
+            Ok(TenantSpec {
+                name,
+                weight: 1.0 + (i % 4) as f64,
+                slo_p95: None,
+                source: TenantSource::Inline(scenario),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let fleet = FleetScenario {
+        name: format!("bench-fleet-{tenants_n}"),
+        account_cap: Some(64),
+        arbitration: FleetArbitration::WeightedFair,
+        cap_granularity: CapGranularity::Execution,
+        share_experts: true,
+        slo_feedback: false,
+        tenants,
+    };
+
+    let t = Instant::now();
+    let outcome = fleet.run()?;
+    let wall_secs = t.elapsed().as_secs_f64();
+    let r = &outcome.report;
+    let total_requests: u64 = r.tenants.iter().map(|tr| tr.report.requests).sum();
+    let (_, vm_hwm_mb) = rss_mb();
+    println!(
+        "fleet bench: {tenants_n} tenants, {total_requests} requests in {wall_secs:.2}s \
+         ({:.0} req/s), cost {:.4}, fairness {:.3}, capped {}, VmHWM {vm_hwm_mb:.0} MB",
+        total_requests as f64 / wall_secs.max(1e-9),
+        r.total_cost,
+        r.fairness,
+        r.capped_requests,
+    );
+
+    let j = Json::from_pairs(vec![
+        ("tenants", Json::num(tenants_n as f64)),
+        ("requests_per_tenant", Json::num(per_tenant as f64)),
+        ("requests", Json::num(total_requests as f64)),
+        ("wall_secs", Json::num(wall_secs)),
+        ("requests_per_sec", Json::num(total_requests as f64 / wall_secs.max(1e-9))),
+        ("total_cost", Json::num(r.total_cost)),
+        ("fairness", Json::num(r.fairness)),
+        ("capped_requests", Json::num(r.capped_requests as f64)),
+        ("vm_hwm_mb", Json::num(vm_hwm_mb)),
+        ("budget_secs", Json::num(budget)),
+    ]);
+    j.write_file(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    anyhow::ensure!(
+        total_requests as usize == tenants_n * per_tenant,
+        "fleet dropped requests: served {total_requests}, expected {}",
+        tenants_n * per_tenant
+    );
+    if budget > 0.0 {
+        anyhow::ensure!(
+            wall_secs <= budget,
+            "fleet bench blew its wall-clock budget: {wall_secs:.1}s > {budget:.1}s"
+        );
+        println!("within wall-clock budget: {wall_secs:.1}s <= {budget:.1}s");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     serverless_moe::util::log::init_from_env();
     let args = Args::from_env();
+    if let Some(fleet) = args.get("fleet") {
+        return bench_fleet(&args, fleet.parse()?);
+    }
     let n = args.get_usize("requests", 1_000_000);
     let rate = args.get_f64("rate", 2.0);
     let target_tokens = args.get_usize("tokens", 64);

@@ -58,14 +58,17 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
 fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
     let fleet = FleetScenario::load(path)?;
     println!(
-        "fleet '{}': {} tenants, account cap {}, {} arbitration",
+        "fleet '{}': {} tenants, account cap {} ({}-granular slots), {} arbitration{}{}",
         fleet.name,
         fleet.tenants.len(),
         fleet
             .account_cap
             .map(|c| c.to_string())
             .unwrap_or_else(|| "unbounded".into()),
+        fleet.cap_granularity.name(),
         fleet.arbitration.name(),
+        if fleet.share_experts { ", shared expert pools" } else { "" },
+        if fleet.slo_feedback { ", SLO-feedback weights" } else { "" },
     );
     let shared = fleet.run()?.report;
     let isolated = fleet.run_isolated()?.report;
@@ -75,6 +78,7 @@ fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
         &[
             "tenant",
             "weight",
+            "eff weight",
             "requests",
             "billed cost",
             "p50",
@@ -89,6 +93,7 @@ fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
         t.row(vec![
             tr.name.clone(),
             fnum(tr.weight),
+            fnum(tr.effective_weight),
             tr.report.requests.to_string(),
             fcost(tr.report.total_cost),
             ftime(tr.report.p50_latency),

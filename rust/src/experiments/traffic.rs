@@ -15,8 +15,8 @@ use crate::model::ModelPreset;
 use crate::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use crate::traffic::scenario::{scenario_config, Baseline, Scenario, TrafficSource};
 use crate::traffic::{
-    ArrivalProcess, AutoscalePolicy, FleetArbitration, FleetReport, SimEngine, SimReport,
-    TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, CapGranularity, FleetArbitration, FleetReport, SimEngine,
+    SimReport, TrafficConfig,
 };
 use crate::util::table::{fcost, fnum, ftime, Table};
 
@@ -246,6 +246,11 @@ fn demo_fleet() -> FleetScenario {
         name: "demo-fleet".to_string(),
         account_cap: Some(2),
         arbitration: FleetArbitration::WeightedFair,
+        // The demo table narrates slot borrowing between whole requests, so
+        // it keeps the original request-granular accounting.
+        cap_granularity: CapGranularity::Request,
+        share_experts: false,
+        slo_feedback: false,
         tenants: vec![tenant("chat", 0xF1, true), tenant("batch", 0xF2, false)],
     }
 }

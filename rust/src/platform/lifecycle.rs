@@ -52,6 +52,11 @@ pub trait InstancePool {
     /// Mark one instance warm forever (a deploy-time warm-up invocation).
     fn prewarm(&mut self, key: ReplicaKey);
 
+    /// Register one more owner of `key` (cross-tenant expert sharing):
+    /// refcounted pools only release the warm environment when the last
+    /// owner evicts. Private pools (the default) ignore it.
+    fn retain(&mut self, _key: ReplicaKey) {}
+
     /// Pre-warm every replica of every expert in a deployment plan.
     fn prewarm_plan(&mut self, layers: &[LayerPlan]) {
         for (l, plan) in layers.iter().enumerate() {

@@ -168,10 +168,47 @@ pub enum FleetArbitration {
     Fifo,
     /// Weighted-fair: the waiting tenant with the least account capacity in
     /// use relative to its configured weight gets the next freed slot (ties
-    /// by tenant index; FIFO within a tenant). A bursting tenant can borrow
-    /// the whole idle cap, but never starves a lighter tenant past its
-    /// weighted share.
+    /// by earliest park — fleet-wide FIFO among the tied tenants; FIFO
+    /// within a tenant). A bursting tenant can borrow the whole idle cap,
+    /// but never starves a lighter tenant past its weighted share.
     WeightedFair,
+}
+
+/// What one account-cap ledger slot stands for (`traffic::fleet`'s
+/// `cap_granularity` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CapGranularity {
+    /// One slot per concurrent replica *execution*, held over that
+    /// execution's own busy window — AWS Lambda's accounting (the account
+    /// concurrency limit counts executions, so a request fanning out to 8
+    /// expert replicas occupies 8 slots). The default.
+    #[default]
+    Execution,
+    /// One slot per in-flight request, from first layer dispatch to request
+    /// completion — the pre-fix accounting, kept for the PR 5
+    /// shared-beats-isolated pin and for comparison studies.
+    Request,
+}
+
+impl CapGranularity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CapGranularity::Execution => "execution",
+            CapGranularity::Request => "request",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<CapGranularity, ScenarioError> {
+        match s {
+            "execution" => Ok(CapGranularity::Execution),
+            "request" => Ok(CapGranularity::Request),
+            other => Err(ScenarioError::UnknownName {
+                what: "cap granularity",
+                name: other.to_string(),
+                known: "execution | request",
+            }),
+        }
+    }
 }
 
 impl FleetArbitration {
@@ -312,6 +349,11 @@ impl Autoscaler {
                 if desired > g {
                     // Scale out: fresh instances join cold — their first
                     // invocation pays the cold start via the warm pool.
+                    // Refcounted (shared) pools track the new owner so a
+                    // co-tenant's later scale-in can't tear it down.
+                    for gg in g..desired {
+                        pool.retain((l, i, gg));
+                    }
                     self.events.push((now, (desired - g) as i64));
                     self.scale_outs += (desired - g) as u64;
                     ep.replicas = desired;

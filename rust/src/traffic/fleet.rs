@@ -12,16 +12,38 @@
 //! serves them **jointly**: every tenant runs as one event-engine lane
 //! (`traffic::sim::EventLane`) against a single globally-ordered event
 //! queue, with requests admitted through the shared
-//! [`AccountCap`](super::sim::AccountCap) ledger — one slot per in-flight
-//! request, freed at request completion, granted to parked requests per the
-//! [`FleetArbitration`] policy. Per-tenant machinery (deployment policies,
-//! epoch clocks, drift re-optimization, replica autoscaling) is untouched
-//! and runs *under* the fleet arbitration.
+//! [`AccountCap`](super::sim::AccountCap) ledger and granted to parked
+//! requests per the [`FleetArbitration`] policy. What one ledger slot
+//! stands for is the [`CapGranularity`] knob: per concurrent replica
+//! *execution* (AWS Lambda's accounting — the default) or per in-flight
+//! request (the pre-fix mode, kept for comparison studies). Per-tenant
+//! machinery (deployment policies, epoch clocks, drift re-optimization,
+//! replica autoscaling) is untouched and runs *under* the fleet
+//! arbitration.
+//!
+//! Two fleet-scale levers ride on top:
+//!
+//!  - **`share_experts`** — tenants serving the same model preset under
+//!    the same keep-alive/concurrency run against *one* warm replica pool
+//!    (per-instance owner refcounts in [`SlotArena`], so one tenant's
+//!    scale-in cannot cold-start another); billing stays attributed per
+//!    tenant by the busy-seconds each lane admitted. The cross-tenant
+//!    version of the paper's skew argument: interleaved tenants keep the
+//!    shared instances inside keep-alive where private pools would go
+//!    cold between each tenant's sparse revisits.
+//!  - **`slo_feedback`** — under `weighted-fair` arbitration each tenant's
+//!    grant weight adapts at its epoch boundaries from its realized p95
+//!    vs its declared SLO (multiplicative increase up to 8x the declared
+//!    weight on a miss, decay back to it on a met epoch); the weight each
+//!    tenant ended with is reported as `effective_weight`.
 //!
 //! Determinism: lanes interleave on the `(time, tenant, seq)` event order,
 //! so a fleet run is exactly reproducible; with a single tenant and no cap
 //! the fleet engine reproduces [`Scenario::run`] byte-for-byte (pinned by
-//! `rust/tests/fleet.rs`).
+//! `rust/tests/fleet.rs`). Step selection is the candidate heap of
+//! [`super::sim::drive`] — O(log tenants) per step, pinned byte-identical
+//! to the PR 5 linear-scan driver on every committed scenario, which keeps
+//! thousand-tenant fleets tractable.
 //!
 //! ```no_run
 //! use serverless_moe::traffic::fleet::FleetScenario;
@@ -38,14 +60,18 @@
 //! serves the same fleet at lower billed cost and no worse p95, the
 //! cross-tenant version of the paper's core skew argument.
 
-use super::autoscale::FleetArbitration;
+use super::autoscale::{CapGranularity, FleetArbitration};
 use super::config::SimEngine;
 use super::epoch::EpochSimulator;
 use super::error::{self, ScenarioError};
 use super::report::{FleetReport, TenantReport};
-use super::scenario::{Baseline, RunArtifacts, Scenario, TrafficScenario};
-use super::sim::{drive, AccountCap, EventLane, EventQueue};
+use super::scenario::{Baseline, ModelSource, RunArtifacts, Scenario, TrafficScenario};
+use super::sim::{
+    drive, drive_scan, policy_stride, AccountCap, CapAudit, EventLane, EventQueue, FleetDriver,
+    LaneOpts, SlotArena,
+};
 use crate::deploy::DeploymentPolicy;
+use crate::platform::InstancePool;
 use crate::util::json::Json;
 use crate::util::stats;
 use std::path::Path;
@@ -134,6 +160,22 @@ pub struct FleetScenario {
     /// `concurrency` convention.
     pub account_cap: Option<usize>,
     pub arbitration: FleetArbitration,
+    /// What one cap slot stands for: a concurrent replica execution
+    /// (default — honest Lambda accounting) or an in-flight request (the
+    /// pre-fix mode, kept so comparison studies and the PR 5 pin still
+    /// run). JSON key `cap_granularity`, `"execution"` / `"request"`.
+    pub cap_granularity: CapGranularity,
+    /// Serve same-preset tenants (same model preset, keep-alive and
+    /// per-instance concurrency) from one shared warm replica pool with
+    /// per-instance owner refcounts, instead of one private pool each.
+    /// Incompatible with re-optimizing tenants: a redeploy resets its
+    /// tenant's pool, which must never clobber a co-tenant's warm state.
+    pub share_experts: bool,
+    /// Adapt each tenant's weighted-fair grant weight from its realized
+    /// p95 vs its declared SLO at its epoch boundaries (requires
+    /// `weighted-fair` arbitration; tenants without an SLO keep their
+    /// declared weight).
+    pub slo_feedback: bool,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -162,6 +204,13 @@ impl FleetScenario {
             return Err(ScenarioError::invalid(
                 "fleet.account_cap",
                 "must be >= 1 (use None / 0-in-JSON for unbounded)",
+            ));
+        }
+        if self.slo_feedback && self.arbitration != FleetArbitration::WeightedFair {
+            return Err(ScenarioError::invalid(
+                "fleet.slo_feedback",
+                "SLO feedback adapts weighted-fair grant weights; \
+                 it requires arbitration = \"weighted-fair\"",
             ));
         }
         let mut seen = std::collections::BTreeSet::new();
@@ -195,7 +244,7 @@ impl FleetScenario {
             match &t.source {
                 TenantSource::Inline(s) => {
                     s.validate()?;
-                    check_tenant_scenario(i, s)?;
+                    check_tenant_scenario(i, s, self.share_experts)?;
                 }
                 TenantSource::Ref(p) => {
                     if p.is_empty() {
@@ -219,6 +268,9 @@ impl FleetScenario {
                 Json::num(self.account_cap.unwrap_or(0) as f64),
             ),
             ("arbitration", Json::str(self.arbitration.name())),
+            ("cap_granularity", Json::str(self.cap_granularity.name())),
+            ("share_experts", Json::Bool(self.share_experts)),
+            ("slo_feedback", Json::Bool(self.slo_feedback)),
             (
                 "tenants",
                 Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect()),
@@ -234,7 +286,16 @@ impl FleetScenario {
         error::check_keys(
             j,
             SECTION,
-            &["version", "name", "account_cap", "arbitration", "tenants"],
+            &[
+                "version",
+                "name",
+                "account_cap",
+                "arbitration",
+                "cap_granularity",
+                "share_experts",
+                "slo_feedback",
+                "tenants",
+            ],
         )?;
         let version = error::opt_u64(j, SECTION, "version", 1)?;
         if version != 1 {
@@ -258,6 +319,18 @@ impl FleetScenario {
                 ))
             }
         };
+        let cap_granularity = match j.get("cap_granularity") {
+            None => CapGranularity::default(),
+            Some(Json::Str(s)) => CapGranularity::from_name(s)?,
+            Some(other) => {
+                return Err(ScenarioError::invalid(
+                    "fleet.cap_granularity",
+                    format!("expected a string, got {other:?}"),
+                ))
+            }
+        };
+        let share_experts = opt_bool(j, SECTION, "share_experts", false)?;
+        let slo_feedback = opt_bool(j, SECTION, "slo_feedback", false)?;
         let tenant_entries = j
             .get("tenants")
             .and_then(Json::as_arr)
@@ -266,7 +339,15 @@ impl FleetScenario {
         for (i, tj) in tenant_entries.iter().enumerate() {
             tenants.push(TenantSpec::from_json(tj, i)?);
         }
-        let fleet = FleetScenario { name, account_cap, arbitration, tenants };
+        let fleet = FleetScenario {
+            name,
+            account_cap,
+            arbitration,
+            cap_granularity,
+            share_experts,
+            slo_feedback,
+            tenants,
+        };
         fleet.validate()?;
         Ok(fleet)
     }
@@ -295,7 +376,7 @@ impl FleetScenario {
                     TenantSource::Inline(s) => s.clone(),
                     TenantSource::Ref(p) => Scenario::load(Path::new(p))?,
                 };
-                check_tenant_scenario(i, &s)?;
+                check_tenant_scenario(i, &s, self.share_experts)?;
                 Ok(s)
             })
             .collect()
@@ -312,7 +393,7 @@ impl FleetScenario {
             .iter()
             .map(Scenario::materialize)
             .collect::<Result<Vec<_>, _>>()?;
-        Ok(self.run_compiled(&scenarios, &compiled))
+        Ok(self.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false).0)
     }
 
     /// The isolation baseline: every tenant served *alone* on its
@@ -340,9 +421,17 @@ impl FleetScenario {
                 name: format!("{}/{}", self.name, t.name),
                 account_cap: shares[i],
                 arbitration: self.arbitration,
+                cap_granularity: self.cap_granularity,
+                // A single-tenant fleet has nobody to share with or adapt
+                // against; the isolation baseline carries the flags anyway
+                // so its semantics track the shared run's knob-for-knob.
+                share_experts: self.share_experts,
+                slo_feedback: self.slo_feedback,
                 tenants: vec![t.clone()],
             };
-            let mut out = single.run_compiled(&scenarios[i..=i], &compiled[i..=i]);
+            let mut out = single
+                .run_compiled(&scenarios[i..=i], &compiled[i..=i], FleetDriver::Heap, false)
+                .0;
             tenants.push(out.report.tenants.pop().expect("single-tenant fleet"));
             artifacts.push(out.artifacts.pop().expect("single-tenant fleet"));
         }
@@ -354,8 +443,16 @@ impl FleetScenario {
 
     /// The joint run over already-resolved, already-materialized tenants:
     /// one simulator + one event lane per tenant, driven to completion
-    /// against one shared event queue and account ledger.
-    fn run_compiled(&self, scenarios: &[Scenario], compiled: &[TrafficScenario]) -> FleetOutcome {
+    /// against one shared event queue and account ledger by the selected
+    /// step driver. `audit` records every cap-ledger transition (the
+    /// conservation property test); the returned log is empty otherwise.
+    fn run_compiled(
+        &self,
+        scenarios: &[Scenario],
+        compiled: &[TrafficScenario],
+        driver: FleetDriver,
+        audit: bool,
+    ) -> (FleetOutcome, Vec<CapAudit>) {
         let mut sims: Vec<EpochSimulator<'_>> = Vec::with_capacity(compiled.len());
         let mut policies: Vec<DeploymentPolicy> = Vec::with_capacity(compiled.len());
         let mut pipelines: Vec<bool> = Vec::with_capacity(compiled.len());
@@ -389,8 +486,81 @@ impl FleetScenario {
             pipelines.push(pipeline);
         }
 
+        // Arena plan: by default every tenant gets a private pool; under
+        // `share_experts`, tenants serving the same named preset with the
+        // same keep-alive and per-instance concurrency are grouped onto one
+        // shared pool (first-seen order, so arena ids are deterministic).
+        // The stride is the widest member's, and shared pools turn on
+        // per-instance owner refcounts so one tenant's scale-in cannot
+        // tear down an environment a co-tenant still owns.
+        let mut arena_of = vec![0usize; compiled.len()];
+        let mut strides: Vec<usize> = Vec::new();
+        let mut member_count: Vec<usize> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        let mut groups: std::collections::BTreeMap<(&str, u64, usize), usize> =
+            std::collections::BTreeMap::new();
+        for (i, policy) in policies.iter().enumerate() {
+            let cfg = &sims[i].cfg;
+            let stride = cfg.max_replicas.max(policy_stride(policy));
+            let key = match (self.share_experts, &scenarios[i].model) {
+                (true, ModelSource::Preset(p)) => p.canonical_name().map(|name| {
+                    (name, cfg.keep_alive.to_bits(), cfg.concurrency.unwrap_or(0))
+                }),
+                _ => None,
+            };
+            let aid = match key.and_then(|k| groups.get(&k).copied()) {
+                Some(a) => a,
+                None => {
+                    let a = strides.len();
+                    if let Some(k) = key {
+                        groups.insert(k, a);
+                    }
+                    strides.push(0);
+                    member_count.push(0);
+                    owner.push(i);
+                    a
+                }
+            };
+            arena_of[i] = aid;
+            strides[aid] = strides[aid].max(stride);
+            member_count[aid] += 1;
+        }
+        let mut arenas: Vec<SlotArena> = (0..strides.len())
+            .map(|a| {
+                let o = owner[a];
+                let cfg = &sims[o].cfg;
+                let mut arena =
+                    SlotArena::new(&compiled[o].spec, strides[a], cfg.keep_alive, cfg.concurrency);
+                if member_count[a] > 1 {
+                    arena.enable_refcounts();
+                }
+                arena
+            })
+            .collect();
+        // Prewarm and ownership registration, in tenant order: each tenant
+        // pre-warms its own plan (when its config asks for it) and retains
+        // every replica its deployment starts with — a no-op on private
+        // pools, a refcount on shared ones.
+        for (i, policy) in policies.iter().enumerate() {
+            let arena = &mut arenas[arena_of[i]];
+            if sims[i].cfg.prewarm {
+                arena.prewarm_plan(&policy.layers);
+            }
+            for (l, layer) in policy.layers.iter().enumerate() {
+                for (e, ep) in layer.experts.iter().enumerate() {
+                    for g in 0..ep.replicas {
+                        arena.retain((l, e, g));
+                    }
+                }
+            }
+        }
+
         let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
-        let mut cap = AccountCap::new(self.account_cap, self.arbitration, &weights);
+        let mut cap =
+            AccountCap::new(self.account_cap, self.arbitration, self.cap_granularity, &weights);
+        if audit {
+            cap.enable_audit();
+        }
         let capped = cap.enabled();
         let mut q = EventQueue::new();
         let mut lanes: Vec<EventLane<'_, '_>> = policies
@@ -402,12 +572,23 @@ impl FleetScenario {
                     policy,
                     &compiled[i].traffic,
                     pipelines[i],
-                    i as u32,
-                    capped,
+                    LaneOpts {
+                        tenant: i as u32,
+                        arena_id: arena_of[i],
+                        capped,
+                        cap_exec: capped
+                            && self.cap_granularity == CapGranularity::Execution,
+                        slo_feedback: self.slo_feedback,
+                        slo_p95: self.tenants[i].slo_p95,
+                        weight: self.tenants[i].weight,
+                    },
                 )
             })
             .collect();
-        let reports = drive(&mut sims, &mut lanes, &mut q, &mut cap);
+        let reports = match driver {
+            FleetDriver::Heap => drive(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap),
+            FleetDriver::Scan => drive_scan(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap),
+        };
 
         let mut tenants = Vec::with_capacity(reports.len());
         let mut artifacts = Vec::with_capacity(reports.len());
@@ -422,6 +603,7 @@ impl FleetScenario {
                 capped_requests: lane.cap_waits.len() as u64,
                 mean_cap_delay: stats::mean(&lane.cap_waits),
                 max_cap_delay: lane.cap_waits.iter().cloned().fold(0.0, f64::max),
+                effective_weight: lane.eff_weight,
             });
             artifacts.push(RunArtifacts {
                 policy_history: std::mem::take(&mut sim.policy_history),
@@ -431,10 +613,11 @@ impl FleetScenario {
                 latencies: std::mem::take(&mut sim.last_latencies),
             });
         }
-        FleetOutcome {
+        let outcome = FleetOutcome {
             report: FleetReport::from_tenants(self.account_cap, tenants),
             artifacts,
-        }
+        };
+        (outcome, cap.take_audit())
     }
 }
 
@@ -485,8 +668,12 @@ fn isolated_shares(
 
 /// Fleet-eligibility checks on one tenant's scenario: the fleet engine
 /// interleaves event lanes, so the legacy serial engine cannot participate,
-/// and the CPU-cluster baseline has no serverless pool to share.
-fn check_tenant_scenario(i: usize, s: &Scenario) -> Result<(), ScenarioError> {
+/// and the CPU-cluster baseline has no serverless pool to share. Under
+/// `share_experts` the tenant must not re-optimize: a drift redeploy resets
+/// the tenant's instance pool, which must never clobber a shared arena
+/// co-tenants are warm in. (`static`/`lambdaml` tenants force
+/// re-optimization off at run time, so only `ours` can trip this.)
+fn check_tenant_scenario(i: usize, s: &Scenario, share_experts: bool) -> Result<(), ScenarioError> {
     if !matches!(s.cfg.engine, SimEngine::Event { .. }) {
         return Err(ScenarioError::invalid(
             format!("tenants[{i}].scenario.config.engine"),
@@ -499,7 +686,27 @@ fn check_tenant_scenario(i: usize, s: &Scenario) -> Result<(), ScenarioError> {
             "cpu-cluster has no serverless pool to share; run it as a standalone scenario",
         ));
     }
+    if share_experts && s.baseline == Baseline::Ours && s.cfg.reoptimize {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.config.reoptimize"),
+            "a re-optimizing tenant redeploys (resetting its pool) and cannot share \
+             experts; disable reoptimize or share_experts",
+        ));
+    }
     Ok(())
+}
+
+/// Optional strict-boolean field (the fleet schema's `share_experts` /
+/// `slo_feedback` knobs).
+fn opt_bool(j: &Json, section: &str, key: &str, default: bool) -> Result<bool, ScenarioError> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => Err(ScenarioError::invalid(
+            format!("{section}.{key}"),
+            format!("expected true or false, got {other:?}"),
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -532,6 +739,9 @@ mod tests {
             name: "test-fleet".into(),
             account_cap: Some(2),
             arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
             tenants: vec![
                 TenantSpec {
                     name: "a".into(),
@@ -546,14 +756,32 @@ mod tests {
 
     #[test]
     fn fleet_json_roundtrip_is_canonical() {
-        let f = two_tenant_fleet();
+        let mut f = two_tenant_fleet();
+        f.cap_granularity = CapGranularity::Request;
+        f.share_experts = true;
         let text = f.to_json().to_string_pretty();
         let back = FleetScenario::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.to_json().to_string_pretty(), text);
         assert_eq!(back.tenants.len(), 2);
         assert_eq!(back.account_cap, Some(2));
         assert_eq!(back.arbitration, FleetArbitration::WeightedFair);
+        assert_eq!(back.cap_granularity, CapGranularity::Request);
+        assert!(back.share_experts);
+        assert!(!back.slo_feedback);
         assert_eq!(back.tenants[0].slo_p95, Some(30.0));
+        // A fleet file written before the PR 6 knobs existed parses to the
+        // defaults: execution-granular accounting, private pools, static
+        // weights.
+        let mut fields = match two_tenant_fleet().to_json() {
+            Json::Obj(fields) => fields,
+            _ => unreachable!("fleet serializes to an object"),
+        };
+        for k in ["cap_granularity", "share_experts", "slo_feedback"] {
+            fields.remove(k);
+        }
+        let old = FleetScenario::from_json(&Json::Obj(fields)).unwrap();
+        assert_eq!(old.cap_granularity, CapGranularity::Execution);
+        assert!(!old.share_experts && !old.slo_feedback);
     }
 
     #[test]
@@ -579,6 +807,25 @@ mod tests {
         }
         let err = legacy.validate().unwrap_err();
         assert!(err.to_string().contains("engine"), "{err}");
+
+        let mut feedback = base.clone();
+        feedback.arbitration = FleetArbitration::Fifo;
+        feedback.slo_feedback = true;
+        let err = feedback.validate().unwrap_err();
+        assert!(err.to_string().contains("weighted-fair"), "{err}");
+
+        // Sharing is fine for lambdaml tenants (re-optimization forced
+        // off), but a re-optimizing `ours` tenant would reset the shared
+        // pool on redeploy.
+        let mut share = base.clone();
+        share.share_experts = true;
+        assert!(share.validate().is_ok());
+        if let TenantSource::Inline(s) = &mut share.tenants[0].source {
+            s.baseline = Baseline::Ours;
+            s.cfg.reoptimize = true;
+        }
+        let err = share.validate().unwrap_err();
+        assert!(err.to_string().contains("share"), "{err}");
 
         let mut cpu = base;
         if let TenantSource::Inline(s) = &mut cpu.tenants[1].source {
@@ -620,6 +867,9 @@ mod tests {
             name: "refs".into(),
             account_cap: None,
             arbitration: FleetArbitration::Fifo,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
             tenants: vec![TenantSpec {
                 name: "ghost".into(),
                 weight: 1.0,
@@ -629,5 +879,254 @@ mod tests {
         };
         assert!(f.validate().is_ok(), "path existence is a run-time concern");
         assert!(matches!(f.run(), Err(ScenarioError::Io { .. })));
+    }
+
+    fn committed(name: &str) -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/data/scenarios")
+            .join(name)
+    }
+
+    fn materialized(fleet: &FleetScenario) -> (Vec<Scenario>, Vec<TrafficScenario>) {
+        let scenarios = fleet.resolved().unwrap();
+        let compiled = scenarios.iter().map(|s| s.materialize().unwrap()).collect();
+        (scenarios, compiled)
+    }
+
+    /// Wrap a plain committed scenario as an uncapped single-tenant fleet,
+    /// so the step drivers can be raced on it.
+    fn solo_fleet(s: Scenario) -> FleetScenario {
+        FleetScenario {
+            name: format!("solo-{}", s.name),
+            account_cap: None,
+            arbitration: FleetArbitration::Fifo,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
+            tenants: vec![TenantSpec::inline("solo", s)],
+        }
+    }
+
+    /// Tentpole pin: the candidate-heap driver and the PR 5 linear-scan
+    /// driver execute the identical step sequence. Byte-identical fleet
+    /// reports on every solver-free committed file; the ODS-bearing drift
+    /// reference compares within 1e-9 + exact integer counters (its solves
+    /// are wall-clock limited, so byte identity cannot be promised between
+    /// *any* two runs — the same caveat the reproduction pin documents).
+    #[test]
+    fn heap_driver_matches_scan_driver_on_committed_files() {
+        let mut exact = vec![FleetScenario::load(&committed("fleet_two_tenant.json")).unwrap()];
+        exact.push(solo_fleet(
+            Scenario::load(&committed("tiny_trace_lambdaml.json")).unwrap(),
+        ));
+        for fleet in &exact {
+            let (scenarios, compiled) = materialized(fleet);
+            let (heap, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false);
+            let (scan, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Scan, false);
+            assert_eq!(
+                heap.report.to_json().to_string_pretty(),
+                scan.report.to_json().to_string_pretty(),
+                "drivers diverged on {}",
+                fleet.name
+            );
+        }
+
+        let drift = solo_fleet(Scenario::load(&committed("drift_bert_quick.json")).unwrap());
+        let (scenarios, compiled) = materialized(&drift);
+        let (heap, _) = drift.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false);
+        let (scan, _) = drift.run_compiled(&scenarios, &compiled, FleetDriver::Scan, false);
+        for (h, s) in heap.report.tenants.iter().zip(&scan.report.tenants) {
+            h.report.close_to(&s.report, 1e-9).unwrap_or_else(|e| {
+                panic!("drivers diverged on {}: {e}", drift.name);
+            });
+            assert_eq!(h.report.warm_invocations, s.report.warm_invocations);
+            assert_eq!(h.report.cold_invocations, s.report.cold_invocations);
+            assert_eq!(h.report.queued_invocations, s.report.queued_invocations);
+            assert_eq!(h.report.epochs, s.report.epochs);
+            assert_eq!(h.report.redeploys, s.report.redeploys);
+            assert_eq!(h.capped_requests, s.capped_requests);
+        }
+    }
+
+    /// Conservation property of the execution-granular ledger: replaying
+    /// the audit log, the recorded `in_use` equals the number of live slot
+    /// holds at every transition, every hold is released exactly at its
+    /// declared end, and the ledger charged exactly one slot per replica
+    /// execution the fleet ran.
+    #[test]
+    fn execution_cap_ledger_conserves_slots() {
+        let fleet = FleetScenario {
+            name: "conserve".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
+            tenants: vec![
+                TenantSpec::inline("a", tiny_tenant_scenario(11)),
+                TenantSpec::inline("b", tiny_tenant_scenario(12)),
+            ],
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (out, audit) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, true);
+        assert!(!audit.is_empty(), "execution-capped run must touch the ledger");
+        let mut live = 0usize;
+        let mut acquires = 0u64;
+        let mut ends = Vec::new();
+        let mut releases = Vec::new();
+        for tr in &audit {
+            match *tr {
+                CapAudit::Acquire { end, in_use } => {
+                    live += 1;
+                    acquires += 1;
+                    assert_eq!(live, in_use, "in_use diverged from live holds");
+                    assert!(end.is_finite(), "execution holds have finite ends");
+                    ends.push(end);
+                }
+                CapAudit::Release { at, in_use } => {
+                    live -= 1;
+                    assert_eq!(live, in_use, "in_use diverged from live holds");
+                    releases.push(at);
+                }
+            }
+        }
+        assert_eq!(live, 0, "every hold released by the end of the run");
+        ends.sort_by(f64::total_cmp);
+        releases.sort_by(f64::total_cmp);
+        assert_eq!(ends, releases, "each hold released exactly at its declared end");
+        let executions: u64 = out
+            .report
+            .tenants
+            .iter()
+            .map(|t| t.report.warm_invocations + t.report.cold_invocations)
+            .sum();
+        assert_eq!(acquires, executions, "one slot per replica execution");
+    }
+
+    fn paced_tenant(seed: u64, slo: Option<f64>) -> TenantSpec {
+        let s = Scenario::builder("paced")
+            .model("tiny")
+            .unwrap()
+            .seed(seed)
+            .profile(2, 64)
+            .traffic(TrafficSource::Synthetic {
+                process: ArrivalProcess::Deterministic { rate: 1.0 },
+                duration: Some(10.0),
+                requests: None,
+                tokens_per_request: 64,
+            })
+            .config(TrafficConfig {
+                reoptimize: false,
+                epoch_secs: 2.0,
+                ..TrafficConfig::default()
+            })
+            .baseline(Baseline::LambdaML)
+            .build()
+            .unwrap();
+        TenantSpec {
+            name: if slo.is_some() { "miss" } else { "ok" }.into(),
+            weight: 1.0,
+            slo_p95: slo.or(Some(1e6)),
+            source: TenantSource::Inline(s),
+        }
+    }
+
+    /// SLO-feedback arbitration: a tenant missing its p95 every epoch
+    /// climbs toward (and never past) 8x its declared weight; a tenant
+    /// meeting its SLO keeps its declared weight. The adapted weight is
+    /// surfaced as `effective_weight` in the tenant report and its JSON.
+    #[test]
+    fn slo_feedback_adapts_weights_within_bounds() {
+        let fleet = FleetScenario {
+            name: "feedback".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: true,
+            tenants: vec![paced_tenant(21, Some(1e-9)), paced_tenant(22, None)],
+        };
+        let out = fleet.run().unwrap();
+        let miss = out.report.tenant("miss").unwrap();
+        let ok = out.report.tenant("ok").unwrap();
+        assert!(
+            miss.effective_weight > miss.weight,
+            "an always-missed SLO must raise the grant weight (got {})",
+            miss.effective_weight
+        );
+        assert!(
+            miss.effective_weight <= 8.0 * miss.weight,
+            "adaptation is capped at 8x the declared weight (got {})",
+            miss.effective_weight
+        );
+        assert_eq!(ok.effective_weight, ok.weight, "a met SLO keeps the declared weight");
+        assert_eq!(
+            miss.to_json().get_f64("effective_weight"),
+            Some(miss.effective_weight)
+        );
+        // Deterministic: the adaptation replays identically.
+        let again = fleet.run().unwrap();
+        assert_eq!(
+            out.report.to_json().to_string_pretty(),
+            again.report.to_json().to_string_pretty()
+        );
+    }
+
+    fn kilo_member(seed: u64) -> Scenario {
+        Scenario::builder("member")
+            .model("tiny")
+            .unwrap()
+            .seed(seed)
+            .profile(2, 64)
+            .traffic(TrafficSource::Synthetic {
+                process: ArrivalProcess::Poisson { rate: 1.0 },
+                duration: None,
+                requests: Some(3),
+                tokens_per_request: 64,
+            })
+            .config(TrafficConfig { reoptimize: false, ..TrafficConfig::default() })
+            .baseline(Baseline::LambdaML)
+            .build()
+            .unwrap()
+    }
+
+    /// The thousand-tenant scale target: a 1000-tenant shared-expert fleet
+    /// runs to completion, deterministically (two heap runs byte-identical)
+    /// and driver-agnostically (heap == scan), with every tenant reported.
+    #[test]
+    fn thousand_tenant_fleet_is_deterministic_and_driver_agnostic() {
+        let tenants: Vec<TenantSpec> = (0..1000)
+            .map(|i| TenantSpec {
+                name: format!("t{i:04}"),
+                weight: 1.0 + (i % 4) as f64,
+                slo_p95: None,
+                source: TenantSource::Inline(kilo_member(1 + i as u64)),
+            })
+            .collect();
+        let fleet = FleetScenario {
+            name: "kilo".into(),
+            account_cap: Some(64),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: true,
+            slo_feedback: false,
+            tenants,
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (a, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false);
+        let (b, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false);
+        let (c, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Scan, false);
+        let ja = a.report.to_json().to_string_pretty();
+        assert_eq!(ja, b.report.to_json().to_string_pretty(), "re-run diverged");
+        assert_eq!(
+            ja,
+            c.report.to_json().to_string_pretty(),
+            "scan driver diverged at 1000 tenants"
+        );
+        assert_eq!(a.report.tenants.len(), 1000);
+        assert_eq!(
+            a.report.tenants.iter().map(|t| t.report.requests).sum::<u64>(),
+            3000
+        );
     }
 }

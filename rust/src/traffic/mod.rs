@@ -50,9 +50,15 @@
 //!    [`fleet::FleetScenario`] naming several tenants (each an ordinary
 //!    [`scenario::Scenario`]) served *jointly* behind one shared
 //!    account-level concurrency cap ([`sim::AccountCap`]) with
-//!    weighted-fair slot arbitration ([`autoscale::FleetArbitration`]);
-//!    with one tenant and no cap it reproduces [`scenario::Scenario::run`]
-//!    byte-for-byte.
+//!    weighted-fair slot arbitration ([`autoscale::FleetArbitration`]).
+//!    Cap slots count concurrent replica *executions* by default
+//!    ([`autoscale::CapGranularity`]); same-preset tenants can share one
+//!    warm replica pool (`share_experts`, refcounted in
+//!    [`sim::SlotArena`]); grant weights can adapt to per-tenant SLO
+//!    verdicts (`slo_feedback`). Lanes are driven by a candidate heap —
+//!    O(events · log tenants), sized for thousand-tenant fleets — and
+//!    with one tenant and no cap the engine reproduces
+//!    [`scenario::Scenario::run`] byte-for-byte.
 //!
 //! [`epoch::EpochSimulator`] remains the engine *behind* the scenario
 //! façade; construct simulations through [`scenario::Scenario`] /
@@ -72,7 +78,7 @@ pub mod sim;
 pub mod trace;
 
 pub use arrivals::{ArrivalGen, ArrivalProcess};
-pub use autoscale::{AutoscalePolicy, Autoscaler, FleetArbitration};
+pub use autoscale::{AutoscalePolicy, Autoscaler, CapGranularity, FleetArbitration};
 pub use config::{MetricsMode, SimEngine, TrafficConfig};
 pub use error::ScenarioError;
 pub use fleet::{FleetOutcome, FleetScenario, TenantSource, TenantSpec};

@@ -229,6 +229,9 @@ pub struct TenantReport {
     /// Mean / max admission delay of the parked requests (0 when none).
     pub mean_cap_delay: f64,
     pub max_cap_delay: f64,
+    /// Arbitration weight the tenant ended the run with. Equal to `weight`
+    /// unless SLO-feedback arbitration adapted it at epoch boundaries.
+    pub effective_weight: f64,
 }
 
 impl TenantReport {
@@ -246,6 +249,7 @@ impl TenantReport {
             ("capped_requests", Json::num(self.capped_requests as f64)),
             ("mean_cap_delay", Json::num(self.mean_cap_delay)),
             ("max_cap_delay", Json::num(self.max_cap_delay)),
+            ("effective_weight", Json::num(self.effective_weight)),
         ];
         if let Some(slo) = self.slo_p95 {
             pairs.push(("slo_p95", Json::num(slo)));
@@ -443,6 +447,7 @@ mod tests {
             capped_requests: 2,
             mean_cap_delay: 1.5,
             max_cap_delay: 3.0,
+            effective_weight: weight,
         }
     }
 

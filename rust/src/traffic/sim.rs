@@ -16,13 +16,20 @@
 //!  - **tenant lanes behind one shared [`AccountCap`]**: the run state is an
 //!    [`EventLane`] per tenant (arena, scratch plans, epoch clock, metrics),
 //!    and [`drive`] interleaves any number of lanes deterministically over
-//!    one [`EventQueue`]. When an account-level concurrency cap is set
-//!    (`traffic::fleet`), each request holds one ledger slot from its first
-//!    layer dispatch to its completion — the fleet-wide analogue of PR 2's
-//!    per-instance slots — and over-cap arrivals park until a release event
-//!    grants them a slot per the configured arbitration policy. A
-//!    single-tenant uncapped run is exactly one lane and reproduces the
-//!    pre-fleet engine operation-for-operation;
+//!    one [`EventQueue`], racing the event heap against a candidate heap of
+//!    per-lane boundary/arrival steps (O(events · log tenants); the linear
+//!    scan is kept as [`drive_scan`], the byte-identity baseline). When an
+//!    account-level concurrency cap is set (`traffic::fleet`), slots are
+//!    charged per concurrent replica *execution* by default — AWS Lambda's
+//!    account limit counts executions, so a request fanning out to 8
+//!    replicas occupies 8 slots — or per in-flight request under
+//!    [`CapGranularity::Request`]; over-cap arrivals park until a release
+//!    event grants them admission per the configured arbitration policy.
+//!    Lanes reference their [`SlotArena`] by index, so same-preset tenants
+//!    can share one warm pool (per-expert refcounts; per-tenant billing by
+//!    the lane's own busy-seconds ledger). A single-tenant uncapped run is
+//!    exactly one lane and reproduces the pre-fleet engine
+//!    operation-for-operation;
 //!  - **layer-pipelined dispatch** (`pipeline: true`): a request's layer
 //!    *k+1* is enqueued when layer *k* completes (straggler replica plus the
 //!    non-replica scatter/gather tail of the analytic model), so later
@@ -61,7 +68,7 @@
 //! is unaffected; only the predictor's end-of-run state differs from a
 //! legacy run.
 
-use super::autoscale::{Autoscaler, FleetArbitration};
+use super::autoscale::{Autoscaler, CapGranularity, FleetArbitration};
 use super::config::MetricsMode;
 use super::epoch::{fractions, EpochSimulator};
 use super::report::SimReport;
@@ -109,6 +116,9 @@ pub struct SlotArena {
     pub cold_starts: u64,
     pub queued_jobs: u64,
     pub total_queue_wait: f64,
+    /// Per-instance owner counts for cross-tenant sharing (empty = private
+    /// pool, the default: evictions always tear the environment down).
+    refcount: Vec<u32>,
 }
 
 impl SlotArena {
@@ -144,7 +154,16 @@ impl SlotArena {
             cold_starts: 0,
             queued_jobs: 0,
             total_queue_wait: 0.0,
+            refcount: Vec::new(),
         }
+    }
+
+    /// Turn on per-instance owner refcounts (cross-tenant expert sharing):
+    /// [`InstancePool::retain`] registers owners and [`InstancePool::evict`]
+    /// only tears an environment down when the last owner leaves, so one
+    /// tenant's autoscaler scaling in cannot cold-start another tenant.
+    pub fn enable_refcounts(&mut self) {
+        self.refcount = vec![0; self.warm_until.len()];
     }
 
     /// Dense index of instance `(layer, expert, replica)`.
@@ -245,6 +264,15 @@ impl InstancePool for SlotArena {
 
     fn evict(&mut self, key: ReplicaKey) {
         let idx = self.index(key.0, key.1, key.2);
+        if !self.refcount.is_empty() {
+            let rc = &mut self.refcount[idx];
+            *rc = rc.saturating_sub(1);
+            if *rc > 0 {
+                // Another tenant still owns this instance: its warm
+                // environment (and queued work) survives the eviction.
+                return;
+            }
+        }
         self.warm_until[idx] = f64::NEG_INFINITY;
         if let Some(c) = self.concurrency {
             self.slot_free[idx * c..(idx + 1) * c].fill(f64::NEG_INFINITY);
@@ -259,6 +287,13 @@ impl InstancePool for SlotArena {
     fn prewarm(&mut self, key: ReplicaKey) {
         let idx = self.index(key.0, key.1, key.2);
         self.warm_until[idx] = f64::INFINITY;
+    }
+
+    fn retain(&mut self, key: ReplicaKey) {
+        if !self.refcount.is_empty() {
+            let idx = self.index(key.0, key.1, key.2);
+            self.refcount[idx] += 1;
+        }
     }
 }
 
@@ -279,8 +314,14 @@ struct Ev {
     req: u32,
 }
 
-/// Sentinel `req` marking an account-slot release event.
+/// Sentinel `req` marking an account-slot release event (one per request
+/// under [`CapGranularity::Request`]).
 const REQ_RELEASE: u32 = u32::MAX;
+
+/// Sentinel `req` marking the release of one replica *execution*'s account
+/// slot ([`CapGranularity::Execution`], the Lambda-accurate default: the
+/// account limit counts concurrent function executions, not requests).
+const EXEC_RELEASE: u32 = u32::MAX - 1;
 
 impl PartialEq for Ev {
     fn eq(&self, other: &Ev) -> bool {
@@ -344,28 +385,57 @@ pub(crate) struct Waiter {
     seq: u64,
 }
 
+/// One ledger transition, recorded when auditing is enabled — the raw
+/// material of the conservation property test (`in_use` must equal the
+/// number of live slot holds at every event).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CapAudit {
+    /// A slot was taken, to be held until `end` (`INFINITY` for a
+    /// request-granular hold whose release is a later `Release` record).
+    Acquire { end: f64, in_use: usize },
+    /// A slot was returned at `at`.
+    Release { at: f64, in_use: usize },
+}
+
 /// The shared account-level concurrency ledger — the fleet-wide analogue of
 /// PR 2's per-instance slots, modeling the account concurrency limit a
 /// serverless provider imposes across *all* of an account's functions.
-/// Each admitted request holds one slot from its first layer dispatch until
-/// its completion; a request arriving while the ledger is full parks FIFO
-/// in its tenant's queue and is granted a freed slot according to the
-/// [`FleetArbitration`] policy. `cap: None` disables the ledger entirely
-/// (no bookkeeping on the single-tenant hot path).
+///
+/// Under [`CapGranularity::Execution`] (the default — AWS Lambda's account
+/// limit counts concurrent function *executions*) every replica execution a
+/// request fans out to holds one slot over its own `[start, start + t_rep]`
+/// window; admission is still decided per request (a request is admitted
+/// when the ledger has headroom and nothing is parked, so a wide fan-out
+/// may transiently overshoot the cap by the width of one request — the
+/// accounting, which is what the fleet numbers report, is exact). Under
+/// [`CapGranularity::Request`] (the pre-fix mode, kept for the PR 5
+/// shared-beats-isolated pin) each admitted request holds exactly one slot
+/// from its first layer dispatch until its completion. A request arriving
+/// while the ledger is full parks FIFO in its tenant's queue and is granted
+/// a freed slot according to the [`FleetArbitration`] policy. `cap: None`
+/// disables the ledger entirely (no bookkeeping on the single-tenant hot
+/// path).
 #[derive(Debug, Clone)]
 pub struct AccountCap {
     cap: Option<usize>,
     arbitration: FleetArbitration,
+    granularity: CapGranularity,
     weights: Vec<f64>,
     in_use: usize,
     in_use_by: Vec<usize>,
     waiting: Vec<VecDeque<Waiter>>,
     waiting_total: usize,
     park_seq: u64,
+    audit: Option<Vec<CapAudit>>,
 }
 
 impl AccountCap {
-    pub fn new(cap: Option<usize>, arbitration: FleetArbitration, weights: &[f64]) -> AccountCap {
+    pub fn new(
+        cap: Option<usize>,
+        arbitration: FleetArbitration,
+        granularity: CapGranularity,
+        weights: &[f64],
+    ) -> AccountCap {
         if let Some(c) = cap {
             assert!(c >= 1, "account cap must be >= 1 (use None for unbounded)");
         }
@@ -376,18 +446,41 @@ impl AccountCap {
         AccountCap {
             cap,
             arbitration,
+            granularity,
             weights: weights.to_vec(),
             in_use: 0,
             in_use_by: vec![0; weights.len()],
             waiting: vec![VecDeque::new(); weights.len()],
             waiting_total: 0,
             park_seq: 0,
+            audit: None,
         }
     }
 
     /// An inert ledger: every request is admitted immediately.
     pub fn unbounded(tenants: usize) -> AccountCap {
-        AccountCap::new(None, FleetArbitration::Fifo, &vec![1.0; tenants])
+        AccountCap::new(None, FleetArbitration::Fifo, CapGranularity::Request, &vec![1.0; tenants])
+    }
+
+    /// Whether slots are charged per replica execution (vs per request).
+    pub fn execution_granular(&self) -> bool {
+        self.granularity == CapGranularity::Execution
+    }
+
+    /// Record every ledger transition from here on (conservation tests).
+    pub(crate) fn enable_audit(&mut self) {
+        self.audit = Some(Vec::new());
+    }
+
+    /// Drain the recorded transitions.
+    pub(crate) fn take_audit(&mut self) -> Vec<CapAudit> {
+        self.audit.take().unwrap_or_default()
+    }
+
+    /// Replace one tenant's arbitration weight (SLO-feedback adaptation).
+    pub(crate) fn set_weight(&mut self, tenant: usize, weight: f64) {
+        debug_assert!(weight.is_finite() && weight > 0.0, "bad adapted weight");
+        self.weights[tenant] = weight;
     }
 
     pub fn enabled(&self) -> bool {
@@ -399,20 +492,44 @@ impl AccountCap {
         self.in_use
     }
 
-    /// Take a slot for `tenant` if one is free *and* no request is already
-    /// waiting (a newly arriving request must not jump the parked queue).
+    /// Admit `tenant`'s request if the ledger has headroom *and* no request
+    /// is already waiting (a newly arriving request must not jump the parked
+    /// queue). Request granularity takes the request's slot here; execution
+    /// granularity only decides admission — the request's replica executions
+    /// each take their own slot at dispatch ([`AccountCap::acquire_exec`]).
     pub(crate) fn try_acquire(&mut self, tenant: usize) -> bool {
         match self.cap {
             None => true,
             Some(c) => {
                 if self.in_use < c && self.waiting_total == 0 {
-                    self.in_use += 1;
-                    self.in_use_by[tenant] += 1;
+                    if self.granularity == CapGranularity::Request {
+                        self.in_use += 1;
+                        self.in_use_by[tenant] += 1;
+                        if let Some(log) = &mut self.audit {
+                            log.push(CapAudit::Acquire {
+                                end: f64::INFINITY,
+                                in_use: self.in_use,
+                            });
+                        }
+                    }
                     true
                 } else {
                     false
                 }
             }
+        }
+    }
+
+    /// Take one slot for a replica execution held until `end` (execution
+    /// granularity only). Called at dispatch time, after the request was
+    /// admitted, so it never blocks — the transient overshoot this allows
+    /// is bounded by one request's widest layer fan-out.
+    pub(crate) fn acquire_exec(&mut self, tenant: usize, end: f64) {
+        debug_assert_eq!(self.granularity, CapGranularity::Execution);
+        self.in_use += 1;
+        self.in_use_by[tenant] += 1;
+        if let Some(log) = &mut self.audit {
+            log.push(CapAudit::Acquire { end, in_use: self.in_use });
         }
     }
 
@@ -423,11 +540,14 @@ impl AccountCap {
         self.waiting_total += 1;
     }
 
-    /// Return a finished request's slot to the pool.
-    pub(crate) fn release(&mut self, tenant: usize) {
+    /// Return a finished hold's slot to the pool at virtual time `at`.
+    pub(crate) fn release(&mut self, tenant: usize, at: f64) {
         debug_assert!(self.in_use > 0 && self.in_use_by[tenant] > 0, "release without acquire");
         self.in_use -= 1;
         self.in_use_by[tenant] -= 1;
+        if let Some(log) = &mut self.audit {
+            log.push(CapAudit::Release { at, in_use: self.in_use });
+        }
     }
 
     /// Grant a free slot to the next waiter per the arbitration policy;
@@ -444,18 +564,21 @@ impl AccountCap {
                 .filter(|&t| !self.waiting[t].is_empty())
                 .min_by_key(|&t| self.waiting[t].front().expect("non-empty queue").seq)
                 .expect("waiting_total > 0"),
-            // Least capacity in use relative to weight; ties break toward
-            // the lower tenant index, FIFO within a tenant.
+            // Least capacity in use relative to weight; ties break by the
+            // earliest park seq (fleet-wide FIFO among the tied tenants —
+            // breaking toward the lower index would structurally starve
+            // higher-index tenants under symmetric load), FIFO within a
+            // tenant.
             FleetArbitration::WeightedFair => {
                 let mut best = usize::MAX;
                 let mut best_key = f64::INFINITY;
+                let mut best_seq = u64::MAX;
                 for (t, queue) in self.waiting.iter().enumerate() {
-                    if queue.is_empty() {
-                        continue;
-                    }
+                    let Some(front) = queue.front() else { continue };
                     let key = self.in_use_by[t] as f64 / self.weights[t];
-                    if key < best_key {
+                    if key < best_key || (key == best_key && front.seq < best_seq) {
                         best_key = key;
+                        best_seq = front.seq;
                         best = t;
                     }
                 }
@@ -464,8 +587,18 @@ impl AccountCap {
         };
         let w = self.waiting[tenant].pop_front().expect("selected tenant has a waiter");
         self.waiting_total -= 1;
-        self.in_use += 1;
-        self.in_use_by[tenant] += 1;
+        // Request granularity: the granted request takes the freed slot
+        // right here. Execution granularity: the grant only un-parks the
+        // request — its replica executions take their own slots as they
+        // dispatch (`acquire_exec`), so nothing is charged yet. The grant
+        // loop still terminates: every grant pops one waiter.
+        if self.granularity == CapGranularity::Request {
+            self.in_use += 1;
+            self.in_use_by[tenant] += 1;
+            if let Some(log) = &mut self.audit {
+                log.push(CapAudit::Acquire { end: f64::INFINITY, in_use: self.in_use });
+            }
+        }
         Some((tenant, w))
     }
 }
@@ -548,6 +681,19 @@ impl Metrics {
     }
 }
 
+/// Per-tenant attribution ledger. With private pools this mirrors the
+/// arena's own counters bitwise (same accumulation, same order); with a
+/// shared arena it is what keeps billing per-tenant — the arena's counters
+/// become pool-wide totals, and each lane's busy-seconds / warm / cold /
+/// queued numbers come from here.
+#[derive(Debug, Default)]
+struct LaneLedger {
+    busy_secs: f64,
+    warm_hits: u64,
+    cold_starts: u64,
+    queued_jobs: u64,
+}
+
 // ---------------------------------------------------------- layer dispatch
 
 /// Outcome of dispatching one layer of one request at one ready time.
@@ -580,6 +726,7 @@ fn dispatch_layer(
     ready: f64,
     pending: &mut Vec<(usize, f64, f64)>,
     bufs: &mut DispatchBufs,
+    ledger: &mut LaneLedger,
 ) -> LayerDispatch {
     let DispatchBufs { starts, idxs, replica, mem_v, pay_v } = bufs;
     starts.clear();
@@ -629,6 +776,11 @@ fn dispatch_layer(
         let idx = idxs[j];
         let start = arena.admit(idx, ready, t_rep);
         debug_assert_eq!(start, starts[j], "peeked start must match admission");
+        // Tenant-attributed mirror of the arena ledger arithmetic.
+        ledger.busy_secs += t_rep;
+        if start - ready > 0.0 {
+            ledger.queued_jobs += 1;
+        }
         queue_delay = queue_delay.max(start - ready);
         service_finish = service_finish.max(start + t_rep);
         if enabled {
@@ -661,13 +813,21 @@ fn dispatch_layer(
 pub(crate) struct EventLane<'a, 't> {
     tenant: u32,
     pipeline: bool,
-    /// Whether an account cap is active: requests then hold a ledger slot
-    /// from first dispatch to completion (release events close the loop).
+    /// Whether an account cap is active: requests (or their executions,
+    /// under execution granularity) then hold ledger slots, and release
+    /// events close the loop.
     capped: bool,
+    /// Execution-granular cap: each replica execution holds its own
+    /// account slot over `[start, start + t_rep]`.
+    cap_exec: bool,
     platform: &'a PlatformConfig,
     spec: &'a MoeModelSpec,
     num_layers: usize,
-    arena: SlotArena,
+    /// Index of this lane's arena in the driver's arena slice — several
+    /// lanes share one arena under cross-tenant expert sharing.
+    pub(crate) arena_id: usize,
+    /// Tenant-attributed busy/warm/cold/queued counters (see [`LaneLedger`]).
+    ledger: LaneLedger,
     autoscaler: Autoscaler,
     /// Policy layer plans with per-request token counts scribbled in;
     /// refreshed whenever the policy changes at an epoch boundary.
@@ -702,37 +862,71 @@ pub(crate) struct EventLane<'a, 't> {
     /// Cap-induced admission delay of each parked request, in grant order
     /// (empty when the run is uncapped or the cap never filled).
     pub(crate) cap_waits: Vec<f64>,
+    // ---- SLO-feedback arbitration ----
+    /// Adapt this lane's arbitration weight from its per-epoch SLO verdict.
+    slo_feedback: bool,
+    slo_p95: Option<f64>,
+    /// The declared weight (the adaptation floor) and the adapted weight.
+    base_weight: f64,
+    pub(crate) eff_weight: f64,
+    /// Latencies of requests finished since the last epoch boundary.
+    epoch_hist: LogHistogram,
+}
+
+/// Per-lane wiring the fleet driver decides: identity, arena assignment,
+/// cap mode, and SLO-feedback configuration.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LaneOpts {
+    pub(crate) tenant: u32,
+    pub(crate) arena_id: usize,
+    pub(crate) capped: bool,
+    pub(crate) cap_exec: bool,
+    pub(crate) slo_feedback: bool,
+    pub(crate) slo_p95: Option<f64>,
+    pub(crate) weight: f64,
+}
+
+impl LaneOpts {
+    /// The single-tenant engine's wiring: one uncapped lane, one arena.
+    pub(crate) fn solo() -> LaneOpts {
+        LaneOpts {
+            tenant: 0,
+            arena_id: 0,
+            capped: false,
+            cap_exec: false,
+            slo_feedback: false,
+            slo_p95: None,
+            weight: 1.0,
+        }
+    }
+}
+
+/// Largest replica count a hand-built policy deploys anywhere — the arena
+/// stride must cover it even when it exceeds `cfg.max_replicas` (the
+/// autoscaler's own ceiling).
+pub(crate) fn policy_stride(policy: &DeploymentPolicy) -> usize {
+    policy
+        .layers
+        .iter()
+        .flat_map(|l| l.experts.iter().map(|e| e.replicas))
+        .max()
+        .unwrap_or(1)
 }
 
 impl<'a, 't> EventLane<'a, 't> {
+    /// Build one lane. The caller owns the arena (shared arenas span
+    /// several lanes) and is responsible for sizing it to at least
+    /// [`policy_stride`] and pre-warming the plan when `cfg.prewarm` is on.
     pub(crate) fn new(
         sim: &EpochSimulator<'a>,
         policy: DeploymentPolicy,
         traffic: &'t [TimedBatch],
         pipeline: bool,
-        tenant: u32,
-        capped: bool,
+        opts: LaneOpts,
     ) -> EventLane<'a, 't> {
         let spec = sim.spec;
         let num_layers = spec.num_moe_layers();
         debug_assert_eq!(policy.layers.len(), num_layers);
-        // Arena stride: the autoscaler caps at cfg.max_replicas, but a
-        // hand-built initial policy may exceed it.
-        let policy_g = policy
-            .layers
-            .iter()
-            .flat_map(|l| l.experts.iter().map(|e| e.replicas))
-            .max()
-            .unwrap_or(1);
-        let mut arena = SlotArena::new(
-            spec,
-            sim.cfg.max_replicas.max(policy_g),
-            sim.cfg.keep_alive,
-            sim.cfg.concurrency,
-        );
-        if sim.cfg.prewarm {
-            arena.prewarm_plan(&policy.layers);
-        }
         // Popularity the current deployment was sized for, vs realized EMA.
         let plan_counts: Vec<Vec<u64>> = policy
             .layers
@@ -743,13 +937,15 @@ impl<'a, 't> EventLane<'a, 't> {
         let ema = basis.clone();
         let exact = sim.cfg.metrics == MetricsMode::Exact;
         EventLane {
-            tenant,
+            tenant: opts.tenant,
             pipeline,
-            capped,
+            capped: opts.capped,
+            cap_exec: opts.cap_exec,
             platform: sim.platform,
             spec,
             num_layers,
-            arena,
+            arena_id: opts.arena_id,
+            ledger: LaneLedger::default(),
             autoscaler: Autoscaler::new(sim.cfg.autoscale, sim.cfg.max_replicas),
             scratch: policy.layers.clone(),
             inflight: Vec::new(),
@@ -774,6 +970,11 @@ impl<'a, 't> EventLane<'a, 't> {
             next_epoch: sim.cfg.epoch_secs,
             last_batch: None,
             cap_waits: Vec::new(),
+            slo_feedback: opts.slo_feedback,
+            slo_p95: opts.slo_p95,
+            base_weight: opts.weight,
+            eff_weight: opts.weight,
+            epoch_hist: LogHistogram::latency_default(),
         }
     }
 
@@ -795,14 +996,21 @@ impl<'a, 't> EventLane<'a, 't> {
 
     /// Process the epoch boundary at `next_epoch`: replica autoscaling and
     /// (under `reoptimize`) the drift check + full redeploy, via the
-    /// engine-shared machinery on the owning simulator.
-    fn on_boundary(&mut self, sim: &mut EpochSimulator<'a>) {
+    /// engine-shared machinery on the owning simulator; then, under
+    /// SLO-feedback arbitration, re-weight this tenant from its epoch's
+    /// realized p95.
+    fn on_boundary(
+        &mut self,
+        sim: &mut EpochSimulator<'a>,
+        arena: &mut SlotArena,
+        cap: &mut AccountCap,
+    ) {
         let boundary = self.next_epoch;
         self.epochs += 1;
         let changed = sim.epoch_boundary(
             boundary,
             &mut self.policy,
-            &mut self.arena,
+            arena,
             &mut self.autoscaler,
             self.last_batch,
             &mut self.basis,
@@ -818,6 +1026,23 @@ impl<'a, 't> EventLane<'a, 't> {
         // remaining layers of requests already in flight.
         self.blocked_until = self.redeploy_ready;
         self.next_epoch += sim.cfg.epoch_secs;
+        // SLO-feedback arbitration: a tenant that missed its p95 target
+        // this epoch doubles its grant weight (capped at 8× the declared
+        // weight); one that met it decays back toward the declared floor.
+        // Multiplicative-increase keeps the adaptation scale-free and the
+        // floor keeps a persistently-happy tenant at its contract weight.
+        if self.slo_feedback && self.epoch_hist.count() > 0 {
+            if let Some(slo) = self.slo_p95 {
+                let p95 = self.epoch_hist.percentile(95.0);
+                self.eff_weight = if p95 > slo {
+                    (self.eff_weight * 2.0).min(self.base_weight * 8.0)
+                } else {
+                    (self.eff_weight * 0.5).max(self.base_weight)
+                };
+                cap.set_weight(self.tenant as usize, self.eff_weight);
+                self.epoch_hist = LogHistogram::latency_default();
+            }
+        }
     }
 
     /// Admit the next arrival: route the batch, feed the predictor, then
@@ -828,6 +1053,7 @@ impl<'a, 't> EventLane<'a, 't> {
         sim: &mut EpochSimulator<'a>,
         q: &mut EventQueue,
         cap: &mut AccountCap,
+        arena: &mut SlotArena,
     ) {
         let traffic = self.traffic;
         let tb = &traffic[self.cursor];
@@ -864,13 +1090,13 @@ impl<'a, 't> EventLane<'a, 't> {
             if ready > t {
                 q.push(ready, self.tenant, slot as u32);
             } else {
-                self.dispatch(q, slot, ready);
+                self.dispatch(q, cap, arena, slot, ready);
             }
         } else {
             let counts = std::mem::take(&mut self.counts_buf);
-            let finish = self.serve_monolithic(ri, t, ready, &counts, t);
+            let finish = self.serve_monolithic(q, cap, arena, ri, t, ready, &counts, t);
             self.counts_buf = counts;
-            if self.capped {
+            if self.capped && !self.cap_exec {
                 q.push(finish, self.tenant, REQ_RELEASE);
             }
         }
@@ -900,32 +1126,48 @@ impl<'a, 't> EventLane<'a, 't> {
     /// Start a granted (previously cap-parked) request at virtual time
     /// `at`: first layer dispatch under pipelining, whole-request monolithic
     /// service otherwise. Only reachable under an active cap.
-    fn start_request(&mut self, q: &mut EventQueue, slot: usize, at: f64) {
+    fn start_request(
+        &mut self,
+        q: &mut EventQueue,
+        cap: &mut AccountCap,
+        arena: &mut SlotArena,
+        slot: usize,
+        at: f64,
+    ) {
         if self.pipeline {
-            self.dispatch(q, slot, at);
+            self.dispatch(q, cap, arena, slot, at);
         } else {
             let at = at.max(self.blocked_until);
             let counts = std::mem::take(&mut self.inflight[slot].counts);
             let ri = self.inflight[slot].traffic_idx;
             let arrival = self.inflight[slot].arrival;
-            let finish = self.serve_monolithic(ri, arrival, at, &counts, at);
+            let finish = self.serve_monolithic(q, cap, arena, ri, arrival, at, &counts, at);
             self.inflight[slot].counts = counts;
             self.free.push(slot);
-            q.push(finish, self.tenant, REQ_RELEASE);
+            if !self.cap_exec {
+                q.push(finish, self.tenant, REQ_RELEASE);
+            }
         }
     }
 
     /// Dispatch the next layer of an in-flight request at `now` (clamped
     /// past any redeploy gap); chain the following layer at this layer's
     /// completion, or finalize the request.
-    fn dispatch(&mut self, q: &mut EventQueue, slot: usize, now: f64) {
+    fn dispatch(
+        &mut self,
+        q: &mut EventQueue,
+        cap: &mut AccountCap,
+        arena: &mut SlotArena,
+        slot: usize,
+        now: f64,
+    ) {
         let now = now.max(self.blocked_until);
         let l = self.inflight[slot].next_layer;
         self.pending.clear();
         let d = dispatch_layer(
             self.platform,
             self.spec,
-            &mut self.arena,
+            arena,
             &mut self.autoscaler,
             &mut self.scratch[l],
             l,
@@ -933,10 +1175,23 @@ impl<'a, 't> EventLane<'a, 't> {
             now,
             &mut self.pending,
             &mut self.bufs,
+            &mut self.ledger,
         );
         // Keep-alive runs from each replica's own execution end.
         for &(idx, start, t_rep) in &self.pending {
-            self.arena.invoke(idx, start, start + t_rep);
+            if arena.invoke(idx, start, start + t_rep) {
+                self.ledger.warm_hits += 1;
+            } else {
+                self.ledger.cold_starts += 1;
+            }
+        }
+        // Execution-granular cap: every replica execution of this layer
+        // holds one account slot over its own busy window.
+        if self.cap_exec {
+            for &(_, start, t_rep) in &self.pending {
+                cap.acquire_exec(self.tenant as usize, start + t_rep);
+                q.push(start + t_rep, self.tenant, EXEC_RELEASE);
+            }
         }
         self.total_cost += d.cost;
         let completion = d.service_finish.max(now) + (d.latency - d.max_service).max(0.0);
@@ -965,12 +1220,15 @@ impl<'a, 't> EventLane<'a, 't> {
         let idx = fl.traffic_idx;
         let violated = fl.violated;
         self.metrics.record(idx, latency, queue_delay, now, self.total_cost);
+        if self.slo_feedback {
+            self.epoch_hist.add(latency);
+        }
         if violated {
             self.violation_batches += 1;
         }
         self.last_finish = self.last_finish.max(finish);
         self.free.push(slot);
-        if self.capped {
+        if self.capped && !self.cap_exec {
             q.push(finish, self.tenant, REQ_RELEASE);
         }
     }
@@ -982,8 +1240,12 @@ impl<'a, 't> EventLane<'a, 't> {
     /// timeline is stamped at `stamp`: the arrival for immediate dispatches
     /// (matching the legacy loop bit-for-bit) and the grant time for
     /// cap-parked ones, so the timeline stays time-sorted.
+    #[allow(clippy::too_many_arguments)]
     fn serve_monolithic(
         &mut self,
+        q: &mut EventQueue,
+        cap: &mut AccountCap,
+        arena: &mut SlotArena,
         ri: usize,
         t: f64,
         ready: f64,
@@ -1001,7 +1263,7 @@ impl<'a, 't> EventLane<'a, 't> {
             let d = dispatch_layer(
                 self.platform,
                 self.spec,
-                &mut self.arena,
+                arena,
                 &mut self.autoscaler,
                 &mut self.scratch[l],
                 l,
@@ -1009,6 +1271,7 @@ impl<'a, 't> EventLane<'a, 't> {
                 ready,
                 &mut self.pending,
                 &mut self.bufs,
+                &mut self.ledger,
             );
             queue_delay = queue_delay.max(d.queue_delay);
             max_service = max_service.max(d.max_service);
@@ -1022,33 +1285,56 @@ impl<'a, 't> EventLane<'a, 't> {
         let tail = (latency_sum - max_service).max(0.0);
         let finish = service_finish + tail;
         for &(idx, start, _) in &self.pending {
-            self.arena.invoke(idx, start, finish);
+            if arena.invoke(idx, start, finish) {
+                self.ledger.warm_hits += 1;
+            } else {
+                self.ledger.cold_starts += 1;
+            }
+        }
+        // Execution-granular cap: monolithic dispatch admits every layer's
+        // replicas up front, so each execution's slot is held over its own
+        // scheduled busy window exactly as in the pipelined path.
+        if self.cap_exec {
+            for &(_, start, t_rep) in &self.pending {
+                cap.acquire_exec(self.tenant as usize, start + t_rep);
+                q.push(start + t_rep, self.tenant, EXEC_RELEASE);
+            }
         }
         self.total_cost += cost_sum;
         if violated {
             self.violation_batches += 1;
         }
         self.metrics.record(ri, finish - t, queue_delay, stamp, self.total_cost);
+        if self.slo_feedback {
+            self.epoch_hist.add(finish - t);
+        }
         self.last_finish = self.last_finish.max(finish);
         finish
     }
 
     /// Assemble the lane's report and hand the run artifacts back to its
-    /// simulator — the single-tenant engine epilogue, per lane.
-    fn finish(&mut self, sim: &mut EpochSimulator<'a>) -> SimReport {
-        debug_assert_eq!(self.cursor, self.traffic.len(), "lane finished with pending arrivals");
+    /// simulator — the single-tenant engine epilogue, per lane. A hard
+    /// assert in every build profile: a driver bug that dropped arrivals
+    /// would otherwise silently truncate the trace and report rosy numbers.
+    fn finish(&mut self, sim: &mut EpochSimulator<'a>, arena: &SlotArena) -> SimReport {
+        assert_eq!(self.cursor, self.traffic.len(), "lane finished with pending arrivals");
         let requests = self.traffic.len() as u64;
         let mut report =
             self.metrics
                 .build_report(requests, self.tokens, self.last_finish, self.total_cost);
         report.epochs = self.epochs;
         report.redeploys = self.redeploys;
-        report.warm_invocations = self.arena.warm_hits;
-        report.cold_invocations = self.arena.cold_starts;
+        // Invocation/busy counters come from the lane's own attribution
+        // ledger (identical to the arena's for a private pool; the
+        // per-tenant split of it for a shared pool).
+        report.warm_invocations = self.ledger.warm_hits;
+        report.cold_invocations = self.ledger.cold_starts;
         report.violation_batches = self.violation_batches;
-        report.queued_invocations = self.arena.queued_jobs;
-        report.busy_secs = self.arena.total_busy_secs();
-        report.max_utilization = self.arena.max_utilization(self.last_finish);
+        report.queued_invocations = self.ledger.queued_jobs;
+        report.busy_secs = self.ledger.busy_secs;
+        // Utilization is a property of the instances themselves, so it
+        // stays arena-derived — pool-wide under sharing, by design.
+        report.max_utilization = arena.max_utilization(self.last_finish);
         report.scale_outs = self.autoscaler.scale_outs;
         report.scale_ins = self.autoscaler.scale_ins;
         sim.autoscale_events = self.autoscaler.events.clone();
@@ -1070,13 +1356,177 @@ const KIND_EVENT: u8 = 0;
 const KIND_BOUNDARY: u8 = 1;
 const KIND_ARRIVAL: u8 = 2;
 
+/// Which step-selection loop drives the lanes. Both execute the identical
+/// operation sequence (pinned byte-identical on every committed scenario);
+/// the heap is the default, the scan is kept as the cross-validation
+/// baseline and for the identity tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FleetDriver {
+    /// Candidate heap over `(time, tenant, kind)`: O(events · log tenants).
+    Heap,
+    /// The PR 5 per-step linear scan of every lane: O(tenants × events).
+    Scan,
+}
+
+/// One lane's next non-event step, ordered `(at, tenant, kind)` — the same
+/// total step order the scan driver applies, so the two drivers pop
+/// identical step sequences.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    at: f64,
+    tenant: u32,
+    kind: u8,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Cand) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Cand) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Cand) -> Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.tenant.cmp(&other.tenant))
+            .then(self.kind.cmp(&other.kind))
+    }
+}
+
+impl EventLane<'_, '_> {
+    /// The lane's boundary-or-arrival candidate for the driver's step race.
+    /// Depends only on `(cursor, next_epoch)`, which change exclusively in
+    /// this lane's own `on_arrival`/`on_boundary` — the invariant that lets
+    /// the heap driver keep at most one live candidate per lane.
+    fn candidate(&self) -> Option<Cand> {
+        match (self.boundary_due(), self.next_arrival()) {
+            (Some(b), _) => Some(Cand { at: b, tenant: self.tenant, kind: KIND_BOUNDARY }),
+            (None, Some(a)) => Some(Cand { at: a, tenant: self.tenant, kind: KIND_ARRIVAL }),
+            (None, None) => None,
+        }
+    }
+}
+
+/// Execute one selected step — identical for both drivers, so they can
+/// only differ in *selection*, which the identity tests pin to be the same.
+fn run_step<'a>(
+    sims: &mut [EpochSimulator<'a>],
+    lanes: &mut [EventLane<'a, '_>],
+    arenas: &mut [SlotArena],
+    q: &mut EventQueue,
+    cap: &mut AccountCap,
+    tenant: u32,
+    kind: u8,
+) {
+    let ti = tenant as usize;
+    match kind {
+        KIND_EVENT => {
+            let ev = q.pop().expect("peeked event is still there");
+            if ev.req == REQ_RELEASE || ev.req == EXEC_RELEASE {
+                // A finished hold frees its account slot; the arbitration
+                // policy picks who gets it.
+                cap.release(ev.tenant as usize, ev.at);
+                while let Some((wt, w)) = cap.grant() {
+                    lanes[wt].cap_waits.push((ev.at - w.ready).max(0.0));
+                    let aid = lanes[wt].arena_id;
+                    lanes[wt].start_request(q, cap, &mut arenas[aid], w.slot, ev.at);
+                }
+            } else {
+                let aid = lanes[ti].arena_id;
+                lanes[ti].dispatch(q, cap, &mut arenas[aid], ev.req as usize, ev.at);
+            }
+        }
+        KIND_BOUNDARY => {
+            let aid = lanes[ti].arena_id;
+            lanes[ti].on_boundary(&mut sims[ti], &mut arenas[aid], cap);
+        }
+        _ => {
+            let aid = lanes[ti].arena_id;
+            lanes[ti].on_arrival(&mut sims[ti], q, cap, &mut arenas[aid]);
+        }
+    }
+}
+
 /// Drive every lane to completion against one shared event queue and
 /// account ledger, returning one report per lane (in lane order). With a
 /// single uncapped lane this reproduces the pre-fleet single-tenant engine
 /// operation-for-operation — the reproduction pin the fleet tests hold.
+///
+/// Step selection races the event-heap head against a candidate heap
+/// holding each lane's next boundary/arrival, both ordered
+/// `(time, tenant, kind)` with `kind[event] < kind[boundary] <
+/// kind[arrival]` — O(log tenants) per step instead of the scan driver's
+/// O(tenants). A lane's candidate is recomputed only after one of its own
+/// candidate steps ran (event steps never move a lane's cursor or epoch
+/// clock), so the heap never holds stale entries.
 pub(crate) fn drive<'a>(
     sims: &mut [EpochSimulator<'a>],
     lanes: &mut [EventLane<'a, '_>],
+    arenas: &mut [SlotArena],
+    q: &mut EventQueue,
+    cap: &mut AccountCap,
+) -> Vec<SimReport> {
+    debug_assert_eq!(sims.len(), lanes.len(), "one simulator per lane");
+    let mut cands: BinaryHeap<Reverse<Cand>> = BinaryHeap::with_capacity(lanes.len());
+    for lane in lanes.iter() {
+        if let Some(c) = lane.candidate() {
+            cands.push(Reverse(c));
+        }
+    }
+    loop {
+        let (tenant, kind) = match (q.peek(), cands.peek().map(|r| r.0)) {
+            (None, None) => break,
+            (Some(ev), None) => (ev.tenant, KIND_EVENT),
+            (None, Some(c)) => {
+                cands.pop();
+                (c.tenant, c.kind)
+            }
+            (Some(ev), Some(c)) => {
+                // An event at the same (time, tenant) always runs before a
+                // boundary/arrival: KIND_EVENT is the smallest kind.
+                let ec = Cand { at: ev.at, tenant: ev.tenant, kind: KIND_EVENT };
+                if c < ec {
+                    cands.pop();
+                    (c.tenant, c.kind)
+                } else {
+                    (ev.tenant, KIND_EVENT)
+                }
+            }
+        };
+        run_step(sims, lanes, arenas, q, cap, tenant, kind);
+        if kind != KIND_EVENT {
+            // Only the lane's own candidate step moved its cursor/epoch
+            // clock; refresh its (single) heap entry.
+            if let Some(c) = lanes[tenant as usize].candidate() {
+                cands.push(Reverse(c));
+            }
+        }
+    }
+    lanes
+        .iter_mut()
+        .zip(sims.iter_mut())
+        .map(|(lane, sim)| {
+            let arena = &arenas[lane.arena_id];
+            lane.finish(sim, arena)
+        })
+        .collect()
+}
+
+/// The PR 5 linear-scan driver, kept verbatim as the byte-identity
+/// baseline for [`drive`]: every step re-scans all lanes for the minimal
+/// `(time, tenant, kind)` candidate.
+pub(crate) fn drive_scan<'a>(
+    sims: &mut [EpochSimulator<'a>],
+    lanes: &mut [EventLane<'a, '_>],
+    arenas: &mut [SlotArena],
     q: &mut EventQueue,
     cap: &mut AccountCap,
 ) -> Vec<SimReport> {
@@ -1090,10 +1540,9 @@ pub(crate) fn drive<'a>(
             best = Some((ev.at, ev.tenant, KIND_EVENT));
         }
         for lane in lanes.iter() {
-            let cand = match (lane.boundary_due(), lane.next_arrival()) {
-                (Some(b), _) => (b, lane.tenant, KIND_BOUNDARY),
-                (None, Some(a)) => (a, lane.tenant, KIND_ARRIVAL),
-                (None, None) => continue,
+            let cand = match lane.candidate() {
+                Some(c) => (c.at, c.tenant, c.kind),
+                None => continue,
             };
             let better = match best {
                 None => true,
@@ -1106,30 +1555,15 @@ pub(crate) fn drive<'a>(
             }
         }
         let Some((_, tenant, kind)) = best else { break };
-        let ti = tenant as usize;
-        match kind {
-            KIND_EVENT => {
-                let ev = q.pop().expect("peeked event is still there");
-                if ev.req == REQ_RELEASE {
-                    // A finished request frees its account slot; the
-                    // arbitration policy picks who gets it.
-                    cap.release(ev.tenant as usize);
-                    while let Some((wt, w)) = cap.grant() {
-                        lanes[wt].cap_waits.push((ev.at - w.ready).max(0.0));
-                        lanes[wt].start_request(q, w.slot, ev.at);
-                    }
-                } else {
-                    lanes[ti].dispatch(q, ev.req as usize, ev.at);
-                }
-            }
-            KIND_BOUNDARY => lanes[ti].on_boundary(&mut sims[ti]),
-            _ => lanes[ti].on_arrival(&mut sims[ti], q, cap),
-        }
+        run_step(sims, lanes, arenas, q, cap, tenant, kind);
     }
     lanes
         .iter_mut()
         .zip(sims.iter_mut())
-        .map(|(lane, sim)| lane.finish(sim))
+        .map(|(lane, sim)| {
+            let arena = &arenas[lane.arena_id];
+            lane.finish(sim, arena)
+        })
         .collect()
 }
 
@@ -1146,8 +1580,20 @@ impl EpochSimulator<'_> {
     ) -> SimReport {
         let mut q = EventQueue::new();
         let mut cap = AccountCap::unbounded(1);
-        let mut lanes = [EventLane::new(self, policy, traffic, pipeline, 0, false)];
-        drive(std::slice::from_mut(self), &mut lanes, &mut q, &mut cap)
+        // Arena stride: the autoscaler caps at cfg.max_replicas, but a
+        // hand-built initial policy may exceed it.
+        let mut arena = SlotArena::new(
+            self.spec,
+            self.cfg.max_replicas.max(policy_stride(&policy)),
+            self.cfg.keep_alive,
+            self.cfg.concurrency,
+        );
+        if self.cfg.prewarm {
+            arena.prewarm_plan(&policy.layers);
+        }
+        let mut arenas = [arena];
+        let mut lanes = [EventLane::new(self, policy, traffic, pipeline, LaneOpts::solo())];
+        drive(std::slice::from_mut(self), &mut lanes, &mut arenas, &mut q, &mut cap)
             .pop()
             .expect("one lane yields one report")
     }
@@ -1273,7 +1719,12 @@ mod tests {
 
     #[test]
     fn account_cap_fifo_and_release_grant_cycle() {
-        let mut cap = AccountCap::new(Some(2), FleetArbitration::Fifo, &[1.0, 1.0]);
+        let mut cap = AccountCap::new(
+            Some(2),
+            FleetArbitration::Fifo,
+            CapGranularity::Request,
+            &[1.0, 1.0],
+        );
         assert!(cap.enabled());
         assert!(cap.try_acquire(0));
         assert!(cap.try_acquire(1));
@@ -1285,11 +1736,11 @@ mod tests {
         // Nothing free yet: no grant.
         assert!(cap.grant().is_none());
         // One release → the earliest-parked waiter (tenant 0) is granted.
-        cap.release(1);
+        cap.release(1, 4.0);
         let (t, w) = cap.grant().expect("a slot freed with waiters parked");
         assert_eq!((t, w.slot, w.ready), (0, 7, 3.0));
         assert!(cap.grant().is_none(), "ledger full again");
-        cap.release(0);
+        cap.release(0, 5.0);
         let (t, w) = cap.grant().expect("second waiter granted");
         assert_eq!((t, w.slot), (1, 8));
         assert_eq!(cap.in_use(), 2);
@@ -1297,7 +1748,12 @@ mod tests {
 
     #[test]
     fn account_cap_weighted_fair_prefers_underweighted_tenant() {
-        let mut cap = AccountCap::new(Some(3), FleetArbitration::WeightedFair, &[2.0, 1.0]);
+        let mut cap = AccountCap::new(
+            Some(3),
+            FleetArbitration::WeightedFair,
+            CapGranularity::Request,
+            &[2.0, 1.0],
+        );
         // Tenant 0 holds two slots, tenant 1 one: in_use/weight = 1.0 each.
         assert!(cap.try_acquire(0));
         assert!(cap.try_acquire(0));
@@ -1305,17 +1761,133 @@ mod tests {
         // Both tenants have waiters.
         cap.park(1, 5, 1.0);
         cap.park(0, 6, 2.0);
-        cap.release(1);
+        cap.release(1, 2.0);
         // Keys: tenant 0 = 2/2 = 1.0, tenant 1 = 0/1 = 0.0 → tenant 1 wins.
         let (t, _) = cap.grant().expect("grant");
         assert_eq!(t, 1);
         // Tenant 1 parks again, tenant 0 releases one slot.
         cap.park(1, 9, 3.0);
-        cap.release(0);
+        cap.release(0, 3.0);
         // Keys: tenant 0 = 1/2 = 0.5, tenant 1 = 1/1 = 1.0 → tenant 0 wins
         // even though tenant 1's waiter parked first (weighted, not FIFO).
         let (t, w) = cap.grant().expect("grant");
         assert_eq!((t, w.slot), (0, 6));
+    }
+
+    #[test]
+    fn weighted_fair_breaks_ties_by_earliest_park_not_tenant_index() {
+        // Two perfectly symmetric tenants: equal weights, equal in-use.
+        // The higher-index tenant parked first, so it must win the tied
+        // grant — the pre-fix behavior handed every tie to tenant 0,
+        // structurally starving tenant 1 under symmetric load.
+        let mut cap = AccountCap::new(
+            Some(2),
+            FleetArbitration::WeightedFair,
+            CapGranularity::Request,
+            &[1.0, 1.0],
+        );
+        assert!(cap.try_acquire(0));
+        assert!(cap.try_acquire(1));
+        cap.park(1, 11, 1.0); // tenant 1 parks first...
+        cap.park(0, 10, 2.0); // ...then tenant 0
+        cap.release(0, 3.0);
+        cap.release(1, 3.5);
+        // Dead tie (in_use_by = [0, 0], equal weights): the earliest park
+        // seq — tenant 1's — must win, not the lower index.
+        let (t, w) = cap.grant().expect("grant");
+        assert_eq!((t, w.slot), (1, 11), "earliest park seq wins the tie");
+        let (t, w) = cap.grant().expect("grant");
+        assert_eq!((t, w.slot), (0, 10));
+        // Mirror image: tenant 0 parks first this time and wins the same
+        // dead tie — the break is FIFO, not index order in either direction.
+        cap.park(0, 20, 4.0);
+        cap.park(1, 21, 5.0);
+        cap.release(0, 6.0);
+        cap.release(1, 6.5);
+        let (t, w) = cap.grant().expect("grant");
+        assert_eq!((t, w.slot), (0, 20));
+        let (t, w) = cap.grant().expect("grant");
+        assert_eq!((t, w.slot), (1, 21));
+    }
+
+    #[test]
+    fn execution_granular_cap_charges_per_execution_with_conserved_ledger() {
+        let mut cap = AccountCap::new(
+            Some(4),
+            FleetArbitration::Fifo,
+            CapGranularity::Execution,
+            &[1.0],
+        );
+        cap.enable_audit();
+        assert!(cap.execution_granular());
+        // Admission is a pure headroom check: nothing is charged yet.
+        assert!(cap.try_acquire(0));
+        assert_eq!(cap.in_use(), 0);
+        // The request fans out to 3 replica executions.
+        cap.acquire_exec(0, 2.0);
+        cap.acquire_exec(0, 3.0);
+        cap.acquire_exec(0, 2.5);
+        assert_eq!(cap.in_use(), 3);
+        // A second request sees 1 free slot and is admitted; its single
+        // execution fills the ledger, so a third request parks.
+        assert!(cap.try_acquire(0));
+        cap.acquire_exec(0, 4.0);
+        assert!(!cap.try_acquire(0));
+        cap.park(0, 7, 1.5);
+        // Executions release individually, in end order.
+        cap.release(0, 2.0);
+        let (t, w) = cap.grant().expect("headroom frees the parked request");
+        assert_eq!((t, w.slot), (0, 7));
+        // The grant itself charged nothing (the request's executions will).
+        assert_eq!(cap.in_use(), 3);
+        cap.release(0, 2.5);
+        cap.release(0, 3.0);
+        cap.release(0, 4.0);
+        assert_eq!(cap.in_use(), 0);
+        // Replay the audit: the running count must equal the recorded
+        // in_use at every transition and close at zero.
+        let log = cap.take_audit();
+        assert_eq!(log.len(), 8, "4 acquires + 4 releases");
+        let mut live = 0usize;
+        for entry in &log {
+            match *entry {
+                CapAudit::Acquire { in_use, .. } => {
+                    live += 1;
+                    assert_eq!(live, in_use);
+                }
+                CapAudit::Release { in_use, .. } => {
+                    live -= 1;
+                    assert_eq!(live, in_use);
+                }
+            }
+        }
+        assert_eq!(live, 0);
+    }
+
+    #[test]
+    fn refcounted_arena_survives_eviction_until_last_owner_leaves() {
+        let spec = ModelPreset::TinyMoe.spec();
+        let mut a = SlotArena::new(&spec, 2, 100.0, Some(1));
+        a.enable_refcounts();
+        let key = (0, 0, 0);
+        InstancePool::retain(&mut a, key);
+        InstancePool::retain(&mut a, key);
+        let idx = a.index(0, 0, 0);
+        a.admit(idx, 0.0, 5.0);
+        a.invoke(idx, 0.0, 5.0);
+        assert!(a.is_warm_at(idx, 50.0));
+        // First eviction: the co-owner keeps the environment warm.
+        InstancePool::evict(&mut a, key);
+        assert!(a.is_warm_at(idx, 50.0), "shared instance must survive one owner's scale-in");
+        // Last owner leaves: now it really tears down.
+        InstancePool::evict(&mut a, key);
+        assert!(!a.is_warm_at(idx, 50.0));
+        // Without refcounts the old semantics are untouched.
+        let mut b = SlotArena::new(&spec, 2, 100.0, Some(1));
+        let bidx = b.index(0, 0, 0);
+        b.invoke(bidx, 0.0, 5.0);
+        InstancePool::evict(&mut b, key);
+        assert!(!b.is_warm_at(bidx, 50.0));
     }
 
     #[test]
