@@ -138,6 +138,7 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
                 name,
                 weight: 1.0 + (i % 4) as f64,
                 slo_p95: None,
+                active: None,
                 source: TenantSource::Inline(scenario),
             })
         })
@@ -149,6 +150,7 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
         cap_granularity: CapGranularity::Execution,
         share_experts: true,
         slo_feedback: false,
+        batch_window: 0.0,
         tenants,
     };
 
@@ -175,6 +177,7 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
         ("requests_per_sec", Json::num(total_requests as f64 / wall_secs.max(1e-9))),
         ("total_cost", Json::num(r.total_cost)),
         ("fairness", Json::num(r.fairness)),
+        ("peak_concurrency", Json::num(r.peak_concurrency as f64)),
         ("capped_requests", Json::num(r.capped_requests as f64)),
         ("vm_hwm_mb", Json::num(vm_hwm_mb)),
         ("budget_secs", Json::num(budget)),

@@ -58,7 +58,7 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
 fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
     let fleet = FleetScenario::load(path)?;
     println!(
-        "fleet '{}': {} tenants, account cap {} ({}-granular slots), {} arbitration{}{}",
+        "fleet '{}': {} tenants, account cap {} ({}-granular slots), {} arbitration{}{}{}",
         fleet.name,
         fleet.tenants.len(),
         fleet
@@ -69,6 +69,11 @@ fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
         fleet.arbitration.name(),
         if fleet.share_experts { ", shared expert pools" } else { "" },
         if fleet.slo_feedback { ", SLO-feedback weights" } else { "" },
+        if fleet.batch_window > 0.0 {
+            format!(", {}s batching window", fleet.batch_window)
+        } else {
+            String::new()
+        },
     );
     let shared = fleet.run()?.report;
     let isolated = fleet.run_isolated()?.report;

@@ -239,6 +239,7 @@ fn demo_fleet() -> FleetScenario {
             name: name.to_string(),
             weight: 1.0,
             slo_p95: None,
+            active: None,
             source: TenantSource::Inline(scenario),
         }
     };
@@ -251,6 +252,7 @@ fn demo_fleet() -> FleetScenario {
         cap_granularity: CapGranularity::Request,
         share_experts: false,
         slo_feedback: false,
+        batch_window: 0.0,
         tenants: vec![tenant("chat", 0xF1, true), tenant("batch", 0xF2, false)],
     }
 }

@@ -382,6 +382,39 @@ impl Autoscaler {
         self.reset_epoch();
         changes
     }
+
+    /// Tenant-departure scale-in (`active` window end): release every
+    /// replica ownership the tenant's policy holds in `pool` and count the
+    /// idle ones reaped as scale-in events. Unlike [`Autoscaler::rescale`]
+    /// this runs regardless of the autoscale policy — offboarding is a
+    /// churn event, not a utilization decision — and leaves the policy's
+    /// replica counts untouched (straggler in-flight layers may still
+    /// dispatch against the policy shape, paying cold starts). A replica
+    /// still draining its FIFO at `now` is skipped, exactly as epoch
+    /// scale-in skips it; on a refcounted (shared) pool the evict only
+    /// tears the environment down when the last owning tenant leaves.
+    pub fn depart<P: InstancePool + ?Sized>(
+        &mut self,
+        policy: &DeploymentPolicy,
+        pool: &mut P,
+        now: f64,
+    ) {
+        let mut reaped = 0i64;
+        for (l, lp) in policy.layers.iter().enumerate() {
+            for (i, ep) in lp.experts.iter().enumerate() {
+                for g in 0..ep.replicas {
+                    if pool.idle_at((l, i, g), now) {
+                        pool.evict((l, i, g));
+                        reaped += 1;
+                    }
+                }
+            }
+        }
+        if reaped > 0 {
+            self.events.push((now, -reaped));
+            self.scale_ins += reaped as u64;
+        }
+    }
 }
 
 #[cfg(test)]

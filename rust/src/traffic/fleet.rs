@@ -67,8 +67,8 @@ use super::error::{self, ScenarioError};
 use super::report::{FleetReport, TenantReport};
 use super::scenario::{Baseline, ModelSource, RunArtifacts, Scenario, TrafficScenario};
 use super::sim::{
-    drive, drive_scan, policy_stride, AccountCap, CapAudit, EventLane, EventQueue, FleetDriver,
-    LaneOpts, SlotArena,
+    drive, drive_scan, policy_stride, AccountCap, BatchPool, CapAudit, EventLane, EventQueue,
+    FleetDriver, LaneOpts, SlotArena,
 };
 use crate::deploy::DeploymentPolicy;
 use crate::platform::InstancePool;
@@ -96,16 +96,26 @@ pub struct TenantSpec {
     /// Optional p95 latency SLO (seconds) recorded per tenant in the
     /// [`FleetReport`].
     pub slo_p95: Option<f64>,
+    /// Optional `[start, end)` activity window (seconds of virtual time;
+    /// `None` = active for the whole run). A windowed tenant *onboards* at
+    /// `start` — retaining the shared arena's replicas it relies on — and
+    /// *offboards* at `end`, releasing them and scaling idle instances in;
+    /// outside the window its lane produces no steps at all. Every arrival
+    /// of the tenant's traffic must fall inside the window (checked at run
+    /// time, once traffic is materialized).
+    pub active: Option<(f64, f64)>,
     pub source: TenantSource,
 }
 
 impl TenantSpec {
-    /// A tenant wrapping an inline scenario with weight 1 and no SLO.
+    /// A tenant wrapping an inline scenario with weight 1, no SLO, and no
+    /// activity window (active the whole run).
     pub fn inline(name: &str, scenario: Scenario) -> TenantSpec {
         TenantSpec {
             name: name.to_string(),
             weight: 1.0,
             slo_p95: None,
+            active: None,
             source: TenantSource::Inline(scenario),
         }
     }
@@ -117,6 +127,9 @@ impl TenantSpec {
         ];
         if let Some(slo) = self.slo_p95 {
             pairs.push(("slo_p95", Json::num(slo)));
+        }
+        if let Some((start, end)) = self.active {
+            pairs.push(("active", Json::Arr(vec![Json::num(start), Json::num(end)])));
         }
         pairs.push((
             "scenario",
@@ -130,19 +143,43 @@ impl TenantSpec {
 
     pub fn from_json(j: &Json, idx: usize) -> Result<TenantSpec, ScenarioError> {
         let section = format!("tenants[{idx}]");
-        error::check_keys(j, &section, &["name", "weight", "slo_p95", "scenario"])?;
+        error::check_keys(j, &section, &["name", "weight", "slo_p95", "active", "scenario"])?;
         let name = error::req_str(j, &section, "name")?.to_string();
         let weight = error::opt_f64(j, &section, "weight", 1.0)?;
+        // `null` encodes absent/unbounded throughout the scenario schema
+        // (the PR 4 convention `opt_duration` set); an explicit
+        // `"slo_p95": null` therefore reads as "no SLO", not a type error.
         let slo_p95 = match j.get("slo_p95") {
-            None => None,
+            None | Some(Json::Null) => None,
             Some(_) => Some(error::req_f64(j, &section, "slo_p95")?),
+        };
+        let active = match j.get("active") {
+            None | Some(Json::Null) => None,
+            Some(Json::Arr(pair)) => {
+                let nums: Option<Vec<f64>> = pair.iter().map(Json::as_f64).collect();
+                match nums.as_deref() {
+                    Some([start, end]) => Some((*start, *end)),
+                    _ => {
+                        return Err(ScenarioError::invalid(
+                            format!("{section}.active"),
+                            "expected a [start, end] pair of numbers",
+                        ))
+                    }
+                }
+            }
+            Some(other) => {
+                return Err(ScenarioError::invalid(
+                    format!("{section}.active"),
+                    format!("expected a [start, end] pair or null, got {other:?}"),
+                ))
+            }
         };
         let source = match j.get("scenario") {
             None => return Err(ScenarioError::missing(&*section, "scenario")),
             Some(Json::Str(p)) => TenantSource::Ref(p.clone()),
             Some(obj) => TenantSource::Inline(Scenario::from_json(obj)?),
         };
-        Ok(TenantSpec { name, weight, slo_p95, source })
+        Ok(TenantSpec { name, weight, slo_p95, active, source })
     }
 }
 
@@ -176,6 +213,14 @@ pub struct FleetScenario {
     /// `weighted-fair` arbitration; tenants without an SLO keep their
     /// declared weight).
     pub slo_feedback: bool,
+    /// Cross-tenant invocation batching window (seconds; `0.0` = off, the
+    /// default). When positive — requires `share_experts` — layer
+    /// dispatches of same-pool tenants landing on the same shared replica
+    /// FIFO within the window merge into *one* invocation: one cold/warm
+    /// judgment, one execution priced from the combined token count,
+    /// per-tenant billing split by token share. Joins are reported per
+    /// tenant as `batched_invocations`.
+    pub batch_window: f64,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -213,6 +258,19 @@ impl FleetScenario {
                  it requires arbitration = \"weighted-fair\"",
             ));
         }
+        if !(self.batch_window.is_finite() && self.batch_window >= 0.0) {
+            return Err(ScenarioError::invalid(
+                "fleet.batch_window",
+                format!("must be finite and >= 0 (0 = off), got {}", self.batch_window),
+            ));
+        }
+        if self.batch_window > 0.0 && !self.share_experts {
+            return Err(ScenarioError::invalid(
+                "fleet.batch_window",
+                "cross-tenant batching merges dispatches on a *shared* replica pool; \
+                 it requires share_experts = true",
+            ));
+        }
         let mut seen = std::collections::BTreeSet::new();
         for (i, t) in self.tenants.iter().enumerate() {
             if t.name.is_empty() {
@@ -238,6 +296,14 @@ impl FleetScenario {
                     return Err(ScenarioError::invalid(
                         format!("tenants[{i}].slo_p95"),
                         format!("must be finite and > 0, got {slo}"),
+                    ));
+                }
+            }
+            if let Some((start, end)) = t.active {
+                if !(start.is_finite() && end.is_finite() && start >= 0.0 && start < end) {
+                    return Err(ScenarioError::invalid(
+                        format!("tenants[{i}].active"),
+                        format!("window must satisfy 0 <= start < end, got [{start}, {end})"),
                     ));
                 }
             }
@@ -271,6 +337,7 @@ impl FleetScenario {
             ("cap_granularity", Json::str(self.cap_granularity.name())),
             ("share_experts", Json::Bool(self.share_experts)),
             ("slo_feedback", Json::Bool(self.slo_feedback)),
+            ("batch_window", Json::num(self.batch_window)),
             (
                 "tenants",
                 Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect()),
@@ -294,6 +361,7 @@ impl FleetScenario {
                 "cap_granularity",
                 "share_experts",
                 "slo_feedback",
+                "batch_window",
                 "tenants",
             ],
         )?;
@@ -331,6 +399,7 @@ impl FleetScenario {
         };
         let share_experts = opt_bool(j, SECTION, "share_experts", false)?;
         let slo_feedback = opt_bool(j, SECTION, "slo_feedback", false)?;
+        let batch_window = error::opt_f64(j, SECTION, "batch_window", 0.0)?;
         let tenant_entries = j
             .get("tenants")
             .and_then(Json::as_arr)
@@ -346,6 +415,7 @@ impl FleetScenario {
             cap_granularity,
             share_experts,
             slo_feedback,
+            batch_window,
             tenants,
         };
         fleet.validate()?;
@@ -393,7 +463,28 @@ impl FleetScenario {
             .iter()
             .map(Scenario::materialize)
             .collect::<Result<Vec<_>, _>>()?;
+        self.check_active_traffic(&compiled)?;
         Ok(self.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false).0)
+    }
+
+    /// A windowed tenant's traffic must lie inside its `[start, end)`
+    /// activity window — an arrival before onboarding or after offboarding
+    /// would be served by a lane that no longer (or does not yet) exist.
+    /// Checkable only here, once traffic is materialized.
+    fn check_active_traffic(&self, compiled: &[TrafficScenario]) -> Result<(), ScenarioError> {
+        for (i, t) in self.tenants.iter().enumerate() {
+            let Some((start, end)) = t.active else { continue };
+            if let Some(tb) = compiled[i].traffic.iter().find(|tb| tb.at < start || tb.at >= end) {
+                return Err(ScenarioError::invalid(
+                    format!("tenants[{i}].active"),
+                    format!(
+                        "arrival at t={} falls outside the [{start}, {end}) activity window",
+                        tb.at
+                    ),
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// The isolation baseline: every tenant served *alone* on its
@@ -414,8 +505,12 @@ impl FleetScenario {
             .iter()
             .map(Scenario::materialize)
             .collect::<Result<Vec<_>, _>>()?;
+        self.check_active_traffic(&compiled)?;
         let mut tenants = Vec::with_capacity(self.tenants.len());
         let mut artifacts = Vec::with_capacity(self.tenants.len());
+        // Isolated reservations run concurrently in real life, so the
+        // fleet-level peak is the sum of the single-tenant peaks.
+        let mut peak = 0usize;
         for (i, t) in self.tenants.iter().enumerate() {
             let single = FleetScenario {
                 name: format!("{}/{}", self.name, t.name),
@@ -427,16 +522,18 @@ impl FleetScenario {
                 // so its semantics track the shared run's knob-for-knob.
                 share_experts: self.share_experts,
                 slo_feedback: self.slo_feedback,
+                batch_window: self.batch_window,
                 tenants: vec![t.clone()],
             };
             let mut out = single
                 .run_compiled(&scenarios[i..=i], &compiled[i..=i], FleetDriver::Heap, false)
                 .0;
+            peak += out.report.peak_concurrency;
             tenants.push(out.report.tenants.pop().expect("single-tenant fleet"));
             artifacts.push(out.artifacts.pop().expect("single-tenant fleet"));
         }
         Ok(FleetOutcome {
-            report: FleetReport::from_tenants(self.account_cap, tenants),
+            report: FleetReport::from_tenants(self.account_cap, peak, tenants),
             artifacts,
         })
     }
@@ -540,11 +637,18 @@ impl FleetScenario {
         // Prewarm and ownership registration, in tenant order: each tenant
         // pre-warms its own plan (when its config asks for it) and retains
         // every replica its deployment starts with — a no-op on private
-        // pools, a refcount on shared ones.
+        // pools, a refcount on shared ones. A tenant with an `active`
+        // window defers its retains to its onboard step at `active.start`
+        // (the lane registers ownership itself); prewarming stays upfront —
+        // it models provisioned environments, which exist before the
+        // tenant's first request either way.
         for (i, policy) in policies.iter().enumerate() {
             let arena = &mut arenas[arena_of[i]];
             if sims[i].cfg.prewarm {
                 arena.prewarm_plan(&policy.layers);
+            }
+            if self.tenants[i].active.is_some() {
+                continue;
             }
             for (l, layer) in policy.layers.iter().enumerate() {
                 for (e, ep) in layer.experts.iter().enumerate() {
@@ -563,6 +667,11 @@ impl FleetScenario {
         }
         let capped = cap.enabled();
         let mut q = EventQueue::new();
+        // Cross-tenant batching only has a merge partner on a shared pool
+        // (several lanes on one arena) and only the pipelined dispatch path
+        // routes per-layer; a lane not meeting both serves unbatched even
+        // when the fleet's window is open.
+        let mut batch = BatchPool::new(self.batch_window);
         let mut lanes: Vec<EventLane<'_, '_>> = policies
             .into_iter()
             .enumerate()
@@ -581,13 +690,21 @@ impl FleetScenario {
                         slo_feedback: self.slo_feedback,
                         slo_p95: self.tenants[i].slo_p95,
                         weight: self.tenants[i].weight,
+                        active: self.tenants[i].active,
+                        batchable: batch.enabled()
+                            && member_count[arena_of[i]] > 1
+                            && pipelines[i],
                     },
                 )
             })
             .collect();
         let reports = match driver {
-            FleetDriver::Heap => drive(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap),
-            FleetDriver::Scan => drive_scan(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap),
+            FleetDriver::Heap => {
+                drive(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap, &mut batch)
+            }
+            FleetDriver::Scan => {
+                drive_scan(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap, &mut batch)
+            }
         };
 
         let mut tenants = Vec::with_capacity(reports.len());
@@ -604,6 +721,7 @@ impl FleetScenario {
                 mean_cap_delay: stats::mean(&lane.cap_waits),
                 max_cap_delay: lane.cap_waits.iter().cloned().fold(0.0, f64::max),
                 effective_weight: lane.eff_weight,
+                batched_invocations: lane.batched,
             });
             artifacts.push(RunArtifacts {
                 policy_history: std::mem::take(&mut sim.policy_history),
@@ -614,7 +732,7 @@ impl FleetScenario {
             });
         }
         let outcome = FleetOutcome {
-            report: FleetReport::from_tenants(self.account_cap, tenants),
+            report: FleetReport::from_tenants(self.account_cap, cap.peak_in_use(), tenants),
             artifacts,
         };
         (outcome, cap.take_audit())
@@ -742,11 +860,13 @@ mod tests {
             cap_granularity: CapGranularity::Execution,
             share_experts: false,
             slo_feedback: false,
+            batch_window: 0.0,
             tenants: vec![
                 TenantSpec {
                     name: "a".into(),
                     weight: 2.0,
                     slo_p95: Some(30.0),
+                    active: None,
                     source: TenantSource::Inline(tiny_tenant_scenario(1)),
                 },
                 TenantSpec::inline("b", tiny_tenant_scenario(2)),
@@ -769,19 +889,20 @@ mod tests {
         assert!(back.share_experts);
         assert!(!back.slo_feedback);
         assert_eq!(back.tenants[0].slo_p95, Some(30.0));
-        // A fleet file written before the PR 6 knobs existed parses to the
-        // defaults: execution-granular accounting, private pools, static
-        // weights.
+        // A fleet file written before the PR 6/7 knobs existed parses to
+        // the defaults: execution-granular accounting, private pools,
+        // static weights, batching off.
         let mut fields = match two_tenant_fleet().to_json() {
             Json::Obj(fields) => fields,
             _ => unreachable!("fleet serializes to an object"),
         };
-        for k in ["cap_granularity", "share_experts", "slo_feedback"] {
+        for k in ["cap_granularity", "share_experts", "slo_feedback", "batch_window"] {
             fields.remove(k);
         }
         let old = FleetScenario::from_json(&Json::Obj(fields)).unwrap();
         assert_eq!(old.cap_granularity, CapGranularity::Execution);
         assert!(!old.share_experts && !old.slo_feedback);
+        assert_eq!(old.batch_window, 0.0);
     }
 
     #[test]
@@ -870,10 +991,12 @@ mod tests {
             cap_granularity: CapGranularity::Execution,
             share_experts: false,
             slo_feedback: false,
+            batch_window: 0.0,
             tenants: vec![TenantSpec {
                 name: "ghost".into(),
                 weight: 1.0,
                 slo_p95: None,
+                active: None,
                 source: TenantSource::Ref("no/such/scenario.json".into()),
             }],
         };
@@ -903,6 +1026,7 @@ mod tests {
             cap_granularity: CapGranularity::Execution,
             share_experts: false,
             slo_feedback: false,
+            batch_window: 0.0,
             tenants: vec![TenantSpec::inline("solo", s)],
         }
     }
@@ -916,6 +1040,10 @@ mod tests {
     #[test]
     fn heap_driver_matches_scan_driver_on_committed_files() {
         let mut exact = vec![FleetScenario::load(&committed("fleet_two_tenant.json")).unwrap()];
+        // The churn+batching fixture races the PR 7 paths too: staggered
+        // onboard/offboard steps and merged batch dispatches must replay
+        // identically under both drivers.
+        exact.push(FleetScenario::load(&committed("fleet_churn_batching.json")).unwrap());
         exact.push(solo_fleet(
             Scenario::load(&committed("tiny_trace_lambdaml.json")).unwrap(),
         ));
@@ -948,37 +1076,24 @@ mod tests {
         }
     }
 
-    /// Conservation property of the execution-granular ledger: replaying
-    /// the audit log, the recorded `in_use` equals the number of live slot
+    /// Replay an execution-granular audit log and assert the conservation
+    /// property: the recorded `in_use` equals the number of live slot
     /// holds at every transition, every hold is released exactly at its
     /// declared end, and the ledger charged exactly one slot per replica
-    /// execution the fleet ran.
-    #[test]
-    fn execution_cap_ledger_conserves_slots() {
-        let fleet = FleetScenario {
-            name: "conserve".into(),
-            account_cap: Some(2),
-            arbitration: FleetArbitration::WeightedFair,
-            cap_granularity: CapGranularity::Execution,
-            share_experts: false,
-            slo_feedback: false,
-            tenants: vec![
-                TenantSpec::inline("a", tiny_tenant_scenario(11)),
-                TenantSpec::inline("b", tiny_tenant_scenario(12)),
-            ],
-        };
-        let (scenarios, compiled) = materialized(&fleet);
-        let (out, audit) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, true);
+    /// execution the fleet ran. Returns the replayed peak occupancy.
+    fn assert_ledger_conserves(out: &FleetOutcome, audit: &[CapAudit]) -> usize {
         assert!(!audit.is_empty(), "execution-capped run must touch the ledger");
         let mut live = 0usize;
+        let mut peak = 0usize;
         let mut acquires = 0u64;
         let mut ends = Vec::new();
         let mut releases = Vec::new();
-        for tr in &audit {
+        for tr in audit {
             match *tr {
                 CapAudit::Acquire { end, in_use } => {
                     live += 1;
                     acquires += 1;
+                    peak = peak.max(live);
                     assert_eq!(live, in_use, "in_use diverged from live holds");
                     assert!(end.is_finite(), "execution holds have finite ends");
                     ends.push(end);
@@ -1001,6 +1116,105 @@ mod tests {
             .map(|t| t.report.warm_invocations + t.report.cold_invocations)
             .sum();
         assert_eq!(acquires, executions, "one slot per replica execution");
+        peak
+    }
+
+    /// Widest layer fan-out any tenant deployed: the documented bound on
+    /// execution-granular cap overshoot (one request's layer dispatch is
+    /// admitted atomically once the first slot is granted).
+    fn widest_fan_out(out: &FleetOutcome) -> usize {
+        out.artifacts
+            .iter()
+            .filter_map(|a| a.final_policy.as_ref())
+            .flat_map(|p| &p.layers)
+            .map(|l| l.experts.iter().map(|e| e.replicas).sum::<usize>())
+            .max()
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn execution_cap_ledger_conserves_slots() {
+        let fleet = FleetScenario {
+            name: "conserve".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
+            batch_window: 0.0,
+            tenants: vec![
+                TenantSpec::inline("a", tiny_tenant_scenario(11)),
+                TenantSpec::inline("b", tiny_tenant_scenario(12)),
+            ],
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (out, audit) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, true);
+        let peak = assert_ledger_conserves(&out, &audit);
+        assert_eq!(
+            out.report.peak_concurrency, peak,
+            "reported peak must match the audit replay"
+        );
+        // Execution-granular overshoot is bounded by the widest dispatched
+        // layer fan-out: once a request holds one slot, the rest of its
+        // layer's replicas are admitted without re-checking headroom.
+        let cap = fleet.account_cap.unwrap();
+        assert!(
+            out.report.peak_concurrency <= cap - 1 + widest_fan_out(&out),
+            "peak {} exceeds cap {} - 1 + widest fan-out {}",
+            out.report.peak_concurrency,
+            cap,
+            widest_fan_out(&out)
+        );
+    }
+
+    /// The audit conservation property must also hold when the ledger's
+    /// weights adapt mid-run (slo_feedback) and the tenants share one
+    /// expert arena — PR 6 only ever audited a private-pool static fleet.
+    #[test]
+    fn execution_cap_ledger_conserves_slots_on_shared_slo_fleet() {
+        let fleet = FleetScenario {
+            name: "conserve-shared".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: true,
+            slo_feedback: true,
+            batch_window: 0.0,
+            tenants: vec![paced_tenant(31, Some(1e-9)), paced_tenant(32, None)],
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (out, audit) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, true);
+        let peak = assert_ledger_conserves(&out, &audit);
+        assert_eq!(out.report.peak_concurrency, peak);
+        let cap = fleet.account_cap.unwrap();
+        assert!(out.report.peak_concurrency <= cap - 1 + widest_fan_out(&out));
+    }
+
+    /// Request-granular admission checks headroom before every grant, so
+    /// the peak can never exceed the cap — not even transiently.
+    #[test]
+    fn request_cap_peak_never_exceeds_the_cap() {
+        let fleet = FleetScenario {
+            name: "req-peak".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Request,
+            share_experts: false,
+            slo_feedback: false,
+            batch_window: 0.0,
+            tenants: vec![
+                TenantSpec::inline("a", tiny_tenant_scenario(11)),
+                TenantSpec::inline("b", tiny_tenant_scenario(12)),
+            ],
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (out, _) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false);
+        assert!(out.report.peak_concurrency >= 1, "a served fleet occupies slots");
+        assert!(
+            out.report.peak_concurrency <= fleet.account_cap.unwrap(),
+            "request-granular peak {} exceeded the cap",
+            out.report.peak_concurrency
+        );
     }
 
     fn paced_tenant(seed: u64, slo: Option<f64>) -> TenantSpec {
@@ -1027,6 +1241,7 @@ mod tests {
             name: if slo.is_some() { "miss" } else { "ok" }.into(),
             weight: 1.0,
             slo_p95: slo.or(Some(1e6)),
+            active: None,
             source: TenantSource::Inline(s),
         }
     }
@@ -1044,6 +1259,7 @@ mod tests {
             cap_granularity: CapGranularity::Execution,
             share_experts: false,
             slo_feedback: true,
+            batch_window: 0.0,
             tenants: vec![paced_tenant(21, Some(1e-9)), paced_tenant(22, None)],
         };
         let out = fleet.run().unwrap();
@@ -1070,6 +1286,65 @@ mod tests {
             out.report.to_json().to_string_pretty(),
             again.report.to_json().to_string_pretty()
         );
+    }
+
+    /// Regression (PR 7): misses concentrated after the last epoch
+    /// boundary an arrival crosses must still adapt the weight. With an
+    /// epoch longer than the whole run, no boundary ever fires — the
+    /// pre-fix code discarded every accumulated verdict and reported the
+    /// declared weight; the tail flush in `EventLane::finish` now applies
+    /// exactly one final evaluation (a doubling for an all-miss tenant).
+    #[test]
+    fn slo_feedback_evaluates_the_tail_epoch() {
+        fn tail_tenant(seed: u64, slo: Option<f64>) -> TenantSpec {
+            let s = Scenario::builder("tail")
+                .model("tiny")
+                .unwrap()
+                .seed(seed)
+                .profile(2, 64)
+                .traffic(TrafficSource::Synthetic {
+                    process: ArrivalProcess::Deterministic { rate: 1.0 },
+                    duration: Some(10.0),
+                    requests: None,
+                    tokens_per_request: 64,
+                })
+                .config(TrafficConfig {
+                    reoptimize: false,
+                    // One epoch outlives the run: every sample lands in
+                    // the tail, after the last boundary.
+                    epoch_secs: 100.0,
+                    ..TrafficConfig::default()
+                })
+                .baseline(Baseline::LambdaML)
+                .build()
+                .unwrap();
+            TenantSpec {
+                name: if slo.is_some() { "miss" } else { "ok" }.into(),
+                weight: 1.0,
+                slo_p95: slo.or(Some(1e6)),
+                active: None,
+                source: TenantSource::Inline(s),
+            }
+        }
+        let fleet = FleetScenario {
+            name: "tail-epoch".into(),
+            account_cap: Some(2),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: true,
+            batch_window: 0.0,
+            tenants: vec![tail_tenant(41, Some(1e-9)), tail_tenant(42, None)],
+        };
+        let out = fleet.run().unwrap();
+        let miss = out.report.tenant("miss").unwrap();
+        let ok = out.report.tenant("ok").unwrap();
+        assert_eq!(
+            miss.effective_weight,
+            2.0 * miss.weight,
+            "the tail flush applies exactly one all-miss doubling"
+        );
+        assert_eq!(ok.effective_weight, ok.weight, "a met tail epoch keeps the weight");
     }
 
     fn kilo_member(seed: u64) -> Scenario {
@@ -1100,6 +1375,7 @@ mod tests {
                 name: format!("t{i:04}"),
                 weight: 1.0 + (i % 4) as f64,
                 slo_p95: None,
+                active: None,
                 source: TenantSource::Inline(kilo_member(1 + i as u64)),
             })
             .collect();
@@ -1110,6 +1386,7 @@ mod tests {
             cap_granularity: CapGranularity::Execution,
             share_experts: true,
             slo_feedback: false,
+            batch_window: 0.0,
             tenants,
         };
         let (scenarios, compiled) = materialized(&fleet);

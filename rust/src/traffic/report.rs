@@ -230,8 +230,13 @@ pub struct TenantReport {
     pub mean_cap_delay: f64,
     pub max_cap_delay: f64,
     /// Arbitration weight the tenant ended the run with. Equal to `weight`
-    /// unless SLO-feedback arbitration adapted it at epoch boundaries.
+    /// unless SLO-feedback arbitration adapted it (at epoch boundaries or
+    /// the end-of-run tail flush).
     pub effective_weight: f64,
+    /// Layer dispatches of this tenant that merged into another open batch
+    /// window instead of paying their own invocation (0 when cross-tenant
+    /// batching is off).
+    pub batched_invocations: u64,
 }
 
 impl TenantReport {
@@ -250,6 +255,7 @@ impl TenantReport {
             ("mean_cap_delay", Json::num(self.mean_cap_delay)),
             ("max_cap_delay", Json::num(self.max_cap_delay)),
             ("effective_weight", Json::num(self.effective_weight)),
+            ("batched_invocations", Json::num(self.batched_invocations as f64)),
         ];
         if let Some(slo) = self.slo_p95 {
             pairs.push(("slo_p95", Json::num(slo)));
@@ -277,15 +283,32 @@ pub struct FleetReport {
     pub max_cap_delay: f64,
     /// Jain's fairness index over per-tenant weighted service (busy seconds
     /// per unit weight), in (0, 1]: 1.0 means capacity use was perfectly
-    /// proportional to the configured weights.
+    /// proportional to the weights that actually governed grants — the
+    /// *effective* weights, which SLO-feedback arbitration may have adapted
+    /// away from the declared ones. Equal to [`FleetReport::fairness_declared`]
+    /// whenever no adaptation happened.
     pub fairness: f64,
+    /// Jain's index over the *declared* contract weights, kept reachable
+    /// for comparison: under SLO feedback, `fairness` high with
+    /// `fairness_declared` low means the adaptation deliberately skewed
+    /// capacity toward missing tenants.
+    pub fairness_declared: f64,
+    /// High-water mark of concurrently held account slots over the run.
+    /// At most the cap under request-granular accounting; under the
+    /// execution-granular default the transient overshoot is bounded by
+    /// `cap - 1` plus one request's widest layer fan-out.
+    pub peak_concurrency: usize,
 }
 
 impl FleetReport {
     /// Roll per-tenant reports up into the fleet aggregate. The cap-delay
     /// mean recombines exactly from the per-tenant means (each is a plain
     /// average over that tenant's parked requests).
-    pub fn from_tenants(account_cap: Option<usize>, tenants: Vec<TenantReport>) -> FleetReport {
+    pub fn from_tenants(
+        account_cap: Option<usize>,
+        peak_concurrency: usize,
+        tenants: Vec<TenantReport>,
+    ) -> FleetReport {
         let total_cost = tenants.iter().map(|t| t.report.total_cost).sum();
         let capped_requests: u64 = tenants.iter().map(|t| t.capped_requests).sum();
         let wait_sum: f64 = tenants
@@ -298,7 +321,8 @@ impl FleetReport {
             0.0
         };
         let max_cap_delay = tenants.iter().map(|t| t.max_cap_delay).fold(0.0, f64::max);
-        let fairness = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.weight));
+        let fairness = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.effective_weight));
+        let fairness_declared = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.weight));
         FleetReport {
             account_cap,
             tenants,
@@ -307,6 +331,8 @@ impl FleetReport {
             mean_cap_delay,
             max_cap_delay,
             fairness,
+            fairness_declared,
+            peak_concurrency,
         }
     }
 
@@ -327,11 +353,12 @@ impl FleetReport {
     /// Column headers of the shared-vs-isolated comparison tables printed
     /// by `serve_traffic --fleet` and `experiments traffic` — defined once
     /// beside [`FleetReport::comparison_row`] so the printers cannot drift.
-    pub fn comparison_columns() -> [&'static str; 6] {
-        ["pool", "billed cost", "max p95", "capped reqs", "mean cap delay", "fairness"]
+    pub fn comparison_columns() -> [&'static str; 7] {
+        ["pool", "billed cost", "max p95", "capped reqs", "mean cap delay", "peak conc", "fairness"]
     }
 
-    /// One comparison-table row for this fleet report.
+    /// One comparison-table row for this fleet report. The fairness cell is
+    /// the effective-weight index (the weights that governed grants).
     pub fn comparison_row(&self, label: &str) -> Vec<String> {
         vec![
             label.to_string(),
@@ -339,6 +366,7 @@ impl FleetReport {
             ftime(self.max_p95()),
             self.capped_requests.to_string(),
             ftime(self.mean_cap_delay),
+            self.peak_concurrency.to_string(),
             fnum(self.fairness),
         ]
     }
@@ -358,6 +386,8 @@ impl FleetReport {
             ("mean_cap_delay", Json::num(self.mean_cap_delay)),
             ("max_cap_delay", Json::num(self.max_cap_delay)),
             ("fairness", Json::num(self.fairness)),
+            ("fairness_declared", Json::num(self.fairness_declared)),
+            ("peak_concurrency", Json::num(self.peak_concurrency as f64)),
         ])
     }
 }
@@ -448,6 +478,7 @@ mod tests {
             mean_cap_delay: 1.5,
             max_cap_delay: 3.0,
             effective_weight: weight,
+            batched_invocations: 0,
         }
     }
 
@@ -455,22 +486,50 @@ mod tests {
     fn fleet_report_rolls_up_cost_delay_and_fairness() {
         let f = FleetReport::from_tenants(
             Some(4),
+            4,
             vec![tenant("a", 2.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 20.0)],
         );
         assert_eq!(f.total_cost, 1.5);
         assert_eq!(f.capped_requests, 4);
         assert!((f.mean_cap_delay - 1.5).abs() < 1e-12);
         assert_eq!(f.max_cap_delay, 3.0);
-        // busy/weight identical (20.0 each): perfectly weight-fair.
+        assert_eq!(f.peak_concurrency, 4);
+        // busy/weight identical (20.0 each): perfectly weight-fair, and
+        // without adaptation the effective and declared indices coincide.
         assert!((f.fairness - 1.0).abs() < 1e-12);
+        assert_eq!(f.fairness, f.fairness_declared);
         assert!(f.tenant("a").is_some() && f.tenant("nope").is_none());
         // Skewed service vs weight pulls the index below 1.
         let skew = FleetReport::from_tenants(
             Some(4),
+            4,
             vec![tenant("a", 1.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 4.0)],
         );
         assert!(skew.fairness < 1.0);
         assert!(skew.fairness > 0.0);
+    }
+
+    #[test]
+    fn fairness_follows_the_weights_that_governed_grants() {
+        // SLO feedback quadrupled tenant a's weight and arbitration granted
+        // by it: busy is 4:1 — perfectly fair under the effective weights,
+        // skewed under the declared ones. Pre-fix the roles were reversed:
+        // the index reported "unfair" precisely because the adaptation
+        // worked.
+        let mut a = tenant("a", 1.0, 1.0, 40.0);
+        a.effective_weight = 4.0;
+        let b = tenant("b", 1.0, 0.5, 10.0);
+        let f = FleetReport::from_tenants(Some(4), 4, vec![a, b]);
+        assert!((f.fairness - 1.0).abs() < 1e-12, "effective-weight index: {}", f.fairness);
+        assert!(
+            f.fairness_declared < 1.0,
+            "declared-weight index stays reachable: {}",
+            f.fairness_declared
+        );
+        let j = f.to_json();
+        assert_eq!(j.get_f64("fairness"), Some(f.fairness));
+        assert_eq!(j.get_f64("fairness_declared"), Some(f.fairness_declared));
+        assert_eq!(j.get_f64("peak_concurrency"), Some(4.0));
     }
 
     #[test]

@@ -26,9 +26,14 @@
 //!    than tenants with private pools, on a staggered two-sweep workload
 //!    where each tenant alone is too sparse to stay warm but the fleet
 //!    collectively is not.
-//!  - **committed fixtures**: the two-tenant and hundred-tenant fleet
-//!    files load strictly, round-trip canonically, and run
-//!    deterministically end-to-end.
+//!  - **cross-tenant batching claim**: staggered tenants with `active`
+//!    churn windows and a coincident revisit wave are served, under a
+//!    `batch_window`, with strictly fewer invocations and strictly lower
+//!    billed cost at a fleet p95 no worse than the unbatched baseline —
+//!    merged dispatches pay the per-invocation head time and price once.
+//!  - **committed fixtures**: the two-tenant, hundred-tenant and
+//!    churn+batching fleet files load strictly, round-trip canonically,
+//!    and run deterministically end-to-end.
 
 use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
@@ -52,6 +57,7 @@ fn single_tenant_fleet(s: Scenario) -> FleetScenario {
         cap_granularity: CapGranularity::Execution,
         share_experts: false,
         slo_feedback: false,
+        batch_window: 0.0,
         tenants: vec![TenantSpec::inline("only", s)],
     }
 }
@@ -150,6 +156,7 @@ fn claim_tenant(
         name: name.to_string(),
         weight: 1.0,
         slo_p95: None,
+        active: None,
         source: TenantSource::Inline(scenario),
     }
 }
@@ -255,6 +262,7 @@ fn claim_fleet(l: f64, keep_alive: f64) -> FleetScenario {
         cap_granularity: CapGranularity::Request,
         share_experts: false,
         slo_feedback: false,
+        batch_window: 0.0,
         tenants: vec![
             claim_tenant("early", early_seed, early, duration, keep_alive),
             claim_tenant("late", late_seed, late, duration, keep_alive),
@@ -422,6 +430,7 @@ fn hundred_tenant_claim_fleet(l: f64, share_experts: bool) -> FleetScenario {
                 name,
                 weight: 1.0,
                 slo_p95: None,
+                active: None,
                 source: TenantSource::Inline(scenario),
             }
         })
@@ -433,6 +442,7 @@ fn hundred_tenant_claim_fleet(l: f64, share_experts: bool) -> FleetScenario {
         cap_granularity: CapGranularity::Execution,
         share_experts,
         slo_feedback: false,
+        batch_window: 0.0,
         tenants,
     }
 }
@@ -479,6 +489,174 @@ fn shared_expert_pool_beats_private_pools_at_100_tenants() {
         again.to_json().to_string_pretty(),
         shared.to_json().to_string_pretty(),
         "shared-pool fleet runs must be deterministic"
+    );
+}
+
+// ------------------------------------------- churn + cross-tenant batching
+
+/// The PR 7 claim fleet: four same-preset tenants onboard on a stagger
+/// (tenant `i` at `i·Δ`, its activity window opening exactly there), each
+/// sends one solo request at onboard time and one at a common revisit
+/// instant all windows overlap, then offboards on a stagger (releasing its
+/// refcounts on the shared pool). At the revisit the four dispatches land
+/// on the same concurrency-1 replica FIFOs within the batching window, so
+/// the unbatched baseline serializes four invocations per layer where the
+/// batched fleet merges them into one with the combined token count. All
+/// tenants share the scenario seed, gate seed, and request seeds, so
+/// routing is identical and the merge partners are guaranteed.
+fn churn_batching_fleet(l: f64, window: f64) -> FleetScenario {
+    let delta = 4.0 * l;
+    let revisit = 40.0 * l;
+    let tenants = (0..4)
+        .map(|i| {
+            let first = i as f64 * delta;
+            let scenario = Scenario::builder(&format!("churn{i}"))
+                .model("tiny")
+                .expect("tiny preset exists")
+                .seed(0xF1EE7)
+                .profile(2, 128)
+                .traffic(TrafficSource::Inline {
+                    trace: Trace {
+                        requests: vec![
+                            TraceRequest { time: first, tokens: 256, seed: 7 },
+                            TraceRequest { time: revisit, tokens: 256, seed: 7 },
+                        ],
+                    },
+                })
+                .config(TrafficConfig {
+                    reoptimize: false,
+                    prewarm: false,
+                    keep_alive: 100.0 * l,
+                    concurrency: Some(1),
+                    epoch_secs: f64::INFINITY,
+                    ..TrafficConfig::default()
+                })
+                .baseline(Baseline::LambdaML)
+                .build()
+                .expect("churn tenant is valid by construction");
+            TenantSpec {
+                name: format!("c{i}"),
+                weight: 1.0,
+                slo_p95: None,
+                active: Some((first, revisit + (i as f64 + 2.0) * delta)),
+                source: TenantSource::Inline(scenario),
+            }
+        })
+        .collect();
+    FleetScenario {
+        name: "churn-batching".to_string(),
+        account_cap: None,
+        arbitration: FleetArbitration::Fifo,
+        cap_granularity: CapGranularity::Execution,
+        share_experts: true,
+        slo_feedback: false,
+        batch_window: window,
+        tenants,
+    }
+}
+
+/// The PR 7 payoff claim: on the staggered-churn fleet with an overlapping
+/// revisit wave, cross-tenant batching serves the identical workload with
+/// strictly fewer invocations and strictly lower billed cost, at a fleet
+/// p95 no worse than the unbatched baseline. The mechanism: one merged
+/// invocation pays the per-invocation head time (warm start + parameter
+/// fetch) and the per-invocation price once where the serialized baseline
+/// pays them four times per layer — and the baseline's last-in-FIFO tenant
+/// queues behind the other three, so its p95 dominates the window delay
+/// plus the combined token time the batch pays.
+#[test]
+fn cross_tenant_batching_beats_unbatched_on_staggered_revisits() {
+    let l = calibrate_request_latency();
+    let window = 0.05 * l;
+    let batched = churn_batching_fleet(l, window).run().expect("batched run").report;
+    let unbatched = churn_batching_fleet(l, 0.0).run().expect("unbatched run").report;
+
+    let served = |r: &FleetReport| r.tenants.iter().map(|t| t.report.requests).sum::<u64>();
+    assert_eq!(served(&batched), 8, "four tenants, two requests each");
+    assert_eq!(served(&batched), served(&unbatched), "identical workload both ways");
+
+    let invocations = |r: &FleetReport| {
+        r.tenants
+            .iter()
+            .map(|t| t.report.warm_invocations + t.report.cold_invocations)
+            .sum::<u64>()
+    };
+    assert!(
+        invocations(&batched) < invocations(&unbatched),
+        "batching must merge invocations: {} vs {}",
+        invocations(&batched),
+        invocations(&unbatched)
+    );
+    assert!(
+        batched.total_cost < unbatched.total_cost,
+        "batching must bill less: {} vs {}",
+        batched.total_cost,
+        unbatched.total_cost
+    );
+    assert!(
+        batched.max_p95() <= unbatched.max_p95() + 1e-9,
+        "batching must not regress fleet p95: {} vs {}",
+        batched.max_p95(),
+        unbatched.max_p95()
+    );
+    let merges: u64 = batched.tenants.iter().map(|t| t.batched_invocations).sum();
+    assert!(merges > 0, "the revisit wave must actually merge");
+    assert_eq!(
+        unbatched.tenants.iter().map(|t| t.batched_invocations).sum::<u64>(),
+        0,
+        "batching off must never merge"
+    );
+    // Determinism: the batched run reproduces itself exactly.
+    let again = churn_batching_fleet(l, window).run().expect("re-run").report;
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        batched.to_json().to_string_pretty(),
+        "churn+batching fleet runs must be deterministic"
+    );
+}
+
+/// The committed churn+batching fixture (CI smokes it via the `*fleet*`
+/// glob): strict load — including a `"slo_p95": null` and the `active`
+/// windows — canonical round-trip, and the structural (timing-free) half
+/// of the batching claim: flipping the committed window off serves the
+/// same workload with strictly more invocations at strictly higher cost.
+#[test]
+fn committed_churn_batching_fleet_loads_and_merges() {
+    let fleet = FleetScenario::load(&scenario_path("fleet_churn_batching.json"))
+        .unwrap_or_else(|e| panic!("committed churn fleet must load: {e}"));
+    assert!(fleet.share_experts && fleet.batch_window > 0.0);
+    assert_eq!(fleet.tenants[0].slo_p95, None, "explicit null parses as unbounded");
+    assert_eq!(fleet.tenants[1].active, Some((2.0, 30.0)));
+
+    let text = fleet.to_json().to_string_pretty();
+    let back = FleetScenario::from_json(
+        &serverless_moe::util::json::Json::parse(&text).expect("canonical JSON parses"),
+    )
+    .expect("canonical form re-parses");
+    assert_eq!(back.to_json().to_string_pretty(), text, "fixed-point serialization");
+
+    let on = fleet.run().expect("churn fixture runs").report;
+    let mut off_fleet = fleet.clone();
+    off_fleet.batch_window = 0.0;
+    let off = off_fleet.run().expect("unbatched churn fixture runs").report;
+    let served = |r: &FleetReport| r.tenants.iter().map(|t| t.report.requests).sum::<u64>();
+    assert_eq!(served(&on), 6, "three tenants, two requests each");
+    assert_eq!(served(&on), served(&off));
+    let invocations = |r: &FleetReport| {
+        r.tenants
+            .iter()
+            .map(|t| t.report.warm_invocations + t.report.cold_invocations)
+            .sum::<u64>()
+    };
+    assert!(invocations(&on) < invocations(&off));
+    assert!(on.total_cost < off.total_cost);
+    assert!(on.tenants.iter().map(|t| t.batched_invocations).sum::<u64>() > 0);
+
+    let again = fleet.run().expect("churn fixture re-runs").report;
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        on.to_json().to_string_pretty(),
+        "churn fixture runs must be deterministic"
     );
 }
 

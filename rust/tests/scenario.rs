@@ -293,6 +293,61 @@ fn fleet_unknown_fields_and_invalid_values_rejected() {
         parsed.arbitration,
         serverless_moe::traffic::FleetArbitration::WeightedFair
     );
+
+    // PR 7 regression: an explicit `"slo_p95": null` is the schema's
+    // encoding of "no SLO" (the PR 4 null-means-absent convention) and
+    // must parse like an omitted key — the pre-fix code rejected it with
+    // a type error.
+    let null_slo = fleet(&tenant(r#", "slo_p95": null"#));
+    let parsed =
+        FleetScenario::from_json(&Json::parse(&null_slo).unwrap()).expect("null slo_p95 parses");
+    assert_eq!(parsed.tenants[0].slo_p95, None);
+    let omitted =
+        FleetScenario::from_json(&Json::parse(&fleet(&tenant(""))).unwrap()).expect("omitted ok");
+    assert_eq!(omitted.tenants[0].slo_p95, None);
+
+    // The PR 7 churn/batching knobs. A shareable tenant (lambdaml forces
+    // re-optimization off) with a well-formed `[start, end)` activity
+    // window, on a shared-expert fleet with a batching window:
+    let shared_tenant = |extra: &str| {
+        format!(
+            r#"{{"name": "a", "weight": 1.0{extra}, "scenario": {{"name": "t", "model": "tiny", "baseline": "lambdaml"}}}}"#
+        )
+    };
+    let churn = format!(
+        r#"{{"name": "f", "share_experts": true, "batch_window": 0.25, "tenants": [{}]}}"#,
+        shared_tenant(r#", "active": [0.0, 10.0]"#)
+    );
+    let parsed =
+        FleetScenario::from_json(&Json::parse(&churn).unwrap()).expect("churn fleet parses");
+    assert_eq!(parsed.batch_window, 0.25);
+    assert_eq!(parsed.tenants[0].active, Some((0.0, 10.0)));
+    // `"active": null` is the always-on default, per the same convention.
+    let always =
+        FleetScenario::from_json(&Json::parse(&fleet(&tenant(r#", "active": null"#))).unwrap())
+            .expect("null active parses");
+    assert_eq!(always.tenants[0].active, None);
+    // Malformed churn/batching shapes are rejected: wrong type, wrong
+    // arity, non-numeric endpoints, an empty window, a batching window
+    // without a shared pool to merge on, and a negative batching window.
+    let bad_churn = [
+        fleet(&tenant(r#", "active": 5.0"#)),
+        fleet(&tenant(r#", "active": [1.0]"#)),
+        fleet(&tenant(r#", "active": ["a", "b"]"#)),
+        fleet(&tenant(r#", "active": [10.0, 10.0]"#)),
+        format!(
+            r#"{{"name": "f", "batch_window": 0.25, "tenants": [{}]}}"#,
+            shared_tenant("")
+        ),
+        format!(
+            r#"{{"name": "f", "share_experts": true, "batch_window": -1.0, "tenants": [{}]}}"#,
+            shared_tenant("")
+        ),
+    ];
+    for case in &bad_churn {
+        FleetScenario::from_json(&Json::parse(case).unwrap())
+            .expect_err(&format!("must reject: {case}"));
+    }
 }
 
 // ----------------------------------------------------------- run artifacts
