@@ -47,8 +47,8 @@ use serverless_moe::deploy::DeploymentPolicy;
 use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::{
-    ArrivalProcess, AutoscalePolicy, CapGranularity, FleetArbitration, MetricsMode, SimEngine,
-    SimReport, TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, CapGranularity, FaultSpec, FleetArbitration, MetricsMode,
+    SimEngine, SimReport, TrafficConfig,
 };
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::json::Json;
@@ -151,6 +151,7 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
         share_experts: true,
         slo_feedback: false,
         batch_window: 0.0,
+        faults: FaultSpec::off(),
         tenants,
     };
 

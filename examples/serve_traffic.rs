@@ -58,7 +58,7 @@ fn report_row(t: &mut Table, label: &str, r: &SimReport) {
 fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
     let fleet = FleetScenario::load(path)?;
     println!(
-        "fleet '{}': {} tenants, account cap {} ({}-granular slots), {} arbitration{}{}{}",
+        "fleet '{}': {} tenants, account cap {} ({}-granular slots), {} arbitration{}{}{}{}",
         fleet.name,
         fleet.tenants.len(),
         fleet
@@ -71,6 +71,14 @@ fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
         if fleet.slo_feedback { ", SLO-feedback weights" } else { "" },
         if fleet.batch_window > 0.0 {
             format!(", {}s batching window", fleet.batch_window)
+        } else {
+            String::new()
+        },
+        if fleet.faults.enabled() {
+            format!(
+                ", fault injection on (crash {}, throttle {}, {} retries)",
+                fleet.faults.crash_prob, fleet.faults.throttle_prob, fleet.faults.max_retries
+            )
         } else {
             String::new()
         },
@@ -128,6 +136,23 @@ fn run_fleet(path: &std::path::Path) -> anyhow::Result<()> {
         fnum(shared.total_cost / isolated.total_cost.max(1e-12) * 100.0),
         fnum(shared.fairness),
     );
+    if fleet.faults.enabled() {
+        let served: u64 = shared.tenants.iter().map(|tr| tr.report.requests).sum();
+        println!(
+            "fault weather: {} failed invocations, {} retries (+{} billed), {} throttled, \
+             {} hedged ({} wins), {} experts dropped ({} tokens rerouted), goodput {}/{}",
+            shared.failed_invocations,
+            shared.retries,
+            fcost(shared.retry_cost),
+            shared.throttled_requests,
+            shared.hedged_invocations,
+            shared.hedge_wins,
+            shared.dropped_experts,
+            shared.rerouted_tokens,
+            shared.goodput_requests,
+            served,
+        );
+    }
     Ok(())
 }
 

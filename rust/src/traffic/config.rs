@@ -95,6 +95,182 @@ impl MetricsMode {
     }
 }
 
+/// Deterministic failure-injection knobs. All probabilistic fates draw
+/// from a dedicated seeded RNG stream (`arrivals::fault_seed` of the
+/// scenario seed), so a faulted run is exactly reproducible. The default
+/// ([`FaultSpec::off`]) injects nothing and adds zero work — the serving
+/// path with faults off is byte-identical to a build without them.
+///
+/// Failure semantics follow Lambda: crashed and timed-out invocations are
+/// still billed (full duration, or exactly the `timeout` cutoff), throttled
+/// admissions surface as retryable 429-class errors, and retries pay the
+/// full price of every failed attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Per-replica-invocation crash probability in [0, 1).
+    pub crash_prob: f64,
+    /// Multiplier (>= 1) on `crash_prob` for cold-start invocations — cold
+    /// starts fail more often (init timeouts, sandbox churn).
+    pub cold_crash_multiplier: f64,
+    /// Probability in [0, 1] that a cap-rejected admission surfaces as a
+    /// throttle error (retried with backoff) instead of parking in the
+    /// fair-arbitration wait queue.
+    pub throttle_prob: f64,
+    /// Invocation timeout cutoff (seconds): a replica whose service would
+    /// exceed it is killed and billed exactly `timeout` seconds.
+    /// `f64::INFINITY` (JSON `null`) disables the cutoff.
+    pub timeout: f64,
+    /// Bounded retry budget per request layer (and per throttled
+    /// admission); 0 = failures are never retried.
+    pub max_retries: u32,
+    /// Exponential backoff base: attempt `a` (0-indexed) waits
+    /// `backoff_base * 2^a` seconds before retrying.
+    pub backoff_base: f64,
+    /// Straggler-hedging quantile in (0, 1): when a layer's straggler
+    /// finish exceeds this quantile of the observed replica-latency
+    /// history, a duplicate replica invocation races it and the first
+    /// finisher wins (the loser's billing is cut at the winner's finish).
+    /// 0 = hedging off.
+    pub hedge_quantile: f64,
+    /// Consecutive-failure threshold after which an expert's replicas are
+    /// dropped for the rest of the epoch, its tokens rerouted to the
+    /// surviving experts (a quality-proxy penalty the report surfaces);
+    /// 0 = never drop.
+    pub drop_after: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::off()
+    }
+}
+
+impl FaultSpec {
+    /// The inert spec: nothing crashes, throttles, times out or hedges.
+    pub fn off() -> FaultSpec {
+        FaultSpec {
+            crash_prob: 0.0,
+            cold_crash_multiplier: 1.0,
+            throttle_prob: 0.0,
+            timeout: f64::INFINITY,
+            max_retries: 0,
+            backoff_base: 0.0,
+            hedge_quantile: 0.0,
+            drop_after: 0,
+        }
+    }
+
+    /// Whether any injection is active. `false` keeps the engine on the
+    /// fault-free fast path (no RNG, no per-expert bookkeeping).
+    pub fn enabled(&self) -> bool {
+        self.crash_prob > 0.0
+            || self.throttle_prob > 0.0
+            || self.timeout.is_finite()
+            || self.hedge_quantile > 0.0
+    }
+
+    /// Scenario-file encoding: a flat object; the infinite `timeout`
+    /// serializes as JSON `null` per the usual duration convention.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("crash_prob", Json::num(self.crash_prob)),
+            ("cold_crash_multiplier", Json::num(self.cold_crash_multiplier)),
+            ("throttle_prob", Json::num(self.throttle_prob)),
+            (
+                "timeout",
+                if self.timeout.is_finite() { Json::num(self.timeout) } else { Json::Null },
+            ),
+            ("max_retries", Json::num(self.max_retries as f64)),
+            ("backoff_base", Json::num(self.backoff_base)),
+            ("hedge_quantile", Json::num(self.hedge_quantile)),
+            ("drop_after", Json::num(self.drop_after as f64)),
+        ])
+    }
+
+    /// Strict inverse of [`FaultSpec::to_json`]: unknown fields rejected,
+    /// every field optional with the [`FaultSpec::off`] value, knobs
+    /// range-checked via [`FaultSpec::check`].
+    pub fn from_json(j: &Json) -> Result<FaultSpec, ScenarioError> {
+        const SECTION: &str = "faults";
+        error::check_keys(
+            j,
+            SECTION,
+            &[
+                "crash_prob",
+                "cold_crash_multiplier",
+                "throttle_prob",
+                "timeout",
+                "max_retries",
+                "backoff_base",
+                "hedge_quantile",
+                "drop_after",
+            ],
+        )?;
+        let d = FaultSpec::off();
+        let spec = FaultSpec {
+            crash_prob: error::opt_f64(j, SECTION, "crash_prob", d.crash_prob)?,
+            cold_crash_multiplier: error::opt_f64(
+                j,
+                SECTION,
+                "cold_crash_multiplier",
+                d.cold_crash_multiplier,
+            )?,
+            throttle_prob: error::opt_f64(j, SECTION, "throttle_prob", d.throttle_prob)?,
+            timeout: error::opt_duration(j, SECTION, "timeout", d.timeout)?,
+            max_retries: error::opt_u64(j, SECTION, "max_retries", d.max_retries as u64)? as u32,
+            backoff_base: error::opt_f64(j, SECTION, "backoff_base", d.backoff_base)?,
+            hedge_quantile: error::opt_f64(j, SECTION, "hedge_quantile", d.hedge_quantile)?,
+            drop_after: error::opt_u64(j, SECTION, "drop_after", d.drop_after as u64)? as u32,
+        };
+        spec.check(SECTION)?;
+        Ok(spec)
+    }
+
+    /// Range checks shared by the scenario and fleet loaders. NaN fails
+    /// every ordered comparison, so non-finite garbage is rejected with the
+    /// same typed error as an out-of-range value.
+    pub fn check(&self, section: &str) -> Result<(), ScenarioError> {
+        let ensure = |ok: bool, field: &str, reason: String| {
+            if ok {
+                Ok(())
+            } else {
+                Err(ScenarioError::invalid(format!("{section}.{field}"), reason))
+            }
+        };
+        ensure(
+            (0.0..1.0).contains(&self.crash_prob),
+            "crash_prob",
+            format!("must be in [0, 1), got {}", self.crash_prob),
+        )?;
+        ensure(
+            self.cold_crash_multiplier >= 1.0 && self.cold_crash_multiplier.is_finite(),
+            "cold_crash_multiplier",
+            format!("must be finite and >= 1, got {}", self.cold_crash_multiplier),
+        )?;
+        ensure(
+            (0.0..=1.0).contains(&self.throttle_prob),
+            "throttle_prob",
+            format!("must be in [0, 1], got {}", self.throttle_prob),
+        )?;
+        ensure(
+            self.timeout > 0.0,
+            "timeout",
+            format!("must be > 0 (null = no cutoff), got {}", self.timeout),
+        )?;
+        ensure(
+            self.backoff_base >= 0.0 && self.backoff_base.is_finite(),
+            "backoff_base",
+            format!("must be finite and >= 0, got {}", self.backoff_base),
+        )?;
+        ensure(
+            (0.0..1.0).contains(&self.hedge_quantile),
+            "hedge_quantile",
+            format!("must be in [0, 1) (0 = off), got {}", self.hedge_quantile),
+        )?;
+        Ok(())
+    }
+}
+
 /// Traffic-simulation knobs.
 #[derive(Debug, Clone)]
 pub struct TrafficConfig {
@@ -137,6 +313,9 @@ pub struct TrafficConfig {
     /// Metric aggregation (exact by default; streaming keeps memory O(1) in
     /// the request count for million-request runs).
     pub metrics: MetricsMode,
+    /// Failure injection ([`FaultSpec::off`] by default — JSON `null` or an
+    /// omitted key, per the null-means-absent convention).
+    pub faults: FaultSpec,
 }
 
 impl Default for TrafficConfig {
@@ -159,6 +338,7 @@ impl Default for TrafficConfig {
             seed: 0x7_1AFF,
             engine: SimEngine::Event { pipeline: true },
             metrics: MetricsMode::Exact,
+            faults: FaultSpec::off(),
         }
     }
 }
@@ -193,6 +373,14 @@ impl TrafficConfig {
             ("seed", Json::num(self.seed as f64)),
             ("engine", self.engine.to_json()),
             ("metrics", Json::str(self.metrics.name())),
+            (
+                "faults",
+                if self.faults == FaultSpec::off() {
+                    Json::Null
+                } else {
+                    self.faults.to_json()
+                },
+            ),
         ])
     }
 
@@ -220,6 +408,7 @@ impl TrafficConfig {
                 "seed",
                 "engine",
                 "metrics",
+                "faults",
             ],
         )?;
         let d = TrafficConfig::default();
@@ -292,6 +481,10 @@ impl TrafficConfig {
                     ))
                 }
             },
+            faults: match j.get("faults") {
+                None | Some(Json::Null) => FaultSpec::off(),
+                Some(f) => FaultSpec::from_json(f)?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -351,6 +544,17 @@ impl TrafficConfig {
             "beta_grid",
             "must not be empty".to_string(),
         )?;
+        self.faults.check("config.faults")?;
+        if self.faults.enabled() {
+            // Retry and hedge events ride the per-layer event heap; the
+            // legacy loop and monolithic dispatch have no per-layer events
+            // to attach them to.
+            ensure(
+                self.engine == SimEngine::Event { pipeline: true },
+                "faults",
+                "fault injection requires the pipelined event engine".to_string(),
+            )?;
+        }
         self.autoscale.check()
     }
 
@@ -458,5 +662,93 @@ mod tests {
         let mut cfg = TrafficConfig::default();
         cfg.drift_threshold = -1.0; // forced drift: legal (tests rely on it)
         assert!(cfg.validate().is_ok());
+    }
+
+    /// Builder-path NaN/negative floats (inexpressible in JSON, so only the
+    /// builder can smuggle them in) are rejected by `validate` with typed
+    /// errors — the JSON rejection matrix lives in `rust/tests/scenario.rs`.
+    #[test]
+    fn validate_rejects_non_finite_and_negative_floats() {
+        let poison: &[fn(&mut TrafficConfig)] = &[
+            |c| c.epoch_secs = f64::NAN,
+            |c| c.epoch_secs = -60.0,
+            |c| c.keep_alive = f64::NAN,
+            |c| c.keep_alive = -1.0,
+            |c| c.drift_threshold = f64::NAN,
+            |c| c.drift_threshold = f64::INFINITY,
+            |c| c.ema_alpha = f64::NAN,
+            |c| c.t_limit = f64::NAN,
+            |c| c.solver_time_limit = -0.5,
+        ];
+        for (i, p) in poison.iter().enumerate() {
+            let mut cfg = TrafficConfig::default();
+            p(&mut cfg);
+            assert!(
+                matches!(cfg.validate(), Err(ScenarioError::Invalid { .. })),
+                "poisoned config #{i} must be rejected with a typed Invalid"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_spec_roundtrips_and_rejects_bad_knobs() {
+        // Off canonicalizes to JSON null and parses back from null/omitted.
+        let d = TrafficConfig::default();
+        assert_eq!(d.to_json().get("faults"), Some(&Json::Null));
+        let back =
+            TrafficConfig::from_json(&Json::parse(r#"{"faults": null}"#).unwrap()).unwrap();
+        assert_eq!(back.faults, FaultSpec::off());
+        assert!(!back.faults.enabled());
+
+        // A live spec roundtrips losslessly (infinite timeout as null).
+        let spec = FaultSpec {
+            crash_prob: 0.1,
+            cold_crash_multiplier: 2.0,
+            throttle_prob: 0.5,
+            timeout: f64::INFINITY,
+            max_retries: 3,
+            backoff_base: 0.25,
+            hedge_quantile: 0.9,
+            drop_after: 2,
+        };
+        assert!(spec.enabled());
+        let back = FaultSpec::from_json(&Json::parse(&spec.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.timeout, f64::INFINITY);
+
+        // Strictness: typos and out-of-range knobs are typed errors.
+        let typo = Json::parse(r#"{"crash_probe": 0.1}"#).unwrap();
+        assert!(matches!(
+            FaultSpec::from_json(&typo),
+            Err(ScenarioError::UnknownField { .. })
+        ));
+        for bad in [
+            r#"{"crash_prob": 1.0}"#,
+            r#"{"crash_prob": -0.1}"#,
+            r#"{"cold_crash_multiplier": 0.5}"#,
+            r#"{"throttle_prob": 1.5}"#,
+            r#"{"timeout": -1.0}"#,
+            r#"{"timeout": 0.0}"#,
+            r#"{"backoff_base": -0.5}"#,
+            r#"{"hedge_quantile": 1.0}"#,
+        ] {
+            assert!(
+                matches!(
+                    FaultSpec::from_json(&Json::parse(bad).unwrap()),
+                    Err(ScenarioError::Invalid { .. })
+                ),
+                "must reject {bad}"
+            );
+        }
+
+        // Faults require the pipelined event engine.
+        let mut cfg = TrafficConfig::default();
+        cfg.faults.crash_prob = 0.1;
+        assert!(cfg.validate().is_ok());
+        cfg.engine = SimEngine::Event { pipeline: false };
+        assert!(matches!(cfg.validate(), Err(ScenarioError::Invalid { .. })));
+        cfg.engine = SimEngine::Legacy;
+        assert!(cfg.validate().is_err());
     }
 }

@@ -61,7 +61,7 @@
 //! cross-tenant version of the paper's core skew argument.
 
 use super::autoscale::{CapGranularity, FleetArbitration};
-use super::config::SimEngine;
+use super::config::{FaultSpec, SimEngine};
 use super::epoch::EpochSimulator;
 use super::error::{self, ScenarioError};
 use super::report::{FleetReport, TenantReport};
@@ -221,6 +221,14 @@ pub struct FleetScenario {
     /// per-tenant billing split by token share. Joins are reported per
     /// tenant as `batched_invocations`.
     pub batch_window: f64,
+    /// Fleet-wide failure injection ([`FaultSpec`]; off by default, JSON
+    /// `null` = off per the usual convention). When enabled it applies to
+    /// *every* tenant lane, overriding any per-tenant `config.faults` —
+    /// account-level fault weather (crashes, throttles, timeouts) hits the
+    /// whole account, not one tenant. Faults do not compose with
+    /// cross-tenant batching (`batch_window > 0` is rejected); every
+    /// tenant must run the pipelined event engine.
+    pub faults: FaultSpec,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -271,6 +279,15 @@ impl FleetScenario {
                  it requires share_experts = true",
             ));
         }
+        self.faults.check("fleet.faults")?;
+        if self.faults.enabled() && self.batch_window > 0.0 {
+            return Err(ScenarioError::invalid(
+                "fleet.faults",
+                "failure injection does not compose with cross-tenant batching \
+                 (batched dispatches are adjudicated per merged flush, not per \
+                 tenant); set batch_window = 0 or faults = null",
+            ));
+        }
         let mut seen = std::collections::BTreeSet::new();
         for (i, t) in self.tenants.iter().enumerate() {
             if t.name.is_empty() {
@@ -310,7 +327,7 @@ impl FleetScenario {
             match &t.source {
                 TenantSource::Inline(s) => {
                     s.validate()?;
-                    check_tenant_scenario(i, s, self.share_experts)?;
+                    check_tenant_scenario(i, s, self)?;
                 }
                 TenantSource::Ref(p) => {
                     if p.is_empty() {
@@ -339,6 +356,14 @@ impl FleetScenario {
             ("slo_feedback", Json::Bool(self.slo_feedback)),
             ("batch_window", Json::num(self.batch_window)),
             (
+                "faults",
+                if self.faults == FaultSpec::off() {
+                    Json::Null
+                } else {
+                    self.faults.to_json()
+                },
+            ),
+            (
                 "tenants",
                 Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect()),
             ),
@@ -362,6 +387,7 @@ impl FleetScenario {
                 "share_experts",
                 "slo_feedback",
                 "batch_window",
+                "faults",
                 "tenants",
             ],
         )?;
@@ -400,6 +426,10 @@ impl FleetScenario {
         let share_experts = opt_bool(j, SECTION, "share_experts", false)?;
         let slo_feedback = opt_bool(j, SECTION, "slo_feedback", false)?;
         let batch_window = error::opt_f64(j, SECTION, "batch_window", 0.0)?;
+        let faults = match j.get("faults") {
+            None | Some(Json::Null) => FaultSpec::off(),
+            Some(fj) => FaultSpec::from_json(fj)?,
+        };
         let tenant_entries = j
             .get("tenants")
             .and_then(Json::as_arr)
@@ -416,6 +446,7 @@ impl FleetScenario {
             share_experts,
             slo_feedback,
             batch_window,
+            faults,
             tenants,
         };
         fleet.validate()?;
@@ -446,7 +477,7 @@ impl FleetScenario {
                     TenantSource::Inline(s) => s.clone(),
                     TenantSource::Ref(p) => Scenario::load(Path::new(p))?,
                 };
-                check_tenant_scenario(i, &s, self.share_experts)?;
+                check_tenant_scenario(i, &s, self)?;
                 Ok(s)
             })
             .collect()
@@ -523,6 +554,7 @@ impl FleetScenario {
                 share_experts: self.share_experts,
                 slo_feedback: self.slo_feedback,
                 batch_window: self.batch_window,
+                faults: self.faults,
                 tenants: vec![t.clone()],
             };
             let mut out = single
@@ -555,6 +587,11 @@ impl FleetScenario {
         let mut pipelines: Vec<bool> = Vec::with_capacity(compiled.len());
         for (s, scn) in scenarios.iter().zip(compiled) {
             let mut cfg = s.cfg.clone();
+            // Fleet-level fault weather overrides any per-tenant spec:
+            // crashes and throttles hit the whole account.
+            if self.faults.enabled() {
+                cfg.faults = self.faults;
+            }
             let forced = match s.baseline {
                 Baseline::Ours => None,
                 Baseline::Static => {
@@ -791,7 +828,12 @@ fn isolated_shares(
 /// the tenant's instance pool, which must never clobber a shared arena
 /// co-tenants are warm in. (`static`/`lambdaml` tenants force
 /// re-optimization off at run time, so only `ours` can trip this.)
-fn check_tenant_scenario(i: usize, s: &Scenario, share_experts: bool) -> Result<(), ScenarioError> {
+fn check_tenant_scenario(
+    i: usize,
+    s: &Scenario,
+    fleet: &FleetScenario,
+) -> Result<(), ScenarioError> {
+    let share_experts = fleet.share_experts;
     if !matches!(s.cfg.engine, SimEngine::Event { .. }) {
         return Err(ScenarioError::invalid(
             format!("tenants[{i}].scenario.config.engine"),
@@ -802,6 +844,20 @@ fn check_tenant_scenario(i: usize, s: &Scenario, share_experts: bool) -> Result<
         return Err(ScenarioError::invalid(
             format!("tenants[{i}].scenario.baseline"),
             "cpu-cluster has no serverless pool to share; run it as a standalone scenario",
+        ));
+    }
+    if fleet.faults.enabled() && s.cfg.engine != (SimEngine::Event { pipeline: true }) {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.config.engine"),
+            "fleet-level failure injection adjudicates per pipelined layer \
+             dispatch; every tenant must run engine = event with pipelining on",
+        ));
+    }
+    if fleet.batch_window > 0.0 && s.cfg.faults.enabled() {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.config.faults"),
+            "per-tenant failure injection does not compose with cross-tenant \
+             batching; set batch_window = 0 or faults = null",
         ));
     }
     if share_experts && s.baseline == Baseline::Ours && s.cfg.reoptimize {
@@ -861,6 +917,7 @@ mod tests {
             share_experts: false,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![
                 TenantSpec {
                     name: "a".into(),
@@ -896,13 +953,14 @@ mod tests {
             Json::Obj(fields) => fields,
             _ => unreachable!("fleet serializes to an object"),
         };
-        for k in ["cap_granularity", "share_experts", "slo_feedback", "batch_window"] {
+        for k in ["cap_granularity", "share_experts", "slo_feedback", "batch_window", "faults"] {
             fields.remove(k);
         }
         let old = FleetScenario::from_json(&Json::Obj(fields)).unwrap();
         assert_eq!(old.cap_granularity, CapGranularity::Execution);
         assert!(!old.share_experts && !old.slo_feedback);
         assert_eq!(old.batch_window, 0.0);
+        assert_eq!(old.faults, FaultSpec::off());
     }
 
     #[test]
@@ -992,6 +1050,7 @@ mod tests {
             share_experts: false,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![TenantSpec {
                 name: "ghost".into(),
                 weight: 1.0,
@@ -1027,6 +1086,7 @@ mod tests {
             share_experts: false,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![TenantSpec::inline("solo", s)],
         }
     }
@@ -1142,6 +1202,7 @@ mod tests {
             share_experts: false,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![
                 TenantSpec::inline("a", tiny_tenant_scenario(11)),
                 TenantSpec::inline("b", tiny_tenant_scenario(12)),
@@ -1180,6 +1241,7 @@ mod tests {
             share_experts: true,
             slo_feedback: true,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![paced_tenant(31, Some(1e-9)), paced_tenant(32, None)],
         };
         let (scenarios, compiled) = materialized(&fleet);
@@ -1188,6 +1250,57 @@ mod tests {
         assert_eq!(out.report.peak_concurrency, peak);
         let cap = fleet.account_cap.unwrap();
         assert!(out.report.peak_concurrency <= cap - 1 + widest_fan_out(&out));
+    }
+
+    /// The conservation property must also survive the failure machinery:
+    /// crashed attempts, backoff retries, throttle re-admissions and hedge
+    /// duplicates each acquire exactly one slot per replica execution and
+    /// release it at its declared (possibly truncated) end — nothing the
+    /// fault model does may leak cap slots or busy-seconds.
+    #[test]
+    fn execution_cap_ledger_conserves_slots_under_faults() {
+        let fleet = FleetScenario {
+            name: "conserve-faults".into(),
+            account_cap: Some(1),
+            arbitration: FleetArbitration::WeightedFair,
+            cap_granularity: CapGranularity::Execution,
+            share_experts: false,
+            slo_feedback: false,
+            batch_window: 0.0,
+            faults: FaultSpec {
+                crash_prob: 0.25,
+                cold_crash_multiplier: 2.0,
+                throttle_prob: 0.5,
+                timeout: f64::INFINITY,
+                max_retries: 3,
+                backoff_base: 0.25,
+                hedge_quantile: 0.9,
+                drop_after: 4,
+            },
+            // Deterministic rate-1 tenants arrive in lockstep, so the
+            // 1-slot cap rejects (and throttle-retries) a request nearly
+            // every tick while crashes drive layer retries underneath.
+            tenants: vec![paced_tenant(51, None), paced_tenant(52, Some(1e6))],
+        };
+        let (scenarios, compiled) = materialized(&fleet);
+        let (out, audit) = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, true);
+        let peak = assert_ledger_conserves(&out, &audit);
+        assert_eq!(out.report.peak_concurrency, peak);
+        // Overshoot bound gains one slot: a hedged dispatch admits the
+        // duplicate replica inside the same atomic layer admission.
+        let cap = fleet.account_cap.unwrap();
+        assert!(out.report.peak_concurrency <= cap - 1 + widest_fan_out(&out) + 1);
+        // The weather actually blew — the recovery paths under audit ran.
+        assert!(out.report.failed_invocations > 0, "crashes injected");
+        assert!(out.report.retries > 0, "layer retries exercised");
+        assert!(out.report.throttled_requests > 0, "cap throttles exercised");
+        // Billing stayed conserved alongside the ledger: failed-attempt
+        // cost is part of (never more than) the total bill, and goodput
+        // can only count a subset of completed requests.
+        assert!(out.report.retry_cost > 0.0);
+        assert!(out.report.retry_cost <= out.report.total_cost + 1e-9);
+        let requests: u64 = out.report.tenants.iter().map(|t| t.report.requests).sum();
+        assert!(out.report.goodput_requests <= requests);
     }
 
     /// Request-granular admission checks headroom before every grant, so
@@ -1202,6 +1315,7 @@ mod tests {
             share_experts: false,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![
                 TenantSpec::inline("a", tiny_tenant_scenario(11)),
                 TenantSpec::inline("b", tiny_tenant_scenario(12)),
@@ -1260,6 +1374,7 @@ mod tests {
             share_experts: false,
             slo_feedback: true,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![paced_tenant(21, Some(1e-9)), paced_tenant(22, None)],
         };
         let out = fleet.run().unwrap();
@@ -1334,6 +1449,7 @@ mod tests {
             share_experts: false,
             slo_feedback: true,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants: vec![tail_tenant(41, Some(1e-9)), tail_tenant(42, None)],
         };
         let out = fleet.run().unwrap();
@@ -1387,6 +1503,7 @@ mod tests {
             share_experts: true,
             slo_feedback: false,
             batch_window: 0.0,
+            faults: FaultSpec::off(),
             tenants,
         };
         let (scenarios, compiled) = materialized(&fleet);

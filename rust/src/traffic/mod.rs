@@ -77,9 +77,9 @@ pub mod scenario;
 pub mod sim;
 pub mod trace;
 
-pub use arrivals::{ArrivalGen, ArrivalProcess};
+pub use arrivals::{arrival_seed, fault_seed, ArrivalGen, ArrivalProcess};
 pub use autoscale::{AutoscalePolicy, Autoscaler, CapGranularity, FleetArbitration};
-pub use config::{MetricsMode, SimEngine, TrafficConfig};
+pub use config::{FaultSpec, MetricsMode, SimEngine, TrafficConfig};
 pub use error::ScenarioError;
 pub use fleet::{FleetOutcome, FleetScenario, TenantSource, TenantSpec};
 pub use report::{FleetReport, SimReport, TenantReport};

@@ -45,6 +45,32 @@ pub struct SimReport {
     /// Autoscaler actions over the run: replicas added / reaped.
     pub scale_outs: u64,
     pub scale_ins: u64,
+    /// Failure injection (all zero with faults off). Replica invocations
+    /// that crashed or hit the timeout cutoff — billed per Lambda
+    /// semantics (full duration, or exactly the cutoff).
+    pub failed_invocations: u64,
+    /// Layer dispatches re-executed after a failed attempt (bounded
+    /// exponential backoff).
+    pub retries: u64,
+    /// Speculative duplicate replica invocations launched against
+    /// quantile-flagged stragglers, and how many finished first (the
+    /// loser's billing is cut at the winner's finish).
+    pub hedged_invocations: u64,
+    pub hedge_wins: u64,
+    /// Cap-rejected admissions surfaced as throttle errors and retried
+    /// with backoff instead of parking.
+    pub throttled_requests: u64,
+    /// Experts dropped for the rest of an epoch after consecutive replica
+    /// failures, and the tokens rerouted to surviving experts while
+    /// dropped — the quality-proxy penalty of degraded serving.
+    pub dropped_experts: u64,
+    pub rerouted_tokens: u64,
+    /// Requests that finished without a single failed/throttled attempt.
+    /// `requests - goodput_requests` recovered only through retries.
+    pub goodput_requests: u64,
+    /// Billed cost of failed attempts (already included in `total_cost`):
+    /// what the fault load added on top of clean serving.
+    pub retry_cost: f64,
     /// (time, cumulative billed cost) at each served request.
     pub cost_timeline: Vec<(f64, f64)>,
 }
@@ -84,6 +110,15 @@ impl SimReport {
             max_utilization: 0.0,
             scale_outs: 0,
             scale_ins: 0,
+            failed_invocations: 0,
+            retries: 0,
+            hedged_invocations: 0,
+            hedge_wins: 0,
+            throttled_requests: 0,
+            dropped_experts: 0,
+            rerouted_tokens: 0,
+            goodput_requests: 0,
+            retry_cost: 0.0,
             cost_timeline: Vec::new(),
         }
     }
@@ -146,6 +181,15 @@ impl SimReport {
             ("max_utilization", Json::num(self.max_utilization)),
             ("scale_outs", Json::num(self.scale_outs as f64)),
             ("scale_ins", Json::num(self.scale_ins as f64)),
+            ("failed_invocations", Json::num(self.failed_invocations as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedged_invocations", Json::num(self.hedged_invocations as f64)),
+            ("hedge_wins", Json::num(self.hedge_wins as f64)),
+            ("throttled_requests", Json::num(self.throttled_requests as f64)),
+            ("dropped_experts", Json::num(self.dropped_experts as f64)),
+            ("rerouted_tokens", Json::num(self.rerouted_tokens as f64)),
+            ("goodput_requests", Json::num(self.goodput_requests as f64)),
+            ("retry_cost", Json::num(self.retry_cost)),
         ])
     }
 
@@ -180,6 +224,15 @@ impl SimReport {
             max_utilization: opt("max_utilization"),
             scale_outs: opt("scale_outs") as u64,
             scale_ins: opt("scale_ins") as u64,
+            failed_invocations: opt("failed_invocations") as u64,
+            retries: opt("retries") as u64,
+            hedged_invocations: opt("hedged_invocations") as u64,
+            hedge_wins: opt("hedge_wins") as u64,
+            throttled_requests: opt("throttled_requests") as u64,
+            dropped_experts: opt("dropped_experts") as u64,
+            rerouted_tokens: opt("rerouted_tokens") as u64,
+            goodput_requests: opt("goodput_requests") as u64,
+            retry_cost: opt("retry_cost"),
             cost_timeline: Vec::new(),
         })
     }
@@ -298,6 +351,17 @@ pub struct FleetReport {
     /// execution-granular default the transient overshoot is bounded by
     /// `cap - 1` plus one request's widest layer fan-out.
     pub peak_concurrency: usize,
+    /// Fleet-wide failure-injection rollups (sums of the per-tenant
+    /// [`SimReport`] counters; all zero with faults off).
+    pub failed_invocations: u64,
+    pub retries: u64,
+    pub hedged_invocations: u64,
+    pub hedge_wins: u64,
+    pub throttled_requests: u64,
+    pub dropped_experts: u64,
+    pub rerouted_tokens: u64,
+    pub goodput_requests: u64,
+    pub retry_cost: f64,
 }
 
 impl FleetReport {
@@ -323,9 +387,9 @@ impl FleetReport {
         let max_cap_delay = tenants.iter().map(|t| t.max_cap_delay).fold(0.0, f64::max);
         let fairness = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.effective_weight));
         let fairness_declared = jain_index(tenants.iter().map(|t| t.report.busy_secs / t.weight));
+        let sum = |f: fn(&SimReport) -> u64| tenants.iter().map(|t| f(&t.report)).sum();
         FleetReport {
             account_cap,
-            tenants,
             total_cost,
             capped_requests,
             mean_cap_delay,
@@ -333,6 +397,16 @@ impl FleetReport {
             fairness,
             fairness_declared,
             peak_concurrency,
+            failed_invocations: sum(|r| r.failed_invocations),
+            retries: sum(|r| r.retries),
+            hedged_invocations: sum(|r| r.hedged_invocations),
+            hedge_wins: sum(|r| r.hedge_wins),
+            throttled_requests: sum(|r| r.throttled_requests),
+            dropped_experts: sum(|r| r.dropped_experts),
+            rerouted_tokens: sum(|r| r.rerouted_tokens),
+            goodput_requests: sum(|r| r.goodput_requests),
+            retry_cost: tenants.iter().map(|t| t.report.retry_cost).sum(),
+            tenants,
         }
     }
 
@@ -388,6 +462,15 @@ impl FleetReport {
             ("fairness", Json::num(self.fairness)),
             ("fairness_declared", Json::num(self.fairness_declared)),
             ("peak_concurrency", Json::num(self.peak_concurrency as f64)),
+            ("failed_invocations", Json::num(self.failed_invocations as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedged_invocations", Json::num(self.hedged_invocations as f64)),
+            ("hedge_wins", Json::num(self.hedge_wins as f64)),
+            ("throttled_requests", Json::num(self.throttled_requests as f64)),
+            ("dropped_experts", Json::num(self.dropped_experts as f64)),
+            ("rerouted_tokens", Json::num(self.rerouted_tokens as f64)),
+            ("goodput_requests", Json::num(self.goodput_requests as f64)),
+            ("retry_cost", Json::num(self.retry_cost)),
         ])
     }
 }
@@ -428,6 +511,15 @@ mod tests {
         r.max_utilization = 0.8;
         r.scale_outs = 2;
         r.scale_ins = 1;
+        r.failed_invocations = 5;
+        r.retries = 4;
+        r.hedged_invocations = 3;
+        r.hedge_wins = 2;
+        r.throttled_requests = 1;
+        r.dropped_experts = 1;
+        r.rerouted_tokens = 64;
+        r.goodput_requests = 2;
+        r.retry_cost = 0.0625;
         r
     }
 
@@ -453,6 +545,15 @@ mod tests {
         assert_eq!(back.max_utilization, r.max_utilization);
         assert_eq!(back.scale_outs, r.scale_outs);
         assert_eq!(back.scale_ins, r.scale_ins);
+        assert_eq!(back.failed_invocations, r.failed_invocations);
+        assert_eq!(back.retries, r.retries);
+        assert_eq!(back.hedged_invocations, r.hedged_invocations);
+        assert_eq!(back.hedge_wins, r.hedge_wins);
+        assert_eq!(back.throttled_requests, r.throttled_requests);
+        assert_eq!(back.dropped_experts, r.dropped_experts);
+        assert_eq!(back.rerouted_tokens, r.rerouted_tokens);
+        assert_eq!(back.goodput_requests, r.goodput_requests);
+        assert_eq!(back.retry_cost, r.retry_cost);
         assert!(back.close_to(&r, 1e-12).is_ok());
     }
 
@@ -530,6 +631,37 @@ mod tests {
         assert_eq!(j.get_f64("fairness"), Some(f.fairness));
         assert_eq!(j.get_f64("fairness_declared"), Some(f.fairness_declared));
         assert_eq!(j.get_f64("peak_concurrency"), Some(4.0));
+    }
+
+    #[test]
+    fn fleet_report_sums_fault_counters() {
+        let mut a = tenant("a", 1.0, 1.0, 10.0);
+        a.report.failed_invocations = 3;
+        a.report.retries = 2;
+        a.report.retry_cost = 0.5;
+        a.report.goodput_requests = 1;
+        let mut b = tenant("b", 1.0, 1.0, 10.0);
+        b.report.failed_invocations = 1;
+        b.report.hedged_invocations = 4;
+        b.report.hedge_wins = 2;
+        b.report.throttled_requests = 5;
+        b.report.dropped_experts = 1;
+        b.report.rerouted_tokens = 128;
+        b.report.goodput_requests = 2;
+        let f = FleetReport::from_tenants(None, 0, vec![a, b]);
+        assert_eq!(f.failed_invocations, 4);
+        assert_eq!(f.retries, 2);
+        assert_eq!(f.hedged_invocations, 4);
+        assert_eq!(f.hedge_wins, 2);
+        assert_eq!(f.throttled_requests, 5);
+        assert_eq!(f.dropped_experts, 1);
+        assert_eq!(f.rerouted_tokens, 128);
+        assert_eq!(f.goodput_requests, 3);
+        assert!((f.retry_cost - 0.5).abs() < 1e-12);
+        let j = f.to_json();
+        assert_eq!(j.get_f64("failed_invocations"), Some(4.0));
+        assert_eq!(j.get_f64("goodput_requests"), Some(3.0));
+        assert_eq!(j.get_f64("retry_cost"), Some(0.5));
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! (deployment history, redeploy/autoscale events, per-request latencies) —
 //! callers never reach into `EpochSimulator` fields.
 
-use super::arrivals::{ArrivalGen, ArrivalProcess};
+use super::arrivals::{arrival_seed, ArrivalGen, ArrivalProcess};
 use super::config::TrafficConfig;
 use super::epoch::EpochSimulator;
 use super::error::{self, ScenarioError};
@@ -640,7 +640,7 @@ impl Scenario {
                 let profile = self.profile_pass(&gate);
                 let corpus = Corpus::new(self.corpus, self.seed);
                 let mut gen = RequestGenerator::new(corpus, self.seed ^ 0x33, *tokens_per_request);
-                let mut arr = ArrivalGen::new(*process, self.seed ^ 0x22);
+                let mut arr = ArrivalGen::new(*process, arrival_seed(self.seed));
                 let traffic = match (duration, requests) {
                     (Some(d), None) => {
                         let arrivals = arr.arrivals_until(*d);
@@ -719,7 +719,7 @@ impl Scenario {
             hold0: 40.0,
             hold1: 50.0,
         };
-        let arrivals = ArrivalGen::new(process, self.seed ^ 0x22).arrivals_until(duration);
+        let arrivals = ArrivalGen::new(process, arrival_seed(self.seed)).arrivals_until(duration);
         let split = arrivals.len() / 4;
 
         let corpus_b = Corpus::new(self.corpus, self.seed ^ 0xD21F7);

@@ -68,8 +68,9 @@
 //! is unaffected; only the predictor's end-of-run state differs from a
 //! legacy run.
 
+use super::arrivals::fault_seed;
 use super::autoscale::{Autoscaler, CapGranularity, FleetArbitration};
-use super::config::MetricsMode;
+use super::config::{FaultSpec, MetricsMode};
 use super::epoch::{fractions, EpochSimulator};
 use super::report::SimReport;
 use crate::bo::feedback::serve_layer_with_warmness;
@@ -79,6 +80,7 @@ use crate::deploy::DeploymentPolicy;
 use crate::model::MoeModelSpec;
 use crate::platform::{InstancePool, ReplicaKey};
 use crate::predictor::profile::absorb_batch;
+use crate::util::rng::Rng;
 use crate::util::stats::{self, LogHistogram};
 use crate::workload::{Batch, TimedBatch};
 use std::cmp::{Ordering, Reverse};
@@ -329,6 +331,16 @@ const EXEC_RELEASE: u32 = u32::MAX - 1;
 /// request slots stay far below `2^31`, so plain dispatch events are never
 /// misread as batch closes.
 const BATCH_MARK: u32 = 1 << 31;
+
+/// Tag bit marking the backoff-delayed retry of a failed layer dispatch;
+/// the low bits carry the in-flight slot. Checked after [`BATCH_MARK`]
+/// (batch-close ids stay below `2^29`, so the tags never collide).
+const RETRY_MARK: u32 = 1 << 30;
+
+/// Tag bit marking the backoff-delayed re-admission of a throttled request
+/// (a cap rejection surfaced as a retryable 429-class error); the low bits
+/// carry the in-flight slot. In-flight slots stay far below `2^29`.
+const THROTTLE_MARK: u32 = 1 << 29;
 
 impl PartialEq for Ev {
     fn eq(&self, other: &Ev) -> bool {
@@ -758,6 +770,12 @@ struct InFlight {
     next_layer: usize,
     queue_delay: f64,
     violated: bool,
+    /// Consecutive failed attempts of the current layer (or of admission,
+    /// while throttled) — the bounded retry budget's cursor.
+    attempt: u32,
+    /// Whether the request has seen no failed or throttled attempt so far
+    /// (what the goodput counter tallies at finalize).
+    clean: bool,
 }
 
 /// Reusable per-dispatch scratch buffers (cleared per layer dispatch).
@@ -768,6 +786,8 @@ struct DispatchBufs {
     replica: Vec<(ReplicaKey, f64)>,
     mem_v: Vec<(usize, usize)>,
     pay_v: Vec<(usize, usize)>,
+    /// Per-replica failure fates of the current dispatch (fault path only).
+    fates: Vec<bool>,
 }
 
 /// Metric sink: exact per-request vectors or O(1) streaming histograms.
@@ -838,6 +858,144 @@ struct LaneLedger {
     queued_jobs: u64,
 }
 
+// ------------------------------------------------------------ fault state
+
+/// Replica-latency samples the hedger must have observed before the
+/// quantile threshold is considered meaningful; below this, no hedge fires.
+const HEDGE_MIN_HISTORY: u64 = 16;
+
+/// One lane's fault-injection state: the seeded crash/throttle RNG, the
+/// per-expert consecutive-failure streaks behind the epoch-scoped drop
+/// rule, the replica-latency history feeding the hedge quantile, and the
+/// failure counters the report surfaces. `None` on a lane with faults off —
+/// the fault-free path executes zero extra operations, which is what keeps
+/// every committed fixture byte-identical.
+#[derive(Debug)]
+struct LaneFaults {
+    spec: FaultSpec,
+    rng: Rng,
+    /// Per-layer starting offset into the dense `(layer, expert)` indexing
+    /// of `fail_streak` / `dropped` (expert counts are policy-constant).
+    layer_off: Vec<usize>,
+    /// Consecutive dispatches in which any replica of the expert failed.
+    fail_streak: Vec<u32>,
+    /// Experts dropped for the rest of the epoch (tokens rerouted).
+    dropped: Vec<bool>,
+    /// Number of currently dropped experts per layer (O(1) mask check).
+    layer_drops: Vec<u32>,
+    /// Observed per-replica wait + service latencies — the hedge threshold
+    /// is a quantile of this history.
+    svc_hist: LogHistogram,
+    failed_invocations: u64,
+    retries: u64,
+    hedged: u64,
+    hedge_wins: u64,
+    throttled: u64,
+    dropped_experts: u64,
+    rerouted_tokens: u64,
+    good_requests: u64,
+    retry_cost: f64,
+}
+
+impl LaneFaults {
+    fn new(spec: FaultSpec, seed: u64, policy: &DeploymentPolicy) -> LaneFaults {
+        let mut layer_off = Vec::with_capacity(policy.layers.len());
+        let mut total = 0usize;
+        for l in &policy.layers {
+            layer_off.push(total);
+            total += l.experts.len();
+        }
+        LaneFaults {
+            spec,
+            rng: Rng::new(seed),
+            layer_off,
+            fail_streak: vec![0; total],
+            dropped: vec![false; total],
+            layer_drops: vec![0; policy.layers.len()],
+            svc_hist: LogHistogram::latency_default(),
+            failed_invocations: 0,
+            retries: 0,
+            hedged: 0,
+            hedge_wins: 0,
+            throttled: 0,
+            dropped_experts: 0,
+            rerouted_tokens: 0,
+            good_requests: 0,
+            retry_cost: 0.0,
+        }
+    }
+
+    fn idx(&self, layer: usize, expert: usize) -> usize {
+        self.layer_off[layer] + expert
+    }
+
+    /// Epoch boundary: dropped experts come back and streaks reset — the
+    /// drop rule is scoped to the epoch that observed the failures.
+    fn reset_epoch(&mut self) {
+        self.fail_streak.iter_mut().for_each(|s| *s = 0);
+        self.dropped.iter_mut().for_each(|d| *d = false);
+        self.layer_drops.iter_mut().for_each(|d| *d = 0);
+    }
+
+    /// Exponential-backoff delay of 0-indexed attempt `a`.
+    fn backoff(&self, attempt: u32) -> f64 {
+        self.spec.backoff_base * 2f64.powi(attempt.min(1024) as i32)
+    }
+
+    /// Zero dropped experts' token counts and redistribute them over the
+    /// surviving experts of the layer, proportionally by largest remainder
+    /// (ties to the lower expert index) — deterministic, and total tokens
+    /// are conserved. The rerouted mass is the report's quality-proxy
+    /// penalty. This masks the *serving* counts only; routing decisions
+    /// (the gating memo) are never modified.
+    fn mask_dropped(&mut self, layer: usize, counts: &mut [u64]) {
+        let mut moved = 0u64;
+        let mut surviving = 0u64;
+        for (e, c) in counts.iter_mut().enumerate() {
+            if self.dropped[self.layer_off[layer] + e] {
+                moved += *c;
+                *c = 0;
+            } else {
+                surviving += *c;
+            }
+        }
+        if moved == 0 {
+            return;
+        }
+        self.rerouted_tokens += moved;
+        if surviving == 0 {
+            // No surviving expert routed anything: park the mass on the
+            // first undropped expert (one always survives — the drop rule
+            // never drops a layer's last expert).
+            let first = counts
+                .iter()
+                .enumerate()
+                .position(|(e, _)| !self.dropped[self.layer_off[layer] + e])
+                .expect("a layer always keeps one surviving expert");
+            counts[first] += moved;
+            return;
+        }
+        // Largest-remainder apportionment of `moved` over survivors.
+        let mut assigned = 0u64;
+        let mut rems: Vec<(u64, usize)> = Vec::new();
+        for (e, c) in counts.iter_mut().enumerate() {
+            if self.dropped[self.layer_off[layer] + e] || *c == 0 {
+                continue;
+            }
+            let share = (moved as u128 * *c as u128 / surviving as u128) as u64;
+            let rem = (moved as u128 * *c as u128 % surviving as u128) as u64;
+            *c += share;
+            assigned += share;
+            rems.push((rem, e));
+        }
+        // Ties break to the lower index: sort by (remainder desc, index asc).
+        rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for &(_, e) in rems.iter().take((moved - assigned) as usize) {
+            counts[e] += 1;
+        }
+    }
+}
+
 // ---------------------------------------------------------- layer dispatch
 
 /// Outcome of dispatching one layer of one request at one ready time.
@@ -850,6 +1008,9 @@ struct LayerDispatch {
     service_finish: f64,
     queue_delay: f64,
     violated: bool,
+    /// Whether any replica invocation crashed or timed out (fault path
+    /// only): the attempt is billed but must be retried or given up on.
+    failed: bool,
 }
 
 /// Dispatch one layer: write the real token counts into the scratch plan,
@@ -858,6 +1019,12 @@ struct LayerDispatch {
 /// then admit every replica. Appends `(arena idx, start, service)` to
 /// `pending` so the caller decides the keep-alive end (request finish under
 /// monolithic dispatch, own execution end under pipelining).
+///
+/// With `faults` present, replica fates (crash / timeout), straggler
+/// hedging and expert-failure streaks are adjudicated *between* pricing
+/// and admission — truncated services and the hedge replica then flow
+/// through the ordinary admit / invoke / cap machinery, so arena busy
+/// time, billing and the account ledger stay conserved by construction.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_layer(
     platform: &PlatformConfig,
@@ -871,13 +1038,15 @@ fn dispatch_layer(
     pending: &mut Vec<(usize, f64, f64)>,
     bufs: &mut DispatchBufs,
     ledger: &mut LaneLedger,
+    faults: Option<&mut LaneFaults>,
 ) -> LayerDispatch {
-    let DispatchBufs { starts, idxs, replica, mem_v, pay_v } = bufs;
+    let DispatchBufs { starts, idxs, replica, mem_v, pay_v, fates } = bufs;
     starts.clear();
     idxs.clear();
     replica.clear();
     mem_v.clear();
     pay_v.clear();
+    fates.clear();
 
     for (ep, &c) in plan.experts.iter_mut().zip(counts) {
         ep.tokens = c;
@@ -913,6 +1082,115 @@ fn dispatch_layer(
     );
     debug_assert_eq!(k, idxs.len(), "peek/serve replica order diverged");
 
+    // Fault adjudication sits between pricing and admission: no instance
+    // state has changed since the peek, so truncating a service or adding
+    // the hedge replica here keeps every peeked start valid.
+    let mut cost = ls.cost;
+    let mut failed = false;
+    if let Some(f) = faults {
+        // Billed busy-seconds before any fate is applied — the denominator
+        // of the proportional cost adjustment below.
+        let full_busy: f64 = replica.iter().map(|r| r.1).sum();
+
+        // Per-replica fates: timeout cutoff (killed and billed exactly the
+        // cutoff), then the crash draw (billed in full, per Lambda error
+        // semantics), with the cold-start multiplier applied to replicas
+        // judged cold at their peeked start.
+        for j in 0..replica.len() {
+            let mut rep_failed = false;
+            if replica[j].1 > f.spec.timeout {
+                replica[j].1 = f.spec.timeout;
+                rep_failed = true;
+            } else if f.spec.crash_prob > 0.0 {
+                let warm = arena.is_warm_at(idxs[j], starts[j]);
+                let mult = if warm { 1.0 } else { f.spec.cold_crash_multiplier };
+                if f.rng.f64() < (f.spec.crash_prob * mult).min(1.0) {
+                    rep_failed = true;
+                }
+            }
+            if rep_failed {
+                f.failed_invocations += 1;
+                failed = true;
+            }
+            fates.push(rep_failed);
+        }
+
+        // Expert streak bookkeeping over the expert-major replica runs: any
+        // failed replica counts against the expert; `drop_after` consecutive
+        // failing dispatches drop it for the epoch — but never the layer's
+        // last surviving expert.
+        let mut j = 0usize;
+        while j < replica.len() {
+            let e = replica[j].0 .1;
+            let mut any = false;
+            while j < replica.len() && replica[j].0 .1 == e {
+                any |= fates[j];
+                j += 1;
+            }
+            let ix = f.idx(layer, e);
+            if !any {
+                f.fail_streak[ix] = 0;
+                continue;
+            }
+            f.fail_streak[ix] += 1;
+            if f.spec.drop_after > 0
+                && !f.dropped[ix]
+                && f.fail_streak[ix] >= f.spec.drop_after
+                && (f.layer_drops[layer] as usize) + 1 < plan.experts.len()
+            {
+                f.dropped[ix] = true;
+                f.layer_drops[layer] += 1;
+                f.dropped_experts += 1;
+            }
+        }
+
+        // Straggler hedging (successful attempts only): when the slowest
+        // replica's finish exceeds the history quantile, race a duplicate
+        // invocation on the expert's first undeployed replica slot and take
+        // the first finisher; the loser is billed only up to the winner's
+        // finish. The threshold is read before this dispatch's samples are
+        // absorbed into the history.
+        if f.spec.hedge_quantile > 0.0 && !failed && !replica.is_empty() {
+            let threshold = if f.svc_hist.count() >= HEDGE_MIN_HISTORY {
+                f.svc_hist.percentile(f.spec.hedge_quantile * 100.0)
+            } else {
+                f64::INFINITY
+            };
+            let mut js = 0usize;
+            for j in 1..replica.len() {
+                if starts[j] + replica[j].1 > starts[js] + replica[js].1 {
+                    js = j;
+                }
+            }
+            for j in 0..replica.len() {
+                f.svc_hist.add((starts[j] - ready).max(0.0) + replica[j].1);
+            }
+            let (key, svc) = replica[js];
+            let g1 = plan.experts[key.1].replicas;
+            if starts[js] + svc - ready > threshold && g1 < arena.max_replicas {
+                let idx_h = arena.index(layer, key.1, g1);
+                let start_h = arena.earliest_start(idx_h, ready);
+                let straggler_finish = starts[js] + svc;
+                let winner = straggler_finish.min(start_h + svc);
+                if start_h + svc < straggler_finish {
+                    replica[js].1 = (winner - starts[js]).max(0.0);
+                    f.hedge_wins += 1;
+                }
+                idxs.push(idx_h);
+                starts.push(start_h);
+                replica.push(((layer, key.1, g1), (winner - start_h).max(0.0).min(svc)));
+                f.hedged += 1;
+            }
+        }
+
+        // Deterministic cost proxy: billed busy-seconds (truncated losers,
+        // timeout cutoffs, the hedge duplicate) scale the priced layer cost.
+        let billed_busy: f64 = replica.iter().map(|r| r.1).sum();
+        if full_busy > 0.0 {
+            cost = ls.cost * (billed_busy / full_busy);
+        }
+    }
+
     let mut service_finish = f64::NEG_INFINITY;
     let mut queue_delay = 0.0f64;
     let enabled = autoscaler.enabled();
@@ -934,7 +1212,7 @@ fn dispatch_layer(
     }
 
     LayerDispatch {
-        cost: ls.cost,
+        cost,
         latency: ls.latency,
         max_service: ls.max_service,
         service_finish,
@@ -942,6 +1220,7 @@ fn dispatch_layer(
         // `SimReport::violation_batches` counts memory violations (Alg. 2
         // case (i)) only, exactly as the legacy loop does.
         violated: !mem_v.is_empty(),
+        failed,
     }
 }
 
@@ -1032,6 +1311,10 @@ pub(crate) struct EventLane<'a, 't> {
     pub(crate) eff_weight: f64,
     /// Latencies of requests finished since the last epoch boundary.
     epoch_hist: LogHistogram,
+    // ---- failure injection ----
+    /// Fault-injection state (`None` with faults off: the fault-free path
+    /// executes zero extra operations — byte identity of every pin).
+    faults: Option<LaneFaults>,
 }
 
 /// Per-lane wiring the fleet driver decides: identity, arena assignment,
@@ -1101,6 +1384,13 @@ impl<'a, 't> EventLane<'a, 't> {
         let basis = fractions(&plan_counts);
         let ema = basis.clone();
         let exact = sim.cfg.metrics == MetricsMode::Exact;
+        // The fault RNG derives from the tenant's own master seed through
+        // the pinned helper, decorrelated from the arrival stream.
+        let faults = if sim.cfg.faults.enabled() {
+            Some(LaneFaults::new(sim.cfg.faults, fault_seed(sim.cfg.seed), &policy))
+        } else {
+            None
+        };
         EventLane {
             tenant: opts.tenant,
             pipeline,
@@ -1145,6 +1435,7 @@ impl<'a, 't> EventLane<'a, 't> {
             base_weight: opts.weight,
             eff_weight: opts.weight,
             epoch_hist: LogHistogram::latency_default(),
+            faults,
         }
     }
 
@@ -1203,6 +1494,11 @@ impl<'a, 't> EventLane<'a, 't> {
         // floor keeps a persistently-happy tenant at its contract weight.
         if self.adapt_slo_weight() {
             cap.set_weight(self.tenant as usize, self.eff_weight);
+        }
+        // Dropped experts come back at the boundary: the degradation rule
+        // is scoped to the epoch that observed the failure streaks.
+        if let Some(f) = self.faults.as_mut() {
+            f.reset_epoch();
         }
     }
 
@@ -1296,9 +1592,13 @@ impl<'a, 't> EventLane<'a, 't> {
 
         if !cap.try_acquire(self.tenant as usize) {
             // Account saturated: hold the routed request until a slot
-            // frees; the driver restarts it from the release event.
+            // frees; the driver restarts it from the release event —
+            // unless the rejection surfaces as a throttle error, in which
+            // case the request itself backs off and retries admission.
             let slot = self.stage_request(ri, t);
-            cap.park(self.tenant as usize, slot, ready);
+            if !self.maybe_throttle(q, slot, ready) {
+                cap.park(self.tenant as usize, slot, ready);
+            }
         } else if self.pipeline {
             let slot = self.stage_request(ri, t);
             if ready > t {
@@ -1333,8 +1633,58 @@ impl<'a, 't> EventLane<'a, 't> {
         fl.next_layer = 0;
         fl.queue_delay = 0.0;
         fl.violated = false;
+        fl.attempt = 0;
+        fl.clean = true;
         std::mem::swap(&mut fl.counts, &mut self.counts_buf);
         slot
+    }
+
+    /// Fault path of a cap-rejected admission: with probability
+    /// `throttle_prob` (and remaining retry budget) the rejection surfaces
+    /// as a retryable 429-class throttle error — the request backs off
+    /// exponentially and re-attempts admission itself instead of parking in
+    /// the fair-arbitration wait queue. Returns whether it throttled.
+    fn maybe_throttle(&mut self, q: &mut EventQueue, slot: usize, ready: f64) -> bool {
+        let Some(f) = self.faults.as_mut() else { return false };
+        let fl = &mut self.inflight[slot];
+        if f.spec.throttle_prob <= 0.0
+            || fl.attempt >= f.spec.max_retries
+            || f.rng.f64() >= f.spec.throttle_prob
+        {
+            return false;
+        }
+        f.throttled += 1;
+        fl.clean = false;
+        let delay = f.backoff(fl.attempt);
+        fl.attempt += 1;
+        debug_assert!(slot < THROTTLE_MARK as usize, "in-flight slot id overflow");
+        q.push(ready + delay, self.tenant, THROTTLE_MARK | slot as u32);
+        true
+    }
+
+    /// A throttled request's backoff expired: re-attempt admission. On a
+    /// grant the retry budget resets (layer retries get the full budget);
+    /// on another rejection the throttle die rolls again, and an exhausted
+    /// or unlucky request falls back to the ordinary cap parking queue.
+    fn on_throttle_retry(
+        &mut self,
+        q: &mut EventQueue,
+        cap: &mut AccountCap,
+        arena: &mut SlotArena,
+        batch: &mut BatchPool,
+        slot: usize,
+        at: f64,
+    ) {
+        if cap.try_acquire(self.tenant as usize) {
+            self.inflight[slot].attempt = 0;
+            // Fault injection requires the pipelined engine (validated at
+            // parse time), so a granted retry dispatches layer 0 directly.
+            self.dispatch(q, cap, arena, batch, slot, at);
+            return;
+        }
+        if !self.maybe_throttle(q, slot, at) {
+            cap.park(self.tenant as usize, slot, at);
+        }
     }
 
     /// Start a granted (previously cap-parked) request at virtual time
@@ -1350,6 +1700,11 @@ impl<'a, 't> EventLane<'a, 't> {
         at: f64,
     ) {
         if self.pipeline {
+            if self.faults.is_some() {
+                // A request may arrive here with throttle attempts spent;
+                // layer retries get the full budget.
+                self.inflight[slot].attempt = 0;
+            }
             self.dispatch(q, cap, arena, batch, slot, at);
         } else {
             let at = at.max(self.blocked_until);
@@ -1395,6 +1750,15 @@ impl<'a, 't> EventLane<'a, 't> {
             }
             return;
         }
+        // Graceful degradation: tokens routed to experts dropped this epoch
+        // are rerouted onto the survivors before dispatch. The mask touches
+        // only the serving counts — routing decisions (the gating memo) are
+        // never modified.
+        if let Some(f) = self.faults.as_mut() {
+            if f.layer_drops[l] > 0 {
+                f.mask_dropped(l, &mut self.inflight[slot].counts[l]);
+            }
+        }
         self.pending.clear();
         let d = dispatch_layer(
             self.platform,
@@ -1408,6 +1772,7 @@ impl<'a, 't> EventLane<'a, 't> {
             &mut self.pending,
             &mut self.bufs,
             &mut self.ledger,
+            self.faults.as_mut(),
         );
         // Keep-alive runs from each replica's own execution end.
         for &(idx, start, t_rep) in &self.pending {
@@ -1430,6 +1795,26 @@ impl<'a, 't> EventLane<'a, 't> {
         let fl = &mut self.inflight[slot];
         fl.queue_delay = fl.queue_delay.max(d.queue_delay);
         fl.violated |= d.violated;
+        if d.failed {
+            // The failed attempt is fully billed (Lambda error semantics)
+            // and its replicas occupied their instances; the layer retries
+            // after exponential backoff — riding the same event heap — or,
+            // with the budget exhausted, the platform hands the work to a
+            // fresh healthy sandbox and serving continues degraded (the
+            // request completes, but is not counted as goodput).
+            let f = self.faults.as_mut().expect("failed dispatch only with faults on");
+            f.retry_cost += d.cost;
+            fl.clean = false;
+            if fl.attempt < f.spec.max_retries {
+                let delay = f.backoff(fl.attempt);
+                fl.attempt += 1;
+                f.retries += 1;
+                debug_assert!(slot < THROTTLE_MARK as usize, "in-flight slot id overflow");
+                q.push(d.service_finish.max(now) + delay, self.tenant, RETRY_MARK | slot as u32);
+                return;
+            }
+        }
+        fl.attempt = 0;
         fl.next_layer += 1;
         if fl.next_layer < self.num_layers {
             q.push(completion, self.tenant, slot as u32);
@@ -1446,6 +1831,11 @@ impl<'a, 't> EventLane<'a, 't> {
     /// later than `now`) is what latency is measured to and when the
     /// account slot is released.
     fn finalize(&mut self, q: &mut EventQueue, slot: usize, now: f64, finish: f64) {
+        if let Some(f) = self.faults.as_mut() {
+            if self.inflight[slot].clean {
+                f.good_requests += 1;
+            }
+        }
         let fl = &self.inflight[slot];
         let latency = finish - fl.arrival;
         let queue_delay = fl.queue_delay;
@@ -1504,6 +1894,9 @@ impl<'a, 't> EventLane<'a, 't> {
                 &mut self.pending,
                 &mut self.bufs,
                 &mut self.ledger,
+                // Fault injection requires the pipelined engine (validated),
+                // so monolithic dispatch never adjudicates fates.
+                None,
             );
             queue_delay = queue_delay.max(d.queue_delay);
             max_service = max_service.max(d.max_service);
@@ -1576,6 +1969,17 @@ impl<'a, 't> EventLane<'a, 't> {
         report.max_utilization = arena.max_utilization(self.last_finish);
         report.scale_outs = self.autoscaler.scale_outs;
         report.scale_ins = self.autoscaler.scale_ins;
+        if let Some(f) = &self.faults {
+            report.failed_invocations = f.failed_invocations;
+            report.retries = f.retries;
+            report.hedged_invocations = f.hedged;
+            report.hedge_wins = f.hedge_wins;
+            report.throttled_requests = f.throttled;
+            report.dropped_experts = f.dropped_experts;
+            report.rerouted_tokens = f.rerouted_tokens;
+            report.goodput_requests = f.good_requests;
+            report.retry_cost = f.retry_cost;
+        }
         sim.autoscale_events = self.autoscaler.events.clone();
         sim.last_policy =
             Some(std::mem::replace(&mut self.policy, DeploymentPolicy { layers: Vec::new() }));
@@ -1713,6 +2117,9 @@ fn execute_batch<'a>(
             &mut olane.pending,
             &mut olane.bufs,
             &mut merged,
+            // Faults do not compose with cross-tenant batching (rejected at
+            // fleet validation), so a merged dispatch never adjudicates.
+            None,
         );
         for &(idx, start, t_rep) in &olane.pending {
             if arena.invoke(idx, start, start + t_rep) {
@@ -1787,6 +2194,16 @@ fn run_step<'a>(
                 // A batch window closed: run the merged invocation and
                 // resume every member request.
                 execute_batch(lanes, arenas, q, cap, batch, (ev.req & !BATCH_MARK) as usize, ev.at);
+            } else if ev.req & RETRY_MARK != 0 {
+                // A failed layer's backoff expired: re-dispatch the layer.
+                let aid = lanes[ti].arena_id;
+                let slot = (ev.req & !RETRY_MARK) as usize;
+                lanes[ti].dispatch(q, cap, &mut arenas[aid], batch, slot, ev.at);
+            } else if ev.req & THROTTLE_MARK != 0 {
+                // A throttled request's backoff expired: retry admission.
+                let aid = lanes[ti].arena_id;
+                let slot = (ev.req & !THROTTLE_MARK) as usize;
+                lanes[ti].on_throttle_retry(q, cap, &mut arenas[aid], batch, slot, ev.at);
             } else {
                 let aid = lanes[ti].arena_id;
                 lanes[ti].dispatch(q, cap, &mut arenas[aid], batch, ev.req as usize, ev.at);

@@ -39,7 +39,8 @@ use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::trace::{Trace, TraceRequest};
 use serverless_moe::traffic::{
-    ArrivalGen, ArrivalProcess, CapGranularity, FleetArbitration, FleetReport, TrafficConfig,
+    arrival_seed, ArrivalGen, ArrivalProcess, CapGranularity, FaultSpec, FleetArbitration,
+    FleetReport, TrafficConfig,
 };
 use std::path::{Path, PathBuf};
 
@@ -58,6 +59,7 @@ fn single_tenant_fleet(s: Scenario) -> FleetScenario {
         share_experts: false,
         slo_feedback: false,
         batch_window: 0.0,
+        faults: FaultSpec::off(),
         tenants: vec![TenantSpec::inline("only", s)],
     }
 }
@@ -170,14 +172,15 @@ fn count_in(arrivals: &[f64], from: f64, to: f64) -> usize {
 /// hope, search (deterministically) for a scenario seed whose realized
 /// arrivals satisfy the wanted burst/quiet structure — reproducing the
 /// exact arrival stream the scenario will serve (`Scenario::materialize`
-/// seeds its `ArrivalGen` with `seed ^ 0x22`).
+/// seeds its `ArrivalGen` with `arrival_seed(seed)`, the documented
+/// derivation).
 fn pick_seed(
     process: ArrivalProcess,
     duration: f64,
     ok: impl Fn(&[f64]) -> bool,
 ) -> u64 {
     for seed in 0..10_000u64 {
-        let arrivals = ArrivalGen::new(process, seed ^ 0x22).arrivals_until(duration);
+        let arrivals = ArrivalGen::new(process, arrival_seed(seed)).arrivals_until(duration);
         if ok(&arrivals) {
             return seed;
         }
@@ -263,6 +266,7 @@ fn claim_fleet(l: f64, keep_alive: f64) -> FleetScenario {
         share_experts: false,
         slo_feedback: false,
         batch_window: 0.0,
+        faults: FaultSpec::off(),
         tenants: vec![
             claim_tenant("early", early_seed, early, duration, keep_alive),
             claim_tenant("late", late_seed, late, duration, keep_alive),
@@ -443,6 +447,7 @@ fn hundred_tenant_claim_fleet(l: f64, share_experts: bool) -> FleetScenario {
         share_experts,
         slo_feedback: false,
         batch_window: 0.0,
+        faults: FaultSpec::off(),
         tenants,
     }
 }
@@ -551,6 +556,7 @@ fn churn_batching_fleet(l: f64, window: f64) -> FleetScenario {
         share_experts: true,
         slo_feedback: false,
         batch_window: window,
+        faults: FaultSpec::off(),
         tenants,
     }
 }
@@ -681,4 +687,152 @@ fn committed_hundred_tenant_fleet_loads_and_runs() {
         r.to_json().to_string_pretty(),
         "hundred-tenant fleet runs must be deterministic"
     );
+}
+
+// ------------------------------------------------- failure injection claims
+
+/// A contended, crashy tenant for the hedging claim: tiny model, LambdaML
+/// deployment (closed-form, nothing wall-clock-bound), deterministic
+/// arrivals at twice the all-warm service rate so per-instance FIFO
+/// backlogs grow over the run and the straggler quantile keeps climbing —
+/// exactly the regime speculative hedging exists for. Crashes ride along
+/// so hedging is measured *on top of* a working retry loop, not instead
+/// of one.
+fn crashy_fleet(l: f64, faults: FaultSpec) -> FleetScenario {
+    let scenario = Scenario::builder("crashy")
+        .model("tiny")
+        .expect("tiny preset exists")
+        .seed(0xC4A5)
+        .profile(2, 128)
+        .traffic(TrafficSource::Synthetic {
+            process: ArrivalProcess::Deterministic { rate: 2.0 / l },
+            duration: Some(40.0 * l),
+            requests: None,
+            tokens_per_request: 256,
+        })
+        .config(TrafficConfig {
+            reoptimize: false,
+            prewarm: true,
+            keep_alive: f64::INFINITY,
+            epoch_secs: f64::INFINITY,
+            ..TrafficConfig::default()
+        })
+        .baseline(Baseline::LambdaML)
+        .build()
+        .expect("crashy tenant is valid by construction");
+    FleetScenario {
+        name: "crashy-fleet".to_string(),
+        account_cap: None,
+        arbitration: FleetArbitration::Fifo,
+        cap_granularity: CapGranularity::Execution,
+        share_experts: false,
+        slo_feedback: false,
+        batch_window: 0.0,
+        faults,
+        tenants: vec![TenantSpec::inline("crashy", scenario)],
+    }
+}
+
+fn crashy_faults(l: f64, hedge_quantile: f64) -> FaultSpec {
+    FaultSpec {
+        crash_prob: 0.12,
+        cold_crash_multiplier: 2.0,
+        throttle_prob: 0.0,
+        timeout: f64::INFINITY,
+        max_retries: 3,
+        backoff_base: 0.05 * l,
+        hedge_quantile,
+        drop_after: 0,
+    }
+}
+
+/// The tentpole payoff claim, pinned: under a seeded crashy contended
+/// scenario, hedging+retry beats retry-only on p95 at bounded (< 2x)
+/// extra cost — and the faulted runs are deterministic byte-for-byte
+/// across two executions.
+#[test]
+fn hedging_plus_retry_beats_retry_only_on_p95_at_bounded_cost() {
+    let l = calibrate_request_latency();
+    let retry_only = crashy_fleet(l, crashy_faults(l, 0.0))
+        .run()
+        .expect("retry-only fleet runs")
+        .report;
+    let hedged = crashy_fleet(l, crashy_faults(l, 0.85))
+        .run()
+        .expect("hedged fleet runs")
+        .report;
+
+    // Both runs served the identical workload through real fault weather.
+    let served = |r: &FleetReport| r.tenants.iter().map(|t| t.report.requests).sum::<u64>();
+    assert_eq!(served(&retry_only), served(&hedged), "identical workload both ways");
+    assert!(
+        retry_only.failed_invocations > 0 && retry_only.retries > 0,
+        "crashes and retries must actually fire in the baseline"
+    );
+    assert!(hedged.failed_invocations > 0 && hedged.retries > 0);
+    assert_eq!(retry_only.hedged_invocations, 0, "quantile 0 = hedging off");
+    assert!(hedged.hedged_invocations > 0, "stragglers must be hedged");
+    assert!(hedged.hedge_wins > 0, "some hedges must win the race");
+
+    // The claim: strictly better p95 at strictly bounded extra cost.
+    assert!(
+        hedged.max_p95() < retry_only.max_p95(),
+        "hedging must cut the tail: {} vs {}",
+        hedged.max_p95(),
+        retry_only.max_p95()
+    );
+    assert!(
+        hedged.total_cost < 2.0 * retry_only.total_cost,
+        "hedging must stay under 2x the retry-only bill: {} vs {}",
+        hedged.total_cost,
+        retry_only.total_cost
+    );
+
+    // Deterministic across two runs, byte-for-byte.
+    let again = crashy_fleet(l, crashy_faults(l, 0.85)).run().expect("re-run").report;
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        hedged.to_json().to_string_pretty(),
+        "faulted fleet runs must be deterministic"
+    );
+}
+
+/// The committed crashy fleet fixture (the CI smoke matrix picks it up via
+/// its `*fleet*` glob; the chaos job re-runs it in release mode): strict
+/// load, canonical round-trip, byte-identical reports across two runs, and
+/// nonzero recovered-request counters — the fault machinery actually ran
+/// and the fleet still served every request.
+#[test]
+fn committed_faults_fleet_is_deterministic_and_recovers() {
+    let fleet = FleetScenario::load(&scenario_path("fleet_faults.json"))
+        .unwrap_or_else(|e| panic!("committed faults fleet must load: {e}"));
+    assert!(fleet.faults.enabled(), "the fixture exists to exercise the fault model");
+
+    let text = fleet.to_json().to_string_pretty();
+    let back = FleetScenario::from_json(
+        &serverless_moe::util::json::Json::parse(&text).expect("canonical JSON parses"),
+    )
+    .expect("canonical form re-parses");
+    assert_eq!(back.to_json().to_string_pretty(), text, "fixed-point serialization");
+
+    let a = fleet.run().expect("faulted fleet runs").report;
+    let b = fleet.run().expect("faulted fleet re-runs").report;
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "faulted fleet runs must be byte-identical"
+    );
+
+    let served: u64 = a.tenants.iter().map(|t| t.report.requests).sum();
+    assert!(served > 0, "the fixture must serve traffic");
+    assert!(a.failed_invocations > 0, "crashes must fire");
+    assert!(a.retries > 0, "retries must fire");
+    assert!(
+        a.goodput_requests < served,
+        "some requests must have needed recovery: goodput {} of {}",
+        a.goodput_requests,
+        served
+    );
+    assert!(a.goodput_requests > 0, "most requests still finish clean");
+    assert!(a.retry_cost > 0.0 && a.retry_cost <= a.total_cost + 1e-9);
 }

@@ -145,6 +145,8 @@ fn unknown_fields_are_rejected_everywhere() {
         r#"{"name": "x", "config": {"autoscale": {"kind": "off", "target": 0.5}}}"#,
         r#"{"name": "x", "platform": {"cold_starts": 2.0}}"#,
         r#"{"name": "x", "traffic": {"kind": "inline", "trace": {"requests": [{"time": 0, "tokens": 8, "size": 1}]}}}"#,
+        // Typo inside the failure-injection block (strictness recurses).
+        r#"{"name": "x", "config": {"faults": {"crash_probability": 0.1}}}"#,
     ];
     for case in cases {
         let err = Scenario::from_json(&Json::parse(case).unwrap())
@@ -166,6 +168,18 @@ fn invalid_values_are_rejected_with_typed_errors() {
         r#"{"name": "x", "traffic": {"kind": "synthetic", "process": {"kind": "poisson", "rate": -1}, "duration": 10}}"#,
         r#"{"name": "x", "traffic": {"kind": "synthetic", "process": {"kind": "poisson", "rate": 1}}}"#,
         r#"{"name": "x", "version": 2}"#,
+        // Negative keep-alive (the NaN/negative float checks; NaN itself is
+        // inexpressible in JSON and covered by the builder-path unit test).
+        r#"{"name": "x", "config": {"keep_alive": -5}}"#,
+        // Out-of-range failure-injection knobs.
+        r#"{"name": "x", "config": {"faults": {"crash_prob": 2.0}}}"#,
+        r#"{"name": "x", "config": {"faults": {"cold_crash_multiplier": 0.5}}}"#,
+        r#"{"name": "x", "config": {"faults": {"hedge_quantile": 1.0}}}"#,
+        r#"{"name": "x", "config": {"faults": {"timeout": -1.0}}}"#,
+        // Faults ride the per-layer event heap: the legacy loop and the
+        // unpipelined (monolithic) event engine are rejected.
+        r#"{"name": "x", "config": {"engine": {"kind": "legacy"}, "faults": {"crash_prob": 0.1}}}"#,
+        r#"{"name": "x", "config": {"engine": {"kind": "event", "pipeline": false}, "faults": {"crash_prob": 0.1}}}"#,
     ];
     for case in invalid {
         let err = Scenario::from_json(&Json::parse(case).unwrap())
@@ -258,6 +272,21 @@ fn fleet_unknown_fields_and_invalid_values_rejected() {
         fleet(r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "baseline": "cpu-cluster"}}"#),
         // Unsupported version.
         format!(r#"{{"name": "f", "version": 2, "tenants": [{}]}}"#, tenant("")),
+        // Out-of-range fleet-level fault knob.
+        format!(
+            r#"{{"name": "f", "faults": {{"throttle_prob": -0.2}}, "tenants": [{}]}}"#,
+            tenant("")
+        ),
+        // Fleet-level faults do not compose with cross-tenant batching.
+        format!(
+            r#"{{"name": "f", "share_experts": true, "batch_window": 0.25, "faults": {{"crash_prob": 0.1}}, "tenants": [{}]}}"#,
+            tenant("")
+        ),
+        // Fleet-level faults require every tenant on the pipelined engine.
+        format!(
+            r#"{{"name": "f", "faults": {{"crash_prob": 0.1}}, "tenants": [{}]}}"#,
+            r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "config": {"engine": {"kind": "event", "pipeline": false}}}}"#
+        ),
     ];
     for case in &invalid {
         let err = FleetScenario::from_json(&Json::parse(case).unwrap())
