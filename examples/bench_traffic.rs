@@ -40,6 +40,20 @@
 //!                    profiling) exceeds S wall-clock seconds; 0 disables
 //!                    (default 0); output goes to --out (default
 //!                    BENCH_fleet.json in fleet mode)
+//!
+//! Decode mode (`--decode` switches to the autoregressive chat bench):
+//!   materializes one chat workload — per-request prompt prefill plus a
+//!   seeded geometric decode length, every decode step re-routed through
+//!   the gate — then serves the identical materialized trace twice: once
+//!   with per-step serial dispatch (decode_batch_window 0) and once under
+//!   continuous batching, reporting time-per-output-token, billed cost,
+//!   and the KV-affinity counters for both.
+//!   --requests N     chat requests                (default 2000)
+//!   --rate R         deterministic arrivals/s     (default 50)
+//!   --prompt T       prompt tokens per request    (default 64)
+//!   --decode-mean M  geometric mean decode steps  (default 8)
+//!   --budget-secs S  wall-clock budget over both runs; 0 disables
+//!                    (default 0); output to --out (default BENCH_decode.json)
 
 use serverless_moe::comm::{CommMethod, ExpertPlan, LayerPlan};
 use serverless_moe::config::workload::CorpusPreset;
@@ -47,8 +61,8 @@ use serverless_moe::deploy::DeploymentPolicy;
 use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::{
-    ArrivalProcess, AutoscalePolicy, CapGranularity, FaultSpec, FleetArbitration, MetricsMode,
-    SimEngine, SimReport, TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, CapGranularity, DecodeLengthModel, FaultSpec,
+    FleetArbitration, MetricsMode, SimEngine, SimReport, TrafficConfig,
 };
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::json::Json;
@@ -200,9 +214,174 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Autoregressive decode smoke bench: one chat workload (prefill + seeded
+/// geometric decode, every step re-routed through the gate), served twice
+/// over the *same* materialized trace — per-step serial dispatch versus
+/// continuous batching — so the time-per-output-token and billed-cost wins
+/// are measured on an identical token stream. Solver-free (hand-built
+/// deployment) and deterministic, so the CI validator can assert the
+/// batched run strictly beats serial on both axes.
+fn bench_decode(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("requests", 2000);
+    let rate = args.get_f64("rate", 50.0);
+    let prompt_tokens = args.get_usize("prompt", 64);
+    let decode_mean = args.get_f64("decode-mean", 8.0);
+    let seed = args.get_u64("seed", 0xBE7C4);
+    let budget = args.get_f64("budget-secs", 0.0);
+    let out = args.get_or("out", "BENCH_decode.json");
+
+    let scenario = Scenario::builder("bench-chat-decode")
+        .model("tiny")?
+        .seed(seed)
+        .gate_seed(0xB11D)
+        .corpus(CorpusPreset::Wmt19)
+        .profile(4, prompt_tokens)
+        .traffic(TrafficSource::Chat {
+            process: ArrivalProcess::Deterministic { rate },
+            duration: None,
+            requests: Some(n),
+            prompt_tokens,
+            decode: DecodeLengthModel::Geometric { mean: decode_mean, cap: 64 },
+            decode_tokens: 8,
+        })
+        .build()?;
+
+    eprintln!("materializing {n}-request chat trace at {rate} req/s ...");
+    let t0 = Instant::now();
+    let scn = scenario.materialize()?;
+    let trace_gen_secs = t0.elapsed().as_secs_f64();
+
+    // Same hand-built solver-free deployment as the throughput bench.
+    let policy = DeploymentPolicy {
+        layers: (0..scn.spec.num_moe_layers())
+            .map(|_| LayerPlan {
+                method: CommMethod::Indirect,
+                beta: 1,
+                experts: vec![ExpertPlan { mem_mb: 1152, replicas: 2, tokens: 512 }; 4],
+            })
+            .collect(),
+    };
+    let base_cfg = TrafficConfig {
+        epoch_secs: f64::INFINITY,
+        keep_alive: 900.0,
+        concurrency: Some(1),
+        autoscale: AutoscalePolicy::Off,
+        prewarm: true,
+        reoptimize: false,
+        ..TrafficConfig::default()
+    };
+
+    let run = |label: &'static str, window: f64| -> RunResult {
+        eprintln!("running {label} ...");
+        let cfg = TrafficConfig { decode_batch_window: window, ..base_cfg.clone() };
+        let t = Instant::now();
+        let report = scn.run_with_policy(&cfg, policy.clone()).report;
+        let wall_secs = t.elapsed().as_secs_f64();
+        let (vm_rss_mb, vm_hwm_mb) = rss_mb();
+        eprintln!(
+            "  {label}: {wall_secs:.2}s, tpot {:.4}s, cost {:.4}, \
+             kv evictions {}, re-prefills {}",
+            report.time_per_output_token,
+            report.total_cost,
+            report.kv_evictions,
+            report.re_prefills
+        );
+        RunResult { label, wall_secs, report, vm_rss_mb, vm_hwm_mb }
+    };
+
+    let serial = run("serial decode (window 0)", 0.0);
+    let batched = run("continuous batching (window 0.05)", 0.05);
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    anyhow::ensure!(
+        serial.report.output_tokens == batched.report.output_tokens,
+        "both runs must emit the identical token stream: {} vs {}",
+        serial.report.output_tokens,
+        batched.report.output_tokens
+    );
+
+    let decode_to_json = |r: &RunResult| {
+        Json::from_pairs(vec![
+            ("wall_secs", Json::num(r.wall_secs)),
+            ("requests", Json::num(r.report.requests as f64)),
+            ("output_tokens", Json::num(r.report.output_tokens as f64)),
+            ("time_per_output_token", Json::num(r.report.time_per_output_token)),
+            ("total_cost", Json::num(r.report.total_cost)),
+            ("p95_latency", Json::num(r.report.p95_latency)),
+            ("prefill_p95", Json::num(r.report.prefill_p95)),
+            ("decode_p95", Json::num(r.report.decode_p95)),
+            ("kv_evictions", Json::num(r.report.kv_evictions as f64)),
+            ("re_prefills", Json::num(r.report.re_prefills as f64)),
+            (
+                "invocations",
+                Json::num(
+                    (r.report.warm_invocations + r.report.cold_invocations) as f64,
+                ),
+            ),
+        ])
+    };
+
+    let tpot_speedup = serial.report.time_per_output_token
+        / batched.report.time_per_output_token.max(1e-12);
+    let cost_ratio = batched.report.total_cost / serial.report.total_cost.max(1e-12);
+    let mut t = Table::new(
+        "bench_traffic --decode — identical chat trace, two dispatch modes",
+        &["run", "wall (s)", "tpot (s)", "cost", "invocations"],
+    );
+    for r in [&serial, &batched] {
+        t.row(vec![
+            r.label.into(),
+            format!("{:.2}", r.wall_secs),
+            format!("{:.4}", r.report.time_per_output_token),
+            format!("{:.4}", r.report.total_cost),
+            fnum((r.report.warm_invocations + r.report.cold_invocations) as f64),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ncontinuous batching vs serial: {tpot_speedup:.2}x on time-per-output-token, \
+         {:.1}% of the serial bill",
+        100.0 * cost_ratio
+    );
+
+    let j = Json::from_pairs(vec![
+        ("requests", Json::num(n as f64)),
+        ("rate", Json::num(rate)),
+        ("prompt_tokens", Json::num(prompt_tokens as f64)),
+        ("decode_mean", Json::num(decode_mean)),
+        ("output_tokens", Json::num(serial.report.output_tokens as f64)),
+        ("trace_gen_secs", Json::num(trace_gen_secs)),
+        ("wall_secs", Json::num(wall_secs)),
+        ("budget_secs", Json::num(budget)),
+        ("scenario", scenario.to_json()),
+        (
+            "runs",
+            Json::from_pairs(vec![
+                ("serial", decode_to_json(&serial)),
+                ("batched", decode_to_json(&batched)),
+            ]),
+        ),
+        ("tpot_speedup_batched_vs_serial", Json::num(tpot_speedup)),
+        ("cost_ratio_batched_vs_serial", Json::num(cost_ratio)),
+    ]);
+    j.write_file(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    if budget > 0.0 {
+        anyhow::ensure!(
+            wall_secs <= budget,
+            "decode bench blew its wall-clock budget: {wall_secs:.1}s > {budget:.1}s"
+        );
+        println!("within wall-clock budget: {wall_secs:.1}s <= {budget:.1}s");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     serverless_moe::util::log::init_from_env();
     let args = Args::from_env();
+    if args.flag("decode") {
+        return bench_decode(&args);
+    }
     if let Some(fleet) = args.get("fleet") {
         return bench_fleet(&args, fleet.parse()?);
     }

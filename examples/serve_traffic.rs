@@ -271,6 +271,19 @@ fn main() -> anyhow::Result<()> {
         fnum((1.0 - ours.report.total_cost / lam.total_cost.max(1e-12)) * 100.0),
         fnum((1.0 - ours.report.total_cost / cpu.total_cost.max(1e-12)) * 100.0),
     );
+    if ours.report.output_tokens > 0 {
+        // Autoregressive chat workload: the per-phase decode summary.
+        println!(
+            "decode: {} output tokens at {} time-per-output-token \
+             (prefill p95 {}, decode p95 {}), {} KV evictions -> {} re-prefills",
+            ours.report.output_tokens,
+            ftime(ours.report.time_per_output_token),
+            ftime(ours.report.prefill_p95),
+            ftime(ours.report.decode_p95),
+            ours.report.kv_evictions,
+            ours.report.re_prefills,
+        );
+    }
     let art = &ours.artifacts;
     if !art.redeploy_times.is_empty() {
         println!(

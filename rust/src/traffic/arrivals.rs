@@ -30,6 +30,16 @@ pub fn fault_seed(master: u64) -> u64 {
     master ^ 0xFA17
 }
 
+/// Derive the autoregressive-decode RNG seed from a scenario's master seed.
+///
+/// Chat workloads draw decode lengths and per-step token batches from this
+/// stream (see `traffic::workload::ChatWorkload`), decorrelated from both
+/// the arrival process and the fault stream: changing the decode model never
+/// perturbs when requests arrive or which invocations fail.
+pub fn decode_seed(master: u64) -> u64 {
+    master ^ 0xDECD
+}
+
 /// The stochastic process generating request arrival times.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalProcess {
@@ -334,7 +344,10 @@ mod tests {
         // injected fault) in every golden fixture.
         assert_eq!(arrival_seed(0), 0x22);
         assert_eq!(fault_seed(0), 0xFA17);
+        assert_eq!(decode_seed(0), 0xDECD);
         assert_ne!(arrival_seed(7), fault_seed(7));
+        assert_ne!(decode_seed(7), arrival_seed(7));
+        assert_ne!(decode_seed(7), fault_seed(7));
     }
 
     #[test]

@@ -132,6 +132,10 @@ pub struct FaultSpec {
     /// finisher wins (the loser's billing is cut at the winner's finish).
     /// 0 = hedging off.
     pub hedge_quantile: f64,
+    /// Minimum number of observed replica latencies before `hedge_quantile`
+    /// activates (>= 1) — below it the quantile estimate is too noisy to
+    /// hedge on. 16 preserves the pre-knob hard-coded threshold.
+    pub hedge_min_obs: u64,
     /// Consecutive-failure threshold after which an expert's replicas are
     /// dropped for the rest of the epoch, its tokens rerouted to the
     /// surviving experts (a quality-proxy penalty the report surfaces);
@@ -156,6 +160,7 @@ impl FaultSpec {
             max_retries: 0,
             backoff_base: 0.0,
             hedge_quantile: 0.0,
+            hedge_min_obs: 16,
             drop_after: 0,
         }
     }
@@ -183,6 +188,7 @@ impl FaultSpec {
             ("max_retries", Json::num(self.max_retries as f64)),
             ("backoff_base", Json::num(self.backoff_base)),
             ("hedge_quantile", Json::num(self.hedge_quantile)),
+            ("hedge_min_obs", Json::num(self.hedge_min_obs as f64)),
             ("drop_after", Json::num(self.drop_after as f64)),
         ])
     }
@@ -203,6 +209,7 @@ impl FaultSpec {
                 "max_retries",
                 "backoff_base",
                 "hedge_quantile",
+                "hedge_min_obs",
                 "drop_after",
             ],
         )?;
@@ -220,6 +227,7 @@ impl FaultSpec {
             max_retries: error::opt_u64(j, SECTION, "max_retries", d.max_retries as u64)? as u32,
             backoff_base: error::opt_f64(j, SECTION, "backoff_base", d.backoff_base)?,
             hedge_quantile: error::opt_f64(j, SECTION, "hedge_quantile", d.hedge_quantile)?,
+            hedge_min_obs: error::opt_u64(j, SECTION, "hedge_min_obs", d.hedge_min_obs)?,
             drop_after: error::opt_u64(j, SECTION, "drop_after", d.drop_after as u64)? as u32,
         };
         spec.check(SECTION)?;
@@ -266,6 +274,11 @@ impl FaultSpec {
             (0.0..1.0).contains(&self.hedge_quantile),
             "hedge_quantile",
             format!("must be in [0, 1) (0 = off), got {}", self.hedge_quantile),
+        )?;
+        ensure(
+            self.hedge_min_obs >= 1,
+            "hedge_min_obs",
+            format!("must be >= 1, got {}", self.hedge_min_obs),
         )?;
         Ok(())
     }
@@ -316,6 +329,14 @@ pub struct TrafficConfig {
     /// Failure injection ([`FaultSpec::off`] by default — JSON `null` or an
     /// omitted key, per the null-means-absent convention).
     pub faults: FaultSpec,
+    /// Continuous-batching window for autoregressive decode steps
+    /// (seconds): decode steps from different in-flight requests that land
+    /// on the same replica FIFO within the window merge into one invocation
+    /// per iteration, cost split by token share. `0.0` (the default)
+    /// dispatches every decode step serially and keeps the engine
+    /// byte-identical to the pre-decode builds. Only meaningful with a
+    /// chat traffic source; requires the pipelined event engine.
+    pub decode_batch_window: f64,
 }
 
 impl Default for TrafficConfig {
@@ -339,6 +360,7 @@ impl Default for TrafficConfig {
             engine: SimEngine::Event { pipeline: true },
             metrics: MetricsMode::Exact,
             faults: FaultSpec::off(),
+            decode_batch_window: 0.0,
         }
     }
 }
@@ -381,6 +403,7 @@ impl TrafficConfig {
                     self.faults.to_json()
                 },
             ),
+            ("decode_batch_window", Json::num(self.decode_batch_window)),
         ])
     }
 
@@ -409,6 +432,7 @@ impl TrafficConfig {
                 "engine",
                 "metrics",
                 "faults",
+                "decode_batch_window",
             ],
         )?;
         let d = TrafficConfig::default();
@@ -485,6 +509,12 @@ impl TrafficConfig {
                 None | Some(Json::Null) => FaultSpec::off(),
                 Some(f) => FaultSpec::from_json(f)?,
             },
+            decode_batch_window: error::opt_f64(
+                j,
+                SECTION,
+                "decode_batch_window",
+                d.decode_batch_window,
+            )?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -553,6 +583,25 @@ impl TrafficConfig {
                 self.engine == SimEngine::Event { pipeline: true },
                 "faults",
                 "fault injection requires the pipelined event engine".to_string(),
+            )?;
+        }
+        ensure(
+            self.decode_batch_window >= 0.0 && self.decode_batch_window.is_finite(),
+            "decode_batch_window",
+            format!("must be finite and >= 0, got {}", self.decode_batch_window),
+        )?;
+        if self.decode_batch_window > 0.0 {
+            ensure(
+                self.engine == SimEngine::Event { pipeline: true },
+                "decode_batch_window",
+                "continuous decode batching requires the pipelined event engine".to_string(),
+            )?;
+            // A merged decode flush is adjudicated once, not per member
+            // request — same composition gap as fleet batch_window.
+            ensure(
+                !self.faults.enabled(),
+                "decode_batch_window",
+                "decode batching does not compose with fault injection".to_string(),
             )?;
         }
         self.autoscale.check()
@@ -709,6 +758,7 @@ mod tests {
             max_retries: 3,
             backoff_base: 0.25,
             hedge_quantile: 0.9,
+            hedge_min_obs: 16,
             drop_after: 2,
         };
         assert!(spec.enabled());
@@ -732,6 +782,7 @@ mod tests {
             r#"{"timeout": 0.0}"#,
             r#"{"backoff_base": -0.5}"#,
             r#"{"hedge_quantile": 1.0}"#,
+            r#"{"hedge_min_obs": 0}"#,
         ] {
             assert!(
                 matches!(
@@ -750,5 +801,29 @@ mod tests {
         assert!(matches!(cfg.validate(), Err(ScenarioError::Invalid { .. })));
         cfg.engine = SimEngine::Legacy;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn decode_batch_window_roundtrips_and_is_range_checked() {
+        let mut cfg = TrafficConfig::default();
+        cfg.decode_batch_window = 0.05;
+        let back = TrafficConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.decode_batch_window, 0.05);
+
+        cfg.decode_batch_window = -0.1;
+        assert!(matches!(cfg.validate(), Err(ScenarioError::Invalid { .. })));
+        cfg.decode_batch_window = f64::NAN;
+        assert!(cfg.validate().is_err());
+
+        // A merged decode flush has no per-member fate, and the monolithic
+        // engines have no per-step events to merge — both combos rejected.
+        cfg.decode_batch_window = 0.05;
+        cfg.engine = SimEngine::Legacy;
+        assert!(cfg.validate().is_err());
+        cfg.engine = SimEngine::Event { pipeline: true };
+        assert!(cfg.validate().is_ok());
+        cfg.faults.crash_prob = 0.1;
+        assert!(matches!(cfg.validate(), Err(ScenarioError::Invalid { .. })));
     }
 }

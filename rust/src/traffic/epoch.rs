@@ -81,6 +81,12 @@ pub struct EpochSimulator<'a> {
     /// absorb path; persists across runs (the gate is fixed for the
     /// simulator's lifetime, so entries never go stale).
     pub(crate) router: RouterCache,
+    /// Autoregressive decode schedule for chat traffic (`None` for the
+    /// classic one-pass workloads): per-request decode lengths and per-step
+    /// token batches, indexed by arrival order. Consumed by the event
+    /// engine; the legacy serial loop ignores it (chat scenarios require
+    /// the pipelined event engine at validation time).
+    pub(crate) chat: Option<&'a crate::traffic::workload::ChatWorkload>,
 }
 
 /// Per-layer popularity fractions (uniform for an all-zero layer).
@@ -132,6 +138,7 @@ impl<'a> EpochSimulator<'a> {
             last_latencies: Vec::new(),
             policy_history: Vec::new(),
             router,
+            chat: None,
         }
     }
 

@@ -615,6 +615,7 @@ impl FleetScenario {
                 None => sim.initial_policy(&scn.traffic),
             };
             sim.begin_run(&policy);
+            sim.chat = scn.chat.as_ref();
             sims.push(sim);
             policies.push(policy);
             pipelines.push(pipeline);
@@ -858,6 +859,13 @@ fn check_tenant_scenario(
             format!("tenants[{i}].scenario.config.faults"),
             "per-tenant failure injection does not compose with cross-tenant \
              batching; set batch_window = 0 or faults = null",
+        ));
+    }
+    if s.cfg.decode_batch_window > 0.0 {
+        return Err(ScenarioError::invalid(
+            format!("tenants[{i}].scenario.config.decode_batch_window"),
+            "the fleet's own batch_window governs invocation merging; set the \
+             tenant's decode_batch_window to 0",
         ));
     }
     if share_experts && s.baseline == Baseline::Ours && s.cfg.reoptimize {
@@ -1104,6 +1112,9 @@ mod tests {
         // onboard/offboard steps and merged batch dispatches must replay
         // identically under both drivers.
         exact.push(FleetScenario::load(&committed("fleet_churn_batching.json")).unwrap());
+        // The PR 9 golden fixture rides along: the fleet-report numbers it
+        // pins must not depend on the driver either.
+        exact.push(FleetScenario::load(&committed("fleet_golden.json")).unwrap());
         exact.push(solo_fleet(
             Scenario::load(&committed("tiny_trace_lambdaml.json")).unwrap(),
         ));
@@ -1134,6 +1145,59 @@ mod tests {
             assert_eq!(h.report.redeploys, s.report.redeploys);
             assert_eq!(h.capped_requests, s.capped_requests);
         }
+    }
+
+    /// The PR 9 off-switch, pinned under both step drivers: chat traffic
+    /// with a fixed decode length of 0 degenerates to pure prefill and must
+    /// reproduce the equivalent `synthetic` scenario byte-for-byte — same
+    /// prompts, same arrivals, no decode machinery on the path. All four
+    /// runs (chat-0 and synthetic, each under Heap and Scan) must agree.
+    #[test]
+    fn decode_zero_chat_matches_synthetic_under_both_drivers() {
+        use crate::traffic::workload::DecodeLengthModel;
+        let process = ArrivalProcess::Poisson { rate: 1.0 };
+        let chat = Scenario::builder("decode-zero")
+            .model("tiny")
+            .unwrap()
+            .seed(21)
+            .profile(2, 64)
+            .traffic(TrafficSource::Chat {
+                process,
+                duration: Some(5.0),
+                requests: None,
+                prompt_tokens: 64,
+                decode: DecodeLengthModel::Fixed { steps: 0 },
+                decode_tokens: 8,
+            })
+            .config(TrafficConfig { reoptimize: false, ..TrafficConfig::default() })
+            .baseline(Baseline::LambdaML)
+            .build()
+            .unwrap();
+        let mut synth = chat.clone();
+        synth.source = TrafficSource::Synthetic {
+            process,
+            duration: Some(5.0),
+            requests: None,
+            tokens_per_request: 64,
+        };
+        let mut reports = Vec::new();
+        for s in [chat, synth] {
+            let fleet = solo_fleet(s);
+            let (scenarios, compiled) = materialized(&fleet);
+            for driver in [FleetDriver::Heap, FleetDriver::Scan] {
+                let (out, _) = fleet.run_compiled(&scenarios, &compiled, driver, false);
+                let t = &out.report.tenants[0].report;
+                assert!(t.requests > 0, "the identity must be over real traffic");
+                assert_eq!(t.output_tokens, 0, "decode 0 emits nothing");
+                assert_eq!(t.kv_evictions, 0);
+                assert_eq!(t.re_prefills, 0);
+                reports.push(t.to_json().to_string_pretty());
+            }
+        }
+        assert!(
+            reports.windows(2).all(|w| w[0] == w[1]),
+            "decode-0 chat must be byte-identical to synthetic under both drivers"
+        );
     }
 
     /// Replay an execution-granular audit log and assert the conservation
@@ -1275,6 +1339,7 @@ mod tests {
                 max_retries: 3,
                 backoff_base: 0.25,
                 hedge_quantile: 0.9,
+                hedge_min_obs: 16,
                 drop_after: 4,
             },
             // Deterministic rate-1 tenants arrive in lockstep, so the

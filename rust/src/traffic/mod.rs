@@ -41,6 +41,14 @@
 //!    `examples/bench_traffic.rs`); the legacy serial loop stays reachable
 //!    via [`config::SimEngine::Legacy`] and is reproduced bit-for-bit when
 //!    pipelining is disabled;
+//!  - [`workload`]  — autoregressive LLM workloads: the
+//!    [`workload::RequestPhase`] prefill/decode model, seeded decode-length
+//!    distributions ([`workload::DecodeLengthModel`]), per-step token
+//!    batches that drift expert routing *within* a request, and the
+//!    [`workload::KvLedger`] pinning decode steps to the instances holding
+//!    KV state (a cold pin forces a billed re-prefill); decode steps of
+//!    co-resident requests can merge into one invocation per iteration
+//!    (continuous batching, `config.decode_batch_window`);
 //!  - [`report`]    — the [`report::SimReport`] aggregate (billed cost over
 //!    time, throughput, latency and queue-delay percentiles, utilization)
 //!    used by the golden-regression fixtures and the `experiments::traffic`
@@ -76,8 +84,9 @@ pub mod report;
 pub mod scenario;
 pub mod sim;
 pub mod trace;
+pub mod workload;
 
-pub use arrivals::{arrival_seed, fault_seed, ArrivalGen, ArrivalProcess};
+pub use arrivals::{arrival_seed, decode_seed, fault_seed, ArrivalGen, ArrivalProcess};
 pub use autoscale::{AutoscalePolicy, Autoscaler, CapGranularity, FleetArbitration};
 pub use config::{FaultSpec, MetricsMode, SimEngine, TrafficConfig};
 pub use error::ScenarioError;
@@ -89,3 +98,4 @@ pub use scenario::{
 };
 pub use sim::{AccountCap, SlotArena};
 pub use trace::{Trace, TraceRequest};
+pub use workload::{ChatWorkload, DecodeLengthModel, KvLedger, RequestPhase};

@@ -71,6 +71,24 @@ pub struct SimReport {
     /// Billed cost of failed attempts (already included in `total_cost`):
     /// what the fault load added on top of clean serving.
     pub retry_cost: f64,
+    /// Autoregressive serving (all zero without a chat workload). Output
+    /// tokens emitted across all decode steps.
+    pub output_tokens: u64,
+    /// Prefill-pass latency percentiles (prompt passes plus billed
+    /// re-prefills after KV loss).
+    pub prefill_p50: f64,
+    pub prefill_p95: f64,
+    /// Per-decode-step latency percentiles.
+    pub decode_p50: f64,
+    pub decode_p95: f64,
+    /// Mean seconds of decode time per output token — the chat-serving
+    /// latency headline (re-prefill time charged to decode, since the user
+    /// is waiting on the next token either way).
+    pub time_per_output_token: f64,
+    /// KV states lost to cold pinned instances, and the billed re-prefill
+    /// passes those losses forced.
+    pub kv_evictions: u64,
+    pub re_prefills: u64,
     /// (time, cumulative billed cost) at each served request.
     pub cost_timeline: Vec<(f64, f64)>,
 }
@@ -119,6 +137,14 @@ impl SimReport {
             rerouted_tokens: 0,
             goodput_requests: 0,
             retry_cost: 0.0,
+            output_tokens: 0,
+            prefill_p50: 0.0,
+            prefill_p95: 0.0,
+            decode_p50: 0.0,
+            decode_p95: 0.0,
+            time_per_output_token: 0.0,
+            kv_evictions: 0,
+            re_prefills: 0,
             cost_timeline: Vec::new(),
         }
     }
@@ -190,6 +216,14 @@ impl SimReport {
             ("rerouted_tokens", Json::num(self.rerouted_tokens as f64)),
             ("goodput_requests", Json::num(self.goodput_requests as f64)),
             ("retry_cost", Json::num(self.retry_cost)),
+            ("output_tokens", Json::num(self.output_tokens as f64)),
+            ("prefill_p50", Json::num(self.prefill_p50)),
+            ("prefill_p95", Json::num(self.prefill_p95)),
+            ("decode_p50", Json::num(self.decode_p50)),
+            ("decode_p95", Json::num(self.decode_p95)),
+            ("time_per_output_token", Json::num(self.time_per_output_token)),
+            ("kv_evictions", Json::num(self.kv_evictions as f64)),
+            ("re_prefills", Json::num(self.re_prefills as f64)),
         ])
     }
 
@@ -233,6 +267,14 @@ impl SimReport {
             rerouted_tokens: opt("rerouted_tokens") as u64,
             goodput_requests: opt("goodput_requests") as u64,
             retry_cost: opt("retry_cost"),
+            output_tokens: opt("output_tokens") as u64,
+            prefill_p50: opt("prefill_p50"),
+            prefill_p95: opt("prefill_p95"),
+            decode_p50: opt("decode_p50"),
+            decode_p95: opt("decode_p95"),
+            time_per_output_token: opt("time_per_output_token"),
+            kv_evictions: opt("kv_evictions") as u64,
+            re_prefills: opt("re_prefills") as u64,
             cost_timeline: Vec::new(),
         })
     }
@@ -362,6 +404,13 @@ pub struct FleetReport {
     pub rerouted_tokens: u64,
     pub goodput_requests: u64,
     pub retry_cost: f64,
+    /// Fleet-wide autoregressive rollups (zero without chat tenants):
+    /// summed output tokens, KV evictions and forced re-prefills, plus the
+    /// output-token-weighted mean time per output token across tenants.
+    pub output_tokens: u64,
+    pub kv_evictions: u64,
+    pub re_prefills: u64,
+    pub time_per_output_token: f64,
 }
 
 impl FleetReport {
@@ -406,6 +455,21 @@ impl FleetReport {
             rerouted_tokens: sum(|r| r.rerouted_tokens),
             goodput_requests: sum(|r| r.goodput_requests),
             retry_cost: tenants.iter().map(|t| t.report.retry_cost).sum(),
+            output_tokens: sum(|r| r.output_tokens),
+            kv_evictions: sum(|r| r.kv_evictions),
+            re_prefills: sum(|r| r.re_prefills),
+            time_per_output_token: {
+                let toks: u64 = sum(|r| r.output_tokens);
+                let decode_secs: f64 = tenants
+                    .iter()
+                    .map(|t| t.report.time_per_output_token * t.report.output_tokens as f64)
+                    .sum();
+                if toks > 0 {
+                    decode_secs / toks as f64
+                } else {
+                    0.0
+                }
+            },
             tenants,
         }
     }
@@ -471,6 +535,10 @@ impl FleetReport {
             ("rerouted_tokens", Json::num(self.rerouted_tokens as f64)),
             ("goodput_requests", Json::num(self.goodput_requests as f64)),
             ("retry_cost", Json::num(self.retry_cost)),
+            ("output_tokens", Json::num(self.output_tokens as f64)),
+            ("kv_evictions", Json::num(self.kv_evictions as f64)),
+            ("re_prefills", Json::num(self.re_prefills as f64)),
+            ("time_per_output_token", Json::num(self.time_per_output_token)),
         ])
     }
 }
@@ -520,6 +588,14 @@ mod tests {
         r.rerouted_tokens = 64;
         r.goodput_requests = 2;
         r.retry_cost = 0.0625;
+        r.output_tokens = 96;
+        r.prefill_p50 = 0.4;
+        r.prefill_p95 = 0.9;
+        r.decode_p50 = 0.05;
+        r.decode_p95 = 0.12;
+        r.time_per_output_token = 0.06;
+        r.kv_evictions = 2;
+        r.re_prefills = 2;
         r
     }
 
@@ -554,6 +630,14 @@ mod tests {
         assert_eq!(back.rerouted_tokens, r.rerouted_tokens);
         assert_eq!(back.goodput_requests, r.goodput_requests);
         assert_eq!(back.retry_cost, r.retry_cost);
+        assert_eq!(back.output_tokens, r.output_tokens);
+        assert_eq!(back.prefill_p50, r.prefill_p50);
+        assert_eq!(back.prefill_p95, r.prefill_p95);
+        assert_eq!(back.decode_p50, r.decode_p50);
+        assert_eq!(back.decode_p95, r.decode_p95);
+        assert_eq!(back.time_per_output_token, r.time_per_output_token);
+        assert_eq!(back.kv_evictions, r.kv_evictions);
+        assert_eq!(back.re_prefills, r.re_prefills);
         assert!(back.close_to(&r, 1e-12).is_ok());
     }
 
@@ -662,6 +746,37 @@ mod tests {
         assert_eq!(j.get_f64("failed_invocations"), Some(4.0));
         assert_eq!(j.get_f64("goodput_requests"), Some(3.0));
         assert_eq!(j.get_f64("retry_cost"), Some(0.5));
+    }
+
+    #[test]
+    fn fleet_report_weights_time_per_output_token_by_tokens() {
+        let mut a = tenant("a", 1.0, 1.0, 10.0);
+        a.report.output_tokens = 300;
+        a.report.time_per_output_token = 0.1;
+        a.report.kv_evictions = 3;
+        a.report.re_prefills = 2;
+        let mut b = tenant("b", 1.0, 1.0, 10.0);
+        b.report.output_tokens = 100;
+        b.report.time_per_output_token = 0.3;
+        b.report.kv_evictions = 1;
+        b.report.re_prefills = 1;
+        let f = FleetReport::from_tenants(None, 0, vec![a, b]);
+        assert_eq!(f.output_tokens, 400);
+        assert_eq!(f.kv_evictions, 4);
+        assert_eq!(f.re_prefills, 3);
+        // (300·0.1 + 100·0.3) / 400 = 0.15: weighted by tokens, not tenants.
+        assert!((f.time_per_output_token - 0.15).abs() < 1e-12);
+        let j = f.to_json();
+        assert_eq!(j.get_f64("output_tokens"), Some(400.0));
+        assert_eq!(j.get_f64("time_per_output_token"), Some(f.time_per_output_token));
+        // No output tokens anywhere: the weighted mean is defined as zero.
+        let quiet = FleetReport::from_tenants(None, 0, vec![tenant("q", 1.0, 1.0, 1.0)]);
+        assert_eq!(quiet.output_tokens, 96, "sample() emits 96 output tokens");
+        let mut z = tenant("z", 1.0, 1.0, 1.0);
+        z.report.output_tokens = 0;
+        z.report.time_per_output_token = 0.0;
+        let zf = FleetReport::from_tenants(None, 0, vec![z]);
+        assert_eq!(zf.time_per_output_token, 0.0);
     }
 
     #[test]

@@ -43,12 +43,13 @@
 //! (deployment history, redeploy/autoscale events, per-request latencies) —
 //! callers never reach into `EpochSimulator` fields.
 
-use super::arrivals::{arrival_seed, ArrivalGen, ArrivalProcess};
-use super::config::TrafficConfig;
+use super::arrivals::{arrival_seed, decode_seed, ArrivalGen, ArrivalProcess};
+use super::config::{SimEngine, TrafficConfig};
 use super::epoch::EpochSimulator;
 use super::error::{self, ScenarioError};
 use super::report::SimReport;
 use super::trace::Trace;
+use super::workload::{ChatWorkload, DecodeLengthModel};
 use crate::config::workload::CorpusPreset;
 use crate::config::{CpuClusterConfig, PlatformConfig};
 use crate::deploy::baselines::lambdaml_policy;
@@ -215,6 +216,22 @@ pub enum TrafficSource {
     TracePath { path: String },
     /// A request trace inlined into the scenario itself.
     Inline { trace: Trace },
+    /// Chat-style autoregressive traffic: each request is a
+    /// `prompt_tokens`-token prompt (materialized exactly like `synthetic`
+    /// traffic — a decode length of 0 reproduces it byte-for-byte) followed
+    /// by a decode phase whose length is drawn per request from `decode` on
+    /// the seeded stream. Every decode step routes `decode_tokens` fresh
+    /// tokens through the gate at positions offset past the prompt, so
+    /// expert popularity drifts *within* a request. Requires the pipelined
+    /// event engine; the CPU-cluster baseline serves the prompts only.
+    Chat {
+        process: ArrivalProcess,
+        duration: Option<f64>,
+        requests: Option<usize>,
+        prompt_tokens: usize,
+        decode: DecodeLengthModel,
+        decode_tokens: usize,
+    },
 }
 
 impl TrafficSource {
@@ -251,6 +268,29 @@ impl TrafficSource {
                 ("kind", Json::str("inline")),
                 ("trace", trace.to_json()),
             ]),
+            TrafficSource::Chat {
+                process,
+                duration,
+                requests,
+                prompt_tokens,
+                decode,
+                decode_tokens,
+            } => {
+                let mut pairs = vec![
+                    ("kind", Json::str("chat")),
+                    ("process", process.to_json()),
+                    ("prompt_tokens", Json::num(*prompt_tokens as f64)),
+                    ("decode", decode.to_json()),
+                    ("decode_tokens", Json::num(*decode_tokens as f64)),
+                ];
+                if let Some(d) = duration {
+                    pairs.push(("duration", Json::num(*d)));
+                }
+                if let Some(n) = requests {
+                    pairs.push(("requests", Json::num(*n as f64)));
+                }
+                Json::from_pairs(pairs)
+            }
         }
     }
 
@@ -303,11 +343,49 @@ impl TrafficSource {
                     )?,
                 }
             }
+            "chat" => {
+                error::check_keys(
+                    j,
+                    SECTION,
+                    &[
+                        "kind",
+                        "process",
+                        "duration",
+                        "requests",
+                        "prompt_tokens",
+                        "decode",
+                        "decode_tokens",
+                    ],
+                )?;
+                let process = ArrivalProcess::from_json(
+                    j.get("process")
+                        .ok_or_else(|| ScenarioError::missing(SECTION, "process"))?,
+                )?;
+                let duration = match j.get("duration") {
+                    None => None,
+                    Some(_) => Some(error::req_f64(j, SECTION, "duration")?),
+                };
+                let requests = match j.get("requests") {
+                    None => None,
+                    Some(_) => Some(error::opt_usize(j, SECTION, "requests", 0)?),
+                };
+                TrafficSource::Chat {
+                    process,
+                    duration,
+                    requests,
+                    prompt_tokens: error::opt_usize(j, SECTION, "prompt_tokens", 512)?,
+                    decode: DecodeLengthModel::from_json(
+                        j.get("decode")
+                            .ok_or_else(|| ScenarioError::missing(SECTION, "decode"))?,
+                    )?,
+                    decode_tokens: error::opt_usize(j, SECTION, "decode_tokens", 32)?,
+                }
+            }
             other => {
                 return Err(ScenarioError::UnknownName {
                     what: "traffic source",
                     name: other.to_string(),
-                    known: "drift | synthetic | trace | inline",
+                    known: "drift | synthetic | trace | inline | chat",
                 })
             }
         };
@@ -365,6 +443,42 @@ impl TrafficSource {
                 } else {
                     Ok(())
                 }
+            }
+            TrafficSource::Chat {
+                process,
+                duration,
+                requests,
+                prompt_tokens,
+                decode,
+                decode_tokens,
+            } => {
+                process.check()?;
+                match (duration, requests) {
+                    (Some(d), None) if *d > 0.0 && d.is_finite() => {}
+                    (Some(d), None) => {
+                        return Err(ScenarioError::invalid(
+                            "traffic.duration",
+                            format!("must be finite and > 0, got {d}"),
+                        ))
+                    }
+                    (None, Some(n)) if *n > 0 => {}
+                    (None, Some(_)) => {
+                        return Err(ScenarioError::invalid("traffic.requests", "must be > 0"))
+                    }
+                    _ => {
+                        return Err(ScenarioError::invalid(
+                            "traffic",
+                            "exactly one of 'duration' or 'requests' must be set",
+                        ))
+                    }
+                }
+                if *prompt_tokens == 0 {
+                    return Err(ScenarioError::invalid("traffic.prompt_tokens", "must be > 0"));
+                }
+                if *decode_tokens == 0 {
+                    return Err(ScenarioError::invalid("traffic.decode_tokens", "must be > 0"));
+                }
+                decode.check()
             }
         }
     }
@@ -475,6 +589,17 @@ impl Scenario {
         }
         if self.profile.tokens == 0 {
             return Err(ScenarioError::invalid("profile.tokens", "must be >= 1"));
+        }
+        // Decode passes chain through the event heap; the monolithic paths
+        // have no per-pass dispatch state to chain from.
+        if matches!(self.source, TrafficSource::Chat { .. })
+            && self.cfg.engine != (SimEngine::Event { pipeline: true })
+        {
+            return Err(ScenarioError::invalid(
+                "traffic",
+                "chat traffic requires the pipelined event engine \
+                 (config.engine = event with pipeline: true)",
+            ));
         }
         Ok(())
     }
@@ -670,6 +795,49 @@ impl Scenario {
                 let traffic = trace.replay(&Corpus::new(self.corpus, self.seed), self.seed);
                 self.assemble(spec, gate, profile.table, profile.prior, traffic)
             }
+            TrafficSource::Chat {
+                process,
+                duration,
+                requests,
+                prompt_tokens,
+                decode,
+                decode_tokens,
+            } => {
+                // Prompts materialize exactly like `synthetic` traffic —
+                // same corpus, generator and arrival seed derivations — so
+                // a decode length of 0 reproduces it byte-for-byte.
+                let profile = self.profile_pass(&gate);
+                let corpus = Corpus::new(self.corpus, self.seed);
+                let mut gen = RequestGenerator::new(corpus, self.seed ^ 0x33, *prompt_tokens);
+                let mut arr = ArrivalGen::new(*process, arrival_seed(self.seed));
+                let traffic = match (duration, requests) {
+                    (Some(d), None) => {
+                        let arrivals = arr.arrivals_until(*d);
+                        gen.timed_batches(&arrivals)
+                    }
+                    (None, Some(n)) => {
+                        let mut at = 0.0f64;
+                        let mut traffic = Vec::with_capacity(*n);
+                        for _ in 0..*n {
+                            at += arr.next_gap();
+                            traffic.push(TimedBatch { at, batch: gen.next_batch() });
+                        }
+                        traffic
+                    }
+                    _ => unreachable!("validated: exactly one of duration/requests"),
+                };
+                let chat = ChatWorkload::generate(
+                    &Corpus::new(self.corpus, self.seed),
+                    decode_seed(self.seed),
+                    decode,
+                    *decode_tokens,
+                    *prompt_tokens,
+                    traffic.len(),
+                );
+                let mut scn = self.assemble(spec, gate, profile.table, profile.prior, traffic);
+                scn.chat = Some(chat);
+                scn
+            }
         };
         if scn.traffic.is_empty() {
             return Err(ScenarioError::EmptyTraffic);
@@ -745,6 +913,7 @@ impl Scenario {
             table,
             prior,
             traffic,
+            chat: None,
         }
     }
 }
@@ -880,6 +1049,9 @@ pub struct TrafficScenario {
     pub table: DatasetTable,
     pub prior: TokenPrior,
     pub traffic: Vec<TimedBatch>,
+    /// The decode schedule of chat traffic (`None` otherwise): per-request
+    /// decode lengths and per-step token batches, aligned with `traffic`.
+    pub chat: Option<ChatWorkload>,
 }
 
 /// Everything a run produces beyond the [`SimReport`] aggregate — the
@@ -999,6 +1171,7 @@ impl TrafficScenario {
     fn run_sim(&self, cfg: TrafficConfig, policy: Option<DeploymentPolicy>) -> ScenarioOutcome {
         let mut sim =
             EpochSimulator::new(&self.platform, &self.spec, &self.gate, self.predictor(), cfg);
+        sim.chat = self.chat.as_ref();
         let report = match policy {
             Some(p) => sim.run_with_policy(p, &self.traffic),
             None => sim.run(&self.traffic),

@@ -73,6 +73,7 @@ use super::autoscale::{Autoscaler, CapGranularity, FleetArbitration};
 use super::config::{FaultSpec, MetricsMode};
 use super::epoch::{fractions, EpochSimulator};
 use super::report::SimReport;
+use super::workload::{ChatWorkload, KvLedger, RequestPhase};
 use crate::bo::feedback::serve_layer_with_warmness;
 use crate::comm::LayerPlan;
 use crate::config::PlatformConfig;
@@ -690,11 +691,6 @@ impl BatchPool {
         BatchPool { window, ..BatchPool::default() }
     }
 
-    /// The inert pool of an unbatched run (`batch_window: 0`).
-    pub(crate) fn off() -> BatchPool {
-        BatchPool::default()
-    }
-
     pub(crate) fn enabled(&self) -> bool {
         self.window > 0.0
     }
@@ -776,6 +772,29 @@ struct InFlight {
     /// Whether the request has seen no failed or throttled attempt so far
     /// (what the goodput counter tallies at finalize).
     clean: bool,
+    // ---- autoregressive (chat) state; inert at `decode_len == 0` ----
+    /// Decode steps this request owes after its prefill pass (0 = classic
+    /// one-pass request: every field below stays untouched).
+    decode_len: u32,
+    /// Next decode step to run (cursor into `decode_counts`).
+    decode_next: usize,
+    /// Which pass `counts`/`next_layer` currently describe.
+    phase: RequestPhase,
+    /// Virtual time the current pass started dispatching (per-phase
+    /// latency histograms measure pass durations from here).
+    pass_start: f64,
+    /// The current prefill pass is a KV-loss re-prefill, not the prompt
+    /// pass (its duration is charged against decode time).
+    reprefill: bool,
+    /// The prompt's routed counts, kept for billed re-prefills.
+    prompt_counts: Vec<Vec<u64>>,
+    /// Pre-routed per-layer expert counts of each decode step — routed at
+    /// arrival (the dispatch path has no router access), so popularity
+    /// drift *within* the request is fixed by the seed, not by engine
+    /// interleaving.
+    decode_counts: Vec<Vec<Vec<u64>>>,
+    /// Token count of each decode step (the output-token meter).
+    decode_tokens: Vec<u64>,
 }
 
 /// Reusable per-dispatch scratch buffers (cleared per layer dispatch).
@@ -859,10 +878,6 @@ struct LaneLedger {
 }
 
 // ------------------------------------------------------------ fault state
-
-/// Replica-latency samples the hedger must have observed before the
-/// quantile threshold is considered meaningful; below this, no hedge fires.
-const HEDGE_MIN_HISTORY: u64 = 16;
 
 /// One lane's fault-injection state: the seeded crash/throttle RNG, the
 /// per-expert consecutive-failure streaks behind the epoch-scoped drop
@@ -1151,7 +1166,7 @@ fn dispatch_layer(
         // finish. The threshold is read before this dispatch's samples are
         // absorbed into the history.
         if f.spec.hedge_quantile > 0.0 && !failed && !replica.is_empty() {
-            let threshold = if f.svc_hist.count() >= HEDGE_MIN_HISTORY {
+            let threshold = if f.svc_hist.count() >= f.spec.hedge_min_obs {
                 f.svc_hist.percentile(f.spec.hedge_quantile * 100.0)
             } else {
                 f64::INFINITY
@@ -1315,6 +1330,28 @@ pub(crate) struct EventLane<'a, 't> {
     /// Fault-injection state (`None` with faults off: the fault-free path
     /// executes zero extra operations — byte identity of every pin).
     faults: Option<LaneFaults>,
+    // ---- autoregressive (chat) serving ----
+    /// The lane's decode schedule (`None` for classic one-pass traffic:
+    /// every chat branch below is dead and the engine is byte-identical to
+    /// the pre-chat build).
+    chat: Option<&'a ChatWorkload>,
+    /// Which instances hold each in-flight request's KV state (pinned as
+    /// prefill layers dispatch; a cold pin at a decode step's start means
+    /// the state was reaped with the instance — billed re-prefill).
+    kv: KvLedger,
+    /// Whether decode steps of co-resident requests merge through the
+    /// [`BatchPool`] (`decode_batch_window > 0` on a chat lane).
+    decode_batching: bool,
+    /// Requests currently past their prompt pass and not yet finalized —
+    /// a lone decode step has nobody to merge with and dispatches serially
+    /// (work conservation on an uncontended replica by construction).
+    decode_inflight: usize,
+    prefill_hist: LogHistogram,
+    decode_hist: LogHistogram,
+    /// Total seconds spent in decode passes (plus KV re-prefills), the
+    /// numerator of time-per-output-token.
+    decode_time: f64,
+    output_tokens: u64,
 }
 
 /// Per-lane wiring the fleet driver decides: identity, arena assignment,
@@ -1436,6 +1473,14 @@ impl<'a, 't> EventLane<'a, 't> {
             eff_weight: opts.weight,
             epoch_hist: LogHistogram::latency_default(),
             faults,
+            chat: sim.chat,
+            kv: KvLedger::new(),
+            decode_batching: sim.cfg.decode_batch_window > 0.0 && sim.chat.is_some(),
+            decode_inflight: 0,
+            prefill_hist: LogHistogram::latency_default(),
+            decode_hist: LogHistogram::latency_default(),
+            decode_time: 0.0,
+            output_tokens: 0,
         }
     }
 
@@ -1596,11 +1641,13 @@ impl<'a, 't> EventLane<'a, 't> {
             // unless the rejection surfaces as a throttle error, in which
             // case the request itself backs off and retries admission.
             let slot = self.stage_request(ri, t);
+            self.stage_chat(sim, slot);
             if !self.maybe_throttle(q, slot, ready) {
                 cap.park(self.tenant as usize, slot, ready);
             }
         } else if self.pipeline {
             let slot = self.stage_request(ri, t);
+            self.stage_chat(sim, slot);
             if ready > t {
                 q.push(ready, self.tenant, slot as u32);
             } else {
@@ -1635,8 +1682,44 @@ impl<'a, 't> EventLane<'a, 't> {
         fl.violated = false;
         fl.attempt = 0;
         fl.clean = true;
+        // Recycled-slot hygiene for the chat state machine (scalar writes
+        // only; the vectors are refilled by `stage_chat` when they matter).
+        fl.decode_len = 0;
+        fl.decode_next = 0;
+        fl.phase = RequestPhase::Prefill;
+        fl.pass_start = t;
+        fl.reprefill = false;
         std::mem::swap(&mut fl.counts, &mut self.counts_buf);
         slot
+    }
+
+    /// Arm the chat state machine for a freshly staged request: pre-route
+    /// every decode step's token batch through the shared routing memo (the
+    /// dispatch path has no router access) and open its KV ledger entry.
+    /// A no-op for non-chat lanes and for requests the decode-length model
+    /// assigned zero steps — those run the classic one-pass path untouched.
+    fn stage_chat(&mut self, sim: &mut EpochSimulator<'a>, slot: usize) {
+        let Some(chat) = self.chat else { return };
+        let ri = self.inflight[slot].traffic_idx;
+        let len = chat.decode_lens[ri];
+        if len == 0 {
+            return;
+        }
+        {
+            let fl = &mut self.inflight[slot];
+            fl.decode_len = len;
+            fl.prompt_counts.clone_from(&fl.counts);
+            fl.decode_counts.clear();
+            fl.decode_tokens.clear();
+        }
+        let mut routed: Vec<Vec<u64>> = Vec::new();
+        for step in &chat.steps[ri] {
+            sim.router.counts_into(sim.gate, step, &mut routed);
+            let fl = &mut self.inflight[slot];
+            fl.decode_counts.push(routed.clone());
+            fl.decode_tokens.push(step.total_tokens as u64);
+        }
+        self.kv.begin(slot);
     }
 
     /// Fault path of a cap-rejected admission: with probability
@@ -1739,7 +1822,16 @@ impl<'a, 't> EventLane<'a, 't> {
     ) {
         let now = now.max(self.blocked_until);
         let l = self.inflight[slot].next_layer;
-        if self.batchable {
+        // Continuous batching: a decode step with at least one other
+        // decode-phase request in flight merges through the pool exactly
+        // like a batchable fleet dispatch; a lone decode step has nobody to
+        // wait for and dispatches serially, so an uncontended replica never
+        // pays the window (work conservation by construction).
+        if self.batchable
+            || (self.decode_batching
+                && self.inflight[slot].phase == RequestPhase::Decode
+                && self.decode_inflight > 1)
+        {
             let counts = &self.inflight[slot].counts[l];
             match batch.admit(self.arena_id, l, now, counts, self.tenant, slot) {
                 Some((id, close_at)) => {
@@ -1782,6 +1874,15 @@ impl<'a, 't> EventLane<'a, 't> {
                 self.ledger.cold_starts += 1;
             }
         }
+        // KV affinity: every instance a prefill layer touches holds a shard
+        // of the request's KV state — decode steps are pinned to this set.
+        if self.inflight[slot].decode_len > 0
+            && self.inflight[slot].phase == RequestPhase::Prefill
+        {
+            for &(idx, _, _) in &self.pending {
+                self.kv.pin(slot, idx);
+            }
+        }
         // Execution-granular cap: every replica execution of this layer
         // holds one account slot over its own busy window.
         if self.cap_exec {
@@ -1819,8 +1920,88 @@ impl<'a, 't> EventLane<'a, 't> {
         if fl.next_layer < self.num_layers {
             q.push(completion, self.tenant, slot as u32);
         } else {
-            self.finalize(q, slot, now, completion);
+            self.complete_pass(q, arena, slot, now, completion);
         }
+    }
+
+    /// A request's last layer completed at `finish`: classic one-pass
+    /// requests finalize, a chat request advances its prefill/decode state
+    /// machine instead — record the finished pass in the per-phase
+    /// histograms, then chain the next decode step or finalize after the
+    /// last output token.
+    fn complete_pass(
+        &mut self,
+        q: &mut EventQueue,
+        arena: &SlotArena,
+        slot: usize,
+        now: f64,
+        finish: f64,
+    ) {
+        if self.inflight[slot].decode_len == 0 {
+            self.finalize(q, slot, now, finish);
+            return;
+        }
+        let dur = (finish - self.inflight[slot].pass_start).max(0.0);
+        if self.inflight[slot].phase == RequestPhase::Prefill {
+            self.prefill_hist.add(dur);
+            if self.inflight[slot].reprefill {
+                // The user was waiting on the next token either way, so a
+                // KV re-prefill's time is charged against decode.
+                self.inflight[slot].reprefill = false;
+                self.decode_time += dur;
+            } else {
+                self.decode_inflight += 1;
+            }
+            self.inflight[slot].phase = RequestPhase::Decode;
+            self.start_decode_step(q, arena, slot, finish);
+            return;
+        }
+        // One decode step done: its tokens are emitted output.
+        self.decode_hist.add(dur);
+        self.decode_time += dur;
+        let step = self.inflight[slot].decode_next;
+        let toks = self.inflight[slot].decode_tokens[step];
+        self.output_tokens += toks;
+        self.tokens += toks;
+        self.inflight[slot].decode_next += 1;
+        if self.inflight[slot].decode_next >= self.inflight[slot].decode_len as usize {
+            self.decode_inflight -= 1;
+            self.finalize(q, slot, now, finish);
+        } else {
+            self.start_decode_step(q, arena, slot, finish);
+        }
+    }
+
+    /// Launch decode step `decode_next` at `at`. If any instance pinned by
+    /// the KV ledger went cold, the state was reaped with it: count the
+    /// eviction, clear the pins, and run a billed re-prefill pass of the
+    /// prompt (re-pinning as its layers dispatch) before decoding resumes.
+    /// Otherwise the step's pre-routed counts load into the dispatch state.
+    /// Either way the next pass rides the ordinary event heap.
+    fn start_decode_step(&mut self, q: &mut EventQueue, arena: &SlotArena, slot: usize, at: f64) {
+        if !self.kv.intact(slot, |idx| arena.is_warm_at(idx, at)) {
+            self.kv.evictions += 1;
+            self.kv.re_prefills += 1;
+            self.kv.begin(slot);
+            let fl = &mut self.inflight[slot];
+            fl.phase = RequestPhase::Prefill;
+            fl.reprefill = true;
+            fl.counts.clone_from(&fl.prompt_counts);
+            fl.next_layer = 0;
+            fl.attempt = 0;
+            fl.pass_start = at;
+            debug_assert!(slot < THROTTLE_MARK as usize, "in-flight slot id overflow");
+            q.push(at, self.tenant, slot as u32);
+            return;
+        }
+        let fl = &mut self.inflight[slot];
+        let step = fl.decode_next;
+        fl.counts.clone_from(&fl.decode_counts[step]);
+        fl.next_layer = 0;
+        fl.attempt = 0;
+        fl.pass_start = at;
+        debug_assert!(slot < THROTTLE_MARK as usize, "in-flight slot id overflow");
+        q.push(at, self.tenant, slot as u32);
     }
 
     /// Close out a finished request. `now` is the final layer's dispatch
@@ -1969,6 +2150,22 @@ impl<'a, 't> EventLane<'a, 't> {
         report.max_utilization = arena.max_utilization(self.last_finish);
         report.scale_outs = self.autoscaler.scale_outs;
         report.scale_ins = self.autoscaler.scale_ins;
+        // Autoregressive rollups: all zero without a chat workload, which
+        // keeps the report equal to the pre-chat engine's field for field.
+        report.output_tokens = self.output_tokens;
+        report.kv_evictions = self.kv.evictions;
+        report.re_prefills = self.kv.re_prefills;
+        if self.prefill_hist.count() > 0 {
+            report.prefill_p50 = self.prefill_hist.percentile(50.0);
+            report.prefill_p95 = self.prefill_hist.percentile(95.0);
+        }
+        if self.decode_hist.count() > 0 {
+            report.decode_p50 = self.decode_hist.percentile(50.0);
+            report.decode_p95 = self.decode_hist.percentile(95.0);
+        }
+        if self.output_tokens > 0 {
+            report.time_per_output_token = self.decode_time / self.output_tokens as f64;
+        }
         if let Some(f) = &self.faults {
             report.failed_invocations = f.failed_invocations;
             report.retries = f.retries;
@@ -2139,6 +2336,9 @@ fn execute_batch<'a>(
         (now, d.cost, completion, d.queue_delay, d.violated)
     };
     let total: u64 = b.members.iter().map(|m| m.tokens).sum();
+    // The merged invocation's instances, captured for KV pinning of any
+    // chat member still in its prefill pass.
+    let pinned: Vec<usize> = lanes[oi].pending.iter().map(|p| p.0).collect();
     for m in &b.members {
         let share = if total > 0 {
             m.tokens as f64 / total as f64
@@ -2156,11 +2356,17 @@ fn execute_batch<'a>(
         // itself saw.
         fl.queue_delay = fl.queue_delay.max((now - m.ready).max(0.0) + queue_delay);
         fl.violated |= violated;
+        if fl.decode_len > 0 && fl.phase == RequestPhase::Prefill {
+            for &idx in &pinned {
+                lane.kv.pin(m.slot, idx);
+            }
+        }
+        let fl = &mut lane.inflight[m.slot];
         fl.next_layer += 1;
         if fl.next_layer < lane.num_layers {
             q.push(completion, m.tenant, m.slot as u32);
         } else {
-            lane.finalize(q, m.slot, now, completion);
+            lane.complete_pass(q, arena, m.slot, now, completion);
         }
     }
 }
@@ -2368,7 +2574,9 @@ impl EpochSimulator<'_> {
             arena.prewarm_plan(&policy.layers);
         }
         let mut arenas = [arena];
-        let mut batch = BatchPool::off();
+        // `decode_batch_window: 0` builds the inert pool — nothing ever
+        // admits into it and the dispatch path is byte-identical.
+        let mut batch = BatchPool::new(self.cfg.decode_batch_window);
         let mut lanes = [EventLane::new(self, policy, traffic, pipeline, LaneOpts::solo())];
         drive(std::slice::from_mut(self), &mut lanes, &mut arenas, &mut q, &mut cap, &mut batch)
             .pop()

@@ -1,0 +1,448 @@
+//! Autoregressive LLM workloads: prefill/decode phases, decode-length
+//! models, and the KV-state ledger.
+//!
+//! The simulator historically pushed each request through the layer stack
+//! exactly once — the right model for encoder/batch inference, the wrong
+//! one for the chat-style serving that dominates MoE LLM deployments (the
+//! regime Remoe and MoEless are built for). This module adds the
+//! autoregressive request model on top of the event engine:
+//!
+//!  - a request serves a **prefill** pass over its prompt tokens, then a
+//!    seeded, distribution-drawn number of **decode** steps, each re-routed
+//!    through `gating::RouterCache` with fresh tokens at advancing position
+//!    offsets — so expert popularity drifts *within* a request, the harder
+//!    signal the Bayesian predictor was built to chase;
+//!  - a [`KvLedger`] pins a request's decode steps to the replica instances
+//!    that served it: if any pinned instance goes cold (keep-alive expiry or
+//!    autoscaler scale-in) before the next step, the KV state is lost and
+//!    the engine bills a full **re-prefill** before decoding resumes;
+//!  - decode steps of co-resident requests can merge into one invocation
+//!    per iteration (continuous batching) when
+//!    `TrafficConfig::decode_batch_window > 0` — see `traffic::sim`.
+//!
+//! A decode length of 0 degenerates every request to the classic
+//! single-pass model, byte-identical to the pre-decode engine — the same
+//! off-switch discipline as `FaultSpec::off` and `batch_window: 0`.
+
+use super::error::{self, ScenarioError};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{Batch, Corpus, Sequence};
+
+/// Which phase of the autoregressive pipeline a request is in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RequestPhase {
+    /// Serving the prompt pass (also a billed re-prefill after KV loss).
+    #[default]
+    Prefill,
+    /// Emitting output tokens one step at a time.
+    Decode,
+}
+
+/// How many decode steps a request runs — drawn per request from the
+/// scenario's dedicated decode RNG stream (`traffic::decode_seed`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodeLengthModel {
+    /// Every request decodes exactly `steps` steps (0 = pure prefill, the
+    /// byte-identity degenerate case).
+    Fixed { steps: u32 },
+    /// Geometric output lengths with the given mean, capped at `cap` steps —
+    /// the memoryless "will the model emit EOS next?" model of chat traffic.
+    Geometric { mean: f64, cap: u32 },
+    /// Trace-given lengths: request `i` decodes `lengths[i % lengths.len()]`
+    /// steps (cycled, so a short list covers any request count).
+    Given { lengths: Vec<u32> },
+}
+
+impl DecodeLengthModel {
+    /// Decode length of request `i`. Deterministic given the RNG state:
+    /// `Fixed` and `Given` draw nothing, `Geometric` draws one uniform.
+    pub fn draw(&self, i: usize, rng: &mut Rng) -> u32 {
+        match self {
+            DecodeLengthModel::Fixed { steps } => *steps,
+            DecodeLengthModel::Geometric { mean, cap } => {
+                // Inverse-CDF geometric on {0, 1, 2, ...} with the given
+                // mean: p = 1/(mean+1), len = floor(ln(1-u)/ln(1-p)).
+                let p = 1.0 / (mean + 1.0);
+                let u = rng.f64();
+                let len = ((1.0 - u).ln() / (1.0 - p).ln()).floor();
+                (len.max(0.0) as u32).min(*cap)
+            }
+            DecodeLengthModel::Given { lengths } => lengths[i % lengths.len()],
+        }
+    }
+
+    /// Non-panicking parameter validation, surfaced by the scenario loader.
+    pub fn check(&self) -> Result<(), ScenarioError> {
+        match self {
+            DecodeLengthModel::Fixed { .. } => Ok(()),
+            DecodeLengthModel::Geometric { mean, cap } => {
+                if !(mean.is_finite() && *mean >= 0.0) {
+                    return Err(ScenarioError::invalid(
+                        "traffic.decode.mean",
+                        format!("must be finite and >= 0, got {mean}"),
+                    ));
+                }
+                if *cap < 1 {
+                    return Err(ScenarioError::invalid(
+                        "traffic.decode.cap",
+                        "must be >= 1 (use kind \"fixed\", steps 0 for no decode)".to_string(),
+                    ));
+                }
+                Ok(())
+            }
+            DecodeLengthModel::Given { lengths } => {
+                if lengths.is_empty() {
+                    return Err(ScenarioError::invalid(
+                        "traffic.decode.lengths",
+                        "must not be empty".to_string(),
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Scenario-file encoding: a tagged object, e.g.
+    /// `{"kind": "geometric", "mean": 32.0, "cap": 256}`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            DecodeLengthModel::Fixed { steps } => Json::from_pairs(vec![
+                ("kind", Json::str("fixed")),
+                ("steps", Json::num(*steps as f64)),
+            ]),
+            DecodeLengthModel::Geometric { mean, cap } => Json::from_pairs(vec![
+                ("kind", Json::str("geometric")),
+                ("mean", Json::num(*mean)),
+                ("cap", Json::num(*cap as f64)),
+            ]),
+            DecodeLengthModel::Given { lengths } => Json::from_pairs(vec![
+                ("kind", Json::str("given")),
+                (
+                    "lengths",
+                    Json::arr_u64(&lengths.iter().map(|&l| l as u64).collect::<Vec<_>>()),
+                ),
+            ]),
+        }
+    }
+
+    /// Strict inverse of [`DecodeLengthModel::to_json`]: unknown kinds and
+    /// fields rejected, parameters range-checked.
+    pub fn from_json(j: &Json) -> Result<DecodeLengthModel, ScenarioError> {
+        const SECTION: &str = "traffic.decode";
+        let model = match error::req_str(j, SECTION, "kind")? {
+            "fixed" => {
+                error::check_keys(j, SECTION, &["kind", "steps"])?;
+                DecodeLengthModel::Fixed {
+                    steps: error::opt_u64(j, SECTION, "steps", 0)? as u32,
+                }
+            }
+            "geometric" => {
+                error::check_keys(j, SECTION, &["kind", "mean", "cap"])?;
+                DecodeLengthModel::Geometric {
+                    mean: error::req_f64(j, SECTION, "mean")?,
+                    cap: error::opt_u64(j, SECTION, "cap", 256)? as u32,
+                }
+            }
+            "given" => {
+                error::check_keys(j, SECTION, &["kind", "lengths"])?;
+                let lengths = match j.get("lengths") {
+                    Some(Json::Arr(items)) => {
+                        let mut out = Vec::with_capacity(items.len());
+                        for item in items {
+                            match item.as_u64() {
+                                Some(l) => out.push(l as u32),
+                                None => {
+                                    return Err(ScenarioError::invalid(
+                                        "traffic.decode.lengths",
+                                        format!("entries must be integers >= 0, got {item:?}"),
+                                    ))
+                                }
+                            }
+                        }
+                        out
+                    }
+                    _ => {
+                        return Err(ScenarioError::missing(SECTION, "lengths"));
+                    }
+                };
+                DecodeLengthModel::Given { lengths }
+            }
+            other => {
+                return Err(ScenarioError::UnknownName {
+                    what: "decode length model",
+                    name: other.to_string(),
+                    known: "fixed | geometric | given",
+                })
+            }
+        };
+        model.check()?;
+        Ok(model)
+    }
+}
+
+/// One decode-step batch: `tokens` fresh corpus tokens at positions starting
+/// from `pos_offset` (the autoregressive position of the step's tokens in
+/// the growing sequence — position buckets advance across steps, which is
+/// what makes routing drift within a request).
+fn step_batch(corpus: &Corpus, rng: &mut Rng, tokens: usize, pos_offset: u32) -> Batch {
+    let mut toks = Vec::with_capacity(tokens);
+    let mut attn = Vec::with_capacity(tokens);
+    while toks.len() < tokens {
+        let s = corpus.sample_sequence(rng);
+        toks.extend_from_slice(&s.tokens);
+        attn.extend_from_slice(&s.attention_ids);
+    }
+    toks.truncate(tokens);
+    attn.truncate(tokens);
+    let positions = (0..tokens as u32).map(|i| pos_offset + i).collect();
+    Batch::from_sequences(vec![Sequence {
+        tokens: toks,
+        positions,
+        attention_ids: attn,
+    }])
+}
+
+/// The pre-materialized decode schedule of a chat scenario: for request `i`
+/// (traffic order), its decode length and the token batch of every decode
+/// step. Generated once at scenario materialization, so both fleet drivers
+/// and repeated runs see the exact same decode stream.
+#[derive(Debug, Clone)]
+pub struct ChatWorkload {
+    /// Decode steps per request, aligned with the traffic vector.
+    pub decode_lens: Vec<u32>,
+    /// Per-request, per-step token batches (`steps[i].len() ==
+    /// decode_lens[i]`); each step carries `decode_tokens` tokens.
+    pub steps: Vec<Vec<Batch>>,
+}
+
+impl ChatWorkload {
+    /// Materialize the decode schedule for `requests` requests: lengths from
+    /// `model` on the seed stream, step batches from an independent fork of
+    /// it, positions offset past the prompt so routing drifts across steps.
+    pub fn generate(
+        corpus: &Corpus,
+        seed: u64,
+        model: &DecodeLengthModel,
+        decode_tokens: usize,
+        prompt_tokens: usize,
+        requests: usize,
+    ) -> ChatWorkload {
+        assert!(decode_tokens >= 1, "decode_tokens must be >= 1");
+        let mut len_rng = Rng::new(seed);
+        let mut tok_rng = Rng::new(seed ^ 0x57E9);
+        let mut decode_lens = Vec::with_capacity(requests);
+        let mut steps = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let len = model.draw(i, &mut len_rng);
+            let mut req_steps = Vec::with_capacity(len as usize);
+            for s in 0..len {
+                let off = (prompt_tokens + s as usize * decode_tokens).min(u32::MAX as usize);
+                req_steps.push(step_batch(corpus, &mut tok_rng, decode_tokens, off as u32));
+            }
+            decode_lens.push(len);
+            steps.push(req_steps);
+        }
+        ChatWorkload { decode_lens, steps }
+    }
+
+    /// Total decode steps across all requests (the output-token budget of
+    /// the run, in steps).
+    pub fn total_decode_steps(&self) -> u64 {
+        self.decode_lens.iter().map(|&l| l as u64).sum()
+    }
+}
+
+/// KV-state ledger: which replica instances hold each in-flight request's
+/// attention state.
+///
+/// During a prefill pass the engine pins every instance the request's layers
+/// dispatch to; before each decode step it asks whether the pinned set is
+/// still warm. Any pinned instance gone cold means the KV state died with
+/// its environment — the request must re-prefill (billed in full) before
+/// decoding resumes. Slots are recycled with the engine's in-flight arena,
+/// so the ledger is indexed by slot id.
+#[derive(Debug, Default)]
+pub struct KvLedger {
+    /// Per-slot pinned arena indices (deduplicated, small sets).
+    sets: Vec<Vec<usize>>,
+    /// KV states lost to cold instances across the run.
+    pub evictions: u64,
+    /// Billed re-prefill passes forced by those losses.
+    pub re_prefills: u64,
+}
+
+impl KvLedger {
+    pub fn new() -> KvLedger {
+        KvLedger::default()
+    }
+
+    /// Start (or restart, after a loss) accumulating a slot's pinned set.
+    pub fn begin(&mut self, slot: usize) {
+        if self.sets.len() <= slot {
+            self.sets.resize_with(slot + 1, Vec::new);
+        }
+        self.sets[slot].clear();
+    }
+
+    /// Pin an arena instance into the slot's KV set (idempotent).
+    pub fn pin(&mut self, slot: usize, idx: usize) {
+        if self.sets.len() <= slot {
+            self.sets.resize_with(slot + 1, Vec::new);
+        }
+        let set = &mut self.sets[slot];
+        if !set.contains(&idx) {
+            set.push(idx);
+        }
+    }
+
+    /// Whether every pinned instance of `slot` still passes `is_warm`.
+    /// A never-pinned slot is vacuously intact (nothing to lose).
+    pub fn intact(&self, slot: usize, is_warm: impl Fn(usize) -> bool) -> bool {
+        self.sets
+            .get(slot)
+            .map_or(true, |set| set.iter().all(|&idx| is_warm(idx)))
+    }
+
+    /// Pinned instances of `slot` (test introspection).
+    pub fn pinned(&self, slot: usize) -> &[usize] {
+        self.sets.get(slot).map_or(&[], |s| s.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::CorpusPreset;
+
+    #[test]
+    fn fixed_and_given_draw_without_rng() {
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(DecodeLengthModel::Fixed { steps: 5 }.draw(3, &mut rng), 5);
+        let given = DecodeLengthModel::Given { lengths: vec![2, 7] };
+        assert_eq!(given.draw(0, &mut rng), 2);
+        assert_eq!(given.draw(1, &mut rng), 7);
+        assert_eq!(given.draw(2, &mut rng), 2, "lengths cycle");
+        assert_eq!(rng.next_u64(), before, "no RNG consumed");
+    }
+
+    #[test]
+    fn geometric_is_bounded_and_roughly_mean() {
+        let model = DecodeLengthModel::Geometric { mean: 8.0, cap: 64 };
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let mut total = 0u64;
+        for i in 0..n {
+            let l = model.draw(i, &mut rng);
+            assert!(l <= 64);
+            total += l as u64;
+        }
+        let mean = total as f64 / n as f64;
+        assert!((mean - 8.0).abs() < 0.5, "empirical mean {mean}");
+    }
+
+    #[test]
+    fn decode_model_json_roundtrip_and_rejection() {
+        for model in [
+            DecodeLengthModel::Fixed { steps: 0 },
+            DecodeLengthModel::Fixed { steps: 12 },
+            DecodeLengthModel::Geometric { mean: 32.0, cap: 256 },
+            DecodeLengthModel::Given { lengths: vec![1, 2, 3] },
+        ] {
+            let back = DecodeLengthModel::from_json(&model.to_json()).unwrap();
+            assert_eq!(back, model);
+        }
+        let bad_kind = Json::parse(r#"{"kind":"zipf","mean":1}"#).unwrap();
+        assert!(matches!(
+            DecodeLengthModel::from_json(&bad_kind),
+            Err(ScenarioError::UnknownName { .. })
+        ));
+        let typo = Json::parse(r#"{"kind":"fixed","step":3}"#).unwrap();
+        assert!(matches!(
+            DecodeLengthModel::from_json(&typo),
+            Err(ScenarioError::UnknownField { .. })
+        ));
+        let neg_mean = Json::parse(r#"{"kind":"geometric","mean":-1.0}"#).unwrap();
+        assert!(matches!(
+            DecodeLengthModel::from_json(&neg_mean),
+            Err(ScenarioError::Invalid { .. })
+        ));
+        let zero_cap = Json::parse(r#"{"kind":"geometric","mean":4.0,"cap":0}"#).unwrap();
+        assert!(DecodeLengthModel::from_json(&zero_cap).is_err());
+        let empty = Json::parse(r#"{"kind":"given","lengths":[]}"#).unwrap();
+        assert!(DecodeLengthModel::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn chat_workload_is_deterministic_and_shaped() {
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 3);
+        let model = DecodeLengthModel::Geometric { mean: 4.0, cap: 16 };
+        let mk = || ChatWorkload::generate(&corpus, 99, &model, 8, 64, 10);
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.decode_lens, b.decode_lens);
+        assert_eq!(a.decode_lens.len(), 10);
+        assert_eq!(a.steps.len(), 10);
+        for (i, req_steps) in a.steps.iter().enumerate() {
+            assert_eq!(req_steps.len(), a.decode_lens[i] as usize);
+            for (s, batch) in req_steps.iter().enumerate() {
+                assert_eq!(batch.total_tokens, 8);
+                let b2 = &b.steps[i][s];
+                assert_eq!(batch.sequences[0].tokens, b2.sequences[0].tokens);
+                // Positions advance past the prompt as the sequence grows.
+                assert_eq!(batch.sequences[0].positions[0], 64 + s as u32 * 8);
+            }
+        }
+        // A different decode seed re-rolls the schedule.
+        let c = ChatWorkload::generate(&corpus, 100, &model, 8, 64, 10);
+        assert!(
+            a.decode_lens != c.decode_lens
+                || a.steps
+                    .iter()
+                    .flatten()
+                    .zip(c.steps.iter().flatten())
+                    .any(|(x, y)| x.sequences[0].tokens != y.sequences[0].tokens)
+        );
+    }
+
+    #[test]
+    fn steps_drift_routing_within_a_request() {
+        // The point of per-step re-routing: two steps of one request land
+        // different expert counts (drift the predictor must chase).
+        use crate::gating::{RouterCache, SimGate};
+        use crate::model::ModelPreset;
+        let spec = ModelPreset::BertMoe { experts: 4, top_k: 1 }.spec();
+        let gate = SimGate::new(&spec, 7);
+        let mut router = RouterCache::new(&gate);
+        let corpus = Corpus::new(CorpusPreset::Enwik8, 3);
+        let model = DecodeLengthModel::Fixed { steps: 6 };
+        let w = ChatWorkload::generate(&corpus, 42, &model, 32, 128, 1);
+        let mut counts = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for step in &w.steps[0] {
+            router.counts_into(&gate, step, &mut counts);
+            seen.insert(format!("{:?}", counts[0]));
+        }
+        assert!(seen.len() > 1, "expert counts identical across all steps");
+    }
+
+    #[test]
+    fn kv_ledger_semantics() {
+        let mut kv = KvLedger::new();
+        // Never-pinned slots are vacuously intact.
+        assert!(kv.intact(0, |_| false));
+        kv.begin(2);
+        kv.pin(2, 10);
+        kv.pin(2, 11);
+        kv.pin(2, 10); // dedup
+        assert_eq!(kv.pinned(2), &[10, 11]);
+        assert!(kv.intact(2, |idx| idx == 10 || idx == 11));
+        assert!(!kv.intact(2, |idx| idx == 10), "one cold pin loses the KV");
+        // begin() resets the set when the slot re-prefills or is recycled.
+        kv.begin(2);
+        assert!(kv.intact(2, |_| false));
+        assert_eq!(kv.evictions, 0);
+        assert_eq!(kv.re_prefills, 0);
+    }
+}

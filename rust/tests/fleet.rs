@@ -742,6 +742,7 @@ fn crashy_faults(l: f64, hedge_quantile: f64) -> FaultSpec {
         max_retries: 3,
         backoff_base: 0.05 * l,
         hedge_quantile,
+        hedge_min_obs: 16,
         drop_after: 0,
     }
 }
@@ -835,4 +836,74 @@ fn committed_faults_fleet_is_deterministic_and_recovers() {
     );
     assert!(a.goodput_requests > 0, "most requests still finish clean");
     assert!(a.retry_cost > 0.0 && a.retry_cost <= a.total_cost + 1e-9);
+}
+
+// ---------------------------------------------------- fleet golden fixture
+
+/// Fleet-level golden regression on the committed solver-free fixture
+/// (`fleet_golden.json`: one chat tenant decoding autoregressively beside
+/// one synthetic batch tenant behind an execution-cap of 3). The expected
+/// `FleetReport` lives at `rust/tests/data/golden_fleet.json` as the
+/// report's canonical pretty JSON; any byte of drift — cost, fairness,
+/// latency quantiles, or the new per-phase decode counters — fails here.
+///
+/// Self-initializing: if the golden file is absent the test writes it from
+/// the current run and passes, so re-baselining after an intentional
+/// behavior change is `rm rust/tests/data/golden_fleet.json && cargo test`.
+/// CI runs the suite twice, so a fresh file is regressed in the same job.
+#[test]
+fn fleet_golden_fixture_matches_committed_report() {
+    let fleet = FleetScenario::load(&scenario_path("fleet_golden.json"))
+        .unwrap_or_else(|e| panic!("committed golden fleet must load: {e}"));
+
+    // The fixture must stay solver-free (LambdaML baselines only): golden
+    // numbers cannot depend on wall-clock-limited ODS solves.
+    let text = fleet.to_json().to_string_pretty();
+    let back = FleetScenario::from_json(
+        &serverless_moe::util::json::Json::parse(&text).expect("canonical JSON parses"),
+    )
+    .expect("canonical form re-parses");
+    assert_eq!(back.to_json().to_string_pretty(), text, "fixed-point serialization");
+
+    let report = fleet.run().expect("golden fleet runs").report;
+    let again = fleet.run().expect("golden fleet re-runs").report;
+    let actual = report.to_json().to_string_pretty();
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        actual,
+        "golden fleet runs must be byte-identical across executions"
+    );
+
+    // Sanity on the decode side before pinning: the chat tenant actually
+    // exercised the autoregressive path.
+    let chat = report.tenant("assistant").expect("chat tenant reported");
+    assert!(chat.report.requests > 0);
+    assert!(chat.report.output_tokens > 0, "the chat tenant must decode");
+    assert!(chat.report.time_per_output_token > 0.0);
+    let batch = report.tenant("batch").expect("batch tenant reported");
+    assert_eq!(batch.report.output_tokens, 0, "synthetic traffic never decodes");
+
+    let golden_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/golden_fleet.json");
+    match std::fs::read_to_string(&golden_path) {
+        Ok(expected) => {
+            let canon = serverless_moe::util::json::Json::parse(&expected)
+                .expect("committed golden fleet report parses")
+                .to_string_pretty();
+            assert_eq!(
+                actual, canon,
+                "fleet report drifted from the committed golden numbers; if the \
+                 change is intentional, delete {} and re-run the suite to \
+                 re-baseline",
+                golden_path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::write(&golden_path, &actual).expect("golden fleet report writes");
+            eprintln!(
+                "initialized {} from this run; re-run the suite to regress it",
+                golden_path.display()
+            );
+        }
+    }
 }

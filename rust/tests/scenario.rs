@@ -24,7 +24,11 @@ fn scenario_path(name: &str) -> PathBuf {
 /// serialize → parse → serialize with byte-identical canonical JSON.
 #[test]
 fn committed_scenarios_load_and_roundtrip_canonically() {
-    for name in ["drift_bert_quick.json", "tiny_trace_lambdaml.json"] {
+    for name in [
+        "drift_bert_quick.json",
+        "tiny_trace_lambdaml.json",
+        "chat_decode.json",
+    ] {
         let s = Scenario::load(&scenario_path(name)).unwrap_or_else(|e| {
             panic!("committed scenario {name} must load: {e}");
         });
@@ -176,6 +180,17 @@ fn invalid_values_are_rejected_with_typed_errors() {
         r#"{"name": "x", "config": {"faults": {"cold_crash_multiplier": 0.5}}}"#,
         r#"{"name": "x", "config": {"faults": {"hedge_quantile": 1.0}}}"#,
         r#"{"name": "x", "config": {"faults": {"timeout": -1.0}}}"#,
+        // Hedging needs at least one service-time observation to quantile.
+        r#"{"name": "x", "config": {"faults": {"hedge_min_obs": 0}}}"#,
+        // Chat traffic requires the pipelined event engine, a positive
+        // prompt budget, and a well-formed decode-length model.
+        r#"{"name": "x", "traffic": {"kind": "chat", "process": {"kind": "poisson", "rate": 1}, "duration": 10, "decode": {"kind": "fixed", "steps": 4}}, "config": {"engine": {"kind": "event", "pipeline": false}}}"#,
+        r#"{"name": "x", "traffic": {"kind": "chat", "process": {"kind": "poisson", "rate": 1}, "duration": 10, "prompt_tokens": 0, "decode": {"kind": "fixed", "steps": 4}}}"#,
+        r#"{"name": "x", "traffic": {"kind": "chat", "process": {"kind": "poisson", "rate": 1}, "duration": 10, "decode": {"kind": "geometric", "mean": 8.0, "cap": 0}}}"#,
+        // Decode batching is an event-pipeline feature and refuses faults.
+        r#"{"name": "x", "config": {"decode_batch_window": -0.5}}"#,
+        r#"{"name": "x", "config": {"decode_batch_window": 0.05, "engine": {"kind": "legacy"}}}"#,
+        r#"{"name": "x", "config": {"decode_batch_window": 0.05, "faults": {"crash_prob": 0.1}}}"#,
         // Faults ride the per-layer event heap: the legacy loop and the
         // unpipelined (monolithic) event engine are rejected.
         r#"{"name": "x", "config": {"engine": {"kind": "legacy"}, "faults": {"crash_prob": 0.1}}}"#,
@@ -270,6 +285,10 @@ fn fleet_unknown_fields_and_invalid_values_rejected() {
             r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "config": {"engine": {"kind": "legacy"}}}}"#,
         ),
         fleet(r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "baseline": "cpu-cluster"}}"#),
+        // Per-tenant decode batching defers to the fleet's own batch_window.
+        fleet(
+            r#"{"name": "a", "scenario": {"name": "t", "model": "tiny", "config": {"decode_batch_window": 0.05}}}"#,
+        ),
         // Unsupported version.
         format!(r#"{{"name": "f", "version": 2, "tenants": [{}]}}"#, tenant("")),
         // Out-of-range fleet-level fault knob.

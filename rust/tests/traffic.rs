@@ -42,8 +42,8 @@ use serverless_moe::traffic::scenario::{
     drift_scenario, scenario_config, scenario_config_queued, Baseline, Scenario, TrafficSource,
 };
 use serverless_moe::traffic::{
-    ArrivalGen, ArrivalProcess, AutoscalePolicy, MetricsMode, SimEngine, SimReport, Trace,
-    TrafficConfig,
+    ArrivalGen, ArrivalProcess, AutoscalePolicy, DecodeLengthModel, MetricsMode, SimEngine,
+    SimReport, Trace, TrafficConfig,
 };
 use serverless_moe::util::check::{ensure, forall, forall_default, Config};
 use serverless_moe::util::json::Json;
@@ -1119,4 +1119,256 @@ fn autoscaler_beats_static_under_bursty_overload() {
     );
     assert!(auto.max_utilization <= 1.0 + 1e-9);
     assert!(stat.max_utilization <= 1.0 + 1e-9);
+}
+
+// ------------------------------------------------ autoregressive workloads
+
+/// A chat scenario on the tiny model with the given decode schedule,
+/// arrival pacing and engine knobs — LambdaML deployment (closed-form, no
+/// solver anywhere on the path), so every run is byte-deterministic.
+fn chat_scenario(
+    name: &str,
+    rate: f64,
+    requests: usize,
+    decode: DecodeLengthModel,
+    decode_tokens: usize,
+    keep_alive: f64,
+    window: f64,
+) -> Scenario {
+    Scenario::builder(name)
+        .model("tiny")
+        .expect("tiny preset exists")
+        .seed(0xC4A7)
+        .profile(2, 128)
+        .traffic(TrafficSource::Chat {
+            process: ArrivalProcess::Deterministic { rate },
+            duration: None,
+            requests: Some(requests),
+            prompt_tokens: 96,
+            decode,
+            decode_tokens,
+        })
+        .config(TrafficConfig {
+            concurrency: Some(1),
+            prewarm: true,
+            keep_alive,
+            epoch_secs: f64::INFINITY,
+            reoptimize: false,
+            autoscale: AutoscalePolicy::Off,
+            decode_batch_window: window,
+            ..TrafficConfig::default()
+        })
+        .baseline(Baseline::LambdaML)
+        .build()
+        .expect("chat scenario is valid by construction")
+}
+
+/// The decode off-switch: a chat scenario with a fixed decode length of 0
+/// serves pure prompts and must reproduce the equivalent `synthetic`
+/// scenario byte-for-byte — same corpus, generator and arrival seed
+/// derivations, no decode machinery on the path. Pinned on both reference
+/// engine configurations (plain queued, and queue-depth autoscaled — the
+/// two shapes the committed reference scenarios exercise).
+#[test]
+fn decode_zero_chat_reproduces_synthetic_byte_for_byte() {
+    for (label, autoscale, keep_alive) in [
+        ("queued", AutoscalePolicy::Off, f64::INFINITY),
+        (
+            "autoscaled",
+            AutoscalePolicy::QueueDepth { max_wait: 2.0, idle_below: 0.2 },
+            10.0,
+        ),
+    ] {
+        let process = ArrivalProcess::Poisson { rate: 2.0 };
+        let cfg = TrafficConfig {
+            concurrency: Some(1),
+            prewarm: true,
+            keep_alive,
+            epoch_secs: 5.0,
+            reoptimize: false,
+            autoscale,
+            ..TrafficConfig::default()
+        };
+        let chat = Scenario::builder("decode-zero")
+            .model("tiny")
+            .expect("tiny preset exists")
+            .seed(0x0FF)
+            .profile(2, 128)
+            .traffic(TrafficSource::Chat {
+                process,
+                duration: None,
+                requests: Some(10),
+                prompt_tokens: 96,
+                decode: DecodeLengthModel::Fixed { steps: 0 },
+                decode_tokens: 8,
+            })
+            .config(cfg)
+            .baseline(Baseline::LambdaML)
+            .build()
+            .expect("decode-0 chat scenario is valid");
+        let mut synth = chat.clone();
+        synth.source = TrafficSource::Synthetic {
+            process,
+            duration: None,
+            requests: Some(10),
+            tokens_per_request: 96,
+        };
+        let a = chat.run().expect("chat scenario runs").report;
+        let b = synth.run().expect("synthetic scenario runs").report;
+        assert_eq!(a.requests, 10, "{label}");
+        assert_eq!(a.output_tokens, 0, "{label}: decode 0 emits nothing");
+        assert_eq!(a.kv_evictions, 0, "{label}");
+        assert_eq!(a.re_prefills, 0, "{label}");
+        assert_eq!(a.time_per_output_token, 0.0, "{label}");
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "{label}: decode-0 chat must reproduce synthetic byte-for-byte"
+        );
+    }
+}
+
+/// Work conservation of continuous batching: staggered chat requests that
+/// never overlap give the batching window no merge partner, the dispatch
+/// gate keeps every lone decode step on the serial path, and the report is
+/// byte-identical to batching off — no decode step completes later than it
+/// would unbatched on an uncontended replica.
+#[test]
+fn prop_decode_batching_is_work_conserving_without_contention() {
+    // 20 s apart: each request prefills and fully decodes long before the
+    // next arrives, so `decode_inflight` never exceeds 1.
+    let model = DecodeLengthModel::Fixed { steps: 6 };
+    let run = |window: f64| {
+        chat_scenario("chat-conserving", 0.05, 4, model.clone(), 8, f64::INFINITY, window)
+            .run()
+            .expect("chat scenario runs")
+            .report
+    };
+    let off = run(0.0);
+    let on = run(0.05);
+    assert_eq!(off.requests, 4);
+    assert_eq!(off.output_tokens, 4 * 6 * 8, "decode must actually run");
+    assert!(off.decode_p50 > 0.0 && off.decode_p95 >= off.decode_p50);
+    assert!(off.prefill_p50 > 0.0);
+    assert!(off.time_per_output_token > 0.0);
+    assert_eq!(off.re_prefills, 0, "infinite keep-alive holds every KV pin");
+    assert_eq!(
+        on.to_json().to_string_pretty(),
+        off.to_json().to_string_pretty(),
+        "an open window with no merge partner must change nothing"
+    );
+}
+
+/// KV-state affinity end-to-end: a short keep-alive expires prefill-pinned
+/// instances the sparse decode steps do not revisit, so the ledger must
+/// count evictions and the engine must serve billed re-prefills — and still
+/// finish every request, deterministically.
+#[test]
+fn kv_loss_forces_billed_reprefill() {
+    // 2-token decode steps touch at most two experts per layer while the
+    // 96-token prompt pins (nearly) all of them; at keep-alive 0.3 s an
+    // unrevisited pinned instance expires within a step or two.
+    let model = DecodeLengthModel::Fixed { steps: 16 };
+    let run = || {
+        chat_scenario("chat-kv-loss", 0.02, 2, model.clone(), 2, 0.3, 0.0)
+            .run()
+            .expect("chat scenario runs")
+            .report
+    };
+    let a = run();
+    assert_eq!(a.requests, 2, "KV losses must never lose the request");
+    assert_eq!(a.output_tokens, 2 * 16 * 2, "every decode step still completes");
+    assert!(a.kv_evictions > 0, "short keep-alive must lose KV state");
+    assert_eq!(
+        a.kv_evictions, a.re_prefills,
+        "each loss forces exactly one billed re-prefill"
+    );
+    assert!(a.time_per_output_token > 0.0);
+    let b = run();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "re-prefill runs must be deterministic"
+    );
+}
+
+/// The PR 9 payoff claim: on a seeded chat workload of co-resident decoding
+/// requests, continuous batching (merging same-iteration decode steps into
+/// one invocation, cost split by token share) beats per-step serial
+/// dispatch on time-per-output-token AND billed cost — the merged
+/// invocation pays the per-invocation head time and price once where the
+/// serial path pays them per request — deterministically across re-runs.
+#[test]
+fn continuous_batching_beats_serial_decode_on_tpot_and_cost() {
+    // 10 ms apart: all eight requests are in flight together, so their
+    // decode steps co-reside and the window always has merge partners.
+    let model = DecodeLengthModel::Fixed { steps: 8 };
+    let run = |window: f64| {
+        chat_scenario("chat-batched", 100.0, 8, model.clone(), 8, f64::INFINITY, window)
+            .run()
+            .expect("chat scenario runs")
+            .report
+    };
+    let serial = run(0.0);
+    let batched = run(0.05);
+
+    // Identical workload both ways.
+    assert_eq!(serial.requests, 8);
+    assert_eq!(batched.requests, 8);
+    assert_eq!(serial.output_tokens, 8 * 8 * 8);
+    assert_eq!(batched.output_tokens, serial.output_tokens);
+    assert!(serial.time_per_output_token > 0.0);
+    assert_eq!(serial.re_prefills, 0);
+    assert_eq!(batched.re_prefills, 0);
+
+    // The mechanism: strictly fewer invocations...
+    assert!(
+        batched.warm_invocations + batched.cold_invocations
+            < serial.warm_invocations + serial.cold_invocations,
+        "batching must merge invocations: {} vs {}",
+        batched.warm_invocations + batched.cold_invocations,
+        serial.warm_invocations + serial.cold_invocations
+    );
+    // ...and the claim: better time-per-output-token at a lower bill.
+    assert!(
+        batched.time_per_output_token < serial.time_per_output_token,
+        "batching must cut time-per-output-token: {} vs {}",
+        batched.time_per_output_token,
+        serial.time_per_output_token
+    );
+    assert!(
+        batched.total_cost < serial.total_cost,
+        "batching must bill less: {} vs {}",
+        batched.total_cost,
+        serial.total_cost
+    );
+
+    // Deterministic under re-run, byte-for-byte.
+    let again = run(0.05);
+    assert_eq!(
+        again.to_json().to_string_pretty(),
+        batched.to_json().to_string_pretty(),
+        "batched chat runs must be deterministic"
+    );
+}
+
+/// The committed chat fixture (CI smokes it through `serve_traffic
+/// --scenario`): strict load, canonical round-trip, a real decode phase in
+/// the report, and byte-identical reports across two runs.
+#[test]
+fn committed_chat_scenario_loads_and_decodes_deterministically() {
+    let s = Scenario::load(&data_path("scenarios/chat_decode.json"))
+        .unwrap_or_else(|e| panic!("committed chat scenario must load: {e}"));
+    let a = s.run().expect("chat fixture runs").report;
+    assert_eq!(a.requests, 12);
+    assert!(a.output_tokens > 0, "the fixture exists to exercise decode");
+    assert!(a.time_per_output_token > 0.0);
+    assert!(a.prefill_p95 >= a.prefill_p50);
+    assert!(a.decode_p95 >= a.decode_p50);
+    let b = s.run().expect("chat fixture re-runs").report;
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "chat fixture runs must be deterministic"
+    );
 }
