@@ -41,6 +41,22 @@
 //!                    (default 0); output goes to --out (default
 //!                    BENCH_fleet.json in fleet mode)
 //!
+//! Parallel mode (`--threads LIST` switches to the sharded-driver sweep):
+//!   builds an *uncapped, private-pool* fleet — an account cap or a shared
+//!   expert pool couples lanes into one coupling group, which the parallel
+//!   driver must co-locate on one shard — prepares it once (materialization
+//!   and profiling outside the timed region), times the sequential heap
+//!   driver, then `FleetDriver::Parallel` at each thread count in LIST,
+//!   asserting every parallel fleet report is byte-identical to the heap
+//!   report, and writes `BENCH_parallel.json` with events/sec and speedup
+//!   per thread count.
+//!   --threads LIST   comma-separated thread counts   (e.g. 1,2,4,8)
+//!   --fleet N        tenants                         (default 1000)
+//!   --requests R     requests per tenant             (default 24)
+//!   --budget-secs S  wall-clock budget over the whole sweep; 0 disables
+//!                    (default 0); output to --out (default
+//!                    BENCH_parallel.json)
+//!
 //! Decode mode (`--decode` switches to the autoregressive chat bench):
 //!   materializes one chat workload — per-request prompt prefill plus a
 //!   seeded geometric decode length, every decode step re-routed through
@@ -62,7 +78,7 @@ use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::{
     ArrivalProcess, AutoscalePolicy, CapGranularity, DecodeLengthModel, FaultSpec,
-    FleetArbitration, MetricsMode, SimEngine, SimReport, TrafficConfig,
+    FleetArbitration, FleetDriver, MetricsMode, SimEngine, SimReport, TrafficConfig,
 };
 use serverless_moe::util::cli::Args;
 use serverless_moe::util::json::Json;
@@ -99,10 +115,20 @@ impl RunResult {
         self.report.requests as f64 / self.wall_secs.max(1e-9)
     }
 
+    /// Dispatch events per wall second: every warm or cold invocation is
+    /// one pass through the engine's hot dispatch loop, so this is the
+    /// metric the scratch-buffer allocation pass moves (compare across
+    /// commits at fixed `--requests`).
+    fn events_per_sec(&self) -> f64 {
+        (self.report.warm_invocations + self.report.cold_invocations) as f64
+            / self.wall_secs.max(1e-9)
+    }
+
     fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("wall_secs", Json::num(self.wall_secs)),
             ("requests_per_sec", Json::num(self.requests_per_sec())),
+            ("events_per_sec", Json::num(self.events_per_sec())),
             ("total_cost", Json::num(self.report.total_cost)),
             ("mean_latency", Json::num(self.report.mean_latency)),
             ("p95_latency", Json::num(self.report.p95_latency)),
@@ -166,6 +192,7 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
         slo_feedback: false,
         batch_window: 0.0,
         faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants,
     };
 
@@ -208,6 +235,168 @@ fn bench_fleet(args: &Args, tenants_n: usize) -> anyhow::Result<()> {
         anyhow::ensure!(
             wall_secs <= budget,
             "fleet bench blew its wall-clock budget: {wall_secs:.1}s > {budget:.1}s"
+        );
+        println!("within wall-clock budget: {wall_secs:.1}s <= {budget:.1}s");
+    }
+    Ok(())
+}
+
+/// Parallel-driver sweep: one uncapped private-pool fleet (every tenant a
+/// singleton coupling group, so `threads` shards genuinely run
+/// concurrently), prepared once and served by the sequential heap driver
+/// and then by `FleetDriver::Parallel` at each requested thread count.
+/// Asserts the byte-identity contract in-line — every parallel report must
+/// serialize identically to the heap report — and records wall clock,
+/// events/sec and speedup per thread count in `BENCH_parallel.json` for
+/// the CI `parallel-smoke` validator.
+fn bench_parallel(args: &Args, list: &str) -> anyhow::Result<()> {
+    let tenants_n = args.get_usize("fleet", 1000);
+    let per_tenant = args.get_usize("requests", 24);
+    let budget = args.get_f64("budget-secs", 0.0);
+    let out = args.get_or("out", "BENCH_parallel.json");
+    let threads = list
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<Vec<_>, _>>()?;
+    anyhow::ensure!(
+        !threads.is_empty() && threads.iter().all(|&t| t >= 1),
+        "--threads needs a comma-separated list of integers >= 1"
+    );
+
+    eprintln!("building {tenants_n}-tenant uncapped fleet ({per_tenant} requests each) ...");
+    let tenants = (0..tenants_n)
+        .map(|i| {
+            let name = format!("p{i:04}");
+            let scenario = Scenario::builder(&name)
+                .model("tiny")?
+                .seed(0x20_000 + i as u64)
+                .profile(2, 64)
+                .traffic(TrafficSource::Synthetic {
+                    process: ArrivalProcess::Poisson { rate: 1.0 },
+                    duration: None,
+                    requests: Some(per_tenant),
+                    tokens_per_request: 64,
+                })
+                .config(TrafficConfig {
+                    reoptimize: false,
+                    prewarm: false,
+                    epoch_secs: f64::INFINITY,
+                    ..TrafficConfig::default()
+                })
+                .baseline(Baseline::LambdaML)
+                .build()?;
+            Ok(TenantSpec {
+                name,
+                weight: 1.0,
+                slo_p95: None,
+                active: None,
+                source: TenantSource::Inline(scenario),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let fleet = FleetScenario {
+        name: format!("bench-parallel-{tenants_n}"),
+        // No cap and no sharing: either would couple every lane into one
+        // group and collapse the parallel driver to a single shard.
+        account_cap: None,
+        arbitration: FleetArbitration::Fifo,
+        cap_granularity: CapGranularity::Execution,
+        share_experts: false,
+        slo_feedback: false,
+        batch_window: 0.0,
+        faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
+        tenants,
+    };
+
+    let t0 = Instant::now();
+    let prepared = fleet.prepare()?;
+    let prep_secs = t0.elapsed().as_secs_f64();
+    eprintln!("fleet prepared in {prep_secs:.1}s; running sequential heap baseline ...");
+
+    let time_driver = |driver: FleetDriver| {
+        let t = Instant::now();
+        let outcome = prepared.run_with(driver);
+        (t.elapsed().as_secs_f64(), outcome)
+    };
+    let (base_secs, base) = time_driver(FleetDriver::Heap);
+    let base_json = base.report.to_json().to_string_pretty();
+    let events = base.report.events;
+    let total_requests: u64 = base.report.tenants.iter().map(|t| t.report.requests).sum();
+    eprintln!(
+        "  heap: {base_secs:.2}s ({:.0} events/s)",
+        events as f64 / base_secs.max(1e-9)
+    );
+
+    let mut table = Table::new(
+        "bench_traffic --threads — sharded driver vs sequential heap",
+        &["driver", "wall (s)", "events/s", "speedup", "identical"],
+    );
+    table.row(vec![
+        "heap (baseline)".into(),
+        format!("{base_secs:.2}"),
+        fnum(events as f64 / base_secs.max(1e-9)),
+        "1.00".into(),
+        "-".into(),
+    ]);
+    let mut entries = Vec::new();
+    let mut all_identical = true;
+    for &t in &threads {
+        eprintln!("running parallel driver with {t} thread(s) ...");
+        let (secs, outcome) = time_driver(FleetDriver::Parallel { threads: t });
+        let identical = outcome.report.to_json().to_string_pretty() == base_json;
+        all_identical &= identical;
+        let speedup = base_secs / secs.max(1e-9);
+        let eps = outcome.report.events as f64 / secs.max(1e-9);
+        table.row(vec![
+            format!("parallel x{t}"),
+            format!("{secs:.2}"),
+            fnum(eps),
+            format!("{speedup:.2}"),
+            identical.to_string(),
+        ]);
+        entries.push(Json::from_pairs(vec![
+            ("threads", Json::num(t as f64)),
+            ("wall_secs", Json::num(secs)),
+            ("events_per_sec", Json::num(eps)),
+            ("speedup", Json::num(speedup)),
+            ("identical", Json::Bool(identical)),
+        ]));
+    }
+    table.print();
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let j = Json::from_pairs(vec![
+        ("tenants", Json::num(tenants_n as f64)),
+        ("requests_per_tenant", Json::num(per_tenant as f64)),
+        ("requests", Json::num(total_requests as f64)),
+        ("events", Json::num(events as f64)),
+        ("prepare_secs", Json::num(prep_secs)),
+        ("baseline_wall_secs", Json::num(base_secs)),
+        (
+            "baseline_events_per_sec",
+            Json::num(events as f64 / base_secs.max(1e-9)),
+        ),
+        ("parallel", Json::Arr(entries)),
+        ("wall_secs", Json::num(wall_secs)),
+        ("budget_secs", Json::num(budget)),
+    ]);
+    j.write_file(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    anyhow::ensure!(
+        all_identical,
+        "parallel driver diverged from the sequential heap report — \
+         the byte-identity contract is broken (see {out})"
+    );
+    anyhow::ensure!(
+        total_requests as usize == tenants_n * per_tenant,
+        "fleet dropped requests: served {total_requests}, expected {}",
+        tenants_n * per_tenant
+    );
+    if budget > 0.0 {
+        anyhow::ensure!(
+            wall_secs <= budget,
+            "parallel bench blew its wall-clock budget: {wall_secs:.1}s > {budget:.1}s"
         );
         println!("within wall-clock budget: {wall_secs:.1}s <= {budget:.1}s");
     }
@@ -381,6 +570,10 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     if args.flag("decode") {
         return bench_decode(&args);
+    }
+    if let Some(list) = args.get("threads") {
+        let list = list.to_string();
+        return bench_parallel(&args, &list);
     }
     if let Some(fleet) = args.get("fleet") {
         return bench_fleet(&args, fleet.parse()?);

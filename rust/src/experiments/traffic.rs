@@ -15,8 +15,8 @@ use crate::model::ModelPreset;
 use crate::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
 use crate::traffic::scenario::{scenario_config, Baseline, Scenario, TrafficSource};
 use crate::traffic::{
-    ArrivalProcess, AutoscalePolicy, CapGranularity, FleetArbitration, FleetReport, SimEngine,
-    SimReport, TrafficConfig,
+    ArrivalProcess, AutoscalePolicy, CapGranularity, FaultSpec, FleetArbitration, FleetDriver,
+    FleetReport, SimEngine, SimReport, TrafficConfig,
 };
 use crate::util::table::{fcost, fnum, ftime, Table};
 
@@ -253,6 +253,8 @@ fn demo_fleet() -> FleetScenario {
         share_experts: false,
         slo_feedback: false,
         batch_window: 0.0,
+        faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants: vec![tenant("chat", 0xF1, true), tenant("batch", 0xF2, false)],
     }
 }

@@ -18,6 +18,13 @@
 //!
 //! Policies are pluggable via [`AutoscalePolicy`]; decisions are evaluated
 //! once per epoch from the per-expert stats of the epoch that just ended.
+//!
+//! Autoscaler state is strictly per-lane: each tenant's [`Autoscaler`]
+//! reads only that tenant's epoch stats and instance pool, never another
+//! tenant's. The parallel fleet driver
+//! ([`super::sim::FleetDriver::Parallel`]) relies on this — lanes shard
+//! across worker threads with their autoscalers, and no cross-shard
+//! exchange is needed for scaling decisions.
 
 use super::error::{self, ScenarioError};
 use crate::deploy::DeploymentPolicy;

@@ -9,6 +9,13 @@ use crate::model::MoeModelSpec;
 use crate::util::json::Json;
 
 /// Which dispatch engine [`super::epoch::EpochSimulator`] runs.
+///
+/// Orthogonal to the fleet-level step *driver*
+/// ([`super::sim::FleetDriver`], the `driver` key on a fleet file): the
+/// engine decides how one tenant's requests dispatch, the driver decides
+/// how the fleet's event lanes are interleaved (sequential heap/scan or
+/// sharded across threads). A single-`Scenario` file has one lane and
+/// therefore no `driver` knob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimEngine {
     /// The PR 2 serial per-request loop: all of a request's layers are

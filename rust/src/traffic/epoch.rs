@@ -91,17 +91,25 @@ pub struct EpochSimulator<'a> {
 
 /// Per-layer popularity fractions (uniform for an all-zero layer).
 pub(crate) fn fractions(counts: &[Vec<u64>]) -> Vec<Vec<f64>> {
-    counts
-        .iter()
-        .map(|row| {
-            let total: u64 = row.iter().sum();
-            if total == 0 {
-                vec![1.0 / row.len().max(1) as f64; row.len()]
-            } else {
-                row.iter().map(|&c| c as f64 / total as f64).collect()
-            }
-        })
-        .collect()
+    let mut out = Vec::new();
+    fractions_into(counts, &mut out);
+    out
+}
+
+/// [`fractions`] into a caller-owned buffer — the event engine's hot
+/// arrival/decode path calls this once per routed batch, so reusing the
+/// per-lane scratch rows keeps the loop allocation-free after warm-up.
+pub(crate) fn fractions_into(counts: &[Vec<u64>], out: &mut Vec<Vec<f64>>) {
+    out.resize_with(counts.len(), Vec::new);
+    for (row, frac) in counts.iter().zip(out.iter_mut()) {
+        frac.clear();
+        let total: u64 = row.iter().sum();
+        if total == 0 {
+            frac.resize(row.len(), 1.0 / row.len().max(1) as f64);
+        } else {
+            frac.extend(row.iter().map(|&c| c as f64 / total as f64));
+        }
+    }
 }
 
 /// Mean total-variation distance between two per-layer distributions.

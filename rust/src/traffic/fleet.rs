@@ -64,17 +64,21 @@ use super::autoscale::{CapGranularity, FleetArbitration};
 use super::config::{FaultSpec, SimEngine};
 use super::epoch::EpochSimulator;
 use super::error::{self, ScenarioError};
-use super::report::{FleetReport, TenantReport};
+use super::report::{FleetReport, SimReport, TenantReport};
 use super::scenario::{Baseline, ModelSource, RunArtifacts, Scenario, TrafficScenario};
 use super::sim::{
-    drive, drive_scan, policy_stride, AccountCap, BatchPool, CapAudit, EventLane, EventQueue,
-    FleetDriver, LaneOpts, SlotArena,
+    drive, drive_scan, policy_stride, AccountCap, BatchPool, CapAudit, EventLane, LaneOpts, Shard,
+    SlotArena,
 };
 use crate::deploy::DeploymentPolicy;
 use crate::platform::InstancePool;
 use crate::util::json::Json;
 use crate::util::stats;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+
+pub use super::sim::FleetDriver;
 
 /// Where a tenant's scenario comes from.
 #[derive(Debug, Clone)]
@@ -229,6 +233,15 @@ pub struct FleetScenario {
     /// cross-tenant batching (`batch_window > 0` is rejected); every
     /// tenant must run the pipelined event engine.
     pub faults: FaultSpec,
+    /// Step driver serving the fleet: the candidate-heap sequential engine
+    /// (`"heap"`, the default), the linear-scan reference (`"scan"`), or
+    /// the sharded parallel engine (`{"parallel": {"threads": N}}`) —
+    /// lanes partitioned across `N` worker threads along coupling-group
+    /// boundaries and advanced in lock-step conservative time windows,
+    /// byte-identical to `"heap"` at every thread count (pinned by
+    /// `rust/tests/fleet.rs`). A fleet-level knob only: single-`Scenario`
+    /// runs reject it — one tenant has nothing to shard.
+    pub driver: FleetDriver,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -238,6 +251,31 @@ pub struct FleetScenario {
 pub struct FleetOutcome {
     pub report: FleetReport,
     pub artifacts: Vec<RunArtifacts>,
+}
+
+/// A validated fleet with every tenant resolved and all traffic
+/// materialized — [`FleetScenario::prepare`]'s output. Serving it
+/// ([`PreparedFleet::run`] / [`PreparedFleet::run_with`]) re-runs only the
+/// engine, so byte-identity comparisons across drivers and thread counts
+/// compare the same materialized arrivals, and driver benchmarks time the
+/// engine alone.
+pub struct PreparedFleet {
+    fleet: FleetScenario,
+    scenarios: Vec<Scenario>,
+    compiled: Vec<TrafficScenario>,
+}
+
+impl PreparedFleet {
+    /// Serve the prepared fleet with its configured driver.
+    pub fn run(&self) -> FleetOutcome {
+        self.run_with(self.fleet.driver)
+    }
+
+    /// Serve the prepared fleet under `driver`, ignoring the configured
+    /// knob — the determinism pins' and `bench_traffic`'s entry point.
+    pub fn run_with(&self, driver: FleetDriver) -> FleetOutcome {
+        self.fleet.run_compiled(&self.scenarios, &self.compiled, driver, false).0
+    }
 }
 
 impl FleetScenario {
@@ -278,6 +316,14 @@ impl FleetScenario {
                 "cross-tenant batching merges dispatches on a *shared* replica pool; \
                  it requires share_experts = true",
             ));
+        }
+        if let FleetDriver::Parallel { threads } = self.driver {
+            if threads == 0 {
+                return Err(ScenarioError::invalid(
+                    "fleet.driver",
+                    "parallel driver needs threads >= 1",
+                ));
+            }
         }
         self.faults.check("fleet.faults")?;
         if self.faults.enabled() && self.batch_window > 0.0 {
@@ -363,6 +409,7 @@ impl FleetScenario {
                     self.faults.to_json()
                 },
             ),
+            ("driver", driver_to_json(self.driver)),
             (
                 "tenants",
                 Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect()),
@@ -388,6 +435,7 @@ impl FleetScenario {
                 "slo_feedback",
                 "batch_window",
                 "faults",
+                "driver",
                 "tenants",
             ],
         )?;
@@ -430,6 +478,10 @@ impl FleetScenario {
             None | Some(Json::Null) => FaultSpec::off(),
             Some(fj) => FaultSpec::from_json(fj)?,
         };
+        let driver = match j.get("driver") {
+            None => FleetDriver::Heap,
+            Some(dj) => driver_from_json(dj)?,
+        };
         let tenant_entries = j
             .get("tenants")
             .and_then(Json::as_arr)
@@ -447,6 +499,7 @@ impl FleetScenario {
             slo_feedback,
             batch_window,
             faults,
+            driver,
             tenants,
         };
         fleet.validate()?;
@@ -483,11 +536,22 @@ impl FleetScenario {
             .collect()
     }
 
-    /// Serve the whole fleet jointly under the shared account cap. Each
-    /// tenant keeps its own baseline semantics (the exact cfg munging of
+    /// Serve the whole fleet jointly under the shared account cap, with
+    /// the configured step [`FleetDriver`]. Each tenant keeps its own
+    /// baseline semantics (the exact cfg munging of
     /// [`TrafficScenario::run`]): `static`/`lambdaml` force re-optimization
     /// off, `ours` takes the tenant's config as written.
     pub fn run(&self) -> Result<FleetOutcome, ScenarioError> {
+        Ok(self.prepare()?.run())
+    }
+
+    /// Validate, resolve every tenant and materialize all traffic once,
+    /// returning a [`PreparedFleet`] that can be served repeatedly — and
+    /// under different drivers ([`PreparedFleet::run_with`]) — without
+    /// re-paying (or re-seeding) resolution and arrival generation. The
+    /// determinism pins and `bench_traffic`'s driver sweep run through
+    /// this so every compared run serves the *same* materialized traffic.
+    pub fn prepare(&self) -> Result<PreparedFleet, ScenarioError> {
         self.validate()?;
         let scenarios = self.resolved()?;
         let compiled = scenarios
@@ -495,7 +559,7 @@ impl FleetScenario {
             .map(Scenario::materialize)
             .collect::<Result<Vec<_>, _>>()?;
         self.check_active_traffic(&compiled)?;
-        Ok(self.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false).0)
+        Ok(PreparedFleet { fleet: self.clone(), scenarios, compiled })
     }
 
     /// A windowed tenant's traffic must lie inside its `[start, end)`
@@ -540,8 +604,10 @@ impl FleetScenario {
         let mut tenants = Vec::with_capacity(self.tenants.len());
         let mut artifacts = Vec::with_capacity(self.tenants.len());
         // Isolated reservations run concurrently in real life, so the
-        // fleet-level peak is the sum of the single-tenant peaks.
+        // fleet-level peak is the sum of the single-tenant peaks; likewise
+        // the event count sums the per-single event heaps.
         let mut peak = 0usize;
+        let mut events = 0u64;
         for (i, t) in self.tenants.iter().enumerate() {
             let single = FleetScenario {
                 name: format!("{}/{}", self.name, t.name),
@@ -555,17 +621,21 @@ impl FleetScenario {
                 slo_feedback: self.slo_feedback,
                 batch_window: self.batch_window,
                 faults: self.faults,
+                // One tenant has nothing to shard; singles always run the
+                // sequential heap driver.
+                driver: FleetDriver::Heap,
                 tenants: vec![t.clone()],
             };
             let mut out = single
                 .run_compiled(&scenarios[i..=i], &compiled[i..=i], FleetDriver::Heap, false)
                 .0;
             peak += out.report.peak_concurrency;
+            events += out.report.events;
             tenants.push(out.report.tenants.pop().expect("single-tenant fleet"));
             artifacts.push(out.artifacts.pop().expect("single-tenant fleet"));
         }
         Ok(FleetOutcome {
-            report: FleetReport::from_tenants(self.account_cap, peak, tenants),
+            report: FleetReport::from_tenants(self.account_cap, peak, events, tenants),
             artifacts,
         })
     }
@@ -582,10 +652,71 @@ impl FleetScenario {
         driver: FleetDriver,
         audit: bool,
     ) -> (FleetOutcome, Vec<CapAudit>) {
-        let mut sims: Vec<EpochSimulator<'_>> = Vec::with_capacity(compiled.len());
-        let mut policies: Vec<DeploymentPolicy> = Vec::with_capacity(compiled.len());
-        let mut pipelines: Vec<bool> = Vec::with_capacity(compiled.len());
-        for (s, scn) in scenarios.iter().zip(compiled) {
+        if let FleetDriver::Parallel { threads } = driver {
+            return self.run_parallel(scenarios, compiled, threads, audit);
+        }
+        let members: Vec<usize> = (0..compiled.len()).collect();
+        let mut shard = self.build_shard(scenarios, compiled, &members, audit);
+        let reports = match driver {
+            FleetDriver::Heap => drive(
+                &mut shard.sims,
+                &mut shard.lanes,
+                &mut shard.arenas,
+                &mut shard.q,
+                &mut shard.cap,
+                &mut shard.batch,
+            ),
+            FleetDriver::Scan => drive_scan(
+                &mut shard.sims,
+                &mut shard.lanes,
+                &mut shard.arenas,
+                &mut shard.q,
+                &mut shard.cap,
+                &mut shard.batch,
+            ),
+            FleetDriver::Parallel { .. } => unreachable!("dispatched above"),
+        };
+        let mut tenants = Vec::with_capacity(reports.len());
+        let mut artifacts = Vec::with_capacity(reports.len());
+        for (i, report) in reports.into_iter().enumerate() {
+            let (t, a) = self.collect_tenant(i, report, &shard.lanes[i], &mut shard.sims[i]);
+            tenants.push(t);
+            artifacts.push(a);
+        }
+        let outcome = FleetOutcome {
+            report: FleetReport::from_tenants(
+                self.account_cap,
+                shard.cap.peak_in_use(),
+                shard.q.pushed(),
+                tenants,
+            ),
+            artifacts,
+        };
+        (outcome, shard.cap.take_audit())
+    }
+
+    /// Build one shard: the simulators, lanes, arenas, cap ledger and batch
+    /// pool for `members` (global tenant indices, ascending) — exactly the
+    /// construction the sequential driver runs over the whole fleet,
+    /// restricted to the members, with tenants and arenas renumbered to
+    /// dense local ids in member order. The restriction is exact because
+    /// the parallel planner only splits along coupling-group boundaries:
+    /// every `share_experts` arena group lies wholly inside one shard (so
+    /// strides, owners, refcounts and the prewarm/retain order all match
+    /// the whole-fleet plan's), and an enabled account cap forces a single
+    /// all-tenant shard whose local ids equal the global ones.
+    fn build_shard<'c>(
+        &self,
+        scenarios: &[Scenario],
+        compiled: &'c [TrafficScenario],
+        members: &[usize],
+        audit: bool,
+    ) -> Shard<'c, 'c> {
+        let mut sims: Vec<EpochSimulator<'c>> = Vec::with_capacity(members.len());
+        let mut policies: Vec<DeploymentPolicy> = Vec::with_capacity(members.len());
+        let mut pipelines: Vec<bool> = Vec::with_capacity(members.len());
+        for &i in members {
+            let (s, scn) = (&scenarios[i], &compiled[i]);
             let mut cfg = s.cfg.clone();
             // Fleet-level fault weather overrides any per-tenant spec:
             // crashes and throttles hit the whole account.
@@ -628,35 +759,35 @@ impl FleetScenario {
         // The stride is the widest member's, and shared pools turn on
         // per-instance owner refcounts so one tenant's scale-in cannot
         // tear down an environment a co-tenant still owns.
-        let mut arena_of = vec![0usize; compiled.len()];
+        let mut arena_of = vec![0usize; members.len()];
         let mut strides: Vec<usize> = Vec::new();
         let mut member_count: Vec<usize> = Vec::new();
         let mut owner: Vec<usize> = Vec::new();
         let mut groups: std::collections::BTreeMap<(&str, u64, usize), usize> =
             std::collections::BTreeMap::new();
-        for (i, policy) in policies.iter().enumerate() {
-            let cfg = &sims[i].cfg;
+        for (k, policy) in policies.iter().enumerate() {
+            let cfg = &sims[k].cfg;
             let stride = cfg.max_replicas.max(policy_stride(policy));
-            let key = match (self.share_experts, &scenarios[i].model) {
+            let key = match (self.share_experts, &scenarios[members[k]].model) {
                 (true, ModelSource::Preset(p)) => p.canonical_name().map(|name| {
                     (name, cfg.keep_alive.to_bits(), cfg.concurrency.unwrap_or(0))
                 }),
                 _ => None,
             };
-            let aid = match key.and_then(|k| groups.get(&k).copied()) {
+            let aid = match key.and_then(|g| groups.get(&g).copied()) {
                 Some(a) => a,
                 None => {
                     let a = strides.len();
-                    if let Some(k) = key {
-                        groups.insert(k, a);
+                    if let Some(g) = key {
+                        groups.insert(g, a);
                     }
                     strides.push(0);
                     member_count.push(0);
-                    owner.push(i);
+                    owner.push(k);
                     a
                 }
             };
-            arena_of[i] = aid;
+            arena_of[k] = aid;
             strides[aid] = strides[aid].max(stride);
             member_count[aid] += 1;
         }
@@ -664,8 +795,12 @@ impl FleetScenario {
             .map(|a| {
                 let o = owner[a];
                 let cfg = &sims[o].cfg;
-                let mut arena =
-                    SlotArena::new(&compiled[o].spec, strides[a], cfg.keep_alive, cfg.concurrency);
+                let mut arena = SlotArena::new(
+                    &compiled[members[o]].spec,
+                    strides[a],
+                    cfg.keep_alive,
+                    cfg.concurrency,
+                );
                 if member_count[a] > 1 {
                     arena.enable_refcounts();
                 }
@@ -680,12 +815,12 @@ impl FleetScenario {
         // (the lane registers ownership itself); prewarming stays upfront —
         // it models provisioned environments, which exist before the
         // tenant's first request either way.
-        for (i, policy) in policies.iter().enumerate() {
-            let arena = &mut arenas[arena_of[i]];
-            if sims[i].cfg.prewarm {
+        for (k, policy) in policies.iter().enumerate() {
+            let arena = &mut arenas[arena_of[k]];
+            if sims[k].cfg.prewarm {
                 arena.prewarm_plan(&policy.layers);
             }
-            if self.tenants[i].active.is_some() {
+            if self.tenants[members[k]].active.is_some() {
                 continue;
             }
             for (l, layer) in policy.layers.iter().enumerate() {
@@ -697,31 +832,31 @@ impl FleetScenario {
             }
         }
 
-        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        let weights: Vec<f64> = members.iter().map(|&i| self.tenants[i].weight).collect();
         let mut cap =
             AccountCap::new(self.account_cap, self.arbitration, self.cap_granularity, &weights);
         if audit {
             cap.enable_audit();
         }
         let capped = cap.enabled();
-        let mut q = EventQueue::new();
         // Cross-tenant batching only has a merge partner on a shared pool
         // (several lanes on one arena) and only the pipelined dispatch path
         // routes per-layer; a lane not meeting both serves unbatched even
         // when the fleet's window is open.
-        let mut batch = BatchPool::new(self.batch_window);
-        let mut lanes: Vec<EventLane<'_, '_>> = policies
+        let batch = BatchPool::new(self.batch_window);
+        let lanes: Vec<EventLane<'c, 'c>> = policies
             .into_iter()
             .enumerate()
-            .map(|(i, policy)| {
+            .map(|(k, policy)| {
+                let i = members[k];
                 EventLane::new(
-                    &sims[i],
+                    &sims[k],
                     policy,
                     &compiled[i].traffic,
-                    pipelines[i],
+                    pipelines[k],
                     LaneOpts {
-                        tenant: i as u32,
-                        arena_id: arena_of[i],
+                        tenant: k as u32,
+                        arena_id: arena_of[k],
                         capped,
                         cap_exec: capped
                             && self.cap_granularity == CapGranularity::Execution,
@@ -730,27 +865,27 @@ impl FleetScenario {
                         weight: self.tenants[i].weight,
                         active: self.tenants[i].active,
                         batchable: batch.enabled()
-                            && member_count[arena_of[i]] > 1
-                            && pipelines[i],
+                            && member_count[arena_of[k]] > 1
+                            && pipelines[k],
                     },
                 )
             })
             .collect();
-        let reports = match driver {
-            FleetDriver::Heap => {
-                drive(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap, &mut batch)
-            }
-            FleetDriver::Scan => {
-                drive_scan(&mut sims, &mut lanes, &mut arenas, &mut q, &mut cap, &mut batch)
-            }
-        };
+        Shard::new(sims, lanes, arenas, cap, batch)
+    }
 
-        let mut tenants = Vec::with_capacity(reports.len());
-        let mut artifacts = Vec::with_capacity(reports.len());
-        for (i, report) in reports.into_iter().enumerate() {
-            let lane = &lanes[i];
-            let sim = &mut sims[i];
-            tenants.push(TenantReport {
+    /// One tenant's fleet-report row and run artifacts, read out of its
+    /// finished lane and simulator — shared by the sequential collector
+    /// and the parallel shard workers. `i` is the *global* tenant index.
+    fn collect_tenant(
+        &self,
+        i: usize,
+        report: SimReport,
+        lane: &EventLane<'_, '_>,
+        sim: &mut EpochSimulator<'_>,
+    ) -> (TenantReport, RunArtifacts) {
+        (
+            TenantReport {
                 name: self.tenants[i].name.clone(),
                 weight: self.tenants[i].weight,
                 slo_p95: self.tenants[i].slo_p95,
@@ -760,20 +895,280 @@ impl FleetScenario {
                 max_cap_delay: lane.cap_waits.iter().cloned().fold(0.0, f64::max),
                 effective_weight: lane.eff_weight,
                 batched_invocations: lane.batched,
-            });
-            artifacts.push(RunArtifacts {
+            },
+            RunArtifacts {
                 policy_history: std::mem::take(&mut sim.policy_history),
                 final_policy: sim.last_policy.take(),
                 redeploy_times: std::mem::take(&mut sim.redeploy_times),
                 autoscale_events: std::mem::take(&mut sim.autoscale_events),
                 latencies: std::mem::take(&mut sim.last_latencies),
-            });
+            },
+        )
+    }
+
+    /// The parallel driver: partition tenants across `threads` worker
+    /// threads along coupling-group boundaries, advance all shards in
+    /// lock-step conservative time windows, and recombine the shard results
+    /// into the one fleet report the sequential driver would have produced.
+    ///
+    /// **Coupling groups.** Two tenants are coupled when a step of one can
+    /// read or write state a step of the other touches: the shared account
+    /// ledger (any enabled `account_cap` — slot grants are adjudicated
+    /// across the whole fleet), or a shared `share_experts` replica pool
+    /// and the batch windows keyed on it. A capped fleet is therefore one
+    /// single group (the run degenerates to one shard — correct, and
+    /// documented in the README rather than refused); an uncapped fleet
+    /// groups tenants by shared-arena equivalence, with private-pool
+    /// tenants each a singleton. This is the "co-locate sharers on one
+    /// shard" resolution of shared pools: co-tenants' dispatches never
+    /// cross a shard boundary, so the barrier exchange set is empty and
+    /// byte-identity holds for *any* window width.
+    ///
+    /// **Windows.** Shards still advance in lock-step windows — the
+    /// conservative-synchronization protocol proper: at each barrier every
+    /// shard publishes its next pending step time, the leader sets the
+    /// window end `horizon = min(next) + Δ` (`Δ` from [`window_delta`]),
+    /// and every shard then runs exactly its steps with `t < horizon`.
+    /// With no cross-shard state inside a window the windows only bound
+    /// skew (keeping per-shard memory and virtual-time divergence flat);
+    /// an exhausted fleet drives `horizon` to infinity, which is the
+    /// agreed stop signal.
+    fn run_parallel(
+        &self,
+        scenarios: &[Scenario],
+        compiled: &[TrafficScenario],
+        threads: usize,
+        audit: bool,
+    ) -> (FleetOutcome, Vec<CapAudit>) {
+        let n = compiled.len();
+        // Coupling-group ids, dense in first-appearance (tenant) order.
+        let group_of: Vec<usize> = if self.account_cap.is_some() {
+            vec![0; n]
+        } else {
+            let mut groups: std::collections::BTreeMap<(&str, u64, usize), usize> =
+                std::collections::BTreeMap::new();
+            let mut ids = Vec::with_capacity(n);
+            let mut next = 0usize;
+            for i in 0..n {
+                // keep_alive / concurrency are untouched by the per-tenant
+                // baseline munging, so grouping on the declared cfg matches
+                // the arena plan `build_shard` derives from the munged one.
+                let cfg = &scenarios[i].cfg;
+                let key = match (self.share_experts, &scenarios[i].model) {
+                    (true, ModelSource::Preset(p)) => p.canonical_name().map(|name| {
+                        (name, cfg.keep_alive.to_bits(), cfg.concurrency.unwrap_or(0))
+                    }),
+                    _ => None,
+                };
+                let g = match key.and_then(|k| groups.get(&k).copied()) {
+                    Some(g) => g,
+                    None => {
+                        let g = next;
+                        next += 1;
+                        if let Some(k) = key {
+                            groups.insert(k, g);
+                        }
+                        g
+                    }
+                };
+                ids.push(g);
+            }
+            ids
+        };
+        let n_groups = group_of.iter().copied().max().map_or(1, |m| m + 1);
+        let n_shards = threads.min(n_groups).max(1);
+        // Whole groups round-robin onto shards in group-id order; members
+        // stay in ascending global order inside each shard (the local
+        // renumbering `Shard` documents).
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for (i, &g) in group_of.iter().enumerate() {
+            members[g % n_shards].push(i);
         }
+
+        let delta = window_delta(compiled);
+        let barrier = Barrier::new(n_shards);
+        let next_times: Vec<AtomicU64> =
+            (0..n_shards).map(|_| AtomicU64::new(f64::INFINITY.to_bits())).collect();
+        let horizon = AtomicU64::new(f64::INFINITY.to_bits());
+        let shard_outs: Vec<ShardOut> = std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .iter()
+                .enumerate()
+                .map(|(w, mine)| {
+                    let (barrier, next_times, horizon) = (&barrier, &next_times, &horizon);
+                    scope.spawn(move || {
+                        self.run_shard(
+                            scenarios, compiled, mine, audit, w, delta, barrier, next_times,
+                            horizon,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+
+        // Recombine: scatter per-tenant rows back to global order; the peak
+        // is the max over shards (the ledger is wholly inside one shard
+        // when capped, and identically zero when not), events and audit
+        // logs are additive (every event ran in exactly one shard).
+        let mut tenants: Vec<Option<TenantReport>> = (0..n).map(|_| None).collect();
+        let mut artifacts: Vec<Option<RunArtifacts>> = (0..n).map(|_| None).collect();
+        let mut peak = 0usize;
+        let mut events = 0u64;
+        let mut audits = Vec::new();
+        for out in shard_outs {
+            peak = peak.max(out.peak);
+            events += out.events;
+            audits.extend(out.audit);
+            for (i, t, a) in out.rows {
+                tenants[i] = Some(t);
+                artifacts[i] = Some(a);
+            }
+        }
+        let tenants: Vec<TenantReport> =
+            tenants.into_iter().map(|t| t.expect("every tenant on exactly one shard")).collect();
+        let artifacts: Vec<RunArtifacts> =
+            artifacts.into_iter().map(|a| a.expect("every tenant on exactly one shard")).collect();
         let outcome = FleetOutcome {
-            report: FleetReport::from_tenants(self.account_cap, cap.peak_in_use(), tenants),
+            report: FleetReport::from_tenants(self.account_cap, peak, events, tenants),
             artifacts,
         };
-        (outcome, cap.take_audit())
+        (outcome, audits)
+    }
+
+    /// One worker thread's life: build the shard for `mine`, publish its
+    /// next-step time, then loop the two-phase window barrier — (1) wait
+    /// for every shard's published time, leader derives the next horizon;
+    /// (2) wait for the horizon to be visible, run all local steps before
+    /// it, publish the new next time — until the leader reports the whole
+    /// fleet exhausted (infinite horizon).
+    #[allow(clippy::too_many_arguments)]
+    fn run_shard(
+        &self,
+        scenarios: &[Scenario],
+        compiled: &[TrafficScenario],
+        mine: &[usize],
+        audit: bool,
+        w: usize,
+        delta: f64,
+        barrier: &Barrier,
+        next_times: &[AtomicU64],
+        horizon: &AtomicU64,
+    ) -> ShardOut {
+        let mut shard = self.build_shard(scenarios, compiled, mine, audit);
+        next_times[w].store(time_bits(shard.next_time()), Ordering::SeqCst);
+        loop {
+            // Barrier 1 doubles as the construction barrier on the first
+            // round: every shard's next-step time is published before the
+            // leader reads them.
+            if barrier.wait().is_leader() {
+                let earliest = next_times
+                    .iter()
+                    .map(|b| f64::from_bits(b.load(Ordering::SeqCst)))
+                    .fold(f64::INFINITY, f64::min);
+                let h = if earliest.is_finite() { earliest + delta } else { f64::INFINITY };
+                horizon.store(h.to_bits(), Ordering::SeqCst);
+            }
+            // Barrier 2: the leader's horizon is visible to every worker.
+            barrier.wait();
+            let h = f64::from_bits(horizon.load(Ordering::SeqCst));
+            if h.is_infinite() {
+                break; // every shard exhausted
+            }
+            let next = shard.drive_until(h);
+            next_times[w].store(time_bits(next), Ordering::SeqCst);
+        }
+        let reports = shard.finish();
+        let mut rows = Vec::with_capacity(reports.len());
+        for (k, report) in reports.into_iter().enumerate() {
+            let (t, a) = self.collect_tenant(mine[k], report, &shard.lanes[k], &mut shard.sims[k]);
+            rows.push((mine[k], t, a));
+        }
+        ShardOut {
+            rows,
+            peak: shard.cap.peak_in_use(),
+            events: shard.q.pushed(),
+            audit: shard.cap.take_audit(),
+        }
+    }
+}
+
+/// What one parallel shard worker hands back for recombination.
+struct ShardOut {
+    /// `(global tenant index, report row, artifacts)` per member tenant.
+    rows: Vec<(usize, TenantReport, RunArtifacts)>,
+    peak: usize,
+    events: u64,
+    audit: Vec<CapAudit>,
+}
+
+/// Width Δ of one conservative synchronization window: the arrival span of
+/// the busiest tenant over 256 — a few hundred windows per run, wide
+/// enough that barrier crossings are a rounding error against the step
+/// work inside one, narrow enough to bound cross-shard virtual-time skew.
+/// Correctness does not depend on the choice (see
+/// [`FleetScenario::run`]'s driver docs); the floor keeps zero-length
+/// traffic from degenerating to zero-width windows.
+fn window_delta(compiled: &[TrafficScenario]) -> f64 {
+    let span = compiled
+        .iter()
+        .filter_map(|scn| scn.traffic.last().map(|tb| tb.at))
+        .fold(0.0f64, f64::max);
+    (span / 256.0).max(1e-3)
+}
+
+/// A shard's next-step time as atomically publishable bits (`None` =
+/// exhausted = `INFINITY`, which drops out of the leader's `min`).
+fn time_bits(t: Option<f64>) -> u64 {
+    t.unwrap_or(f64::INFINITY).to_bits()
+}
+
+/// Serialize the step-driver knob: `"heap"`, `"scan"`, or
+/// `{"parallel": {"threads": N}}`.
+fn driver_to_json(driver: FleetDriver) -> Json {
+    match driver {
+        FleetDriver::Heap => Json::str("heap"),
+        FleetDriver::Scan => Json::str("scan"),
+        FleetDriver::Parallel { threads } => Json::from_pairs(vec![(
+            "parallel",
+            Json::from_pairs(vec![("threads", Json::num(threads as f64))]),
+        )]),
+    }
+}
+
+/// Strict inverse of [`driver_to_json`]: unknown driver names, unknown
+/// keys inside the `parallel` object, and non-integer or zero thread
+/// counts are all typed errors.
+fn driver_from_json(j: &Json) -> Result<FleetDriver, ScenarioError> {
+    match j {
+        Json::Str(s) if s == "heap" => Ok(FleetDriver::Heap),
+        Json::Str(s) if s == "scan" => Ok(FleetDriver::Scan),
+        Json::Str(s) => Err(ScenarioError::invalid(
+            "fleet.driver",
+            format!(
+                "unknown driver '{s}' (expected \"heap\", \"scan\", or \
+                 {{\"parallel\": {{\"threads\": N}}}})"
+            ),
+        )),
+        Json::Obj(_) => {
+            error::check_keys(j, "fleet.driver", &["parallel"])?;
+            let pj = j
+                .get("parallel")
+                .ok_or_else(|| ScenarioError::missing("fleet.driver", "parallel"))?;
+            error::check_keys(pj, "fleet.driver.parallel", &["threads"])?;
+            let threads = error::opt_u64(pj, "fleet.driver.parallel", "threads", 0)?;
+            if threads == 0 {
+                return Err(ScenarioError::invalid(
+                    "fleet.driver.parallel.threads",
+                    "must be an integer >= 1",
+                ));
+            }
+            Ok(FleetDriver::Parallel { threads: threads as usize })
+        }
+        other => Err(ScenarioError::invalid(
+            "fleet.driver",
+            format!("expected a driver name or {{\"parallel\": ...}}, got {other:?}"),
+        )),
     }
 }
 
@@ -926,6 +1321,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![
                 TenantSpec {
                     name: "a".into(),
@@ -956,12 +1352,19 @@ mod tests {
         assert_eq!(back.tenants[0].slo_p95, Some(30.0));
         // A fleet file written before the PR 6/7 knobs existed parses to
         // the defaults: execution-granular accounting, private pools,
-        // static weights, batching off.
+        // static weights, batching off, the sequential heap driver.
         let mut fields = match two_tenant_fleet().to_json() {
             Json::Obj(fields) => fields,
             _ => unreachable!("fleet serializes to an object"),
         };
-        for k in ["cap_granularity", "share_experts", "slo_feedback", "batch_window", "faults"] {
+        for k in [
+            "cap_granularity",
+            "share_experts",
+            "slo_feedback",
+            "batch_window",
+            "faults",
+            "driver",
+        ] {
             fields.remove(k);
         }
         let old = FleetScenario::from_json(&Json::Obj(fields)).unwrap();
@@ -969,6 +1372,67 @@ mod tests {
         assert!(!old.share_experts && !old.slo_feedback);
         assert_eq!(old.batch_window, 0.0);
         assert_eq!(old.faults, FaultSpec::off());
+        assert_eq!(old.driver, FleetDriver::Heap);
+    }
+
+    #[test]
+    fn driver_knob_parses_strictly_and_roundtrips() {
+        for driver in [
+            FleetDriver::Heap,
+            FleetDriver::Scan,
+            FleetDriver::Parallel { threads: 4 },
+        ] {
+            let mut f = two_tenant_fleet();
+            f.driver = driver;
+            let text = f.to_json().to_string_pretty();
+            let back = FleetScenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.driver, driver);
+            assert_eq!(back.to_json().to_string_pretty(), text, "canonical fixed point");
+        }
+        for bad in [
+            "\"parallel\"",                          // threads are not optional
+            "\"turbo\"",                             // unknown name
+            "7",                                     // wrong type
+            "{\"parallel\": {\"threads\": 0}}",      // zero threads
+            "{\"parallel\": {\"threads\": 2.5}}",    // non-integer
+            "{\"parallel\": {\"thread\": 2}}",       // unknown key inside
+            "{\"parallel\": {\"threads\": 2}, \"x\": 1}", // unknown key beside
+        ] {
+            let err = driver_from_json(&Json::parse(bad).unwrap());
+            assert!(err.is_err(), "driver {bad} must be rejected");
+        }
+        // The validate()-level guard catches a hand-built zero too.
+        let mut f = two_tenant_fleet();
+        f.driver = FleetDriver::Parallel { threads: 0 };
+        let err = f.validate().unwrap_err();
+        assert!(err.to_string().contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn parallel_driver_reproduces_heap_on_capped_and_uncapped_fleets() {
+        // Capped: the ledger couples every tenant, so the planner
+        // degenerates to one all-tenant shard whose local ids equal the
+        // global ones — the documented single-coupling-group case.
+        let capped = two_tenant_fleet();
+        // Uncapped private pools: every tenant is its own coupling group,
+        // so threads > 1 genuinely runs multiple shards.
+        let mut free = two_tenant_fleet();
+        free.account_cap = None;
+        for fleet in [capped, free] {
+            let (scenarios, compiled) = materialized(&fleet);
+            let heap = fleet.run_compiled(&scenarios, &compiled, FleetDriver::Heap, false).0;
+            for threads in [1, 2, 8] {
+                let par = fleet
+                    .run_compiled(&scenarios, &compiled, FleetDriver::Parallel { threads }, false)
+                    .0;
+                assert_eq!(
+                    par.report.to_json().to_string_pretty(),
+                    heap.report.to_json().to_string_pretty(),
+                    "fleet {} at threads={threads}",
+                    fleet.name,
+                );
+            }
+        }
     }
 
     #[test]
@@ -1059,6 +1523,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![TenantSpec {
                 name: "ghost".into(),
                 weight: 1.0,
@@ -1095,6 +1560,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![TenantSpec::inline("solo", s)],
         }
     }
@@ -1267,6 +1733,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![
                 TenantSpec::inline("a", tiny_tenant_scenario(11)),
                 TenantSpec::inline("b", tiny_tenant_scenario(12)),
@@ -1306,6 +1773,7 @@ mod tests {
             slo_feedback: true,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![paced_tenant(31, Some(1e-9)), paced_tenant(32, None)],
         };
         let (scenarios, compiled) = materialized(&fleet);
@@ -1342,6 +1810,7 @@ mod tests {
                 hedge_min_obs: 16,
                 drop_after: 4,
             },
+            driver: FleetDriver::Heap,
             // Deterministic rate-1 tenants arrive in lockstep, so the
             // 1-slot cap rejects (and throttle-retries) a request nearly
             // every tick while crashes drive layer retries underneath.
@@ -1381,6 +1850,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![
                 TenantSpec::inline("a", tiny_tenant_scenario(11)),
                 TenantSpec::inline("b", tiny_tenant_scenario(12)),
@@ -1440,6 +1910,7 @@ mod tests {
             slo_feedback: true,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![paced_tenant(21, Some(1e-9)), paced_tenant(22, None)],
         };
         let out = fleet.run().unwrap();
@@ -1515,6 +1986,7 @@ mod tests {
             slo_feedback: true,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants: vec![tail_tenant(41, Some(1e-9)), tail_tenant(42, None)],
         };
         let out = fleet.run().unwrap();
@@ -1569,6 +2041,7 @@ mod tests {
             slo_feedback: false,
             batch_window: 0.0,
             faults: FaultSpec::off(),
+            driver: FleetDriver::Heap,
             tenants,
         };
         let (scenarios, compiled) = materialized(&fleet);

@@ -66,7 +66,11 @@
 //!    verdicts (`slo_feedback`). Lanes are driven by a candidate heap —
 //!    O(events · log tenants), sized for thousand-tenant fleets — and
 //!    with one tenant and no cap the engine reproduces
-//!    [`scenario::Scenario::run`] byte-for-byte.
+//!    [`scenario::Scenario::run`] byte-for-byte. The fleet-level
+//!    `driver` knob can instead shard lanes across worker threads
+//!    ([`sim::FleetDriver::Parallel`]) advanced in lock-step conservative
+//!    time windows, byte-identical to the sequential heap driver at every
+//!    thread count.
 //!
 //! [`epoch::EpochSimulator`] remains the engine *behind* the scenario
 //! façade; construct simulations through [`scenario::Scenario`] /
@@ -90,12 +94,12 @@ pub use arrivals::{arrival_seed, decode_seed, fault_seed, ArrivalGen, ArrivalPro
 pub use autoscale::{AutoscalePolicy, Autoscaler, CapGranularity, FleetArbitration};
 pub use config::{FaultSpec, MetricsMode, SimEngine, TrafficConfig};
 pub use error::ScenarioError;
-pub use fleet::{FleetOutcome, FleetScenario, TenantSource, TenantSpec};
+pub use fleet::{FleetOutcome, FleetScenario, PreparedFleet, TenantSource, TenantSpec};
 pub use report::{FleetReport, SimReport, TenantReport};
 pub use scenario::{
     Baseline, ModelSource, RunArtifacts, Scenario, ScenarioBuilder, ScenarioOutcome,
     TrafficScenario, TrafficSource,
 };
-pub use sim::{AccountCap, SlotArena};
+pub use sim::{AccountCap, FleetDriver, SlotArena};
 pub use trace::{Trace, TraceRequest};
 pub use workload::{ChatWorkload, DecodeLengthModel, KvLedger, RequestPhase};

@@ -393,6 +393,13 @@ pub struct FleetReport {
     /// execution-granular default the transient overshoot is bounded by
     /// `cap - 1` plus one request's widest layer fan-out.
     pub peak_concurrency: usize,
+    /// Total events executed through the event heap(s) over the run —
+    /// layer dispatches, cap releases, batch closes, retries. The
+    /// throughput denominator `bench_traffic` reports as events/sec.
+    /// Additive across the parallel driver's shards (every event runs in
+    /// exactly one shard), so it is byte-identical across drivers and
+    /// thread counts like every other field.
+    pub events: u64,
     /// Fleet-wide failure-injection rollups (sums of the per-tenant
     /// [`SimReport`] counters; all zero with faults off).
     pub failed_invocations: u64,
@@ -420,6 +427,7 @@ impl FleetReport {
     pub fn from_tenants(
         account_cap: Option<usize>,
         peak_concurrency: usize,
+        events: u64,
         tenants: Vec<TenantReport>,
     ) -> FleetReport {
         let total_cost = tenants.iter().map(|t| t.report.total_cost).sum();
@@ -446,6 +454,7 @@ impl FleetReport {
             fairness,
             fairness_declared,
             peak_concurrency,
+            events,
             failed_invocations: sum(|r| r.failed_invocations),
             retries: sum(|r| r.retries),
             hedged_invocations: sum(|r| r.hedged_invocations),
@@ -526,6 +535,7 @@ impl FleetReport {
             ("fairness", Json::num(self.fairness)),
             ("fairness_declared", Json::num(self.fairness_declared)),
             ("peak_concurrency", Json::num(self.peak_concurrency as f64)),
+            ("events", Json::num(self.events as f64)),
             ("failed_invocations", Json::num(self.failed_invocations as f64)),
             ("retries", Json::num(self.retries as f64)),
             ("hedged_invocations", Json::num(self.hedged_invocations as f64)),
@@ -672,6 +682,7 @@ mod tests {
         let f = FleetReport::from_tenants(
             Some(4),
             4,
+            0,
             vec![tenant("a", 2.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 20.0)],
         );
         assert_eq!(f.total_cost, 1.5);
@@ -688,6 +699,7 @@ mod tests {
         let skew = FleetReport::from_tenants(
             Some(4),
             4,
+            0,
             vec![tenant("a", 1.0, 1.0, 40.0), tenant("b", 1.0, 0.5, 4.0)],
         );
         assert!(skew.fairness < 1.0);
@@ -704,7 +716,7 @@ mod tests {
         let mut a = tenant("a", 1.0, 1.0, 40.0);
         a.effective_weight = 4.0;
         let b = tenant("b", 1.0, 0.5, 10.0);
-        let f = FleetReport::from_tenants(Some(4), 4, vec![a, b]);
+        let f = FleetReport::from_tenants(Some(4), 4, 0, vec![a, b]);
         assert!((f.fairness - 1.0).abs() < 1e-12, "effective-weight index: {}", f.fairness);
         assert!(
             f.fairness_declared < 1.0,
@@ -732,7 +744,7 @@ mod tests {
         b.report.dropped_experts = 1;
         b.report.rerouted_tokens = 128;
         b.report.goodput_requests = 2;
-        let f = FleetReport::from_tenants(None, 0, vec![a, b]);
+        let f = FleetReport::from_tenants(None, 0, 0, vec![a, b]);
         assert_eq!(f.failed_invocations, 4);
         assert_eq!(f.retries, 2);
         assert_eq!(f.hedged_invocations, 4);
@@ -760,7 +772,7 @@ mod tests {
         b.report.time_per_output_token = 0.3;
         b.report.kv_evictions = 1;
         b.report.re_prefills = 1;
-        let f = FleetReport::from_tenants(None, 0, vec![a, b]);
+        let f = FleetReport::from_tenants(None, 0, 0, vec![a, b]);
         assert_eq!(f.output_tokens, 400);
         assert_eq!(f.kv_evictions, 4);
         assert_eq!(f.re_prefills, 3);
@@ -770,12 +782,12 @@ mod tests {
         assert_eq!(j.get_f64("output_tokens"), Some(400.0));
         assert_eq!(j.get_f64("time_per_output_token"), Some(f.time_per_output_token));
         // No output tokens anywhere: the weighted mean is defined as zero.
-        let quiet = FleetReport::from_tenants(None, 0, vec![tenant("q", 1.0, 1.0, 1.0)]);
+        let quiet = FleetReport::from_tenants(None, 0, 0, vec![tenant("q", 1.0, 1.0, 1.0)]);
         assert_eq!(quiet.output_tokens, 96, "sample() emits 96 output tokens");
         let mut z = tenant("z", 1.0, 1.0, 1.0);
         z.report.output_tokens = 0;
         z.report.time_per_output_token = 0.0;
-        let zf = FleetReport::from_tenants(None, 0, vec![z]);
+        let zf = FleetReport::from_tenants(None, 0, 0, vec![z]);
         assert_eq!(zf.time_per_output_token, 0.0);
     }
 

@@ -633,6 +633,18 @@ impl Scenario {
     /// [`ScenarioBuilder::new`]).
     pub fn from_json(j: &Json) -> Result<Scenario, ScenarioError> {
         const SECTION: &str = "scenario";
+        // The step-driver knob is fleet-level (a single scenario has one
+        // lane — nothing to shard or arbitrate); a pointed rejection beats
+        // the generic unknown-key error for the one foreseeable misplaced
+        // field.
+        if j.get("driver").is_some() {
+            return Err(ScenarioError::invalid(
+                "scenario.driver",
+                "the step driver is a fleet-level knob; set it on the fleet \
+                 file (`\"driver\": {\"parallel\": {\"threads\": N}}`), not \
+                 on a single scenario",
+            ));
+        }
         error::check_keys(
             j,
             SECTION,

@@ -71,7 +71,7 @@
 use super::arrivals::fault_seed;
 use super::autoscale::{Autoscaler, CapGranularity, FleetArbitration};
 use super::config::{FaultSpec, MetricsMode};
-use super::epoch::{fractions, EpochSimulator};
+use super::epoch::{fractions, fractions_into, EpochSimulator};
 use super::report::SimReport;
 use super::workload::{ChatWorkload, KvLedger, RequestPhase};
 use crate::bo::feedback::serve_layer_with_warmness;
@@ -391,6 +391,15 @@ impl EventQueue {
 
     fn pop(&mut self) -> Option<Ev> {
         self.heap.pop().map(|r| r.0)
+    }
+
+    /// Total events ever pushed through this queue — the throughput
+    /// denominator the fleet reports as `events` (and benchmarks as
+    /// events/sec). Deterministic, and additive across shards: every event
+    /// is pushed in exactly one shard, so the per-shard sum equals the
+    /// sequential run's count.
+    pub(crate) fn pushed(&self) -> u64 {
+        self.seq
     }
 }
 
@@ -807,6 +816,23 @@ struct DispatchBufs {
     pay_v: Vec<(usize, usize)>,
     /// Per-replica failure fates of the current dispatch (fault path only).
     fates: Vec<bool>,
+}
+
+/// Reusable per-lane hot-loop buffers, one tier above [`DispatchBufs`]:
+/// these live across *events* rather than within one layer dispatch. Each
+/// is cleared and refilled at its use site, so after the first few events a
+/// lane's steady-state arrival/decode/batch path allocates nothing.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Routed per-layer expert counts of one decode step
+    /// ([`EventLane::stage_chat`] pre-routes every step of a request).
+    routed: Vec<Vec<u64>>,
+    /// Popularity fractions of one routed batch (the EMA update under
+    /// `reoptimize`).
+    frac: Vec<Vec<f64>>,
+    /// Arena indices of one merged batch's replicas, for KV pinning of
+    /// chat members ([`execute_batch`]; meaningful on opener lanes only).
+    pinned: Vec<usize>,
 }
 
 /// Metric sink: exact per-request vectors or O(1) streaming histograms.
@@ -1269,7 +1295,11 @@ pub(crate) struct EventLane<'a, 't> {
     autoscaler: Autoscaler,
     /// Policy layer plans with per-request token counts scribbled in;
     /// refreshed whenever the policy changes at an epoch boundary.
-    scratch: Vec<LayerPlan>,
+    plans: Vec<LayerPlan>,
+    /// Reusable hot-loop buffers (routed decode counts, EMA fractions,
+    /// merged-batch pin lists) — cleared and refilled per event instead of
+    /// reallocated, so the steady-state loop is allocation-free.
+    scratch: Scratch,
     inflight: Vec<InFlight>,
     free: Vec<usize>,
     pending: Vec<(usize, f64, f64)>,
@@ -1398,6 +1428,17 @@ pub(crate) fn policy_stride(policy: &DeploymentPolicy) -> usize {
         .unwrap_or(1)
 }
 
+/// Fold one routed batch's popularity fractions into the drift EMA — the
+/// same exponential update for top-level arrivals and (under `reoptimize`)
+/// per decode step.
+fn ema_update(ema: &mut [Vec<f64>], frac: &[Vec<f64>], alpha: f64) {
+    for (el, fl) in ema.iter_mut().zip(frac) {
+        for (e, &f) in el.iter_mut().zip(fl) {
+            *e = (1.0 - alpha) * *e + alpha * f;
+        }
+    }
+}
+
 impl<'a, 't> EventLane<'a, 't> {
     /// Build one lane. The caller owns the arena (shared arenas span
     /// several lanes) and is responsible for sizing it to at least
@@ -1439,7 +1480,8 @@ impl<'a, 't> EventLane<'a, 't> {
             arena_id: opts.arena_id,
             ledger: LaneLedger::default(),
             autoscaler: Autoscaler::new(sim.cfg.autoscale, sim.cfg.max_replicas),
-            scratch: policy.layers.clone(),
+            plans: policy.layers.clone(),
+            scratch: Scratch::default(),
             inflight: Vec::new(),
             free: Vec::new(),
             pending: Vec::new(),
@@ -1526,7 +1568,7 @@ impl<'a, 't> EventLane<'a, 't> {
             &mut self.redeploys,
         );
         if changed {
-            self.scratch.clone_from(&self.policy.layers);
+            self.plans.clone_from(&self.policy.layers);
         }
         // A redeploy blocks all serving for the gap — including the
         // remaining layers of requests already in flight.
@@ -1625,13 +1667,8 @@ impl<'a, 't> EventLane<'a, 't> {
             // when re-optimization is off — nothing downstream reads it
             // and the report is unaffected.
             absorb_batch(&mut sim.predictor.table, sim.gate, &mut sim.router, &tb.batch);
-            let frac = fractions(&self.counts_buf);
-            let alpha = sim.cfg.ema_alpha;
-            for (el, fl) in self.ema.iter_mut().zip(&frac) {
-                for (e, &f) in el.iter_mut().zip(fl) {
-                    *e = (1.0 - alpha) * *e + alpha * f;
-                }
-            }
+            fractions_into(&self.counts_buf, &mut self.scratch.frac);
+            ema_update(&mut self.ema, &self.scratch.frac, sim.cfg.ema_alpha);
         }
         self.last_batch = Some(&tb.batch);
 
@@ -1698,6 +1735,14 @@ impl<'a, 't> EventLane<'a, 't> {
     /// dispatch path has no router access) and open its KV ledger entry.
     /// A no-op for non-chat lanes and for requests the decode-length model
     /// assigned zero steps — those run the classic one-pass path untouched.
+    ///
+    /// Under `reoptimize`, each decode step's realized routing also feeds
+    /// the drift signal — absorbed into the predictor's dataset table and
+    /// folded into the popularity EMA exactly like a top-level arrival —
+    /// so a chat workload whose *within-request* routing drifts away from
+    /// the deployed basis triggers a redeploy (the ROADMAP direction-3
+    /// follow-on: decode steps used to route through the memo without ever
+    /// updating the signal the reoptimizer watches).
     fn stage_chat(&mut self, sim: &mut EpochSimulator<'a>, slot: usize) {
         let Some(chat) = self.chat else { return };
         let ri = self.inflight[slot].traffic_idx;
@@ -1712,11 +1757,15 @@ impl<'a, 't> EventLane<'a, 't> {
             fl.decode_counts.clear();
             fl.decode_tokens.clear();
         }
-        let mut routed: Vec<Vec<u64>> = Vec::new();
         for step in &chat.steps[ri] {
-            sim.router.counts_into(sim.gate, step, &mut routed);
+            sim.router.counts_into(sim.gate, step, &mut self.scratch.routed);
+            if sim.cfg.reoptimize {
+                absorb_batch(&mut sim.predictor.table, sim.gate, &mut sim.router, step);
+                fractions_into(&self.scratch.routed, &mut self.scratch.frac);
+                ema_update(&mut self.ema, &self.scratch.frac, sim.cfg.ema_alpha);
+            }
             let fl = &mut self.inflight[slot];
-            fl.decode_counts.push(routed.clone());
+            fl.decode_counts.push(self.scratch.routed.clone());
             fl.decode_tokens.push(step.total_tokens as u64);
         }
         self.kv.begin(slot);
@@ -1857,7 +1906,7 @@ impl<'a, 't> EventLane<'a, 't> {
             self.spec,
             arena,
             &mut self.autoscaler,
-            &mut self.scratch[l],
+            &mut self.plans[l],
             l,
             &self.inflight[slot].counts[l],
             now,
@@ -2068,7 +2117,7 @@ impl<'a, 't> EventLane<'a, 't> {
                 self.spec,
                 arena,
                 &mut self.autoscaler,
-                &mut self.scratch[l],
+                &mut self.plans[l],
                 l,
                 &counts[l],
                 ready,
@@ -2203,16 +2252,28 @@ const KIND_BOUNDARY: u8 = 2;
 const KIND_ARRIVAL: u8 = 3;
 const KIND_OFFBOARD: u8 = 4;
 
-/// Which step-selection loop drives the lanes. Both execute the identical
-/// operation sequence (pinned byte-identical on every committed scenario);
-/// the heap is the default, the scan is kept as the cross-validation
-/// baseline and for the identity tests.
+/// Which step-selection loop drives the lanes. All three execute the
+/// identical operation sequence (pinned byte-identical on every committed
+/// scenario): the heap is the sequential default, the scan is kept as the
+/// cross-validation baseline, and the parallel driver shards lanes across
+/// worker threads along coupling-group boundaries (see
+/// [`Shard`] and the planner in `traffic::fleet`) while replaying exactly
+/// the sequential step order within each shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(crate) enum FleetDriver {
+pub enum FleetDriver {
     /// Candidate heap over `(time, tenant, kind)`: O(events · log tenants).
     Heap,
     /// The PR 5 per-step linear scan of every lane: O(tenants × events).
     Scan,
+    /// Sharded lanes on `threads` worker threads, advanced in lock-step
+    /// conservative time windows (fleet scenarios only; byte-identical to
+    /// [`FleetDriver::Heap`] at every thread count).
+    Parallel {
+        /// Worker-thread count (>= 1). More threads than coupling groups
+        /// leaves the surplus idle; `1` runs the sequential order on one
+        /// worker and is the degenerate cross-check.
+        threads: usize,
+    },
 }
 
 /// One lane's next non-event step, ordered `(at, tenant, kind)` — the same
@@ -2307,7 +2368,7 @@ fn execute_batch<'a>(
             olane.spec,
             arena,
             &mut olane.autoscaler,
-            &mut olane.scratch[l],
+            &mut olane.plans[l],
             l,
             &b.counts,
             now,
@@ -2337,8 +2398,12 @@ fn execute_batch<'a>(
     };
     let total: u64 = b.members.iter().map(|m| m.tokens).sum();
     // The merged invocation's instances, captured for KV pinning of any
-    // chat member still in its prefill pass.
-    let pinned: Vec<usize> = lanes[oi].pending.iter().map(|p| p.0).collect();
+    // chat member still in its prefill pass. The buffer is taken out of the
+    // opener lane (the member loop needs `lanes` mutable) and restored
+    // after, so the steady state reallocates nothing.
+    let mut pinned = std::mem::take(&mut lanes[oi].scratch.pinned);
+    pinned.clear();
+    pinned.extend(lanes[oi].pending.iter().map(|p| p.0));
     for m in &b.members {
         let share = if total > 0 {
             m.tokens as f64 / total as f64
@@ -2369,6 +2434,7 @@ fn execute_batch<'a>(
             lane.complete_pass(q, arena, m.slot, now, completion);
         }
     }
+    lanes[oi].scratch.pinned = pinned;
 }
 
 /// Execute one selected step — identical for both drivers, so they can
@@ -2435,6 +2501,27 @@ fn run_step<'a>(
     }
 }
 
+/// The next step of one (event-queue, candidate-heap) pair in the global
+/// `(time, tenant, kind)` order, without consuming it — the single step
+/// selection all drivers share. An event at the same `(time, tenant)`
+/// always runs before a boundary/arrival: `KIND_EVENT` is the smallest
+/// kind.
+fn peek_step(q: &EventQueue, cands: &BinaryHeap<Reverse<Cand>>) -> Option<(f64, u32, u8)> {
+    match (q.peek(), cands.peek().map(|r| r.0)) {
+        (None, None) => None,
+        (Some(ev), None) => Some((ev.at, ev.tenant, KIND_EVENT)),
+        (None, Some(c)) => Some((c.at, c.tenant, c.kind)),
+        (Some(ev), Some(c)) => {
+            let ec = Cand { at: ev.at, tenant: ev.tenant, kind: KIND_EVENT };
+            if c < ec {
+                Some((c.at, c.tenant, c.kind))
+            } else {
+                Some((ev.at, ev.tenant, KIND_EVENT))
+            }
+        }
+    }
+}
+
 /// Drive every lane to completion against one shared event queue and
 /// account ledger, returning one report per lane (in lane order). With a
 /// single uncapped lane this reproduces the pre-fleet single-tenant engine
@@ -2463,25 +2550,10 @@ pub(crate) fn drive<'a>(
         }
     }
     loop {
-        let (tenant, kind) = match (q.peek(), cands.peek().map(|r| r.0)) {
-            (None, None) => break,
-            (Some(ev), None) => (ev.tenant, KIND_EVENT),
-            (None, Some(c)) => {
-                cands.pop();
-                (c.tenant, c.kind)
-            }
-            (Some(ev), Some(c)) => {
-                // An event at the same (time, tenant) always runs before a
-                // boundary/arrival: KIND_EVENT is the smallest kind.
-                let ec = Cand { at: ev.at, tenant: ev.tenant, kind: KIND_EVENT };
-                if c < ec {
-                    cands.pop();
-                    (c.tenant, c.kind)
-                } else {
-                    (ev.tenant, KIND_EVENT)
-                }
-            }
-        };
+        let Some((_, tenant, kind)) = peek_step(q, &cands) else { break };
+        if kind != KIND_EVENT {
+            cands.pop();
+        }
         run_step(sims, lanes, arenas, q, cap, batch, tenant, kind);
         if kind != KIND_EVENT {
             // Only the lane's own candidate step moved its cursor/epoch
@@ -2547,6 +2619,111 @@ pub(crate) fn drive_scan<'a>(
             lane.finish(sim, arena)
         })
         .collect()
+}
+
+// --------------------------------------------------------- parallel shards
+
+/// One worker thread's self-contained slice of a fleet: its lanes with
+/// their own event queue, candidate heap, arenas, cap ledger, and batch
+/// pool. The shard planner in `traffic::fleet` only splits along *coupling
+/// group* boundaries — tenants that can touch the same mutable state (a
+/// shared `share_experts` arena, the batch windows keyed on it, or an
+/// enabled account cap) are always co-located on one shard — so a shard's
+/// step sequence is exactly the subsequence of the sequential run's steps
+/// that belongs to its tenants, and the merged result is byte-identical to
+/// [`FleetDriver::Heap`] by construction, independent of window width.
+///
+/// Tenant ids inside a shard are *local*: dense, assigned in ascending
+/// global tenant order. That renumbering is order-isomorphic, so every
+/// `(time, tenant, kind)` and `(time, tenant, seq)` comparison resolves
+/// the same way it would have under the global ids.
+pub(crate) struct Shard<'a, 't> {
+    pub(crate) sims: Vec<EpochSimulator<'a>>,
+    pub(crate) lanes: Vec<EventLane<'a, 't>>,
+    pub(crate) arenas: Vec<SlotArena>,
+    pub(crate) q: EventQueue,
+    pub(crate) cap: AccountCap,
+    pub(crate) batch: BatchPool,
+    cands: BinaryHeap<Reverse<Cand>>,
+}
+
+// Shards move onto worker threads (`std::thread::scope`); the whole lane
+// stack must stay `Send`. Compile-time check, no runtime cost.
+const _: () = {
+    fn assert_send<T: Send>() {}
+    fn _check<'a, 't>() {
+        assert_send::<Shard<'a, 't>>();
+    }
+};
+
+impl<'a, 't> Shard<'a, 't> {
+    pub(crate) fn new(
+        sims: Vec<EpochSimulator<'a>>,
+        lanes: Vec<EventLane<'a, 't>>,
+        arenas: Vec<SlotArena>,
+        cap: AccountCap,
+        batch: BatchPool,
+    ) -> Shard<'a, 't> {
+        debug_assert_eq!(sims.len(), lanes.len(), "one simulator per lane");
+        let mut cands = BinaryHeap::with_capacity(lanes.len());
+        for lane in &lanes {
+            if let Some(c) = lane.candidate() {
+                cands.push(Reverse(c));
+            }
+        }
+        Shard { sims, lanes, arenas, q: EventQueue::new(), cap, batch, cands }
+    }
+
+    /// Virtual time of the shard's next pending step (`None` = exhausted).
+    pub(crate) fn next_time(&self) -> Option<f64> {
+        peek_step(&self.q, &self.cands).map(|(at, _, _)| at)
+    }
+
+    /// Run every step strictly before `horizon` (the conservative-window
+    /// barrier) in the same `(time, tenant, kind)` order [`drive`] uses,
+    /// then report the next pending step time. `horizon = INFINITY` is
+    /// exactly the sequential drive loop over this shard's lanes.
+    pub(crate) fn drive_until(&mut self, horizon: f64) -> Option<f64> {
+        loop {
+            let (at, tenant, kind) = peek_step(&self.q, &self.cands)?;
+            if at >= horizon {
+                return Some(at);
+            }
+            if kind != KIND_EVENT {
+                self.cands.pop();
+            }
+            run_step(
+                &mut self.sims,
+                &mut self.lanes,
+                &mut self.arenas,
+                &mut self.q,
+                &mut self.cap,
+                &mut self.batch,
+                tenant,
+                kind,
+            );
+            if kind != KIND_EVENT {
+                // Only the lane's own candidate step moved its cursor or
+                // epoch clock; refresh its (single) heap entry.
+                if let Some(c) = self.lanes[tenant as usize].candidate() {
+                    self.cands.push(Reverse(c));
+                }
+            }
+        }
+    }
+
+    /// Finalize every lane (identical to the tail of [`drive`]) and return
+    /// the per-lane reports in local lane order.
+    pub(crate) fn finish(&mut self) -> Vec<SimReport> {
+        self.lanes
+            .iter_mut()
+            .zip(self.sims.iter_mut())
+            .map(|(lane, sim)| {
+                let arena = &self.arenas[lane.arena_id];
+                lane.finish(sim, arena)
+            })
+            .collect()
+    }
 }
 
 impl EpochSimulator<'_> {
@@ -2886,5 +3063,65 @@ mod tests {
         }
         assert_eq!(cap.in_use(), 0, "no bookkeeping without a cap");
         assert!(cap.grant().is_none());
+    }
+
+    /// Decode-step routing must land in the predictor's dataset table —
+    /// the signal `reoptimize` re-solves over — so two runs identical up
+    /// to decode length must differ in absorbed mass. Guards the
+    /// `stage_chat` absorption: decode steps used to route through the
+    /// memo without ever updating what the reoptimizer watches.
+    #[test]
+    fn decode_steps_feed_the_predictor_dataset() {
+        use crate::traffic::arrivals::ArrivalProcess;
+        use crate::traffic::config::TrafficConfig;
+        use crate::traffic::scenario::{Baseline, Scenario, TrafficSource};
+        use crate::traffic::workload::DecodeLengthModel;
+
+        let absorbed_mass = |steps: u32| -> f64 {
+            let s = Scenario::builder("decode-absorb")
+                .model_preset(ModelPreset::TinyMoe)
+                .seed(11)
+                .profile(2, 128)
+                .traffic(TrafficSource::Chat {
+                    process: ArrivalProcess::Poisson { rate: 2.0 },
+                    duration: None,
+                    requests: Some(6),
+                    prompt_tokens: 48,
+                    decode: DecodeLengthModel::Fixed { steps },
+                    decode_tokens: 4,
+                })
+                .config(TrafficConfig {
+                    // Absorption is gated on `reoptimize`; an infinite
+                    // epoch means no boundary ever fires, so the run
+                    // stays closed-form (no wall-clock-limited solve).
+                    reoptimize: true,
+                    epoch_secs: f64::INFINITY,
+                    ..TrafficConfig::default()
+                })
+                .baseline(Baseline::Ours)
+                .build()
+                .expect("chat scenario is valid by construction");
+            let scn = s.materialize().expect("chat scenario materializes");
+            let mut sim = EpochSimulator::new(
+                &scn.platform,
+                &scn.spec,
+                &scn.gate,
+                scn.predictor(),
+                s.cfg.clone(),
+            );
+            sim.chat = scn.chat.as_ref();
+            // Closed-form LambdaML deployment: deterministic, solver-free.
+            let policy = scn.lambdaml(&s.cfg);
+            sim.run_with_policy(policy, &scn.traffic);
+            sim.predictor.table.entries().iter().map(|e| e.3).sum()
+        };
+
+        let with_decode = absorbed_mass(5);
+        let without = absorbed_mass(0);
+        assert!(without > 0.0, "prefill passes absorb on their own");
+        assert!(
+            with_decode > without,
+            "decode routing must add dataset mass: {with_decode} vs {without} without decode"
+        );
     }
 }

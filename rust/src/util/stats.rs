@@ -184,6 +184,32 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fold another histogram of the identical shape into this one — the
+    /// shard metrics roll-up for the parallel fleet driver. Counts, sum
+    /// (hence mean), and the tracked extrema merge exactly; quantiles merge
+    /// bucket-wise, so a merged estimate carries the same one-bucket
+    /// guarantee as a single histogram fed the concatenated stream.
+    ///
+    /// Panics if the shapes differ (`v0`, `gamma`, bucket count): merging
+    /// across shapes would silently misbucket, and every in-tree histogram
+    /// of a given metric is built from the same constructor.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            self.v0 == other.v0
+                && self.gamma == other.gamma
+                && self.buckets.len() == other.buckets.len(),
+            "LogHistogram::merge: shape mismatch"
+        );
+        for (b, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += c;
+        }
+        self.underflow += other.underflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Heap footprint of the bucket array (the O(1)-memory claim the bench
     /// harness reports against per-request vectors).
     pub fn mem_bytes(&self) -> usize {
@@ -342,6 +368,59 @@ mod tests {
                 }
                 crate::util::check::close(h.mean(), mean(xs), 1e-9)?;
                 crate::util::check::close(h.max(), max(xs), 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn histogram_property_merge_matches_concatenated_stream() {
+        // Property test (parallel-driver satellite): splitting a stream
+        // across K histograms and merging must equal one histogram fed the
+        // concatenated stream — bit-exact, not approximately. Counts, sum,
+        // and extrema are plain associative folds, and bucket-wise addition
+        // commutes with `add`, so every percentile query answers
+        // identically; this is what makes the shard metrics roll-up safe.
+        crate::util::check::forall_default(
+            |rng| {
+                let n = rng.index(300);
+                let parts = 1 + rng.index(5);
+                let xs = (0..n)
+                    .map(|_| 10f64.powf(rng.range_f64(-4.0, 2.5)))
+                    .collect::<Vec<f64>>();
+                // Random split points: each sample assigned to one shard.
+                let owner = (0..n).map(|_| rng.index(parts)).collect::<Vec<usize>>();
+                (xs, owner, parts)
+            },
+            |(xs, owner, parts)| {
+                let mut whole = LogHistogram::latency_default();
+                let mut shards =
+                    vec![LogHistogram::latency_default(); *parts];
+                for (&x, &s) in xs.iter().zip(owner) {
+                    whole.add(x);
+                    shards[s].add(x);
+                }
+                let mut merged = LogHistogram::latency_default();
+                for s in &shards {
+                    merged.merge(s);
+                }
+                crate::util::check::ensure(
+                    merged.count() == whole.count(),
+                    format!("count {} vs {}", merged.count(), whole.count()),
+                )?;
+                // Sum reassociates across shards, so mean is exact only up
+                // to fp addition order; extrema and bucket counts are
+                // bit-exact, which makes every percentile query bit-exact.
+                crate::util::check::close(merged.mean(), whole.mean(), 1e-12)?;
+                crate::util::check::close(merged.max(), whole.max(), 0.0)?;
+                crate::util::check::close(merged.min(), whole.min(), 0.0)?;
+                for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+                    crate::util::check::close(
+                        merged.percentile(p),
+                        whole.percentile(p),
+                        0.0,
+                    )?;
+                }
+                Ok(())
             },
         );
     }

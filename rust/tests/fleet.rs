@@ -34,13 +34,17 @@
 //!  - **committed fixtures**: the two-tenant, hundred-tenant and
 //!    churn+batching fleet files load strictly, round-trip canonically,
 //!    and run deterministically end-to-end.
+//!  - **parallel driver pins**: every committed fleet fixture and a
+//!    constructed genuinely multi-shard fleet serve byte-identically
+//!    under `FleetDriver::Parallel` at 1, 2, 4 and 8 threads — the
+//!    conservative-window protocol's determinism contract.
 
-use serverless_moe::traffic::fleet::{FleetScenario, TenantSource, TenantSpec};
+use serverless_moe::traffic::fleet::{FleetScenario, PreparedFleet, TenantSource, TenantSpec};
 use serverless_moe::traffic::scenario::{Baseline, Scenario, TrafficSource};
 use serverless_moe::traffic::trace::{Trace, TraceRequest};
 use serverless_moe::traffic::{
     arrival_seed, ArrivalGen, ArrivalProcess, CapGranularity, FaultSpec, FleetArbitration,
-    FleetReport, TrafficConfig,
+    FleetDriver, FleetReport, TrafficConfig,
 };
 use std::path::{Path, PathBuf};
 
@@ -60,6 +64,7 @@ fn single_tenant_fleet(s: Scenario) -> FleetScenario {
         slo_feedback: false,
         batch_window: 0.0,
         faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants: vec![TenantSpec::inline("only", s)],
     }
 }
@@ -267,6 +272,7 @@ fn claim_fleet(l: f64, keep_alive: f64) -> FleetScenario {
         slo_feedback: false,
         batch_window: 0.0,
         faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants: vec![
             claim_tenant("early", early_seed, early, duration, keep_alive),
             claim_tenant("late", late_seed, late, duration, keep_alive),
@@ -448,6 +454,7 @@ fn hundred_tenant_claim_fleet(l: f64, share_experts: bool) -> FleetScenario {
         slo_feedback: false,
         batch_window: 0.0,
         faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants,
     }
 }
@@ -557,6 +564,7 @@ fn churn_batching_fleet(l: f64, window: f64) -> FleetScenario {
         slo_feedback: false,
         batch_window: window,
         faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
         tenants,
     }
 }
@@ -729,6 +737,7 @@ fn crashy_fleet(l: f64, faults: FaultSpec) -> FleetScenario {
         slo_feedback: false,
         batch_window: 0.0,
         faults,
+        driver: FleetDriver::Heap,
         tenants: vec![TenantSpec::inline("crashy", scenario)],
     }
 }
@@ -906,4 +915,87 @@ fn fleet_golden_fixture_matches_committed_report() {
             );
         }
     }
+}
+
+// ------------------------------------------------- parallel driver pins
+
+/// Serve a prepared fleet under the sequential heap driver and the
+/// parallel driver at 1, 2, 4 and 8 threads; every report must be
+/// byte-identical JSON (the conservative-window protocol's determinism
+/// contract — same materialized traffic, same step sequence per shard).
+fn assert_identical_across_thread_counts(prepared: &PreparedFleet, label: &str) {
+    let heap = prepared.run_with(FleetDriver::Heap).report.to_json().to_string_pretty();
+    for threads in [1, 2, 4, 8] {
+        let par = prepared
+            .run_with(FleetDriver::Parallel { threads })
+            .report
+            .to_json()
+            .to_string_pretty();
+        assert_eq!(par, heap, "{label}: parallel(threads={threads}) diverged from heap");
+    }
+}
+
+/// Every committed fleet fixture must serve byte-identically under the
+/// parallel driver at every tested thread count — including the capped
+/// chaos fixture (`fleet_faults.json`: its 1-slot ledger couples all
+/// tenants, so the shard planner degenerates to one shard and replays the
+/// exact sequential grant order) and the shared-pool churn fixture
+/// (`fleet_churn_batching.json`: arena sharers are co-located on one
+/// shard, so batch windows never cross a shard boundary). The
+/// `fleet_parallel.json` fixture additionally ships with the knob set
+/// (`"driver": {"parallel": {"threads": 2}}`), keeping a parallel-declared
+/// file in the CI scenario smoke.
+#[test]
+fn parallel_driver_is_byte_identical_on_every_committed_fixture() {
+    for fixture in [
+        "fleet_two_tenant.json",
+        "fleet_golden.json",
+        "fleet_hundred_tenant.json",
+        "fleet_churn_batching.json",
+        "fleet_faults.json",
+        "fleet_parallel.json",
+    ] {
+        let fleet = FleetScenario::load(&scenario_path(fixture))
+            .unwrap_or_else(|e| panic!("{fixture} must load: {e}"));
+        let prepared = fleet.prepare().unwrap_or_else(|e| panic!("{fixture} must prepare: {e}"));
+        assert_identical_across_thread_counts(&prepared, fixture);
+    }
+}
+
+/// A genuinely multi-shard fleet: twelve uncapped private-pool tenants are
+/// twelve coupling groups, so 2/4/8 threads really do run concurrent
+/// shards (the committed fixtures above all collapse to one). Also drives
+/// the `driver` knob end-to-end: a fleet *configured* parallel serves
+/// through `run()` identically to the heap default.
+#[test]
+fn parallel_driver_is_byte_identical_on_a_genuinely_sharded_fleet() {
+    let mut fleet = FleetScenario {
+        name: "sharded".to_string(),
+        account_cap: None,
+        arbitration: FleetArbitration::Fifo,
+        cap_granularity: CapGranularity::Execution,
+        share_experts: false,
+        slo_feedback: false,
+        batch_window: 0.0,
+        faults: FaultSpec::off(),
+        driver: FleetDriver::Heap,
+        tenants: (0..12)
+            .map(|i| {
+                claim_tenant(
+                    &format!("t{i:02}"),
+                    0x5AD + i,
+                    ArrivalProcess::Poisson { rate: 1.5 },
+                    20.0,
+                    5.0,
+                )
+            })
+            .collect(),
+    };
+    let prepared = fleet.prepare().expect("sharded fleet prepares");
+    assert_identical_across_thread_counts(&prepared, "sharded-12");
+
+    let heap = fleet.run().expect("heap run").report.to_json().to_string_pretty();
+    fleet.driver = FleetDriver::Parallel { threads: 4 };
+    let par = fleet.run().expect("parallel run").report.to_json().to_string_pretty();
+    assert_eq!(par, heap, "configured driver knob must not change the report");
 }

@@ -1372,3 +1372,55 @@ fn committed_chat_scenario_loads_and_decodes_deterministically() {
         "chat fixture runs must be deterministic"
     );
 }
+
+/// The drift loop hears decode routing (the ROADMAP direction-3
+/// follow-on): an autoregressive workload served under `ours` with
+/// re-optimization on absorbs every decode step's realized routing into
+/// the predictor table and the drift EMA at staging time (the structural
+/// half — decode strictly growing the dataset mass — is pinned by
+/// `traffic::sim`'s unit tests), so a drift-armed epoch boundary
+/// re-deploys on a chat-only workload. Decode steps used to route through
+/// the memo without ever updating the signal the reoptimizer watches.
+#[test]
+fn chat_decode_drift_triggers_redeploy() {
+    let scenario = Scenario::builder("chat-drift")
+        .model("tiny")
+        .expect("tiny preset exists")
+        .seed(0xD21F7)
+        .profile(2, 128)
+        .traffic(TrafficSource::Chat {
+            process: ArrivalProcess::Poisson { rate: 2.0 },
+            duration: None,
+            requests: Some(24),
+            prompt_tokens: 32,
+            decode: DecodeLengthModel::Geometric { mean: 6.0, cap: 16 },
+            decode_tokens: 8,
+        })
+        .config(TrafficConfig {
+            reoptimize: true,
+            // Sub-zero threshold: any absorbed routing counts as drift, so
+            // the first armed boundary re-deploys — the arming idiom the
+            // epoch-level drift tests use.
+            drift_threshold: -1.0,
+            solver_time_limit: 0.2,
+            epoch_secs: 6.0,
+            prewarm: false,
+            ..TrafficConfig::default()
+        })
+        .baseline(Baseline::Ours)
+        .build()
+        .expect("chat drift scenario is valid");
+    let out = scenario.run().expect("chat drift scenario runs");
+    let report = out.report;
+    assert!(report.output_tokens > 0, "the workload must actually decode");
+    assert!(
+        report.redeploys >= 1,
+        "drift-armed chat workload must re-deploy (got {})",
+        report.redeploys
+    );
+    assert_eq!(
+        out.artifacts.policy_history.len() as u64,
+        1 + report.redeploys,
+        "one history entry per redeploy beyond the initial deployment"
+    );
+}
